@@ -1,0 +1,88 @@
+//! CNN path + data-parallel coordinator demo (the Appendix C setting):
+//! activation-only VCAS on a conv net, trained with SGDM, with the
+//! gradient-combine running through the tree allreduce exactly as the
+//! paper's 8-GPU DDP run does.
+//!
+//!     cargo run --release --example cnn_vision [-- <steps> <workers>]
+//!
+//! Workers are logical shards (PJRT wrapper types are not Send): each
+//! shard's gradient is computed separately and merged with the real
+//! O(log W) tree reduction, so the coordination path — sharding, reduce,
+//! broadcast — is the deployed topology.
+
+use std::path::Path;
+
+use vcas::config::{Method, TrainConfig, VcasConfig};
+use vcas::coordinator::parallel::{shard_ranges, tree_allreduce_mean, tree_depth};
+use vcas::coordinator::Trainer;
+use vcas::data::batch::gather_img;
+use vcas::data::images::{generate_images, ImageSpec};
+use vcas::optim::{Optimizer, Sgdm};
+use vcas::runtime::{Engine, ModelSession};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let engine = Engine::load(Path::new("artifacts"))?;
+
+    // ---- single-stream exact vs VCAS (Table 8 rows) -------------------------
+    for method in [Method::Exact, Method::Vcas] {
+        let cfg = TrainConfig {
+            model: "cnn".into(),
+            task: "images".into(),
+            method: method.clone(),
+            steps,
+            seed: 5,
+            vcas: VcasConfig { freq: (steps / 4).max(10), ..Default::default() },
+            optim: vcas::config::OptimConfig {
+                kind: "sgdm".into(),
+                lr: 0.05,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let r = Trainer::new(&engine, &cfg)?.run()?;
+        println!(
+            "{:>5}: loss {:.4}, eval acc {:.2}%, FLOPs red {:.2}%, wall {:.1}s",
+            r.method,
+            r.final_train_loss,
+            r.final_eval_acc * 100.0,
+            r.flops_reduction * 100.0,
+            r.wall_s
+        );
+    }
+
+    // ---- data-parallel round: shard -> per-shard grads -> tree allreduce ----
+    println!("\nDDP demo: {workers} workers, tree depth {}", tree_depth(workers));
+    let sess = ModelSession::open(&engine, "cnn")?;
+    let mut params = sess.load_params()?;
+    let mut opt = Sgdm::new(&params, 0.9, 0.0);
+    let spec = ImageSpec::default();
+    let ds = generate_images(&spec, engine.manifest.cnn_batch * workers, 7);
+    let rho = vec![1.0f32; 2];
+
+    for step in 0..4 {
+        // every worker computes grads on its shard at the full static batch
+        // shape (shards here are whole batches per worker, as in DDP)
+        let mut worker_grads = Vec::with_capacity(workers);
+        let mut losses = Vec::with_capacity(workers);
+        let ranges = shard_ranges(ds.n, workers);
+        for (w, &(s, e)) in ranges.iter().enumerate() {
+            let idx: Vec<usize> = (s..e).collect();
+            let batch = gather_img(&ds, &idx);
+            let out = sess.cnn_fwd_bwd(
+                &params, &batch, spec.img, spec.channels,
+                (step * workers + w) as i32, &rho,
+            )?;
+            losses.push(out.loss);
+            worker_grads.push(out.grads);
+        }
+        let mean_grads = tree_allreduce_mean(worker_grads);
+        opt.step(&mut params, &mean_grads, 0.05);
+        let mean_loss: f32 = losses.iter().sum::<f32>() / workers as f32;
+        println!("  step {step}: mean shard loss {mean_loss:.4} (shards {losses:?})");
+    }
+    println!("DDP round complete — gradients merged via tree allreduce.");
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Finetune suite: the paper's Sec. 6.1 protocol on the synthetic task
+//! registry — exact vs SB vs UB vs VCAS on each task, one table row each
+//! (a fast, reduced-steps version of the table1_flops bench).
+//!
+//!     cargo run --release --example finetune_suite [-- <steps>]
+
+use std::path::Path;
+
+use vcas::config::{Method, TrainConfig, VcasConfig};
+use vcas::coordinator::Trainer;
+use vcas::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let engine = Engine::load(Path::new("artifacts"))?;
+
+    println!("task         method   loss    acc%    FLOPs-red%");
+    println!("------------ -------- ------- ------- ----------");
+    for task in ["sst2-sim", "qnli-sim", "mnli-sim"] {
+        for method in [Method::Exact, Method::Sb, Method::Ub, Method::Vcas] {
+            let cfg = TrainConfig {
+                model: "tiny".into(),
+                task: task.into(),
+                method: method.clone(),
+                steps,
+                seed: 1,
+                vcas: VcasConfig { freq: (steps / 5).max(10), ..Default::default() },
+                ..Default::default()
+            };
+            let r = Trainer::new(&engine, &cfg)?.run()?;
+            println!(
+                "{:<12} {:<8} {:<7.4} {:<7.2} {:<10.2}",
+                task,
+                r.method,
+                r.final_train_loss,
+                r.final_eval_acc * 100.0,
+                r.flops_reduction * 100.0
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,118 @@
+//! End-to-end driver: the full three-layer stack on a real (synthetic)
+//! workload — MLM pretraining of the multi-million-parameter "small"
+//! transformer with VCAS, followed by finetune transfer onto a
+//! classification task from the pretrained checkpoint (the Table 9
+//! pipeline: pretrain loss + downstream performance).
+//!
+//!     cargo run --release --example pretrain_e2e [-- <pretrain_steps> <finetune_steps>]
+//!
+//! Logs the loss curve to results/pretrain_e2e/ and prints paper-style
+//! summaries. Defaults (300 + 150 steps) take a few minutes on CPU; the
+//! run is recorded in EXPERIMENTS.md.
+
+use std::path::Path;
+
+use vcas::config::{Method, TrainConfig, VcasConfig};
+use vcas::coordinator::Trainer;
+use vcas::formats::params::ParamSet;
+use vcas::runtime::Engine;
+use vcas::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let pretrain_steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
+    let finetune_steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+
+    let engine = Engine::load(Path::new("artifacts"))?;
+    let mm = engine.model("small")?;
+    let n_params: usize = mm
+        .param_specs
+        .iter()
+        .map(|(_, s)| s.iter().product::<usize>())
+        .sum();
+    println!(
+        "e2e driver: model 'small' ({:.2}M params, {} layers), platform {}",
+        n_params as f64 / 1e6,
+        mm.cfg_usize("n_layers")?,
+        engine.platform()
+    );
+
+    // ---- phase 1: MLM pretraining with VCAS --------------------------------
+    let pre_cfg = TrainConfig {
+        model: "small".into(),
+        task: "mlm".into(),
+        method: Method::Vcas,
+        steps: pretrain_steps,
+        seed: 17,
+        eval_every: (pretrain_steps / 4).max(1),
+        eval_batches: 4,
+        vcas: VcasConfig { freq: (pretrain_steps / 6).max(25), ..Default::default() },
+        out_dir: "results/pretrain_e2e".into(),
+        optim: vcas::config::OptimConfig { lr: 6e-4, ..Default::default() },
+        ..Default::default()
+    };
+    println!("\n== phase 1: MLM pretraining ({pretrain_steps} steps, VCAS) ==");
+    let mut pre = Trainer::new(&engine, &pre_cfg)?;
+    let pre_result = pre.run()?;
+    for ev in &pre_result.evals {
+        println!(
+            "  eval @ {:4}: mlm loss {:.4}, masked-token acc {:.2}%",
+            ev.step,
+            ev.loss,
+            ev.acc * 100.0
+        );
+    }
+    println!(
+        "  pretrain done: loss {:.4} -> {:.4}, FLOPs reduction {:.2}% (bwd {:.2}%), wall {:.1}s",
+        pre_result.losses.first().map(|&(_, l)| l).unwrap_or(f32::NAN),
+        pre_result.final_train_loss,
+        pre_result.flops_reduction * 100.0,
+        pre_result.bwd_flops_reduction * 100.0,
+        pre_result.wall_s
+    );
+
+    let ckpt = Path::new("results/pretrain_e2e/small_pretrained.bin");
+    std::fs::create_dir_all(ckpt.parent().unwrap())?;
+    pre.save_checkpoint(ckpt)?;
+    println!("  checkpoint: {}", ckpt.display());
+
+    // ---- phase 2: finetune transfer (pretrained vs from-scratch) -----------
+    println!("\n== phase 2: finetune on qnli-sim ({finetune_steps} steps, VCAS) ==");
+    let ft_cfg = TrainConfig {
+        model: "small".into(),
+        task: "qnli-sim".into(),
+        method: Method::Vcas,
+        steps: finetune_steps,
+        seed: 23,
+        eval_batches: 8,
+        vcas: VcasConfig { freq: (finetune_steps / 4).max(20), ..Default::default() },
+        out_dir: "results/pretrain_e2e".into(),
+        ..Default::default()
+    };
+
+    let mut from_scratch = Trainer::new(&engine, &ft_cfg)?;
+    let scratch = from_scratch.run()?;
+
+    let mut transfer = Trainer::new(&engine, &ft_cfg)?;
+    let mut pretrained = ParamSet::load_bin(ckpt, &mm.param_specs)?;
+    // fresh task head on top of the pretrained body
+    let mut rng = Pcg32::new(99, 0);
+    pretrained.reinit_normal("head_w", 0.02, &mut rng);
+    pretrained.reinit_normal("head_b", 0.0, &mut rng);
+    transfer.set_params(pretrained);
+    let xfer = transfer.run()?;
+
+    println!(
+        "  from scratch : final loss {:.4}, eval acc {:.2}%",
+        scratch.final_train_loss,
+        scratch.final_eval_acc * 100.0
+    );
+    println!(
+        "  pretrained   : final loss {:.4}, eval acc {:.2}% (transfer delta {:+.2}%)",
+        xfer.final_train_loss,
+        xfer.final_eval_acc * 100.0,
+        (xfer.final_eval_acc - scratch.final_eval_acc) * 100.0
+    );
+    println!("\nall curves in results/pretrain_e2e/");
+    Ok(())
+}

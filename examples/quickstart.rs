@@ -1,0 +1,57 @@
+//! Quickstart: train a tiny transformer on a synthetic sentiment task with
+//! VCAS and compare against exact training.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the whole public surface: engine loading, config, trainer,
+//! results (loss trajectory + FLOPs reduction + adaptation log).
+
+use std::path::Path;
+
+use vcas::config::{Method, TrainConfig, VcasConfig};
+use vcas::coordinator::Trainer;
+use vcas::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load(Path::new("artifacts"))?;
+    println!("PJRT platform: {}", engine.platform());
+
+    let base = TrainConfig {
+        model: "tiny".into(),
+        task: "sst2-sim".into(),
+        steps: 200,
+        seed: 42,
+        eval_every: 100,
+        vcas: VcasConfig { freq: 40, ..Default::default() },
+        out_dir: "results/quickstart".into(),
+        ..Default::default()
+    };
+
+    for method in [Method::Exact, Method::Vcas] {
+        let cfg = TrainConfig { method: method.clone(), ..base.clone() };
+        let mut trainer = Trainer::new(&engine, &cfg)?;
+        let r = trainer.run()?;
+        println!(
+            "{:>6}: final train loss {:.4}, eval acc {:.2}%, FLOPs reduction {:>6.2}%, wall {:.1}s",
+            r.method,
+            r.final_train_loss,
+            r.final_eval_acc * 100.0,
+            r.flops_reduction * 100.0,
+            r.wall_s
+        );
+        if method == Method::Vcas {
+            let (rho, nu) = trainer.live_ratios();
+            println!("  learned rho (bottom->top): {rho:?}");
+            let nu_mean = nu.iter().sum::<f32>() / nu.len().max(1) as f32;
+            println!("  learned nu mean: {nu_mean:.3}");
+            for p in &r.probes {
+                println!(
+                    "  probe @ {:4}: V_s {:.3e} V_act {:.3e} V_w {:.3e} s {:.3}",
+                    p.step, p.v_s, p.v_act, p.v_w, p.s
+                );
+            }
+        }
+    }
+    println!("loss curves written to results/quickstart/");
+    Ok(())
+}

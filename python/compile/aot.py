@@ -1,0 +1,238 @@
+"""AOT compile path: lower every entry point to HLO *text* artifacts.
+
+Run once by `make artifacts`; Python never appears on the training path.
+
+Interchange is HLO text, not a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 (what the
+`xla` 0.1.6 crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out, default ../artifacts):
+  manifest.json                 entry/param registry the Rust runtime reads
+  <model>.params.bin            initial parameters, raw little-endian f32
+  <model>.<entry>.hlo.txt       one HLO module per (model, entry, batch)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import cnn as cnn_mod
+from . import model as model_mod
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Batch-size variants. MAIN is the full batch every method sees; SUB is the
+# 1/3-keep batch the SB/UB baselines backprop after dropping data up front
+# (paper Sec. 6.1 uses keep ratio 1/3 -> FLOPs reduction 44.44%).
+MAIN_BATCH = 32
+SUB_BATCH = 10
+CNN_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _params_specs(specs):
+    return tuple(_spec(s, jnp.float32) for _, s in specs)
+
+
+def _lower(fn, *args) -> str:
+    # keep_unused=True: entries share one calling convention (all params
+    # first), even when an entry does not read some tensor (e.g. the cls
+    # head ignores mlm_b) — otherwise jax prunes the parameter and the Rust
+    # marshaller's input count no longer matches the compiled program.
+    return to_hlo_text(jax.jit(fn, keep_unused=True).lower(*args))
+
+
+def build_transformer(cfg: model_mod.ModelConfig, outdir: str) -> dict:
+    specs = model_mod.param_specs(cfg)
+    p = _params_specs(specs)
+    t, l, w = cfg.seq_len, cfg.n_layers, cfg.n_sampled
+    i32, f32 = jnp.int32, jnp.float32
+    entries = {}
+
+    def emit(name, fn, *args):
+        path = f"{cfg.name}.{name}.hlo.txt"
+        text = _lower(fn, *args)
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}.{name}: {len(text)} chars", flush=True)
+        return path
+
+    for n in (MAIN_BATCH, SUB_BATCH):
+        entries[f"fwd_bwd_cls_n{n}"] = {
+            "file": emit(
+                f"fwd_bwd_cls_n{n}",
+                lambda params, x, y, sw, seed, rho, nua, nup: model_mod.fwd_bwd_cls(
+                    cfg, params, x, y, sw, seed, rho, nua, nup
+                ),
+                p, _spec((n, t), i32), _spec((n,), i32), _spec((n,), f32),
+                _spec((), i32),
+                _spec((l,), f32), _spec((w,), f32), _spec((w,), f32),
+            ),
+            "batch": n,
+        }
+    n = MAIN_BATCH
+    entries[f"fwd_bwd_mlm_n{n}"] = {
+        "file": emit(
+            f"fwd_bwd_mlm_n{n}",
+            lambda params, x, y, wts, seed, rho, nua, nup: model_mod.fwd_bwd_mlm(
+                cfg, params, x, y, wts, seed, rho, nua, nup
+            ),
+            p, _spec((n, t), i32), _spec((n, t), i32), _spec((n, t), f32),
+            _spec((), i32), _spec((l,), f32), _spec((w,), f32), _spec((w,), f32),
+        ),
+        "batch": n,
+    }
+    entries[f"fwd_loss_cls_n{n}"] = {
+        "file": emit(
+            f"fwd_loss_cls_n{n}",
+            lambda params, x, y: model_mod.fwd_loss_cls(cfg, params, x, y),
+            p, _spec((n, t), i32), _spec((n,), i32),
+        ),
+        "batch": n,
+    }
+    entries[f"eval_cls_n{n}"] = {
+        "file": emit(
+            f"eval_cls_n{n}",
+            lambda params, x, y: model_mod.eval_cls(cfg, params, x, y),
+            p, _spec((n, t), i32), _spec((n,), i32),
+        ),
+        "batch": n,
+    }
+    entries[f"eval_mlm_n{n}"] = {
+        "file": emit(
+            f"eval_mlm_n{n}",
+            lambda params, x, y, wts: model_mod.eval_mlm(cfg, params, x, y, wts),
+            p, _spec((n, t), i32), _spec((n, t), i32), _spec((n, t), f32),
+        ),
+        "batch": n,
+    }
+
+    params = model_mod.init_params(cfg, seed=1234)
+    bin_path = f"{cfg.name}.params.bin"
+    with open(os.path.join(outdir, bin_path), "wb") as f:
+        for arr in params:
+            f.write(arr.astype("<f4").tobytes())
+
+    return {
+        "kind": "transformer",
+        "config": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "n_layers": cfg.n_layers, "seq_len": cfg.seq_len,
+            "n_classes": cfg.n_classes, "use_pallas": cfg.use_pallas,
+            "n_sampled": cfg.n_sampled,
+        },
+        "params_bin": bin_path,
+        "params": [{"name": nm, "shape": list(sh)} for nm, sh in specs],
+        "sampled_linears": model_mod.sampled_linear_names(cfg),
+        "entries": entries,
+    }
+
+
+def build_cnn(cfg: cnn_mod.CnnConfig, outdir: str) -> dict:
+    specs = cnn_mod.param_specs(cfg)
+    p = _params_specs(specs)
+    i32, f32 = jnp.int32, jnp.float32
+    n, s = CNN_BATCH, cfg.n_sites
+    entries = {}
+
+    def emit(name, fn, *args):
+        path = f"{cfg.name}.{name}.hlo.txt"
+        text = _lower(fn, *args)
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}.{name}: {len(text)} chars", flush=True)
+        return path
+
+    entries[f"fwd_bwd_n{n}"] = {
+        "file": emit(
+            f"fwd_bwd_n{n}",
+            lambda params, x, y, seed, rho: cnn_mod.fwd_bwd(
+                cfg, params, x, y, seed, rho
+            ),
+            p, _spec((n, cfg.img, cfg.img, cfg.in_ch), f32), _spec((n,), i32),
+            _spec((), i32), _spec((s,), f32),
+        ),
+        "batch": n,
+    }
+    entries[f"eval_n{n}"] = {
+        "file": emit(
+            f"eval_n{n}",
+            lambda params, x, y: cnn_mod.eval_step(cfg, params, x, y),
+            p, _spec((n, cfg.img, cfg.img, cfg.in_ch), f32), _spec((n,), i32),
+        ),
+        "batch": n,
+    }
+
+    params = cnn_mod.init_params(cfg, seed=1234)
+    bin_path = f"{cfg.name}.params.bin"
+    with open(os.path.join(outdir, bin_path), "wb") as f:
+        for arr in params:
+            f.write(arr.astype("<f4").tobytes())
+
+    return {
+        "kind": "cnn",
+        "config": {
+            "img": cfg.img, "in_ch": cfg.in_ch, "widths": list(cfg.widths),
+            "n_classes": cfg.n_classes, "n_sites": cfg.n_sites,
+            "use_pallas": cfg.use_pallas,
+        },
+        "params_bin": bin_path,
+        "params": [{"name": nm, "shape": list(sh)} for nm, sh in specs],
+        "entries": entries,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--models", default="tiny,tinyp,small,cnn",
+        help="comma-separated subset of: " + ",".join(
+            list(model_mod.MODELS) + list(cnn_mod.CNN_MODELS)
+        ),
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "main_batch": MAIN_BATCH, "sub_batch": SUB_BATCH,
+                "cnn_batch": CNN_BATCH, "models": {}}
+    wanted = args.models.split(",")
+    for name in wanted:
+        print(f"building {name} ...", flush=True)
+        if name in model_mod.MODELS:
+            manifest["models"][name] = build_transformer(
+                model_mod.MODELS[name], args.out
+            )
+        elif name in cnn_mod.CNN_MODELS:
+            manifest["models"][name] = build_cnn(cnn_mod.CNN_MODELS[name], args.out)
+        else:
+            print(f"unknown model {name!r}", file=sys.stderr)
+            sys.exit(1)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print("manifest.json written")
+
+
+if __name__ == "__main__":
+    main()

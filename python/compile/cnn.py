@@ -1,0 +1,175 @@
+"""L2: small CNN for the Appendix C reproduction (Table 8).
+
+The paper's SampleW is linear-layer-specific, so CNNs run the *degraded*
+VCAS: activation-gradient sampling (SampleA) only, inserted between stage
+backwards. Within a stage, gradients come from jax.vjp (exact). Trained
+with SGDM on the Rust side, optionally under the in-process data-parallel
+workers (coordinator::parallel) to mirror the paper's 8-GPU DDP setting.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.sampling import get_kernels
+from .model import _bern_mask, _ce
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnConfig:
+    name: str
+    img: int = 16
+    in_ch: int = 3
+    widths: tuple = (32, 64)  # channel width per stage (2 convs each)
+    n_classes: int = 10
+    use_pallas: bool = False
+
+    @property
+    def n_sites(self) -> int:
+        """SampleA sites: one per conv stage. Site i samples the gradient
+        entering stage i's backward; site n-1 is the feature gradient after
+        the fc backward. act_norms row i and rho[i] both refer to site i."""
+        return len(self.widths)
+
+
+def param_specs(cfg: CnnConfig) -> list[tuple[str, tuple[int, ...]]]:
+    specs = []
+    cin = cfg.in_ch
+    for s, w in enumerate(cfg.widths):
+        specs += [
+            (f"st{s}.conv1_w", (3, 3, cin, w)),
+            (f"st{s}.conv1_b", (w,)),
+            (f"st{s}.conv2_w", (3, 3, w, w)),
+            (f"st{s}.conv2_b", (w,)),
+        ]
+        cin = w
+    side = cfg.img // (2 ** len(cfg.widths))
+    specs += [
+        ("fc_w", (side * side * cfg.widths[-1], cfg.n_classes)),
+        ("fc_b", (cfg.n_classes,)),
+    ]
+    return specs
+
+
+def init_params(cfg: CnnConfig, seed: int) -> list[np.ndarray]:
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        if name.endswith("_b"):
+            out.append(np.zeros(shape, np.float32))
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            out.append(
+                (rng.standard_normal(shape) * math.sqrt(2.0 / fan_in)).astype(
+                    np.float32
+                )
+            )
+    return out
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b
+
+
+def _pool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _stage(w1, b1, w2, b2, x):
+    h = jax.nn.relu(_conv(x, w1, b1))
+    h = jax.nn.relu(_conv(h, w2, b2))
+    return _pool2(h)
+
+
+def fwd_bwd(cfg: CnnConfig, params, x, y, seed, rho):
+    """Activation-only VCAS grad step for the CNN.
+
+    Inputs : params..., x (N,H,W,C) f32, y (N,) i32, seed () i32,
+             rho (n_sites,) f32 — site i samples the gradient entering
+             stage i's backward.
+    Outputs: loss () f32, grads..., act_norms (n_sites, N) f32 — row i is
+             the per-sample norm of the gradient at site i *before* its
+             sampler (so the controller sees unsampled sparsity).
+    """
+    kern = get_kernels(cfg.use_pallas)
+    p = {name: v for (name, _), v in zip(param_specs(cfg), params)}
+    n = x.shape[0]
+    n_sites = cfg.n_sites
+
+    h = x
+    vjps = []
+    for s in range(len(cfg.widths)):
+        pre = f"st{s}."
+        h, vjp = jax.vjp(
+            _stage, p[pre + "conv1_w"], p[pre + "conv1_b"],
+            p[pre + "conv2_w"], p[pre + "conv2_b"], h,
+        )
+        vjps.append(vjp)
+    feat = h.reshape(n, -1)
+    logits = feat @ p["fc_w"] + p["fc_b"]
+    losses, dlogits = _ce(logits, y)
+    loss = jnp.mean(losses)
+
+    key = jax.random.PRNGKey(seed)
+    grads = {}
+    act_norms = [None] * n_sites
+
+    # fc grads exact, then SampleA at site n_sites-1 on the feature gradient
+    g = dlogits / n  # (N, C)
+    grads["fc_w"] = kern["sampled_matmul"](feat, g, jnp.ones((n,)))
+    grads["fc_b"] = jnp.sum(g, axis=0)
+    gfeat = g @ p["fc_w"].T
+    norms = kern["row_norms"](gfeat)
+    act_norms[n_sites - 1] = norms
+    pkeep = kref.keep_probs(norms, rho[n_sites - 1])
+    m = _bern_mask(jax.random.fold_in(key, n_sites - 1), pkeep)
+    gfeat = kern["masked_scale"](gfeat, m)
+
+    g = gfeat.reshape(h.shape)
+    for s in reversed(range(len(cfg.widths))):
+        pre = f"st{s}."
+        gw1, gb1, gw2, gb2, gx = vjps[s](g)
+        grads[pre + "conv1_w"], grads[pre + "conv1_b"] = gw1, gb1
+        grads[pre + "conv2_w"], grads[pre + "conv2_b"] = gw2, gb2
+        if s > 0:  # site s-1: sample before stage s-1's backward
+            g2d = gx.reshape(n, -1)
+            norms = kern["row_norms"](g2d)
+            act_norms[s - 1] = norms
+            pkeep = kref.keep_probs(norms, rho[s - 1])
+            m = _bern_mask(jax.random.fold_in(key, s - 1), pkeep)
+            g = kern["masked_scale"](g2d, m).reshape(gx.shape)
+
+    gtuple = tuple(grads[name] for name, _ in param_specs(cfg))
+    return (loss, *gtuple, jnp.stack(act_norms))
+
+
+def eval_step(cfg: CnnConfig, params, x, y):
+    p = {name: v for (name, _), v in zip(param_specs(cfg), params)}
+    h = x
+    for s in range(len(cfg.widths)):
+        pre = f"st{s}."
+        h = _stage(
+            p[pre + "conv1_w"], p[pre + "conv1_b"],
+            p[pre + "conv2_w"], p[pre + "conv2_b"], h,
+        )
+    logits = h.reshape(x.shape[0], -1) @ p["fc_w"] + p["fc_b"]
+    losses, _ = _ce(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.sum(losses), correct
+
+
+CNN_MODELS: dict[str, CnnConfig] = {
+    "cnn": CnnConfig(name="cnn"),
+}

@@ -1,0 +1,96 @@
+"""Pure-jnp oracles for the L1 Pallas sampling kernels.
+
+Every Pallas kernel in `sampling.py` has an exact reference here; pytest
+asserts allclose between the two across a shape/dtype sweep. These are also
+the *fallback lowering path* for large-scale wall-clock runs (`use_pallas=0`
+in aot.py): the interpret-mode Pallas grid loop lowers to an HLO `while`
+that XLA-CPU cannot fuse, so benches that measure end-to-end time may use
+this numerically-identical path (see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def row_norms(g: jnp.ndarray) -> jnp.ndarray:
+    """Per-row L2 (Frobenius) norm of a (R, K) matrix -> (R,) float32."""
+    g = g.astype(jnp.float32)
+    return jnp.sqrt(jnp.sum(g * g, axis=-1))
+
+
+def leverage_scores(g: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Leverage score ||g_i|| * ||z_i|| per row of two (R, K) matrices.
+
+    This is the RandNLA sampling score for the weight-gradient estimator
+    grad_W = G^T Z (paper Sec. 4.2 / Eq. 3).
+    """
+    return row_norms(g) * row_norms(z)
+
+
+def sampled_matmul(g: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Masked/weighted contraction  G^T diag(w) Z : (R,K1),(R,K2),(R,)->(K1,K2).
+
+    `w` carries the Bernoulli mask already divided by keep probability
+    (w_i = Bern(q_i)/q_i), so the result is an unbiased estimator of G^T Z.
+    Accumulation is always float32.
+    """
+    gw = g.astype(jnp.float32) * w.astype(jnp.float32)[:, None]
+    return gw.T @ z.astype(jnp.float32)
+
+
+def masked_scale(g: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Scale each row i of (R, K) `g` by m_i (the SampleA mask Bern(p)/p)."""
+    return (g.astype(jnp.float32) * m.astype(jnp.float32)[:, None]).astype(g.dtype)
+
+
+def keep_probs(norms: jnp.ndarray, ratio) -> jnp.ndarray:
+    """Paper Sec. 4.1: keep probabilities p_i = min(1, c * n_i) with c chosen
+    so that sum(p) = R*rho (proportional-to-norm with caps, solved exactly by
+    water-filling over the sorted norms).
+
+    The exact cap solution matters at the boundaries: with rho = 1 it yields
+    p = 1 for every row with nonzero norm, so the same artifact performs
+    *bitwise exact* training when the controller sets ratios to 1. Unbiased
+    for any p_i > 0. Result is floored at a tiny epsilon so zero-norm rows
+    are dropped (m = Bern(eps)/eps = 0 a.s.) but never divide by zero.
+    """
+    norms = norms.astype(jnp.float32)
+    r = norms.shape[0]
+    # Budget counts only rows that can carry gradient: rows already zeroed
+    # (e.g. dropped upstream by SampleA) don't consume keep budget, so the
+    # expected kept count after chaining SampleA(rho) and SampleW(nu) is
+    # R*rho*nu — the paper's sum q_i = NT*rho_l*nu_l (Sec. 4.2) and what
+    # the FLOPs ledger charges.
+    nnz = jnp.sum((norms > 0.0).astype(jnp.float32))
+    budget = nnz * jnp.float32(ratio)
+    ns = -jnp.sort(-norms)  # descending
+    cums = jnp.cumsum(ns)
+    total = cums[-1]
+    k = jnp.arange(r, dtype=jnp.float32)
+    tail = total - (cums - ns)  # sum of ns[k:]
+    c = (budget - k) / jnp.maximum(tail, 1e-30)
+    # smallest k (number of capped rows) whose water level fits under the cap
+    ok = c * ns <= 1.0 + 1e-6
+    k_star = jnp.argmax(ok)
+    any_ok = jnp.any(ok)
+    c_star = jnp.where(any_ok, c[k_star], 0.0)
+    p = jnp.minimum(norms * c_star, 1.0)
+    # no fit -> everything capped at 1; degenerate ratio/total -> keep all
+    all_one = (~any_ok) | (jnp.float32(ratio) >= 1.0) | (total <= 0.0)
+    p = jnp.where(all_one, jnp.ones_like(p), p)
+    return jnp.maximum(p, 1e-12)
+
+
+def eq3_variance(g: jnp.ndarray, z: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Analytic SampleW variance (paper Eq. 3):
+
+        Var[grad_W] = sum_i (1-q_i)/q_i * ||g_i||^2 * ||z_i||^2
+
+    computed from the *pre-mask* rows g (already SampleA-scaled) and layer
+    input z, with keep probabilities q. Returns a scalar float32.
+    """
+    g2 = jnp.sum(g.astype(jnp.float32) ** 2, axis=-1)
+    z2 = jnp.sum(z.astype(jnp.float32) ** 2, axis=-1)
+    q = q.astype(jnp.float32)
+    return jnp.sum((1.0 - q) / q * g2 * z2)

@@ -1,0 +1,236 @@
+"""L1 Pallas kernels for VCAS sampling (TPU-shaped, run under interpret).
+
+The paper's CUDA formulation (threadblocks over gradient rows, warp
+reductions for norms) is re-expressed for the TPU memory hierarchy:
+
+- tiles are (8,128)-aligned panels staged HBM->VMEM via `BlockSpec`;
+- reductions accumulate f32 partials in the output block across the
+  contracted grid axis (revisited-output accumulation, the Pallas idiom for
+  MXU-style K-loops);
+- `sampled_matmul` feeds the MXU with (BR x B1)^T @ (BR x B2) panel products,
+  mask applied on the panel load, f32 accumulate regardless of input dtype.
+
+All kernels lower with `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, so interpret mode (which lowers the grid to plain HLO)
+is the correctness + composition path. TPU performance is *estimated* from
+the BlockSpecs (VMEM footprint / MXU utilization) in EXPERIMENTS.md §Perf —
+interpret timings are never used as a TPU proxy.
+
+Shapes are padded to block multiples in the public wrappers; padded rows
+carry zero weight/norm so results are exact.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shapes. 128 lanes matches both the TPU lane width and the MXU edge;
+# 128 sublanes keeps the interpret-mode grid small (the grid lowers to an
+# HLO while-loop, so fewer, fatter steps compile and run faster on CPU).
+BLOCK_R = 128  # rows per panel (contracted dim of sampled_matmul)
+BLOCK_K = 128  # lanes per panel
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _pad2(a: jnp.ndarray, r: int, k: int) -> jnp.ndarray:
+    pr, pk = r - a.shape[0], k - a.shape[1]
+    if pr == 0 and pk == 0:
+        return a
+    return jnp.pad(a, ((0, pr), (0, pk)))
+
+
+# ----------------------------------------------------------------------------
+# row_norms: per-row Frobenius norm of (R, K), f32 out.
+# Grid (R/BR, K/BK); the K axis is contracted by accumulating squared sums
+# into the (BR,) output block (same block for every k step).
+# VMEM/step: BR*BK*4B (input panel) + BR*4B (acc) = 64 KiB + 512 B.
+# ----------------------------------------------------------------------------
+
+
+def _row_norm_sq_kernel(g_ref, o_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(g * g, axis=1)
+
+
+def row_norms(g: jnp.ndarray) -> jnp.ndarray:
+    """Per-row L2 norm of a (R, K) matrix -> (R,) float32 (Pallas)."""
+    r, k = g.shape
+    rp, kp = _ceil_to(r, BLOCK_R), _ceil_to(k, BLOCK_K)
+    gp = _pad2(g, rp, kp)
+    out = pl.pallas_call(
+        _row_norm_sq_kernel,
+        grid=(rp // BLOCK_R, kp // BLOCK_K),
+        in_specs=[pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((BLOCK_R,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((rp,), jnp.float32),
+        interpret=INTERPRET,
+    )(gp)
+    return jnp.sqrt(out[:r])
+
+
+# ----------------------------------------------------------------------------
+# leverage_scores: ||g_i|| * ||z_i|| per row — fused two-matrix reduction.
+# Two f32 accumulators (one output pair); sqrt+product finalized outside the
+# grid (cheap (R,) vector math that XLA fuses into the consumer).
+# ----------------------------------------------------------------------------
+
+
+def _two_norm_sq_kernel(g_ref, z_ref, og_ref, oz_ref):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        og_ref[...] = jnp.zeros_like(og_ref)
+        oz_ref[...] = jnp.zeros_like(oz_ref)
+
+    g = g_ref[...].astype(jnp.float32)
+    z = z_ref[...].astype(jnp.float32)
+    og_ref[...] += jnp.sum(g * g, axis=1)
+    oz_ref[...] += jnp.sum(z * z, axis=1)
+
+
+def leverage_scores(g: jnp.ndarray, z: jnp.ndarray) -> jnp.ndarray:
+    """Per-row ||g_i||*||z_i|| of two (R, Kg)/(R, Kz) matrices (Pallas)."""
+    r = g.shape[0]
+    assert z.shape[0] == r, "row counts must match"
+    kg, kz = g.shape[1], z.shape[1]
+    kp = _ceil_to(max(kg, kz), BLOCK_K)
+    rp = _ceil_to(r, BLOCK_R)
+    gp, zp = _pad2(g, rp, kp), _pad2(z, rp, kp)
+    sg, sz = pl.pallas_call(
+        _two_norm_sq_kernel,
+        grid=(rp // BLOCK_R, kp // BLOCK_K),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_R,), lambda i, j: (i,)),
+            pl.BlockSpec((BLOCK_R,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp,), jnp.float32),
+            jax.ShapeDtypeStruct((rp,), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(gp, zp)
+    return jnp.sqrt(sg[:r]) * jnp.sqrt(sz[:r])
+
+
+# ----------------------------------------------------------------------------
+# sampled_matmul: G^T diag(w) Z -> (K1, K2); the weight-gradient hot spot.
+# Grid (K1/B1, K2/B2, R/BR): classic MXU K-loop with the row (token) axis
+# contracted innermost; the Bernoulli/keep-prob weights are applied on the
+# G panel load so dropped rows cost a multiply, not a matmul.
+# VMEM/step: (BR*B1 + BR*B2 + B1*B2)*4B + BR*4B = 192.5 KiB at 128^3.
+# MXU: each step is a 128x128x128 f32 contraction (bf16 inputs upcast).
+# ----------------------------------------------------------------------------
+
+
+def _sampled_matmul_kernel(g_ref, z_ref, w_ref, o_ref):
+    r = pl.program_id(2)
+
+    @pl.when(r == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    g = g_ref[...].astype(jnp.float32) * w_ref[...].astype(jnp.float32)[:, None]
+    z = z_ref[...].astype(jnp.float32)
+    o_ref[...] += jax.lax.dot_general(
+        g, z, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def sampled_matmul(g: jnp.ndarray, z: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Unbiased weight-grad contraction G^T diag(w) Z (Pallas, f32 out)."""
+    r, k1 = g.shape
+    r2, k2 = z.shape
+    assert r == r2 and w.shape == (r,)
+    rp = _ceil_to(r, BLOCK_R)
+    k1p, k2p = _ceil_to(k1, BLOCK_K), _ceil_to(k2, BLOCK_K)
+    gp, zp = _pad2(g, rp, k1p), _pad2(z, rp, k2p)
+    wp = jnp.pad(w, (0, rp - r))  # padded rows weigh zero -> exact result
+    out = pl.pallas_call(
+        _sampled_matmul_kernel,
+        grid=(k1p // BLOCK_K, k2p // BLOCK_K, rp // BLOCK_R),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j, r: (r, i)),
+            pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j, r: (r, j)),
+            pl.BlockSpec((BLOCK_R,), lambda i, j, r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_K, BLOCK_K), lambda i, j, r: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((k1p, k2p), jnp.float32),
+        interpret=INTERPRET,
+    )(gp, zp, wp)
+    return out[:k1, :k2]
+
+
+# ----------------------------------------------------------------------------
+# masked_scale: row-broadcast multiply G * m[:, None] (the SampleA apply).
+# Elementwise, VPU-bound; one panel in, one out.
+# ----------------------------------------------------------------------------
+
+
+def _masked_scale_kernel(g_ref, m_ref, o_ref):
+    o_ref[...] = (
+        g_ref[...].astype(jnp.float32) * m_ref[...].astype(jnp.float32)[:, None]
+    ).astype(o_ref.dtype)
+
+
+def masked_scale(g: jnp.ndarray, m: jnp.ndarray) -> jnp.ndarray:
+    """Scale row i of (R, K) by m_i (Pallas); output keeps g's dtype."""
+    r, k = g.shape
+    assert m.shape == (r,)
+    rp, kp = _ceil_to(r, BLOCK_R), _ceil_to(k, BLOCK_K)
+    gp = _pad2(g, rp, kp)
+    mp = jnp.pad(m, (0, rp - r))
+    out = pl.pallas_call(
+        _masked_scale_kernel,
+        grid=(rp // BLOCK_R, kp // BLOCK_K),
+        in_specs=[
+            pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j: (i, j)),
+            pl.BlockSpec((BLOCK_R,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_R, BLOCK_K), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, kp), g.dtype),
+        interpret=INTERPRET,
+    )(gp, mp)
+    return out[:r, :k]
+
+
+# Public, swappable kernel table: model.py picks `pallas` or `ref` at
+# lowering time (aot.py --use-pallas). Both are numerically identical
+# (pytest enforces allclose), so artifacts differ only in HLO structure.
+from . import ref as _ref  # noqa: E402
+
+PALLAS_KERNELS = {
+    "row_norms": row_norms,
+    "leverage_scores": leverage_scores,
+    "sampled_matmul": sampled_matmul,
+    "masked_scale": masked_scale,
+}
+REF_KERNELS = {
+    "row_norms": _ref.row_norms,
+    "leverage_scores": _ref.leverage_scores,
+    "sampled_matmul": _ref.sampled_matmul,
+    "masked_scale": _ref.masked_scale,
+}
+
+
+@functools.lru_cache(maxsize=None)
+def get_kernels(use_pallas: bool):
+    return PALLAS_KERNELS if use_pallas else REF_KERNELS

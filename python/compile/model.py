@@ -1,0 +1,469 @@
+"""L2: BERT-style transformer encoder with the VCAS instrumented backward.
+
+The forward pass is a standard pre-LN encoder. The backward pass is written
+manually (jax.vjp is used only for *within-block* non-linear ops: layernorm,
+attention core, gelu) so the paper's two samplers can be inserted exactly
+where Sec. 4 places them:
+
+- `SampleA` (Sec. 4.1) at the top of every block's backward: unbiased
+  Bernoulli importance sampling of the activation gradient over the data
+  dimension, keep prob p_i = min(1, N*rho_l * ||G_i||_F / sum||G||_F).
+- `SampleW` (Sec. 4.2) at every linear's weight gradient: leverage-score
+  sampling over the NT token rows, q_i = min(1, NT*nu * ||g_i|| ||z_i|| / sum),
+  with the analytic Eq. 3 variance emitted as a per-parameter output so the
+  Rust controller can run Eq. 7 without extra passes.
+
+Sample ratios (rho per block, nu per sampled linear) are *runtime inputs*
+of the lowered graph: rho = nu = 1 turns every mask into exact ones, so a
+single AOT artifact serves exact training, VCAS training, and the
+variance-probe runs of Alg. 1 (see coordinator::vcas on the Rust side).
+
+Everything here runs at build time only; aot.py lowers these functions to
+HLO text that the Rust runtime loads via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref as kref
+from .kernels.sampling import get_kernels
+
+# Number of sampled linears per transformer block: qkv, attn-out, ff1, ff2.
+LINEARS_PER_BLOCK = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture config; one set of artifacts per instance."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_layers: int
+    seq_len: int
+    n_classes: int
+    use_pallas: bool = True
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_sampled(self) -> int:
+        return LINEARS_PER_BLOCK * self.n_layers
+
+
+# ----------------------------------------------------------------------------
+# Parameters. Flat, ordered list of (name, shape) — the same order is the
+# calling convention of every AOT entry and of the .bin parameter file the
+# Rust side loads (formats::params).
+# ----------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    d, f, v, t, c = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len, cfg.n_classes
+    specs: list[tuple[str, tuple[int, ...]]] = [
+        ("embed", (v, d)),
+        ("pos", (t, d)),
+    ]
+    for l in range(cfg.n_layers):
+        specs += [
+            (f"blk{l}.ln1_g", (d,)),
+            (f"blk{l}.ln1_b", (d,)),
+            (f"blk{l}.w_qkv", (d, 3 * d)),
+            (f"blk{l}.b_qkv", (3 * d,)),
+            (f"blk{l}.w_o", (d, d)),
+            (f"blk{l}.b_o", (d,)),
+            (f"blk{l}.ln2_g", (d,)),
+            (f"blk{l}.ln2_b", (d,)),
+            (f"blk{l}.w_ff1", (d, f)),
+            (f"blk{l}.b_ff1", (f,)),
+            (f"blk{l}.w_ff2", (f, d)),
+            (f"blk{l}.b_ff2", (d,)),
+        ]
+    specs += [
+        ("ln_f_g", (d,)),
+        ("ln_f_b", (d,)),
+        ("head_w", (d, c)),
+        ("head_b", (c,)),
+        ("mlm_b", (v,)),
+    ]
+    return specs
+
+
+# Names of the weight tensors subject to SampleW, in nu-vector order.
+def sampled_linear_names(cfg: ModelConfig) -> list[str]:
+    names = []
+    for l in range(cfg.n_layers):
+        names += [f"blk{l}.w_qkv", f"blk{l}.w_o", f"blk{l}.w_ff1", f"blk{l}.w_ff2"]
+    return names
+
+
+def init_params(cfg: ModelConfig, seed: int) -> list[np.ndarray]:
+    """Deterministic init (truncated-normal-ish); dumped to artifacts/*.bin."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for name, shape in param_specs(cfg):
+        if name.endswith(("_b", ".b_qkv", ".b_o", ".b_ff1", ".b_ff2")) or name == "mlm_b":
+            arr = np.zeros(shape, np.float32)
+        elif name.endswith(("ln1_g", "ln2_g")) or name == "ln_f_g":
+            arr = np.ones(shape, np.float32)
+        elif name == "pos":
+            arr = (rng.standard_normal(shape) * 0.02).astype(np.float32)
+        elif name == "embed":
+            arr = (rng.standard_normal(shape) * 0.02).astype(np.float32)
+        else:  # dense weights: scaled by fan-in
+            fan_in = shape[0]
+            arr = (rng.standard_normal(shape) * (1.0 / math.sqrt(fan_in))).astype(
+                np.float32
+            )
+        out.append(arr)
+    return out
+
+
+def _pdict(cfg: ModelConfig, params) -> dict[str, jnp.ndarray]:
+    return {name: p for (name, _), p in zip(param_specs(cfg), params)}
+
+
+# ----------------------------------------------------------------------------
+# Forward ops (pure; backward obtained via jax.vjp within the same trace).
+# ----------------------------------------------------------------------------
+
+
+def layernorm(h, g, b, eps=1e-5):
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.var(h, axis=-1, keepdims=True)
+    return (h - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def gelu(u):
+    return 0.5 * u * (1.0 + jnp.tanh(0.7978845608028654 * (u + 0.044715 * u**3)))
+
+
+def attention_core(qkv, n_heads: int):
+    """(N,T,3D) -> (N,T,D); bidirectional softmax attention, no masking."""
+    n, t, three_d = qkv.shape
+    d = three_d // 3
+    dh = d // n_heads
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(x):  # (N,T,D) -> (N,H,T,dh)
+        return x.reshape(n, t, n_heads, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    scores = jnp.einsum("nhtd,nhsd->nhts", q, k) / math.sqrt(dh)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("nhts,nhsd->nhtd", probs, v)
+    return ctx.transpose(0, 2, 1, 3).reshape(n, t, d)
+
+
+# ----------------------------------------------------------------------------
+# Sampling helpers (the estimator; kernels swap between pallas and ref).
+# ----------------------------------------------------------------------------
+
+
+def _bern_mask(key, p):
+    """Unbiased mask Bern(p)/p, safe at tiny p (dropped rows -> exactly 0)."""
+    u = jax.random.uniform(key, p.shape)
+    keep = u < p
+    return jnp.where(keep, 1.0 / p, 0.0)
+
+
+def sample_a(kern, key, g, rho):
+    """SampleA over the data dim of g:(N,T,K). Returns (g_hat, norms(N,))."""
+    n = g.shape[0]
+    norms = kern["row_norms"](g.reshape(n, -1))
+    p = kref.keep_probs(norms, rho)
+    m = _bern_mask(key, p)
+    g_hat = kern["masked_scale"](g.reshape(n, -1), m).reshape(g.shape)
+    return g_hat, norms
+
+
+def linear_bwd_sampled(kern, key, w, z2d, g2d, nu_apply, nu_probe):
+    """Backward of y = z @ w + b with SampleW on the weight gradient.
+
+    z2d: (R, Din) layer input, g2d: (R, Dout) upstream grad (SampleA'd).
+    Returns (gw (Din,Dout), gb (Dout,), gz (R,Din), vw_probe scalar).
+    vw_probe is the analytic Eq. 3 variance the masks *would* have at
+    nu_probe — the controller probes candidate ratios without extra passes.
+    """
+    r = g2d.shape[0]
+    scores = kern["leverage_scores"](g2d, z2d)
+    q_apply = kref.keep_probs(scores, nu_apply)
+    q_probe = kref.keep_probs(scores, nu_probe)
+    wmask = _bern_mask(key, q_apply)
+    # grad_W^T = G^T diag(w) Z  -> we need (Din, Dout) = (Z^T diag(w) G)
+    gw = kern["sampled_matmul"](z2d, g2d, wmask)
+    gb = jnp.sum(g2d, axis=0)
+    gz = g2d @ w.T
+    vw = kref.eq3_variance(g2d, z2d, q_probe)
+    return gw, gb, gz, vw
+
+
+# ----------------------------------------------------------------------------
+# Encoder forward with saved vjp closures, and the instrumented backward.
+# ----------------------------------------------------------------------------
+
+
+def _encode_fwd(cfg: ModelConfig, p, x):
+    """Forward through embedding + blocks; returns (hL, saved)."""
+    h = p["embed"][x] + p["pos"][None, : x.shape[1]]
+    saved = []
+    for l in range(cfg.n_layers):
+        pre = f"blk{l}."
+        h_in = h
+        a, vjp_ln1 = jax.vjp(layernorm, h_in, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        qkv = a @ p[pre + "w_qkv"] + p[pre + "b_qkv"]
+        attn, vjp_attn = jax.vjp(lambda q: attention_core(q, cfg.n_heads), qkv)
+        o = attn @ p[pre + "w_o"] + p[pre + "b_o"]
+        h2 = h_in + o
+        b2, vjp_ln2 = jax.vjp(layernorm, h2, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        u1 = b2 @ p[pre + "w_ff1"] + p[pre + "b_ff1"]
+        f1, vjp_gelu = jax.vjp(gelu, u1)
+        f2 = f1 @ p[pre + "w_ff2"] + p[pre + "b_ff2"]
+        h = h2 + f2
+        saved.append(
+            dict(
+                a=a, qkv=qkv, attn=attn, b2=b2, f1=f1,
+                vjp_ln1=vjp_ln1, vjp_attn=vjp_attn, vjp_ln2=vjp_ln2,
+                vjp_gelu=vjp_gelu,
+            )
+        )
+    return h, saved
+
+
+def _encode_bwd(cfg: ModelConfig, p, x, saved, g, key, rho, nu_apply, nu_probe):
+    """Instrumented backward through the blocks.
+
+    g: gradient wrt hL. Returns (grads dict, act_norms (L,N), vw (4L,)).
+    Block l's backward starts with SampleA at ratio rho[l]; each of its four
+    linears applies SampleW at nu[4l+j].
+    """
+    kern = get_kernels(cfg.use_pallas)
+    n, t = x.shape
+    d = cfg.d_model
+    grads: dict[str, jnp.ndarray] = {}
+    act_norms = [None] * cfg.n_layers
+    vw = [jnp.float32(0.0)] * (LINEARS_PER_BLOCK * cfg.n_layers)
+
+    for l in reversed(range(cfg.n_layers)):
+        pre = f"blk{l}."
+        s = saved[l]
+        kA, k0, k1, k2, k3 = jax.random.split(jax.random.fold_in(key, l), 5)
+
+        g, act_norms[l] = sample_a(kern, kA, g, rho[l])
+
+        # --- FFN ---
+        g2 = g.reshape(n * t, d)
+        gw2, gb2, gf1, v2 = linear_bwd_sampled(
+            kern, k3, p[pre + "w_ff2"], s["f1"].reshape(n * t, -1), g2,
+            nu_apply[4 * l + 3], nu_probe[4 * l + 3],
+        )
+        grads[pre + "w_ff2"], grads[pre + "b_ff2"] = gw2, gb2
+        vw[4 * l + 3] = v2
+        (gu1,) = s["vjp_gelu"](gf1.reshape(n, t, -1))
+        gw1, gb1, gb2in, v1 = linear_bwd_sampled(
+            kern, k2, p[pre + "w_ff1"], s["b2"].reshape(n * t, d),
+            gu1.reshape(n * t, -1),
+            nu_apply[4 * l + 2], nu_probe[4 * l + 2],
+        )
+        grads[pre + "w_ff1"], grads[pre + "b_ff1"] = gw1, gb1
+        vw[4 * l + 2] = v1
+        gh2_ln, gln2g, gln2b = s["vjp_ln2"](gb2in.reshape(n, t, d))
+        grads[pre + "ln2_g"], grads[pre + "ln2_b"] = gln2g, gln2b
+        gh2 = g + gh2_ln  # residual
+
+        # --- attention ---
+        go = gh2.reshape(n * t, d)
+        gwo, gbo, gattn, vo = linear_bwd_sampled(
+            kern, k1, p[pre + "w_o"], s["attn"].reshape(n * t, d), go,
+            nu_apply[4 * l + 1], nu_probe[4 * l + 1],
+        )
+        grads[pre + "w_o"], grads[pre + "b_o"] = gwo, gbo
+        vw[4 * l + 1] = vo
+        (gqkv,) = s["vjp_attn"](gattn.reshape(n, t, d))
+        gwqkv, gbqkv, ga, vq = linear_bwd_sampled(
+            kern, k0, p[pre + "w_qkv"], s["a"].reshape(n * t, d),
+            gqkv.reshape(n * t, -1),
+            nu_apply[4 * l + 0], nu_probe[4 * l + 0],
+        )
+        grads[pre + "w_qkv"], grads[pre + "b_qkv"] = gwqkv, gbqkv
+        vw[4 * l + 0] = vq
+        gh_ln, gln1g, gln1b = s["vjp_ln1"](ga.reshape(n, t, d))
+        grads[pre + "ln1_g"], grads[pre + "ln1_b"] = gln1g, gln1b
+        g = gh2 + gh_ln  # residual into block l-1
+
+    # --- embedding ---
+    grads["embed"] = jnp.zeros((cfg.vocab, d), jnp.float32).at[x.reshape(-1)].add(
+        g.reshape(n * t, d)
+    )
+    grads["pos"] = jnp.sum(g, axis=0)
+    return grads, jnp.stack(act_norms), jnp.stack(vw)
+
+
+# ----------------------------------------------------------------------------
+# Heads + losses.
+# ----------------------------------------------------------------------------
+
+
+def _cls_head(p, hl):
+    """Mean-pool + linear classifier. Returns logits (N, C) and vjp inputs."""
+
+    def f(ln_g, ln_b, w, b, h):
+        hf = layernorm(h, ln_g, ln_b)
+        pooled = jnp.mean(hf, axis=1)
+        return pooled @ w + b
+
+    return jax.vjp(f, p["ln_f_g"], p["ln_f_b"], p["head_w"], p["head_b"], hl)
+
+
+def _mlm_head(p, hl):
+    """Tied-embedding LM head. logits (N, T, V)."""
+
+    def f(ln_g, ln_b, emb, b, h):
+        hf = layernorm(h, ln_g, ln_b)
+        return hf @ emb.T + b
+
+    return jax.vjp(f, p["ln_f_g"], p["ln_f_b"], p["embed"], p["mlm_b"], hl)
+
+
+def _ce(logits, y):
+    """Per-example cross entropy + dlogits (softmax - onehot)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    losses = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    dlogits = jnp.exp(logp) - jax.nn.one_hot(y, logits.shape[-1], dtype=jnp.float32)
+    return losses, dlogits
+
+
+def _zeros_like_specs(cfg, names):
+    spec = dict(param_specs(cfg))
+    return {n: jnp.zeros(spec[n], jnp.float32) for n in names}
+
+
+def _grads_tuple(cfg, grads: dict) -> tuple:
+    return tuple(grads[name] for name, _ in param_specs(cfg))
+
+
+# ----------------------------------------------------------------------------
+# AOT entry points.
+# ----------------------------------------------------------------------------
+
+
+def fwd_bwd_cls(cfg: ModelConfig, params, x, y, sw, seed, rho, nu_apply, nu_probe):
+    """Training grad step, classification task.
+
+    Inputs : params..., x (N,T) i32, y (N,) i32, sw (N,) f32 per-sample loss
+             weights (1/N for plain mean; the UB baseline passes its
+             importance weights 1/(N k p_i)), seed () i32, rho (L,) f32,
+             nu_apply (4L,) f32, nu_probe (4L,) f32.
+    Outputs: loss () f32, grads... (param-shaped), act_norms (L,N) f32,
+             vw (4L,) f32 analytic Eq.3 variance at nu_probe.
+    """
+    p = _pdict(cfg, params)
+    hl, saved = _encode_fwd(cfg, p, x)
+    (logits, head_vjp) = _cls_head(p, hl)
+    losses, dlogits = _ce(logits, y)
+    loss = jnp.sum(losses * sw)
+    glnf_g, glnf_b, ghw, ghb, g = head_vjp(dlogits * sw[:, None])
+    key = jax.random.PRNGKey(seed)
+    grads, act_norms, vw = _encode_bwd(
+        cfg, p, x, saved, g, key, rho, nu_apply, nu_probe
+    )
+    grads.update(
+        {"ln_f_g": glnf_g, "ln_f_b": glnf_b, "head_w": ghw, "head_b": ghb}
+    )
+    grads["mlm_b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return (loss, *_grads_tuple(cfg, grads), act_norms, vw)
+
+
+def fwd_bwd_mlm(cfg: ModelConfig, params, x, y, w, seed, rho, nu_apply, nu_probe):
+    """Training grad step, masked-LM task.
+
+    x,y: (N,T) i32 (y = original ids), w: (N,T) f32 1.0 on predicted
+    positions; loss = sum(w*ce)/sum(w).
+    """
+    p = _pdict(cfg, params)
+    hl, saved = _encode_fwd(cfg, p, x)
+    (logits, head_vjp) = _mlm_head(p, hl)
+    losses, dlogits = _ce(logits, y)
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    loss = jnp.sum(losses * w) / denom
+    glnf_g, glnf_b, gemb_head, gmlm_b, g = head_vjp(dlogits * (w / denom)[..., None])
+    key = jax.random.PRNGKey(seed)
+    grads, act_norms, vw = _encode_bwd(
+        cfg, p, x, saved, g, key, rho, nu_apply, nu_probe
+    )
+    grads["embed"] = grads["embed"] + gemb_head  # tied embedding: both paths
+    grads.update({"ln_f_g": glnf_g, "ln_f_b": glnf_b, "mlm_b": gmlm_b})
+    grads.update(_zeros_like_specs(cfg, ["head_w", "head_b"]))
+    return (loss, *_grads_tuple(cfg, grads), act_norms, vw)
+
+
+def fwd_loss_cls(cfg: ModelConfig, params, x, y):
+    """Per-sample loss + UB importance score (for the SB / UB baselines).
+
+    UB (Katharopoulos & Fleuret 2018): the gradient-norm upper bound is the
+    norm of the loss gradient at the last layer's pre-activations — for
+    softmax CE that is ||softmax(logits) - onehot(y)||_2 per sample.
+    """
+    p = _pdict(cfg, params)
+    hl, _ = _encode_fwd(cfg, p, x)
+    logits, _ = _cls_head(p, hl)
+    losses, dlogits = _ce(logits, y)
+    ub = jnp.sqrt(jnp.sum(dlogits**2, axis=-1))
+    return losses, ub
+
+
+def eval_cls(cfg: ModelConfig, params, x, y):
+    """Returns (loss_sum, correct_count) over the batch."""
+    p = _pdict(cfg, params)
+    hl, _ = _encode_fwd(cfg, p, x)
+    logits, _ = _cls_head(p, hl)
+    losses, _ = _ce(logits, y)
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.sum(losses), correct
+
+
+def eval_mlm(cfg: ModelConfig, params, x, y, w):
+    """Returns (weighted_loss_sum, weighted_correct, weight_sum)."""
+    p = _pdict(cfg, params)
+    hl, _ = _encode_fwd(cfg, p, x)
+    logits, _ = _mlm_head(p, hl)
+    losses, _ = _ce(logits, y)
+    pred_ok = (jnp.argmax(logits, axis=-1) == y).astype(jnp.float32)
+    return jnp.sum(losses * w), jnp.sum(pred_ok * w), jnp.sum(w)
+
+
+# Named model zoo — aot.py builds artifacts for each.
+#
+# "tiny" lowers the sampling ops through the pure-jnp reference path and is
+# the bench workhorse (the interpret-mode Pallas grid lowers to an HLO while
+# loop that XLA-CPU cannot fuse — a 4x step-time tax, see EXPERIMENTS §Perf).
+# "tinyp" is the *same* architecture and init seed lowered through the
+# Pallas kernels: the Rust integration suite asserts its exact-mode
+# gradients match tiny's bitwise-closely, proving the kernel path composes
+# through AOT + PJRT. Real-TPU deployments would lower tinyp with
+# interpret=False (Mosaic) and keep the same artifacts contract.
+MODELS: dict[str, ModelConfig] = {
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d_model=64, n_heads=4, d_ff=256,
+        n_layers=4, seq_len=32, n_classes=4, use_pallas=False,
+    ),
+    "tinyp": ModelConfig(
+        name="tinyp", vocab=512, d_model=64, n_heads=4, d_ff=256,
+        n_layers=4, seq_len=32, n_classes=4, use_pallas=True,
+    ),
+    "small": ModelConfig(
+        name="small", vocab=4096, d_model=128, n_heads=8, d_ff=512,
+        n_layers=6, seq_len=64, n_classes=4, use_pallas=False,
+    ),
+}

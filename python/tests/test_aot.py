@@ -1,0 +1,80 @@
+"""AOT artifact contract tests: manifest structure matches the model zoo,
+parameter binaries have exactly the declared sizes, and the HLO text files
+parse as HLO modules (cheap structural checks — full execution is covered
+by the Rust integration suite)."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import cnn as cnn_mod
+from compile import model as model_mod
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_models(manifest):
+    for name in ("tiny", "small", "cnn"):
+        assert name in manifest["models"], f"{name} missing"
+
+
+def test_param_specs_match_model_zoo(manifest):
+    for name, cfg in model_mod.MODELS.items():
+        if name not in manifest["models"]:
+            continue
+        specs = model_mod.param_specs(cfg)
+        m = manifest["models"][name]
+        assert [p["name"] for p in m["params"]] == [n for n, _ in specs]
+        assert [tuple(p["shape"]) for p in m["params"]] == [s for _, s in specs]
+        assert m["sampled_linears"] == model_mod.sampled_linear_names(cfg)
+
+
+def test_params_bin_sizes(manifest):
+    for name, m in manifest["models"].items():
+        path = os.path.join(ART, m["params_bin"])
+        want = sum(int(np.prod(p["shape"])) for p in m["params"]) * 4
+        assert os.path.getsize(path) == want, f"{name} params size"
+
+
+def test_entry_files_exist_and_look_like_hlo(manifest):
+    for name, m in manifest["models"].items():
+        for ename, e in m["entries"].items():
+            path = os.path.join(ART, e["file"])
+            assert os.path.exists(path), f"{name}.{ename} missing"
+            head = open(path).read(200)
+            assert "HloModule" in head, f"{name}.{ename} not HLO text"
+
+
+def test_init_params_deterministic():
+    a = model_mod.init_params(model_mod.MODELS["tiny"], seed=1234)
+    b = model_mod.init_params(model_mod.MODELS["tiny"], seed=1234)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_tiny_and_tinyp_share_init(manifest):
+    if "tinyp" not in manifest["models"]:
+        pytest.skip("tinyp not built")
+    a = np.fromfile(os.path.join(ART, manifest["models"]["tiny"]["params_bin"]), "<f4")
+    b = np.fromfile(os.path.join(ART, manifest["models"]["tinyp"]["params_bin"]), "<f4")
+    np.testing.assert_array_equal(a, b)
+
+
+def test_cnn_manifest(manifest):
+    m = manifest["models"]["cnn"]
+    cfg = cnn_mod.CNN_MODELS["cnn"]
+    assert m["config"]["n_sites"] == cfg.n_sites
+    assert m["kind"] == "cnn"

@@ -1,0 +1,168 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/dtypes; assert_allclose against ref. This is the
+core numeric signal that the Pallas lowering used inside the AOT training
+graphs computes exactly the paper's estimator.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, sampling
+
+jax.config.update("jax_platform_name", "cpu")
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=1e-5, atol=1e-5)
+
+
+shape_rk = st.tuples(st.integers(1, 300), st.integers(1, 200))
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_rk, dt=st.sampled_from(range(len(DTYPES))), seed=st.integers(0, 2**31 - 1))
+def test_row_norms_matches_ref(shape, dt, seed):
+    dtype = DTYPES[dt]
+    g = _rand(jax.random.PRNGKey(seed), shape, dtype)
+    got = sampling.row_norms(g)
+    want = ref.row_norms(g)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    r=st.integers(1, 260),
+    kg=st.integers(1, 160),
+    kz=st.integers(1, 160),
+    dt=st.sampled_from(range(len(DTYPES))),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_leverage_scores_matches_ref(r, kg, kz, dt, seed):
+    dtype = DTYPES[dt]
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = _rand(k1, (r, kg), dtype)
+    z = _rand(k2, (r, kz), dtype)
+    got = sampling.leverage_scores(g, z)
+    want = ref.leverage_scores(g, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(1, 300),
+    k1=st.integers(1, 150),
+    k2=st.integers(1, 150),
+    dt=st.sampled_from(range(len(DTYPES))),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sampled_matmul_matches_ref(r, k1, k2, dt, seed):
+    dtype = DTYPES[dt]
+    ka, kb, kc = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = _rand(ka, (r, k1), dtype)
+    z = _rand(kb, (r, k2), dtype)
+    # Realistic weights: Bern(q)/q with some zeros.
+    q = jax.random.uniform(kc, (r,), minval=0.05, maxval=1.0)
+    w = (jax.random.uniform(ka, (r,)) < q).astype(jnp.float32) / q
+    got = sampling.sampled_matmul(g, z, w)
+    want = ref.sampled_matmul(g, z, w)
+    tol = dict(rtol=5e-2, atol=5e-1) if dtype == jnp.bfloat16 else dict(rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shape=shape_rk, dt=st.sampled_from(range(len(DTYPES))), seed=st.integers(0, 2**31 - 1))
+def test_masked_scale_matches_ref(shape, dt, seed):
+    dtype = DTYPES[dt]
+    ka, kb = jax.random.split(jax.random.PRNGKey(seed))
+    g = _rand(ka, shape, dtype)
+    m = jax.random.uniform(kb, (shape[0],), maxval=3.0)
+    got = sampling.masked_scale(g, m)
+    assert got.dtype == g.dtype
+    want = ref.masked_scale(g, m)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+    )
+
+
+# --- estimator-level properties (oracle math, used by the training graph) ---
+
+
+def test_keep_probs_bounds_and_budget():
+    norms = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (512,)))
+    for ratio in [0.05, 0.3, 0.9, 1.0]:
+        p = ref.keep_probs(norms, ratio)
+        assert float(jnp.max(p)) <= 1.0 + 1e-6
+        assert float(jnp.min(p)) > 0.0
+        # Water-filling meets the budget exactly: sum(p) == R*rho.
+        assert float(jnp.sum(p)) == pytest.approx(512 * ratio, rel=1e-4)
+
+
+def test_keep_probs_ratio_one_is_exact_mode():
+    norms = jnp.array([1.0, 2.0, 3.0, 0.5])
+    p = ref.keep_probs(norms, 1.0)
+    np.testing.assert_allclose(np.asarray(p), 1.0)  # rho=1 -> keep everything
+
+
+def test_keep_probs_proportional_below_cap():
+    norms = jnp.array([1.0, 2.0, 3.0, 4.0])
+    p = ref.keep_probs(norms, 0.25)  # budget 1.0, no caps hit
+    np.testing.assert_allclose(np.asarray(p), np.array([0.1, 0.2, 0.3, 0.4]), rtol=1e-5)
+
+
+def test_keep_probs_waterfilling_caps():
+    norms = jnp.array([100.0, 1.0, 1.0, 1.0])
+    p = ref.keep_probs(norms, 0.5)  # budget 2: cap the big row, split 1 across rest
+    np.testing.assert_allclose(
+        np.asarray(p), np.array([1.0, 1 / 3, 1 / 3, 1 / 3]), rtol=1e-5
+    )
+
+
+def test_sampled_matmul_unbiased_statistically():
+    """E[G^T diag(Bern(q)/q) Z] == G^T Z — 4000 trials, 3-sigma band."""
+    key = jax.random.PRNGKey(7)
+    kg, kz, kq = jax.random.split(key, 3)
+    r, k1, k2 = 64, 8, 8
+    g = jax.random.normal(kg, (r, k1))
+    z = jax.random.normal(kz, (r, k2))
+    q = jax.random.uniform(kq, (r,), minval=0.2, maxval=0.9)
+    exact = ref.sampled_matmul(g, z, jnp.ones((r,)))
+
+    def one(k):
+        w = (jax.random.uniform(k, (r,)) < q).astype(jnp.float32) / q
+        return ref.sampled_matmul(g, z, w)
+
+    trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(123), 4000))
+    mean = jnp.mean(trials, axis=0)
+    se = jnp.std(trials, axis=0) / np.sqrt(4000)
+    np.testing.assert_array_less(
+        np.abs(np.asarray(mean - exact)), 4.0 * np.asarray(se) + 1e-3
+    )
+
+
+def test_eq3_variance_matches_empirical():
+    """Analytic Eq. 3 variance == empirical elementwise variance sum."""
+    key = jax.random.PRNGKey(3)
+    kg, kz, kq = jax.random.split(key, 3)
+    r, k1, k2 = 32, 6, 5
+    g = jax.random.normal(kg, (r, k1))
+    z = jax.random.normal(kz, (r, k2))
+    q = jax.random.uniform(kq, (r,), minval=0.3, maxval=0.95)
+    analytic = float(ref.eq3_variance(g, z, q))
+
+    def one(k):
+        w = (jax.random.uniform(k, (r,)) < q).astype(jnp.float32) / q
+        return ref.sampled_matmul(g, z, w)
+
+    trials = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(11), 8000))
+    empirical = float(jnp.sum(jnp.var(trials, axis=0)))
+    assert empirical == pytest.approx(analytic, rel=0.15)

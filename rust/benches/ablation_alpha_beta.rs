@@ -1,0 +1,45 @@
+//! Figs. 9/10 (Appendix A.4): grid over the s step alpha and the weight
+//! ratio multiplier beta.
+//!
+//! Reproduction claim: more aggressive settings (larger alpha, smaller
+//! beta) buy FLOPs at a small loss cost; all cells stay within a modest
+//! accuracy band — robustness of the zeroth-order controller.
+
+mod common;
+
+use vcas::config::Method;
+
+fn main() {
+    let engine = common::load_engine();
+    let steps = common::bench_steps(160);
+    let alphas = [0.005, 0.01, 0.02];
+    let betas = [0.95, 0.9, 0.8];
+    let mut table = common::Table::new(&["alpha", "beta", "final loss", "eval acc", "FLOPs red."]);
+    let mut rows = Vec::new();
+
+    for &alpha in &alphas {
+        for &beta in &betas {
+            let mut cfg = common::base_config("tiny", "sst2-sim", Method::Vcas, steps, 7);
+            cfg.vcas.alpha = alpha;
+            cfg.vcas.beta = beta;
+            let r = common::run(&engine, &cfg);
+            table.row(vec![
+                alpha.to_string(),
+                beta.to_string(),
+                common::f4(r.final_train_loss),
+                common::pct(r.final_eval_acc),
+                common::pct(r.flops_reduction),
+            ]);
+            rows.push((
+                "sst2-sim".to_string(),
+                format!("a={alpha},b={beta}"),
+                r.final_train_loss,
+                r.final_eval_acc,
+                r.flops_reduction,
+                r.wall_s,
+            ));
+        }
+    }
+    table.print(&format!("Figs. 9/10 — alpha x beta grid ({steps} steps)"));
+    common::write_summary_csv("ablation_alpha_beta", &rows);
+}

@@ -1,0 +1,41 @@
+//! Tables 6/7 (Appendix A.3): adaptation frequency F.
+//!
+//! Reproduction claim: small F adapts fast but pays probe overhead; too
+//! large F under-explores the ratio schedule and the final FLOPs reduction
+//! shrinks. A mid-range F wins.
+
+mod common;
+
+use vcas::config::Method;
+
+fn main() {
+    let engine = common::load_engine();
+    let steps = common::bench_steps(240);
+    let freqs = [steps / 24, steps / 12, steps / 6, steps / 3, steps];
+    let mut table =
+        common::Table::new(&["F", "updates", "final loss", "eval acc", "FLOPs red."]);
+    let mut rows = Vec::new();
+
+    for &f in &freqs {
+        let mut cfg = common::base_config("tiny", "sst2-sim", Method::Vcas, steps, 5);
+        cfg.vcas.freq = f.max(1);
+        let r = common::run(&engine, &cfg);
+        table.row(vec![
+            f.to_string(),
+            r.probes.len().to_string(),
+            common::f4(r.final_train_loss),
+            common::pct(r.final_eval_acc),
+            common::pct(r.flops_reduction),
+        ]);
+        rows.push((
+            "sst2-sim".to_string(),
+            format!("F={f}"),
+            r.final_train_loss,
+            r.final_eval_acc,
+            r.flops_reduction,
+            r.wall_s,
+        ));
+    }
+    table.print(&format!("Tables 6/7 — adaptation frequency F ({steps} steps)"));
+    common::write_summary_csv("ablation_f", &rows);
+}

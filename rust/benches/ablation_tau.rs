@@ -1,0 +1,44 @@
+//! Tables 4/5 (Appendix A.1): ablation over the variance threshold tau.
+//!
+//! Reproduction claim: any tau << 1 gives a near-exact final loss/acc;
+//! FLOPs reduction grows (mildly) with tau — robustness, not a cliff.
+
+mod common;
+
+use vcas::config::Method;
+
+fn main() {
+    let engine = common::load_engine();
+    let steps = common::bench_steps(200);
+    let taus = [0.0, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5];
+    let mut table = common::Table::new(&["tau", "final loss", "eval acc", "FLOPs red."]);
+    let mut rows = Vec::new();
+
+    for &tau in &taus {
+        let (method, label) = if tau == 0.0 {
+            (Method::Exact, "0 (exact)".to_string())
+        } else {
+            (Method::Vcas, format!("{tau}"))
+        };
+        let mut cfg = common::base_config("tiny", "sst2-sim", method, steps, 6);
+        cfg.vcas.tau_act = tau;
+        cfg.vcas.tau_w = tau;
+        let r = common::run(&engine, &cfg);
+        table.row(vec![
+            label.clone(),
+            common::f4(r.final_train_loss),
+            common::pct(r.final_eval_acc),
+            common::pct(r.flops_reduction),
+        ]);
+        rows.push((
+            "sst2-sim".to_string(),
+            format!("tau={label}"),
+            r.final_train_loss,
+            r.final_eval_acc,
+            r.flops_reduction,
+            r.wall_s,
+        ));
+    }
+    table.print(&format!("Tables 4/5 — tau ablation on sst2-sim ({steps} steps)"));
+    common::write_summary_csv("ablation_tau", &rows);
+}

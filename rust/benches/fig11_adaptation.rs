@@ -1,0 +1,57 @@
+//! Fig. 11 (Appendix B): trajectories of s, rho_1/rho_L and nu during
+//! training, for several tau.
+//!
+//! Reproduction claim: s decreases from 1 then stabilizes; rho_l decreases
+//! over training with rho_1 <= rho_L; nu decreases then fluctuates; larger
+//! tau pushes everything lower.
+
+mod common;
+
+use vcas::config::Method;
+use vcas::formats::csv::{CsvField, CsvWriter};
+
+fn main() {
+    let engine = common::load_engine();
+    let steps = common::bench_steps(240);
+    let path = common::results_dir().join("fig11_adaptation.csv");
+    let mut csv = CsvWriter::create(
+        &path,
+        &["tau", "step", "s", "rho_first", "rho_last", "nu_first", "nu_mean"],
+    )
+    .unwrap();
+    let mut table =
+        common::Table::new(&["tau", "final s", "final rho_1", "final rho_L", "final nu mean"]);
+
+    for tau in [0.025, 0.1, 0.25] {
+        let mut cfg = common::base_config("tiny", "mnli-sim", Method::Vcas, steps, 13);
+        cfg.vcas.tau_act = tau;
+        cfg.vcas.tau_w = tau;
+        cfg.vcas.freq = (steps / 12).max(5); // denser probes: trajectory detail
+        let r = common::run(&engine, &cfg);
+        for p in &r.probes {
+            let nu_mean = p.nu.iter().map(|&x| x as f64).sum::<f64>() / p.nu.len().max(1) as f64;
+            csv.row_mixed(&[
+                CsvField::F(tau),
+                CsvField::I(p.step as i64),
+                CsvField::F(p.s),
+                CsvField::F(*p.rho.first().unwrap() as f64),
+                CsvField::F(*p.rho.last().unwrap() as f64),
+                CsvField::F(*p.nu.first().unwrap_or(&1.0) as f64),
+                CsvField::F(nu_mean),
+            ])
+            .unwrap();
+        }
+        let last = r.probes.last().unwrap();
+        let nu_mean =
+            last.nu.iter().map(|&x| x as f64).sum::<f64>() / last.nu.len().max(1) as f64;
+        table.row(vec![
+            tau.to_string(),
+            format!("{:.3}", last.s),
+            format!("{:.3}", last.rho.first().unwrap()),
+            format!("{:.3}", last.rho.last().unwrap()),
+            format!("{:.3}", nu_mean),
+        ]);
+    }
+    table.print(&format!("Fig. 11 — adaptation trajectories per tau ({steps} steps)"));
+    println!("full trajectories: {}", path.display());
+}

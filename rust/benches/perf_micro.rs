@@ -1,0 +1,120 @@
+//! §Perf micro-benchmarks: per-entry execute latency, marshalling cost,
+//! controller update cost, allreduce cost — the L3 hot-path profile.
+//!
+//! Run: cargo bench --bench perf_micro
+
+mod common;
+
+use std::time::Instant;
+
+use vcas::coordinator::parallel::tree_allreduce_mean;
+use vcas::coordinator::vcas::{GradSample, VcasController};
+use vcas::config::VcasConfig;
+use vcas::data::batch::{gather_cls, EpochSampler};
+use vcas::data::tasks::{find, generate_cls};
+use vcas::runtime::{param_literals, ModelSession};
+use vcas::util::rng::Pcg32;
+
+fn main() {
+    let engine = common::load_engine();
+    let mut table = common::Table::new(&["component", "median ms", "notes"]);
+
+    for model in ["tiny", "small"] {
+        let sess = ModelSession::open(&engine, model).unwrap();
+        let params = sess.load_params().unwrap();
+        let spec = find("sst2-sim").unwrap();
+        let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 256, 1);
+        let mut sampler = EpochSampler::new(256, 1);
+        let batch = gather_cls(&ds, &sampler.take(engine.manifest.main_batch));
+        let sw = vec![1.0 / batch.n as f32; batch.n];
+        let ones_l = vec![1.0f32; sess.n_layers];
+        let ones_w = vec![1.0f32; sess.n_sampled];
+        let rho = vec![0.4f32; sess.n_layers];
+        let nu = vec![0.4f32; sess.n_sampled];
+
+        // warmup (compile)
+        let t0 = Instant::now();
+        sess.fwd_bwd_cls(&params, &batch, &sw, 0, &ones_l, &ones_w, &ones_w)
+            .unwrap();
+        let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+        table.row(vec![
+            format!("{model}: first fwd_bwd (compile+run)"),
+            format!("{compile_ms:.1}"),
+            "one-time".into(),
+        ]);
+
+        let ms = common::time_median_ms(7, || {
+            sess.fwd_bwd_cls(&params, &batch, &sw, 1, &ones_l, &ones_w, &ones_w)
+                .unwrap();
+        });
+        table.row(vec![format!("{model}: fwd_bwd exact"), format!("{ms:.1}"), "hot".into()]);
+
+        let ms = common::time_median_ms(7, || {
+            sess.fwd_bwd_cls(&params, &batch, &sw, 1, &rho, &nu, &nu).unwrap();
+        });
+        table.row(vec![format!("{model}: fwd_bwd sampled"), format!("{ms:.1}"), "hot".into()]);
+
+        let ms = common::time_median_ms(7, || {
+            sess.fwd_loss_cls(&params, &batch).unwrap();
+        });
+        table.row(vec![format!("{model}: fwd_loss"), format!("{ms:.1}"), "baselines".into()]);
+
+        let ms = common::time_median_ms(7, || {
+            sess.eval_cls(&params, &batch).unwrap();
+        });
+        table.row(vec![format!("{model}: eval"), format!("{ms:.1}"), String::new()]);
+
+        let ms = common::time_median_ms(15, || {
+            let lits = param_literals(&params).unwrap();
+            std::hint::black_box(&lits);
+        });
+        table.row(vec![
+            format!("{model}: param literal marshalling"),
+            format!("{ms:.2}"),
+            format!("{} tensors", params.tensors.len()),
+        ]);
+    }
+
+    // controller update cost at realistic sizes
+    {
+        let n_tensors = 55;
+        let sizes = 10_000;
+        let mut rng = Pcg32::new(1, 1);
+        let mk = |rng: &mut Pcg32| GradSample {
+            grads: (0..n_tensors)
+                .map(|_| (0..sizes).map(|_| rng.normal() as f32).collect())
+                .collect(),
+            act_norms: (0..4 * 32).map(|_| rng.f32()).collect(),
+            vw: vec![0.01; 16],
+        };
+        let exact = vec![mk(&mut rng), mk(&mut rng)];
+        let sampled = vec![vec![mk(&mut rng), mk(&mut rng)], vec![mk(&mut rng), mk(&mut rng)]];
+        let mut c = VcasController::new(VcasConfig::default(), 4, (0..16).collect(), 32);
+        let ms = common::time_median_ms(5, || {
+            c.update(0, &exact, &sampled);
+        });
+        table.row(vec![
+            "controller update (M=2, 550k params)".into(),
+            format!("{ms:.2}"),
+            "per F steps".into(),
+        ]);
+    }
+
+    // allreduce cost
+    {
+        let mut rng = Pcg32::new(2, 2);
+        let grads: Vec<Vec<Vec<f32>>> = (0..8)
+            .map(|_| vec![(0..700_000).map(|_| rng.f32()).collect()])
+            .collect();
+        let ms = common::time_median_ms(5, || {
+            let _ = tree_allreduce_mean(grads.clone());
+        });
+        table.row(vec![
+            "tree allreduce (8 workers, 700k params)".into(),
+            format!("{ms:.2}"),
+            "incl clone".into(),
+        ]);
+    }
+
+    table.print("perf_micro — L3 hot-path profile");
+}

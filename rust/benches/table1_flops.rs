@@ -1,0 +1,51 @@
+//! Table 1: final train loss / eval acc / FLOPs reduction across the task
+//! suite for exact / SB / UB / VCAS.
+//!
+//! Reproduction claim (shape, not absolute numbers): VCAS's loss and acc
+//! stay closest to exact among the sampling methods while it reports a
+//! comparable FLOPs reduction; SB degrades loss the most; VCAS's reduction
+//! adapts per task (harder task -> smaller reduction).
+
+mod common;
+
+use vcas::config::Method;
+
+fn main() {
+    let engine = common::load_engine();
+    let steps = common::bench_steps(400);
+    let tasks = ["sst2-sim", "qnli-sim", "qqp-sim", "mnli-sim"];
+    let mut table = common::Table::new(&[
+        "task", "method", "final loss", "eval acc", "FLOPs red.", "steady-state", "wall s",
+    ]);
+    let mut rows = Vec::new();
+
+    for task in tasks {
+        let mut exact_loss = 0.0;
+        for method in [Method::Exact, Method::Sb, Method::Ub, Method::Vcas] {
+            let cfg = common::base_config("tiny", task, method.clone(), steps, 1);
+            let r = common::run(&engine, &cfg);
+            if method == Method::Exact {
+                exact_loss = r.final_train_loss;
+            }
+            table.row(vec![
+                task.into(),
+                r.method.clone(),
+                format!("{:.4} ({:+.4})", r.final_train_loss, r.final_train_loss - exact_loss),
+                common::pct(r.final_eval_acc),
+                common::pct(r.flops_reduction),
+                common::pct(r.steady_state_reduction()),
+                format!("{:.1}", r.wall_s),
+            ]);
+            rows.push((
+                task.to_string(),
+                r.method.clone(),
+                r.final_train_loss,
+                r.final_eval_acc,
+                r.flops_reduction,
+                r.wall_s,
+            ));
+        }
+    }
+    table.print(&format!("Table 1 — task suite, {steps} steps (paper protocol, scaled)"));
+    common::write_summary_csv("table1", &rows);
+}

@@ -1,0 +1,64 @@
+//! Table 8 (Appendix C): CNN pretraining with SGDM under the *degraded*
+//! activation-only VCAS, plus the data-parallel coordinator cost model.
+//!
+//! Reproduction claim: VCAS matches exact's loss/acc with a moderate FLOPs
+//! reduction (smaller than the transformer runs — no SampleW on convs),
+//! and the allreduce combine adds only O(log W) depth (Amdahl's law keeps
+//! time reduction below FLOPs reduction, as in the paper's 8-GPU row).
+
+mod common;
+
+use vcas::config::Method;
+use vcas::coordinator::parallel::{tree_allreduce_mean, tree_depth};
+use vcas::util::rng::Pcg32;
+
+fn main() {
+    let engine = common::load_engine();
+    let steps = common::bench_steps(120);
+    let mut table = common::Table::new(&[
+        "method", "train loss", "eval acc", "FLOPs red.", "wall s",
+    ]);
+    let mut rows = Vec::new();
+
+    for method in [Method::Exact, Method::Vcas] {
+        let mut cfg = common::base_config("cnn", "images", method.clone(), steps, 3);
+        cfg.optim.kind = "sgdm".into();
+        cfg.optim.lr = 0.05;
+        let r = common::run(&engine, &cfg);
+        table.row(vec![
+            r.method.clone(),
+            common::f4(r.final_train_loss),
+            common::pct(r.final_eval_acc),
+            common::pct(r.flops_reduction),
+            format!("{:.1}", r.wall_s),
+        ]);
+        rows.push((
+            "images".to_string(),
+            r.method.clone(),
+            r.final_train_loss,
+            r.final_eval_acc,
+            r.flops_reduction,
+            r.wall_s,
+        ));
+    }
+    table.print(&format!(
+        "Table 8 — CNN + SGDM, activation-only VCAS ({steps} steps)"
+    ));
+    common::write_summary_csv("table8_cnn", &rows);
+
+    // DDP comm model: measure the tree allreduce on CNN-sized grads
+    let mm = engine.model("cnn").unwrap();
+    let n_params: usize = mm.param_specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let mut rng = Pcg32::new(1, 1);
+    let mut comm = common::Table::new(&["workers", "tree depth", "allreduce ms"]);
+    for w in [2usize, 4, 8] {
+        let grads: Vec<Vec<Vec<f32>>> = (0..w)
+            .map(|_| vec![(0..n_params).map(|_| rng.f32()).collect()])
+            .collect();
+        let ms = common::time_median_ms(5, || {
+            let _ = tree_allreduce_mean(grads.clone());
+        });
+        comm.row(vec![w.to_string(), tree_depth(w).to_string(), format!("{ms:.2}")]);
+    }
+    comm.print(&format!("Table 8 (cont.) — DDP allreduce cost, {n_params} params"));
+}

@@ -1,0 +1,183 @@
+//! Hand-rolled CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Grammar: `vcas <subcommand> [positional...] [--flag value] [--switch]`.
+//! `--key=value` and `--key value` are both accepted. Unknown flags are an
+//! error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+    known_flags: Vec<(String, String)>,   // (name, help)
+    known_switches: Vec<(String, String)>,
+}
+
+impl Args {
+    /// Declare expectations then parse.
+    pub fn builder() -> ArgsBuilder {
+        ArgsBuilder {
+            flags: Vec::new(),
+            switches: Vec::new(),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn flag_or(&self, name: &str, default: &str) -> String {
+        self.flag(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+
+    pub fn switch(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::from("flags:\n");
+        for (name, help) in &self.known_flags {
+            s.push_str(&format!("  --{name} <value>   {help}\n"));
+        }
+        for (name, help) in &self.known_switches {
+            s.push_str(&format!("  --{name}           {help}\n"));
+        }
+        s
+    }
+}
+
+pub struct ArgsBuilder {
+    flags: Vec<(String, String)>,
+    switches: Vec<(String, String)>,
+}
+
+impl ArgsBuilder {
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.flags.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    pub fn switch(mut self, name: &str, help: &str) -> Self {
+        self.switches.push((name.to_string(), help.to_string()));
+        self
+    }
+
+    /// Parse an explicit token list (first token = subcommand, may be empty).
+    pub fn parse_from(self, tokens: &[String]) -> Result<Args> {
+        let mut args = Args {
+            known_flags: self.flags,
+            known_switches: self.switches,
+            ..Args::default()
+        };
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                if args.known_switches.iter().any(|(n, _)| *n == name) {
+                    if inline_val.is_some() {
+                        bail!("switch --{name} takes no value");
+                    }
+                    args.switches.push(name);
+                } else if args.known_flags.iter().any(|(n, _)| *n == name) {
+                    let value = match inline_val {
+                        Some(v) => v,
+                        None => match it.next() {
+                            Some(v) => v.clone(),
+                            None => bail!("flag --{name} needs a value"),
+                        },
+                    };
+                    args.flags.insert(name, value);
+                } else {
+                    bail!("unknown flag --{name}");
+                }
+            } else {
+                args.positional.push(tok.clone());
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn parse_env(self) -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        self.parse_from(&tokens)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    fn builder() -> ArgsBuilder {
+        Args::builder()
+            .flag("steps", "number of steps")
+            .flag("model", "model name")
+            .switch("verbose", "chatty")
+    }
+
+    #[test]
+    fn parses_subcommand_flags_positional() {
+        let a = builder()
+            .parse_from(&toks("train cfg.toml --steps 100 --model=tiny --verbose"))
+            .unwrap();
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.positional, vec!["cfg.toml"]);
+        assert_eq!(a.flag("steps"), Some("100"));
+        assert_eq!(a.flag("model"), Some("tiny"));
+        assert!(a.switch("verbose"));
+        assert_eq!(a.flag_usize("steps", 5).unwrap(), 100);
+        assert_eq!(a.flag_usize("missing", 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn rejects_unknown_and_malformed() {
+        assert!(builder().parse_from(&toks("x --nope 1")).is_err());
+        assert!(builder().parse_from(&toks("x --steps")).is_err());
+        assert!(builder().parse_from(&toks("x --verbose=1")).is_err());
+    }
+
+    #[test]
+    fn no_subcommand_is_ok() {
+        let a = builder().parse_from(&toks("--steps 3")).unwrap();
+        assert_eq!(a.subcommand, "");
+        assert_eq!(a.flag_usize("steps", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,302 @@
+//! Run configuration: a TOML-subset parser plus the typed config schema.
+//!
+//! The parser covers what run configs need — `[section.sub]` headers,
+//! `key = value` with strings, numbers, bools, flat arrays, `#` comments —
+//! and nothing more. Typed structs pull from the parsed table with
+//! defaults, so a config file only specifies what differs from the paper's
+//! conservative settings (tau=0.025, alpha=0.01, beta=0.95, M=2).
+
+mod toml;
+
+pub use toml::{TomlTable, TomlValue};
+
+use anyhow::{bail, Result};
+
+/// Which training method drives the run (paper Sec. 6 comparison set).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    Exact,
+    Vcas,
+    /// Selective backprop (Jiang et al. 2019): keep-ratio by loss percentile.
+    Sb,
+    /// Upper-bound importance sampling (Katharopoulos & Fleuret 2018).
+    Ub,
+    /// Uniform random subset of the same keep ratio (sanity baseline).
+    Uniform,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "exact" => Method::Exact,
+            "vcas" => Method::Vcas,
+            "sb" => Method::Sb,
+            "ub" => Method::Ub,
+            "uniform" => Method::Uniform,
+            _ => bail!("unknown method {s:?} (exact|vcas|sb|ub|uniform)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Exact => "exact",
+            Method::Vcas => "vcas",
+            Method::Sb => "sb",
+            Method::Ub => "ub",
+            Method::Uniform => "uniform",
+        }
+    }
+}
+
+/// VCAS controller hyperparameters (paper Alg. 1; defaults = paper Sec. 6.1).
+#[derive(Clone, Debug)]
+pub struct VcasConfig {
+    /// Activation-variance tolerance tau_act.
+    pub tau_act: f64,
+    /// Weight-variance tolerance tau_w.
+    pub tau_w: f64,
+    /// s update step alpha (Eq. 5).
+    pub alpha: f64,
+    /// Weight-ratio multiplier beta (Eq. 7).
+    pub beta: f64,
+    /// Monte-Carlo repetitions M.
+    pub m_repeats: usize,
+    /// Variance calculation frequency F (steps between adaptations).
+    pub freq: usize,
+    /// Lower clamp for nu (keeps the sampler numerically sane).
+    pub nu_min: f64,
+    /// Disable SampleW entirely (activation-only ablation / CNN mode).
+    pub act_only: bool,
+    /// Disable SampleA entirely (weight-only ablation, Fig. 4).
+    pub weight_only: bool,
+}
+
+impl Default for VcasConfig {
+    fn default() -> Self {
+        VcasConfig {
+            tau_act: 0.025,
+            tau_w: 0.025,
+            alpha: 0.01,
+            beta: 0.95,
+            m_repeats: 2,
+            freq: 100,
+            nu_min: 0.05,
+            act_only: false,
+            weight_only: false,
+        }
+    }
+}
+
+/// Optimizer selection + hyperparameters.
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    /// "adamw" | "sgdm"
+    pub kind: String,
+    pub lr: f64,
+    pub weight_decay: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub momentum: f64,
+    /// Linear warmup fraction of total steps.
+    pub warmup_frac: f64,
+    /// "linear" (decay to 0) | "const"
+    pub schedule: String,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        OptimConfig {
+            kind: "adamw".into(),
+            lr: 2e-4,
+            weight_decay: 0.01,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            momentum: 0.9,
+            warmup_frac: 0.1,
+            schedule: "linear".into(),
+        }
+    }
+}
+
+/// A full training-run configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model name in the artifact manifest ("tiny", "small", "cnn").
+    pub model: String,
+    /// Task name from the synthetic suite (data::tasks registry).
+    pub task: String,
+    pub method: Method,
+    pub steps: usize,
+    pub seed: u64,
+    /// Keep ratio for SB/UB/uniform (paper uses 1/3).
+    pub keep_ratio: f64,
+    /// Evaluate every this many steps (0 = only at the end).
+    pub eval_every: usize,
+    /// Number of eval batches per evaluation.
+    pub eval_batches: usize,
+    pub vcas: VcasConfig,
+    pub optim: OptimConfig,
+    /// Data-parallel worker count (1 = single stream).
+    pub workers: usize,
+    /// Where to write metrics CSVs (empty = no CSV).
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "tiny".into(),
+            task: "sst2-sim".into(),
+            method: Method::Vcas,
+            steps: 300,
+            seed: 0,
+            keep_ratio: 1.0 / 3.0,
+            eval_every: 0,
+            eval_batches: 8,
+            vcas: VcasConfig::default(),
+            optim: OptimConfig::default(),
+            workers: 1,
+            out_dir: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Build from a parsed TOML table (missing keys keep defaults).
+    pub fn from_toml(t: &TomlTable) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        if let Some(v) = t.get_str("train", "model") {
+            c.model = v;
+        }
+        if let Some(v) = t.get_str("train", "task") {
+            c.task = v;
+        }
+        if let Some(v) = t.get_str("train", "method") {
+            c.method = Method::parse(&v)?;
+        }
+        if let Some(v) = t.get_int("train", "steps") {
+            c.steps = v as usize;
+        }
+        if let Some(v) = t.get_int("train", "seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = t.get_f64("train", "keep_ratio") {
+            c.keep_ratio = v;
+        }
+        if let Some(v) = t.get_int("train", "eval_every") {
+            c.eval_every = v as usize;
+        }
+        if let Some(v) = t.get_int("train", "eval_batches") {
+            c.eval_batches = v as usize;
+        }
+        if let Some(v) = t.get_int("train", "workers") {
+            c.workers = v as usize;
+        }
+        if let Some(v) = t.get_str("train", "out_dir") {
+            c.out_dir = v;
+        }
+
+        if let Some(v) = t.get_f64("vcas", "tau_act") {
+            c.vcas.tau_act = v;
+        }
+        if let Some(v) = t.get_f64("vcas", "tau_w") {
+            c.vcas.tau_w = v;
+        }
+        if let Some(v) = t.get_f64("vcas", "alpha") {
+            c.vcas.alpha = v;
+        }
+        if let Some(v) = t.get_f64("vcas", "beta") {
+            c.vcas.beta = v;
+        }
+        if let Some(v) = t.get_int("vcas", "m_repeats") {
+            c.vcas.m_repeats = v as usize;
+        }
+        if let Some(v) = t.get_int("vcas", "freq") {
+            c.vcas.freq = v as usize;
+        }
+        if let Some(v) = t.get_bool("vcas", "act_only") {
+            c.vcas.act_only = v;
+        }
+        if let Some(v) = t.get_bool("vcas", "weight_only") {
+            c.vcas.weight_only = v;
+        }
+
+        if let Some(v) = t.get_str("optim", "kind") {
+            c.optim.kind = v;
+        }
+        if let Some(v) = t.get_f64("optim", "lr") {
+            c.optim.lr = v;
+        }
+        if let Some(v) = t.get_f64("optim", "weight_decay") {
+            c.optim.weight_decay = v;
+        }
+        if let Some(v) = t.get_f64("optim", "warmup_frac") {
+            c.optim.warmup_frac = v;
+        }
+        if let Some(v) = t.get_str("optim", "schedule") {
+            c.optim.schedule = v;
+        }
+        if let Some(v) = t.get_f64("optim", "momentum") {
+            c.optim.momentum = v;
+        }
+        Ok(c)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<TrainConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&TomlTable::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = TrainConfig::default();
+        assert_eq!(c.vcas.tau_act, 0.025);
+        assert_eq!(c.vcas.alpha, 0.01);
+        assert_eq!(c.vcas.beta, 0.95);
+        assert_eq!(c.vcas.m_repeats, 2);
+        assert!((c.keep_ratio - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let t = TomlTable::parse(
+            r#"
+            [train]
+            model = "small"
+            method = "ub"
+            steps = 123
+            keep_ratio = 0.25
+            [vcas]
+            tau_act = 0.1
+            m_repeats = 4
+            [optim]
+            lr = 1e-3
+            schedule = "const"
+            "#,
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.model, "small");
+        assert_eq!(c.method, Method::Ub);
+        assert_eq!(c.steps, 123);
+        assert_eq!(c.vcas.tau_act, 0.1);
+        assert_eq!(c.vcas.m_repeats, 4);
+        assert_eq!(c.optim.lr, 1e-3);
+        assert_eq!(c.optim.schedule, "const");
+        // untouched keys keep defaults
+        assert_eq!(c.vcas.beta, 0.95);
+    }
+
+    #[test]
+    fn bad_method_rejected() {
+        let t = TomlTable::parse("[train]\nmethod = \"sgd\"\n").unwrap();
+        assert!(TrainConfig::from_toml(&t).is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! TOML-subset parser: sections, dotted section paths, `key = value` with
+//! strings / integers / floats / bools / flat arrays, `#` comments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(x) => Some(*x),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed config: map from "section.key" (section may be empty) to value.
+#[derive(Clone, Debug, Default)]
+pub struct TomlTable {
+    entries: BTreeMap<String, TomlValue>,
+}
+
+impl TomlTable {
+    pub fn parse(text: &str) -> Result<TomlTable> {
+        let mut t = TomlTable::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let Some(name) = rest.strip_suffix(']') else {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                };
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                bail!("line {}: expected 'key = value'", lineno + 1);
+            };
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            t.entries.insert(full, value);
+        }
+        Ok(t)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        let full = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        self.entries.get(&full)
+    }
+
+    pub fn get_str(&self, section: &str, key: &str) -> Option<String> {
+        match self.get(section, key) {
+            Some(TomlValue::Str(s)) => Some(s.clone()),
+            _ => None,
+        }
+    }
+
+    pub fn get_int(&self, section: &str, key: &str) -> Option<i64> {
+        match self.get(section, key) {
+            Some(TomlValue::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key).and_then(TomlValue::as_f64)
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key) {
+            Some(TomlValue::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let Some(inner) = rest.strip_suffix('"') else {
+            bail!("unterminated string {s:?}");
+        };
+        return Ok(TomlValue::Str(unescape(inner)?));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let Some(body) = inner.strip_suffix(']') else {
+            bail!("unterminated array {s:?}");
+        };
+        let body = body.trim();
+        if body.is_empty() {
+            return Ok(TomlValue::Array(vec![]));
+        }
+        let items = split_top_level(body)?;
+        return Ok(TomlValue::Array(
+            items.iter().map(|i| parse_value(i.trim())).collect::<Result<_>>()?,
+        ));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(x) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(x));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn unescape(s: &str) -> Result<String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => bail!("bad escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+fn split_top_level(s: &str) -> Result<Vec<String>> {
+    let mut items = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).ok_or_else(|| anyhow::anyhow!("unbalanced ]"))?;
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                items.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    Ok(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    #[test]
+    fn parses_sections_and_types() {
+        let t = TomlTable::parse(
+            r#"
+            top = 1
+            [a]
+            s = "hi # not comment"   # real comment
+            f = 2.5
+            n = -3
+            b = true
+            arr = [1, 2.0, "x"]
+            [a.b]
+            nested = 7
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get_int("", "top"), Some(1));
+        assert_eq!(t.get_str("a", "s").unwrap(), "hi # not comment");
+        assert_eq!(t.get_f64("a", "f"), Some(2.5));
+        assert_eq!(t.get_int("a", "n"), Some(-3));
+        assert_eq!(t.get_bool("a", "b"), Some(true));
+        assert_eq!(t.get_int("a.b", "nested"), Some(7));
+        match t.get("a", "arr").unwrap() {
+            TomlValue::Array(v) => assert_eq!(v.len(), 3),
+            _ => panic!("not array"),
+        }
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        for bad in ["[x", "key", "k = ", "k = \"unterminated", "k = [1,2"] {
+            assert!(TomlTable::parse(bad).is_err(), "{bad:?} should fail");
+        }
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        // generate simple tables with unique keys, print, reparse, compare
+        check("toml print->parse roundtrip", 200, |g: &mut Gen| {
+            let mut src = String::new();
+            let mut expect: Vec<(String, String, TomlValue)> = Vec::new();
+            let section = g.ident(6);
+            src.push_str(&format!("[{section}]\n"));
+            let n = g.usize_in(1, 6);
+            for idx in 0..n {
+                let key = format!("{}_{idx}", g.ident(6)); // suffix keeps keys unique
+                let (text, val) = match g.usize_in(0, 3) {
+                    0 => {
+                        let i = g.i64_in(-1000, 1000);
+                        (i.to_string(), TomlValue::Int(i))
+                    }
+                    1 => {
+                        let f = (g.f64_in(-10.0, 10.0) * 100.0).round() / 100.0;
+                        (format!("{f:?}"), TomlValue::Float(f))
+                    }
+                    2 => {
+                        let b = g.bool();
+                        (b.to_string(), TomlValue::Bool(b))
+                    }
+                    _ => {
+                        let s = g.ident(10);
+                        (format!("\"{s}\""), TomlValue::Str(s))
+                    }
+                };
+                src.push_str(&format!("{key} = {text}\n"));
+                expect.push((section.clone(), key, val));
+            }
+            let t = TomlTable::parse(&src).map_err(|e| e.to_string())?;
+            for (sec, key, val) in expect {
+                let got = t.get(&sec, &key).ok_or(format!("missing {sec}.{key}"))?;
+                let same = match (got, &val) {
+                    (TomlValue::Float(a), TomlValue::Float(b)) => (a - b).abs() < 1e-9,
+                    (a, b) => a == b,
+                };
+                ensure(same, format!("{sec}.{key}: {got:?} != {val:?}"))?;
+            }
+            Ok(())
+        });
+    }
+}

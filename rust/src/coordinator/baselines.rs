@@ -1,0 +1,182 @@
+//! Online batch-selection baselines the paper compares against (Sec. 6.1):
+//!
+//! - **SB** (selective backprop, Jiang et al. 2019): keep probability is the
+//!   CDF of the sample's loss within a rolling history, raised to a power;
+//!   the kept subset trains *unweighted* (the method is deliberately biased
+//!   toward big losers — which is exactly why its trajectory diverges in
+//!   Fig. 1/6).
+//! - **UB** (upper-bound importance sampling, Katharopoulos & Fleuret 2018):
+//!   sample with replacement proportional to the last-layer gradient-norm
+//!   upper bound and reweight by 1/(N k p_i), which keeps the gradient
+//!   unbiased but leaves its variance uncontrolled.
+//! - **Uniform**: uniform subset, unbiased mean reweighting (sanity floor).
+//!
+//! All three select exactly `k` rows so the sub-batch matches the AOT
+//! sub-batch executable's static shape.
+
+use std::collections::VecDeque;
+
+use crate::util::rng::{sample_with_replacement, sample_without_replacement, Pcg32};
+
+/// A selected sub-batch: dataset-row positions within the candidate batch,
+/// plus per-row loss weights to feed the graph's `sw` input.
+#[derive(Clone, Debug)]
+pub struct Selection {
+    /// Indices into the candidate batch (len == k, may repeat for UB).
+    pub rows: Vec<usize>,
+    /// Graph loss weights (graph computes loss = sum(sw * per_row_loss)).
+    pub weights: Vec<f32>,
+}
+
+/// Selective-backprop state: rolling loss history + percentile selection.
+#[derive(Clone, Debug)]
+pub struct SbSelector {
+    history: VecDeque<f32>,
+    capacity: usize,
+    /// Selectivity exponent (Jiang et al. use CDF^power with power >= 1).
+    power: f64,
+}
+
+impl SbSelector {
+    pub fn new(capacity: usize, power: f64) -> SbSelector {
+        SbSelector { history: VecDeque::with_capacity(capacity), capacity, power }
+    }
+
+    fn cdf(&self, loss: f32) -> f64 {
+        if self.history.is_empty() {
+            return 1.0;
+        }
+        let below = self.history.iter().filter(|&&h| h <= loss).count();
+        below as f64 / self.history.len() as f64
+    }
+
+    /// Record losses and pick k rows by percentile-weighted sampling
+    /// without replacement; kept rows train with plain 1/k weights.
+    pub fn select(&mut self, losses: &[f32], k: usize, rng: &mut Pcg32) -> Selection {
+        let probs: Vec<f64> = losses
+            .iter()
+            .map(|&l| self.cdf(l).powf(self.power).max(1e-6))
+            .collect();
+        for &l in losses {
+            if self.history.len() == self.capacity {
+                self.history.pop_front();
+            }
+            self.history.push_back(l);
+        }
+        let rows = sample_without_replacement(rng, &probs, k);
+        let w = 1.0 / k as f32;
+        Selection { rows: rows.clone(), weights: vec![w; rows.len()] }
+    }
+}
+
+/// UB importance sampling: with-replacement draws proportional to the
+/// upper-bound score, unbiased 1/(N k p) reweighting.
+pub fn ub_select(scores: &[f32], k: usize, rng: &mut Pcg32) -> Selection {
+    let n = scores.len();
+    let total: f64 = scores.iter().map(|&s| s.max(1e-9) as f64).sum();
+    let probs: Vec<f64> = scores.iter().map(|&s| s.max(1e-9) as f64 / total).collect();
+    let rows = sample_with_replacement(rng, &probs, k);
+    let weights = rows
+        .iter()
+        .map(|&i| (1.0 / (n as f64 * k as f64 * probs[i])) as f32)
+        .collect();
+    Selection { rows, weights }
+}
+
+/// Uniform subset, unbiased: E[(1/k) sum_subset] = (1/N) sum_full.
+pub fn uniform_select(n: usize, k: usize, rng: &mut Pcg32) -> Selection {
+    let probs = vec![1.0f64; n];
+    let rows = sample_without_replacement(rng, &probs, k);
+    Selection { rows: rows.clone(), weights: vec![1.0 / k as f32; rows.len()] }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    #[test]
+    fn sb_prefers_big_losses_once_history_warm() {
+        let mut sb = SbSelector::new(1000, 2.0);
+        let mut rng = Pcg32::new(1, 1);
+        // warm history with uniform losses
+        let warm: Vec<f32> = (0..500).map(|i| i as f32 / 500.0).collect();
+        sb.select(&warm, 10, &mut rng);
+        // batch: half tiny losses, half huge
+        let mut losses = vec![0.01f32; 16];
+        losses.extend(vec![0.99f32; 16]);
+        let mut big = 0usize;
+        for _ in 0..200 {
+            let sel = sb.select(&losses, 8, &mut rng);
+            big += sel.rows.iter().filter(|&&r| r >= 16).count();
+        }
+        let frac = big as f64 / (200.0 * 8.0);
+        // uniform selection would give 0.5; percentile weighting must be
+        // strongly skewed toward the large-loss half
+        assert!(frac > 0.7, "big-loss fraction {frac}");
+    }
+
+    #[test]
+    fn sb_empty_history_is_uniformish() {
+        let mut sb = SbSelector::new(100, 1.0);
+        let mut rng = Pcg32::new(2, 2);
+        let sel = sb.select(&[1.0, 2.0, 3.0, 4.0], 2, &mut rng);
+        assert_eq!(sel.rows.len(), 2);
+        assert!((sel.weights[0] - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ub_weights_make_loss_unbiased_property() {
+        // E[sum(sw_j * loss_j)] over draws == mean(loss): Monte-Carlo check.
+        check("ub reweighting unbiased", 8, |g: &mut Gen| {
+            let n = g.usize_in(4, 24);
+            let k = g.usize_in(1, n);
+            let losses: Vec<f32> = (0..n).map(|_| g.f32_in(0.01, 3.0)).collect();
+            let scores: Vec<f32> = (0..n).map(|_| g.f32_in(0.01, 2.0)).collect();
+            let exact: f64 =
+                losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
+            let mut rng = Pcg32::new(7, 7);
+            let trials = 4000;
+            let mut acc = 0.0f64;
+            for _ in 0..trials {
+                let sel = ub_select(&scores, k, &mut rng);
+                for (&r, &w) in sel.rows.iter().zip(&sel.weights) {
+                    acc += (w as f64) * (losses[r] as f64);
+                }
+            }
+            let est = acc / trials as f64;
+            ensure(
+                (est - exact).abs() < 0.15 * exact.max(0.05),
+                format!("UB estimate {est} vs exact {exact}"),
+            )
+        });
+    }
+
+    #[test]
+    fn ub_selects_exactly_k_with_replacement() {
+        let mut rng = Pcg32::new(3, 3);
+        let sel = ub_select(&[1.0, 100.0, 1.0], 8, &mut rng);
+        assert_eq!(sel.rows.len(), 8);
+        // heavy item should dominate (with replacement -> duplicates)
+        let heavy = sel.rows.iter().filter(|&&r| r == 1).count();
+        assert!(heavy >= 6, "heavy drawn {heavy}/8");
+    }
+
+    #[test]
+    fn uniform_select_covers_without_duplicates() {
+        check("uniform selection unique rows", 64, |g: &mut Gen| {
+            let n = g.usize_in(2, 40);
+            let k = g.usize_in(1, n);
+            let mut rng = Pcg32::new(5, 5);
+            let sel = uniform_select(n, k, &mut rng);
+            let mut rows = sel.rows.clone();
+            rows.sort_unstable();
+            rows.dedup();
+            ensure(rows.len() == k, "duplicates in uniform selection")?;
+            ensure(
+                sel.weights.iter().all(|&w| (w - 1.0 / k as f32).abs() < 1e-7),
+                "uniform weights wrong",
+            )
+        });
+    }
+}

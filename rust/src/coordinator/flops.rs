@@ -1,0 +1,295 @@
+//! Analytic FLOPs accounting — the paper's headline metric.
+//!
+//! Counts matmul FLOPs (2*m*n*k) for forward and backward passes and scales
+//! the backward terms by the live sample ratios, exactly as the paper
+//! accounts its FLOPs reduction:
+//!
+//! - activation-gradient path of block l scales by rho_l (SampleA keeps
+//!   N*rho_l of the data rows entering that block's backward);
+//! - the weight gradient of linear j in block l scales by rho_l * nu_{l,j}
+//!   (SampleW keeps NT*rho_l*nu rows of the token dimension);
+//! - SB/UB are charged the paper's way: one full forward (selection) plus
+//!   forward+backward on the kept subset with activation reuse — giving the
+//!   canonical 1 - (1 + 2k/N)/3 reduction for keep count k.
+//!
+//! The VCAS adaptation overhead (M exact + M^2 SampleA-only passes every F
+//! steps) is charged to the VCAS ledger (`probe_*` methods), matching
+//! "VCAS's FLOPs take account of the adaptation overhead" in Tab. 1.
+
+use crate::runtime::ModelManifest;
+
+/// Static per-step FLOPs model for one transformer configuration.
+#[derive(Clone, Debug)]
+pub struct TransformerFlops {
+    pub d_model: f64,
+    pub d_ff: f64,
+    pub vocab: f64,
+    pub n_layers: usize,
+    pub seq_len: f64,
+    pub n_classes: f64,
+}
+
+impl TransformerFlops {
+    pub fn from_manifest(mm: &ModelManifest) -> anyhow::Result<TransformerFlops> {
+        Ok(TransformerFlops {
+            d_model: mm.cfg_usize("d_model")? as f64,
+            d_ff: mm.cfg_usize("d_ff")? as f64,
+            vocab: mm.cfg_usize("vocab")? as f64,
+            n_layers: mm.cfg_usize("n_layers")?,
+            seq_len: mm.cfg_usize("seq_len")? as f64,
+            n_classes: mm.cfg_usize("n_classes")? as f64,
+        })
+    }
+
+    /// Forward FLOPs of one block at `n` batch rows.
+    fn block_fwd(&self, n: f64) -> f64 {
+        let (d, f, t) = (self.d_model, self.d_ff, self.seq_len);
+        let nt = n * t;
+        let qkv = 2.0 * nt * d * 3.0 * d;
+        let attn = 4.0 * n * t * t * d; // scores + probs@V
+        let out = 2.0 * nt * d * d;
+        let ff = 4.0 * nt * d * f; // ff1 + ff2
+        qkv + attn + out + ff
+    }
+
+    /// Weight-gradient FLOPs of one block at `rows` kept token rows
+    /// (the four sampled linears: qkv, attn-out, ff1, ff2).
+    fn block_wgrad(&self, rows: f64) -> f64 {
+        let (d, f) = (self.d_model, self.d_ff);
+        2.0 * rows * d * 3.0 * d + 2.0 * rows * d * d + 4.0 * rows * d * f
+    }
+
+    /// Input-gradient FLOPs of one block at `n` kept batch rows (dgrad
+    /// matmuls mirror the forward ones).
+    fn block_igrad(&self, n: f64) -> f64 {
+        self.block_fwd(n)
+    }
+
+    fn head_fwd(&self, n: f64, mlm: bool) -> f64 {
+        if mlm {
+            2.0 * n * self.seq_len * self.d_model * self.vocab
+        } else {
+            2.0 * n * self.d_model * self.n_classes
+        }
+    }
+
+    /// Full forward at batch n.
+    pub fn fwd(&self, n: usize, mlm: bool) -> f64 {
+        let nf = n as f64;
+        self.n_layers as f64 * self.block_fwd(nf) + self.head_fwd(nf, mlm)
+    }
+
+    /// Exact backward at batch n (igrad + wgrad for every block + head).
+    pub fn bwd_exact(&self, n: usize, mlm: bool) -> f64 {
+        let nf = n as f64;
+        let blocks: f64 = (0..self.n_layers)
+            .map(|_| self.block_igrad(nf) + self.block_wgrad(nf * self.seq_len))
+            .sum();
+        blocks + 2.0 * self.head_fwd(nf, mlm)
+    }
+
+    /// VCAS backward at batch n with live ratios.
+    /// `rho[l]`: data keep ratio at block l (0-indexed bottom to top);
+    /// `nu[4l+j]`: token keep ratio of linear j in block l.
+    pub fn bwd_vcas(&self, n: usize, mlm: bool, rho: &[f32], nu: &[f32]) -> f64 {
+        assert_eq!(rho.len(), self.n_layers);
+        assert_eq!(nu.len(), 4 * self.n_layers);
+        let nf = n as f64;
+        let (d, f) = (self.d_model, self.d_ff);
+        let mut total = 2.0 * self.head_fwd(nf, mlm); // head bwd exact
+        for l in 0..self.n_layers {
+            let r = rho[l] as f64;
+            total += self.block_igrad(nf * r);
+            let rows = nf * self.seq_len * r;
+            let dims = [3.0 * d * d, d * d, d * f, f * d];
+            for (j, dd) in dims.iter().enumerate() {
+                total += 2.0 * rows * (nu[4 * l + j] as f64) * dd;
+            }
+        }
+        total
+    }
+}
+
+/// CNN per-step FLOPs (Appendix C path, activation-only sampling).
+#[derive(Clone, Debug)]
+pub struct CnnFlops {
+    pub img: f64,
+    pub in_ch: f64,
+    pub widths: Vec<f64>,
+    pub n_classes: f64,
+}
+
+impl CnnFlops {
+    pub fn fwd(&self, n: usize) -> f64 {
+        let nf = n as f64;
+        let mut side = self.img;
+        let mut cin = self.in_ch;
+        let mut total = 0.0;
+        for &w in &self.widths {
+            total += 2.0 * nf * side * side * cin * w * 9.0; // conv1 3x3
+            total += 2.0 * nf * side * side * w * w * 9.0; // conv2 3x3
+            side /= 2.0;
+            cin = w;
+        }
+        total += 2.0 * nf * side * side * cin * self.n_classes;
+        total
+    }
+
+    pub fn bwd_exact(&self, n: usize) -> f64 {
+        2.0 * self.fwd(n)
+    }
+
+    /// Activation-only sampling: site i samples the gradient *entering*
+    /// stage i's backward, so stage i's backward cost scales by rho[i];
+    /// the fc backward runs before any sampler and stays exact.
+    pub fn bwd_vcas(&self, n: usize, rho: &[f32]) -> f64 {
+        assert_eq!(rho.len(), self.widths.len());
+        let nf = n as f64;
+        let mut side = self.img;
+        let mut cin = self.in_ch;
+        let mut per_stage = Vec::new();
+        for &w in &self.widths {
+            let f1 = 2.0 * nf * side * side * cin * w * 9.0;
+            let f2 = 2.0 * nf * side * side * w * w * 9.0;
+            per_stage.push(2.0 * (f1 + f2));
+            side /= 2.0;
+            cin = w;
+        }
+        let head = 2.0 * 2.0 * nf * side * side * cin * self.n_classes;
+        let mut total = head;
+        for (s, cost) in per_stage.iter().enumerate() {
+            total += cost * rho[s] as f64;
+        }
+        total
+    }
+}
+
+/// Cumulative two-ledger accountant: what an exact run would have cost vs
+/// what the method actually spent (both paper-style accounting).
+#[derive(Clone, Debug, Default)]
+pub struct FlopsLedger {
+    pub exact_total: f64,
+    pub actual_total: f64,
+    /// FLOPs spent in adaptation probes (subset of actual_total).
+    pub probe_total: f64,
+    /// Backward-only ledgers (the paper also quotes BP-only reduction).
+    pub exact_bwd: f64,
+    pub actual_bwd: f64,
+}
+
+impl FlopsLedger {
+    /// Charge a normal training step.
+    pub fn step(&mut self, fwd: f64, bwd_exact: f64, fwd_actual: f64, bwd_actual: f64) {
+        self.exact_total += fwd + bwd_exact;
+        self.actual_total += fwd_actual + bwd_actual;
+        self.exact_bwd += bwd_exact;
+        self.actual_bwd += bwd_actual;
+    }
+
+    /// Charge probe overhead (counts as actual cost only).
+    pub fn probe(&mut self, flops: f64) {
+        self.actual_total += flops;
+        self.probe_total += flops;
+    }
+
+    /// Whole-training FLOPs reduction (paper Tab. 1 rightmost column).
+    pub fn reduction(&self) -> f64 {
+        if self.exact_total <= 0.0 {
+            0.0
+        } else {
+            1.0 - self.actual_total / self.exact_total
+        }
+    }
+
+    /// Backprop-only FLOPs reduction (paper quotes "up to 73.87%").
+    pub fn bwd_reduction(&self) -> f64 {
+        if self.exact_bwd <= 0.0 {
+            0.0
+        } else {
+            1.0 - (self.actual_bwd + self.probe_total) / self.exact_bwd
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> TransformerFlops {
+        TransformerFlops {
+            d_model: 64.0,
+            d_ff: 256.0,
+            vocab: 512.0,
+            n_layers: 4,
+            seq_len: 32.0,
+            n_classes: 4.0,
+        }
+    }
+
+    #[test]
+    fn exact_bwd_is_twice_fwd_minus_attn_asymmetry() {
+        let m = model();
+        let fwd = m.fwd(32, false);
+        let bwd = m.bwd_exact(32, false);
+        // igrad mirrors fwd; wgrad adds the linear terms only, so
+        // fwd < bwd < 2*fwd strictly.
+        assert!(bwd > fwd && bwd <= 2.0 * fwd, "fwd {fwd} bwd {bwd}");
+    }
+
+    #[test]
+    fn vcas_ratios_one_equals_exact() {
+        let m = model();
+        let rho = vec![1.0f32; 4];
+        let nu = vec![1.0f32; 16];
+        let a = m.bwd_vcas(32, false, &rho, &nu);
+        let b = m.bwd_exact(32, false);
+        assert!((a - b).abs() / b < 1e-12);
+    }
+
+    #[test]
+    fn vcas_flops_monotone_in_ratios() {
+        let m = model();
+        let hi = m.bwd_vcas(32, false, &[0.9; 4], &[0.9; 16]);
+        let lo = m.bwd_vcas(32, false, &[0.3; 4], &[0.3; 16]);
+        assert!(lo < hi);
+        // halving rho roughly halves block costs
+        let half = m.bwd_vcas(32, false, &[0.5; 4], &[1.0; 16]);
+        let full = m.bwd_exact(32, false);
+        let head = 2.0 * 2.0 * 32.0 * 64.0 * 4.0;
+        assert!((half - head) / (full - head) < 0.55);
+    }
+
+    #[test]
+    fn ledger_sb_matches_paper_formula() {
+        // SB at keep ratio 1/3 with activation reuse:
+        // actual = fwd(N) + 2*fwd(N)/3 vs exact = 3*fwd(N) -> 44.44%
+        let mut led = FlopsLedger::default();
+        let fwd = 300.0;
+        let bwd = 2.0 * fwd;
+        for _ in 0..10 {
+            led.step(fwd, bwd, fwd, bwd / 3.0);
+        }
+        assert!((led.reduction() - 0.4444).abs() < 1e-3, "{}", led.reduction());
+    }
+
+    #[test]
+    fn probe_overhead_charged() {
+        let mut led = FlopsLedger::default();
+        led.step(100.0, 200.0, 100.0, 100.0);
+        led.probe(50.0);
+        assert!((led.reduction() - (1.0 - 250.0 / 300.0)).abs() < 1e-12);
+        assert_eq!(led.probe_total, 50.0);
+    }
+
+    #[test]
+    fn cnn_model_sane() {
+        let c = CnnFlops { img: 16.0, in_ch: 3.0, widths: vec![32.0, 64.0], n_classes: 10.0 };
+        let fwd = c.fwd(64);
+        assert!(fwd > 0.0);
+        let exact = c.bwd_exact(64);
+        let sampled = c.bwd_vcas(64, &[0.5, 0.5]);
+        assert!(sampled < exact && sampled > 0.25 * exact);
+        let full = c.bwd_vcas(64, &[1.0, 1.0]);
+        assert!((full - exact).abs() / exact < 1e-9);
+    }
+}

@@ -1,0 +1,14 @@
+//! The L3 coordinator: the paper's variance-controlled adaptation (Alg. 1),
+//! the comparison baselines, FLOPs accounting, the training loop and the
+//! in-process data-parallel worker pool.
+
+pub mod baselines;
+pub mod flops;
+pub mod metrics;
+pub mod parallel;
+pub mod trainer;
+pub mod vcas;
+
+pub use metrics::{EvalPoint, RunResult, VarianceSnapshot};
+pub use trainer::Trainer;
+pub use vcas::{GradSample, ProbeRecord, VcasController};

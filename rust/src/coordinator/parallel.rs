@@ -1,0 +1,135 @@
+//! In-process data-parallel substrate (Appendix C ran 8-GPU DDP).
+//!
+//! PJRT wrapper types are not `Send`, so workers here are *logical*: the
+//! leader executes each worker's shard against the shared executable and
+//! the gradient combine is a real tree allreduce over the shard gradients —
+//! the same reduction topology a multi-process deployment would run, with
+//! the communication pattern (and its O(log W) depth) preserved and
+//! unit-tested. `flat` combines are exposed so the Table 8 bench can charge
+//! per-round communication volume.
+
+/// Average a set of per-worker gradient vectors with a binary-tree
+/// reduction. `grads[w][t]` is worker w's flattened tensor t.
+/// Returns the averaged gradients (same layout as one worker's).
+pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
+    let w = grads.len();
+    assert!(w > 0, "no workers");
+    let mut stride = 1usize;
+    while stride < w {
+        let mut dst = 0;
+        while dst + stride < w {
+            // combine pair (dst, dst+stride) into dst
+            let (left, right) = grads.split_at_mut(dst + stride);
+            let a = &mut left[dst];
+            let b = &right[0];
+            for (ta, tb) in a.iter_mut().zip(b) {
+                for (xa, &xb) in ta.iter_mut().zip(tb) {
+                    *xa += xb;
+                }
+            }
+            dst += stride * 2;
+        }
+        stride *= 2;
+    }
+    let mut out = std::mem::take(&mut grads[0]);
+    let scale = 1.0 / w as f32;
+    for t in out.iter_mut() {
+        for x in t.iter_mut() {
+            *x *= scale;
+        }
+    }
+    out
+}
+
+/// Number of pairwise combine rounds the tree performs (comm-depth model
+/// for the Table 8 wall-clock estimate).
+pub fn tree_depth(workers: usize) -> usize {
+    let mut d = 0;
+    let mut s = 1;
+    while s < workers {
+        d += 1;
+        s *= 2;
+    }
+    d
+}
+
+/// Split a batch of `n` rows into `workers` contiguous shards whose sizes
+/// differ by at most one (every row assigned exactly once).
+pub fn shard_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    assert!(workers > 0);
+    let base = n / workers;
+    let extra = n % workers;
+    let mut out = Vec::with_capacity(workers);
+    let mut start = 0;
+    for w in 0..workers {
+        let len = base + usize::from(w < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    #[test]
+    fn allreduce_matches_plain_mean_property() {
+        check("tree allreduce == arithmetic mean", 64, |g: &mut Gen| {
+            let w = g.usize_in(1, 9);
+            let n_tensors = g.usize_in(1, 3);
+            let lens: Vec<usize> = (0..n_tensors).map(|_| g.usize_in(1, 16)).collect();
+            let grads: Vec<Vec<Vec<f32>>> = (0..w)
+                .map(|_| lens.iter().map(|&l| g.vec_normal(l, 2.0)).collect())
+                .collect();
+            let want: Vec<Vec<f32>> = (0..n_tensors)
+                .map(|t| {
+                    (0..lens[t])
+                        .map(|i| {
+                            grads.iter().map(|gw| gw[t][i]).sum::<f32>() / w as f32
+                        })
+                        .collect()
+                })
+                .collect();
+            let got = tree_allreduce_mean(grads);
+            for (a, b) in got.iter().zip(&want) {
+                for (&x, &y) in a.iter().zip(b) {
+                    ensure((x - y).abs() < 1e-4, format!("{x} vs {y}"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn shards_cover_exactly_once_property() {
+        check("shard ranges partition the batch", 128, |g: &mut Gen| {
+            let n = g.usize_in(1, 100);
+            let w = g.usize_in(1, 12);
+            let ranges = shard_ranges(n, w);
+            ensure(ranges.len() == w, "wrong worker count")?;
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for &(s, e) in &ranges {
+                ensure(s == prev_end, "gap or overlap")?;
+                ensure(e >= s, "negative shard")?;
+                covered += e - s;
+                prev_end = e;
+            }
+            ensure(covered == n && prev_end == n, "coverage mismatch")?;
+            // balanced: sizes differ by at most 1
+            let sizes: Vec<usize> = ranges.iter().map(|&(s, e)| e - s).collect();
+            let (mn, mx) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            ensure(mx - mn <= 1, format!("unbalanced {sizes:?}"))
+        });
+    }
+
+    #[test]
+    fn tree_depth_log2() {
+        assert_eq!(tree_depth(1), 0);
+        assert_eq!(tree_depth(2), 1);
+        assert_eq!(tree_depth(8), 3);
+        assert_eq!(tree_depth(9), 4);
+    }
+}

@@ -1,0 +1,370 @@
+//! The VCAS controller — paper Alg. 1.
+//!
+//! Owns the gradient-norm preserving ratio `s`, the per-layer activation
+//! keep ratios `rho_l` (Eq. 4) and the per-linear weight keep ratios `nu`
+//! (Eq. 7). Every F steps the trainer hands it a *probe*: M exact gradient
+//! samples and M x M SampleA-only gradient samples on the same batches.
+//! From those it forms the three variance estimates of Sec. 5
+//!
+//!   V_s   — SGD variance across batches,
+//!   V_act — extra variance from activation sampling (vs the exact grad),
+//!   V_w   — analytic Eq. 3 weight variance at the current nu,
+//!
+//! and applies the zeroth-order updates
+//!
+//!   s   <- s + alpha * sign(V_act - tau_act * V_s)          (Eq. 5)
+//!   rho_l = max_{j<=l} p_j(s)                               (Eq. 4)
+//!   nu  <- nu * beta^{sign(V_w - tau_w * V_s)}   (per tensor, Eq. 7)
+//!
+//! The controller is pure (no PJRT calls): probes are plain data, so every
+//! decision is unit-testable. Ratios are *inputs* to the AOT graphs, so
+//! adaptation never recompiles.
+
+use crate::config::VcasConfig;
+use crate::util::stats::{dist_sq, mass_fraction};
+
+/// One gradient observation handed to the controller.
+#[derive(Clone, Debug)]
+pub struct GradSample {
+    /// Flattened per-tensor gradients (manifest order).
+    pub grads: Vec<Vec<f32>>,
+    /// Per-layer per-sample activation-gradient norms, (L, N) row-major.
+    pub act_norms: Vec<f32>,
+    /// Analytic Eq. 3 variance per sampled linear (at nu_probe = current nu).
+    pub vw: Vec<f32>,
+}
+
+/// Snapshot of one adaptation event (logged for Fig. 11 / EXPERIMENTS.md).
+#[derive(Clone, Debug)]
+pub struct ProbeRecord {
+    pub step: usize,
+    pub v_s: f64,
+    pub v_act: f64,
+    pub v_w: f64,
+    pub s: f64,
+    pub rho: Vec<f32>,
+    pub nu: Vec<f32>,
+}
+
+#[derive(Clone, Debug)]
+pub struct VcasController {
+    pub cfg: VcasConfig,
+    /// Gradient-norm preserving ratio s in (0, 1].
+    pub s: f64,
+    /// Activation keep ratio per block (len = n_layers).
+    pub rho: Vec<f32>,
+    /// Weight keep ratio per sampled linear (len = n_sampled).
+    pub nu: Vec<f32>,
+    /// Which param-tensor index each nu entry controls (for per-tensor V_s).
+    sampled_param_idx: Vec<usize>,
+    n_layers: usize,
+    batch_n: usize,
+    pub log: Vec<ProbeRecord>,
+}
+
+impl VcasController {
+    pub fn new(
+        cfg: VcasConfig,
+        n_layers: usize,
+        sampled_param_idx: Vec<usize>,
+        batch_n: usize,
+    ) -> VcasController {
+        let n_sampled = sampled_param_idx.len();
+        VcasController {
+            cfg,
+            s: 1.0,
+            rho: vec![1.0; n_layers],
+            nu: vec![1.0; n_sampled],
+            sampled_param_idx,
+            n_layers,
+            batch_n,
+            log: Vec::new(),
+        }
+    }
+
+    /// Ratios to use for a *training* step right now.
+    pub fn train_ratios(&self) -> (Vec<f32>, Vec<f32>) {
+        let rho = if self.cfg.weight_only {
+            vec![1.0; self.n_layers]
+        } else {
+            self.rho.clone()
+        };
+        let nu = if self.cfg.act_only {
+            vec![1.0; self.nu.len()]
+        } else {
+            self.nu.clone()
+        };
+        (rho, nu)
+    }
+
+    /// Should the trainer run a probe before this step?
+    pub fn due(&self, step: usize) -> bool {
+        step % self.cfg.freq == 0
+    }
+
+    /// Consume a probe and update (s, rho, nu). `exact[i]` is the exact
+    /// gradient of batch i; `sampled[i][j]` the j-th SampleA-only gradient
+    /// of the same batch (both with vw evaluated at the current nu).
+    pub fn update(&mut self, step: usize, exact: &[GradSample], sampled: &[Vec<GradSample>]) {
+        let m = exact.len();
+        assert!(m >= 2, "need at least 2 Monte-Carlo repetitions");
+        let n_tensors = exact[0].grads.len();
+
+        // ---- V_s: per-tensor SGD variance over the M exact grads --------
+        // Var[g] = (1/(M-1)) sum_i ||G_i - mean||^2, computed per tensor.
+        let mut v_s_tensor = vec![0.0f64; n_tensors];
+        for t in 0..n_tensors {
+            let len = exact[0].grads[t].len();
+            let mut mean = vec![0.0f64; len];
+            for e in exact {
+                for (acc, &x) in mean.iter_mut().zip(&e.grads[t]) {
+                    *acc += x as f64;
+                }
+            }
+            for x in mean.iter_mut() {
+                *x /= m as f64;
+            }
+            let mut ss = 0.0f64;
+            for e in exact {
+                for (&mu, &x) in mean.iter().zip(&e.grads[t]) {
+                    let d = x as f64 - mu;
+                    ss += d * d;
+                }
+            }
+            v_s_tensor[t] = ss / (m - 1) as f64;
+        }
+        let v_s: f64 = v_s_tensor.iter().sum();
+
+        // ---- V_act: extra variance of SampleA-only grads vs exact -------
+        let mut v_act = 0.0f64;
+        for (e, reps) in exact.iter().zip(sampled) {
+            let mut inner = 0.0f64;
+            for r in reps {
+                for (gt, et) in r.grads.iter().zip(&e.grads) {
+                    inner += dist_sq(gt, et);
+                }
+            }
+            v_act += inner / reps.len() as f64;
+        }
+        v_act /= m as f64;
+
+        // ---- V_w: analytic Eq. 3, averaged over all SampleA runs --------
+        let n_sampled = self.nu.len();
+        let mut v_w_linear = vec![0.0f64; n_sampled];
+        let mut count = 0usize;
+        for reps in sampled {
+            for r in reps {
+                for (acc, &x) in v_w_linear.iter_mut().zip(&r.vw) {
+                    *acc += x as f64;
+                }
+                count += 1;
+            }
+        }
+        for x in v_w_linear.iter_mut() {
+            *x /= count.max(1) as f64;
+        }
+        let v_w: f64 = v_w_linear.iter().sum();
+
+        // ---- Eq. 5: move s ----------------------------------------------
+        let sign_act = if v_act - self.cfg.tau_act * v_s >= 0.0 { 1.0 } else { -1.0 };
+        self.s = (self.s + self.cfg.alpha * sign_act).clamp(self.cfg.alpha, 1.0);
+
+        // ---- Eq. 4: rho from the gradient-norm sparsity at the new s ----
+        self.rho = self.rho_for_s(self.s, exact);
+
+        // ---- Eq. 7: per-linear nu ----------------------------------------
+        // Direction note: with beta < 1, multiplying by beta when variance
+        // EXCEEDS the budget (the literal reading of the printed Eq. 7)
+        // would shrink nu further and raise variance — a positive-feedback
+        // loop. We apply the variance-stabilizing direction that matches
+        // Eq. 5's semantics and the Fig. 11 trajectories: headroom
+        // (V_w < tau_w * V_s) -> nu *= beta (sample harder); over budget ->
+        // nu /= beta (back off). See DESIGN.md §Deviations.
+        if !self.cfg.act_only {
+            for (j, &pidx) in self.sampled_param_idx.iter().enumerate() {
+                debug_assert!(pidx < n_tensors, "sampled index out of range");
+                let target = self.cfg.tau_w * v_s_tensor[pidx];
+                let exponent = if v_w_linear[j] >= target { -1.0 } else { 1.0 };
+                let updated = self.nu[j] as f64 * self.cfg.beta.powf(exponent);
+                self.nu[j] = updated.clamp(self.cfg.nu_min, 1.0) as f32;
+            }
+        }
+
+        self.log.push(ProbeRecord {
+            step,
+            v_s,
+            v_act,
+            v_w,
+            s: self.s,
+            rho: self.rho.clone(),
+            nu: self.nu.clone(),
+        });
+    }
+
+    /// Eq. 4 at an arbitrary s (averaged over the probe batches):
+    /// p_l(s) = min{ n/N | sum of the n largest norms >= s * total },
+    /// rho_l = max_{j<=l} p_j  (monotone non-decreasing toward the top).
+    pub fn rho_for_s(&self, s: f64, exact: &[GradSample]) -> Vec<f32> {
+        let n = self.batch_n;
+        let l_layers = self.n_layers;
+        let mut p = vec![0.0f64; l_layers];
+        for e in exact {
+            debug_assert_eq!(e.act_norms.len(), l_layers * n);
+            for (l, pl) in p.iter_mut().enumerate() {
+                *pl += mass_fraction(&e.act_norms[l * n..(l + 1) * n], s);
+            }
+        }
+        let m = exact.len().max(1) as f64;
+        let mut rho = vec![0.0f32; l_layers];
+        let mut running_max = 0.0f64;
+        for l in 0..l_layers {
+            let pl = p[l] / m;
+            running_max = running_max.max(pl);
+            rho[l] = (running_max.clamp(1.0 / n as f64, 1.0)) as f32;
+        }
+        rho
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    fn mk(cfg: VcasConfig, n_layers: usize, n_sampled: usize, n: usize) -> VcasController {
+        VcasController::new(cfg, n_layers, (0..n_sampled).collect(), n)
+    }
+
+    fn sample(grads: Vec<Vec<f32>>, act_norms: Vec<f32>, vw: Vec<f32>) -> GradSample {
+        GradSample { grads, act_norms, vw }
+    }
+
+    /// Probe where exact grads differ a lot (high V_s) and sampled grads
+    /// equal exact (zero V_act) -> s should decrease, nu should decrease.
+    #[test]
+    fn low_extra_variance_gets_more_aggressive() {
+        let mut c = mk(VcasConfig::default(), 2, 2, 4);
+        let e0 = sample(
+            vec![vec![1.0, 0.0], vec![3.0]],
+            vec![1.0, 0.1, 0.1, 0.1, 1.0, 1.0, 1.0, 1.0],
+            vec![0.0, 0.0],
+        );
+        let e1 = sample(
+            vec![vec![-1.0, 2.0], vec![-3.0]],
+            vec![1.0, 0.1, 0.1, 0.1, 1.0, 1.0, 1.0, 1.0],
+            vec![0.0, 0.0],
+        );
+        let s00 = vec![e0.clone(), e0.clone()];
+        let s11 = vec![e1.clone(), e1.clone()];
+        let s_before = c.s;
+        c.update(0, &[e0, e1], &[s00, s11]);
+        assert!(c.s < s_before, "s should shrink, got {}", c.s);
+        assert!(c.nu.iter().all(|&v| v < 1.0), "nu should shrink: {:?}", c.nu);
+        assert_eq!(c.log.len(), 1);
+    }
+
+    /// Zero SGD variance (identical exact grads) with noisy sampled grads
+    /// -> every variance budget is exceeded -> s and nu must grow/clamp.
+    #[test]
+    fn high_extra_variance_backs_off() {
+        let mut c = mk(VcasConfig::default(), 1, 1, 2);
+        c.s = 0.5;
+        c.nu = vec![0.5];
+        let e = sample(vec![vec![1.0, 1.0]], vec![1.0, 1.0], vec![9.0]);
+        let noisy0 = sample(vec![vec![5.0, -3.0]], vec![1.0, 1.0], vec![9.0]);
+        let noisy1 = sample(vec![vec![-4.0, 6.0]], vec![1.0, 1.0], vec![9.0]);
+        c.update(
+            0,
+            &[e.clone(), e.clone()],
+            &[vec![noisy0.clone(), noisy1.clone()], vec![noisy0, noisy1]],
+        );
+        assert!(c.s > 0.5, "s should grow, got {}", c.s);
+        assert!(c.nu[0] > 0.5, "nu should grow, got {:?}", c.nu);
+    }
+
+    #[test]
+    fn rho_monotone_and_bounded_property() {
+        check("rho monotone non-decreasing in layer", 128, |g: &mut Gen| {
+            let n_layers = g.usize_in(1, 6);
+            let n = g.usize_in(2, 32);
+            let c = mk(VcasConfig::default(), n_layers, 4, n);
+            let s = g.f64_in(0.05, 1.0);
+            let exact: Vec<GradSample> = (0..2)
+                .map(|_| sample(vec![vec![0.0]], g.vec_pos(n_layers * n, 1.0), vec![0.0; 4]))
+                .collect();
+            let rho = c.rho_for_s(s, &exact);
+            for l in 1..n_layers {
+                ensure(rho[l] >= rho[l - 1], format!("rho not monotone {rho:?}"))?;
+            }
+            for &r in &rho {
+                ensure(r > 0.0 && r <= 1.0, format!("rho out of range {rho:?}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn rho_at_s1_keeps_everything() {
+        let c = mk(VcasConfig::default(), 2, 2, 8);
+        let exact = vec![sample(vec![vec![0.0]], (0..16).map(|i| i as f32 + 1.0).collect(), vec![0.0; 2])];
+        let rho = c.rho_for_s(1.0, &exact);
+        assert!(rho.iter().all(|&r| (r - 1.0).abs() < 1e-6), "{rho:?}");
+    }
+
+    #[test]
+    fn s_and_nu_stay_clamped_property() {
+        check("s in (0,1], nu in [nu_min,1]", 64, |g: &mut Gen| {
+            let mut c = mk(VcasConfig::default(), 1, 2, 2);
+            let gen2 = |g: &mut Gen| {
+                sample(
+                    vec![g.vec_normal(3, 1.0), g.vec_normal(2, 1.0)],
+                    g.vec_pos(2, 1.0),
+                    g.vec_pos(2, 0.1),
+                )
+            };
+            for step in 0..g.usize_in(1, 30) {
+                let e0 = gen2(g);
+                let e1 = gen2(g);
+                let s0 = vec![gen2(g), gen2(g)];
+                let s1 = vec![gen2(g), gen2(g)];
+                c.update(step, &[e0, e1], &[s0, s1]);
+                ensure(c.s > 0.0 && c.s <= 1.0, format!("s out of range {}", c.s))?;
+                ensure(
+                    c.nu.iter().all(|&v| v >= c.cfg.nu_min as f32 && v <= 1.0),
+                    format!("nu out of range {:?}", c.nu),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn act_only_mode_freezes_nu() {
+        let cfg = VcasConfig { act_only: true, ..Default::default() };
+        let mut c = mk(cfg, 1, 2, 2);
+        let e = sample(vec![vec![1.0]], vec![1.0, 1.0], vec![100.0, 100.0]);
+        c.update(0, &[e.clone(), e.clone()], &[vec![e.clone()], vec![e.clone()]]);
+        assert_eq!(c.nu, vec![1.0, 1.0]);
+        let (_, nu) = c.train_ratios();
+        assert_eq!(nu, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn weight_only_mode_keeps_rho_one_in_training() {
+        let cfg = VcasConfig { weight_only: true, ..Default::default() };
+        let mut c = mk(cfg, 2, 2, 2);
+        c.rho = vec![0.3, 0.5];
+        let (rho, _) = c.train_ratios();
+        assert_eq!(rho, vec![1.0, 1.0]);
+        let _ = &mut c;
+    }
+
+    #[test]
+    fn due_respects_frequency() {
+        let c = mk(VcasConfig { freq: 50, ..Default::default() }, 1, 1, 2);
+        assert!(c.due(0));
+        assert!(!c.due(49));
+        assert!(c.due(50));
+        assert!(c.due(100));
+    }
+}

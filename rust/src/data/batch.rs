@@ -1,0 +1,212 @@
+//! Batching: epoch shuffling, gather, MLM masking, image batches.
+
+use crate::util::rng::Pcg32;
+
+use super::images::ImageDataset;
+use super::tasks::{ClsDataset, MarkovCorpus, TOK_MASK};
+
+/// A classification batch ready for literal marshalling.
+#[derive(Clone, Debug)]
+pub struct ClsBatch {
+    pub n: usize,
+    pub seq_len: usize,
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    /// Dataset indices of the rows (baselines map scores back to history).
+    pub idx: Vec<usize>,
+}
+
+/// An MLM batch: input ids with masking applied, original ids, loss weights.
+#[derive(Clone, Debug)]
+pub struct MlmBatch {
+    pub n: usize,
+    pub seq_len: usize,
+    pub x: Vec<i32>,
+    pub y: Vec<i32>,
+    pub w: Vec<f32>,
+}
+
+/// An image batch for the CNN path.
+#[derive(Clone, Debug)]
+pub struct ImgBatch {
+    pub n: usize,
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub idx: Vec<usize>,
+}
+
+/// Epoch-shuffled index iterator: every dataset row appears exactly once
+/// per epoch; epochs reshuffle deterministically from the run seed.
+pub struct EpochSampler {
+    n: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg32,
+    pub epoch: usize,
+}
+
+impl EpochSampler {
+    pub fn new(n: usize, seed: u64) -> EpochSampler {
+        let mut s = EpochSampler {
+            n,
+            order: (0..n).collect(),
+            cursor: 0,
+            rng: Pcg32::new(seed, 0xBA7C),
+            epoch: 0,
+        };
+        s.rng.shuffle(&mut s.order);
+        s
+    }
+
+    /// Next `k` indices, wrapping (and reshuffling) at epoch boundaries.
+    pub fn take(&mut self, k: usize) -> Vec<usize> {
+        let mut out = Vec::with_capacity(k);
+        for _ in 0..k {
+            if self.cursor == self.n {
+                self.cursor = 0;
+                self.epoch += 1;
+                self.rng.shuffle(&mut self.order);
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+/// Gather a classification batch by dataset indices.
+pub fn gather_cls(ds: &ClsDataset, idx: &[usize]) -> ClsBatch {
+    let t = ds.seq_len;
+    let mut x = Vec::with_capacity(idx.len() * t);
+    let mut y = Vec::with_capacity(idx.len());
+    for &i in idx {
+        x.extend_from_slice(&ds.x[i * t..(i + 1) * t]);
+        y.push(ds.y[i]);
+    }
+    ClsBatch { n: idx.len(), seq_len: t, x, y, idx: idx.to_vec() }
+}
+
+/// Gather an image batch by dataset indices.
+pub fn gather_img(ds: &ImageDataset, idx: &[usize]) -> ImgBatch {
+    let stride = ds.pixels_per_image();
+    let mut x = Vec::with_capacity(idx.len() * stride);
+    let mut y = Vec::with_capacity(idx.len());
+    for &i in idx {
+        x.extend_from_slice(&ds.x[i * stride..(i + 1) * stride]);
+        y.push(ds.y[i]);
+    }
+    ImgBatch { n: idx.len(), x, y, idx: idx.to_vec() }
+}
+
+/// BERT-style MLM masking over freshly sampled corpus sequences:
+/// `mask_rate` of positions are predicted; of those 80% become [MASK],
+/// 10% a random token, 10% keep the original.
+pub fn sample_mlm_batch(
+    corpus: &MarkovCorpus,
+    n: usize,
+    seq_len: usize,
+    vocab: usize,
+    mask_rate: f64,
+    rng: &mut Pcg32,
+) -> MlmBatch {
+    let mut x = Vec::with_capacity(n * seq_len);
+    let mut y = Vec::with_capacity(n * seq_len);
+    let mut w = vec![0f32; n * seq_len];
+    for i in 0..n {
+        let seq = corpus.sequence(seq_len, rng);
+        for (j, &tok) in seq.iter().enumerate() {
+            y.push(tok);
+            let pos = i * seq_len + j;
+            if rng.bernoulli(mask_rate) {
+                w[pos] = 1.0;
+                let r = rng.f64();
+                x.push(if r < 0.8 {
+                    TOK_MASK
+                } else if r < 0.9 {
+                    super::tasks::N_RESERVED as i32
+                        + rng.below((vocab - super::tasks::N_RESERVED) as u64) as i32
+                } else {
+                    tok
+                });
+            } else {
+                x.push(tok);
+            }
+        }
+    }
+    MlmBatch { n, seq_len, x, y, w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::tasks::{find, generate_cls};
+    use crate::util::proptest::{check, ensure, Gen};
+
+    #[test]
+    fn epoch_sampler_exactly_once_property() {
+        check("each index appears once per epoch", 64, |g: &mut Gen| {
+            let n = g.usize_in(1, 200);
+            let k = g.usize_in(1, 32);
+            let mut s = EpochSampler::new(n, 3);
+            let mut seen = vec![0u32; n];
+            // consume exactly one epoch worth (n draws)
+            let mut remaining = n;
+            while remaining > 0 {
+                let take = remaining.min(k);
+                for i in s.take(take) {
+                    seen[i] += 1;
+                }
+                remaining -= take;
+            }
+            ensure(seen.iter().all(|&c| c == 1), format!("coverage {seen:?}"))
+        });
+    }
+
+    #[test]
+    fn epoch_sampler_reshuffles() {
+        let mut s = EpochSampler::new(64, 1);
+        let e0 = s.take(64);
+        let e1 = s.take(64);
+        assert_ne!(e0, e1);
+        let mut a = e1.clone();
+        a.sort_unstable();
+        assert_eq!(a, (0..64).collect::<Vec<_>>());
+        assert_eq!(s.epoch, 1);
+    }
+
+    #[test]
+    fn gather_preserves_rows() {
+        let spec = find("sst2-sim").unwrap();
+        let ds = generate_cls(&spec, 128, 8, 16, 2);
+        let b = gather_cls(&ds, &[3, 3, 0]);
+        assert_eq!(b.n, 3);
+        assert_eq!(&b.x[0..8], &ds.x[24..32]);
+        assert_eq!(&b.x[8..16], &ds.x[24..32]);
+        assert_eq!(&b.x[16..24], &ds.x[0..8]);
+        assert_eq!(b.y, vec![ds.y[3], ds.y[3], ds.y[0]]);
+    }
+
+    #[test]
+    fn mlm_masking_rates() {
+        let corpus = MarkovCorpus::new(256, 0.2, 4);
+        let mut rng = Pcg32::new(7, 7);
+        let b = sample_mlm_batch(&corpus, 64, 32, 256, 0.15, &mut rng);
+        let n_pred: f64 = b.w.iter().map(|&x| x as f64).sum();
+        let rate = n_pred / (64.0 * 32.0);
+        assert!((rate - 0.15).abs() < 0.02, "mask rate {rate}");
+        // ~80% of predicted positions are MASK
+        let n_mask = b
+            .x
+            .iter()
+            .zip(&b.w)
+            .filter(|(&x, &w)| w > 0.0 && x == TOK_MASK)
+            .count() as f64;
+        assert!((n_mask / n_pred - 0.8).abs() < 0.05);
+        // unmasked positions keep original ids
+        for ((&x, &y), &w) in b.x.iter().zip(&b.y).zip(&b.w) {
+            if w == 0.0 {
+                assert_eq!(x, y);
+            }
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Synthetic image dataset for the CNN path (Appendix C / Table 8).
+//!
+//! Each class has a fixed random prototype pattern; a sample is its
+//! prototype plus per-sample Gaussian noise whose scale comes from an
+//! easy/hard mixture — the same difficulty structure the token tasks use,
+//! so activation-gradient sparsity emerges as training fits the easy mass.
+
+use crate::util::rng::Pcg32;
+
+#[derive(Clone, Debug)]
+pub struct ImageSpec {
+    pub img: usize,
+    pub channels: usize,
+    pub n_classes: usize,
+    pub easy_sigma: f64,
+    pub hard_sigma: f64,
+    pub hard_frac: f64,
+    pub label_noise: f64,
+}
+
+impl Default for ImageSpec {
+    fn default() -> Self {
+        ImageSpec {
+            img: 16,
+            channels: 3,
+            n_classes: 10,
+            easy_sigma: 0.35,
+            hard_sigma: 1.4,
+            hard_frac: 0.25,
+            label_noise: 0.02,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ImageDataset {
+    pub spec: ImageSpec,
+    pub n: usize,
+    /// Row-major (n, img, img, channels) f32, NHWC to match the HLO entry.
+    pub x: Vec<f32>,
+    pub y: Vec<i32>,
+    pub hard: Vec<bool>,
+}
+
+impl ImageDataset {
+    pub fn pixels_per_image(&self) -> usize {
+        self.spec.img * self.spec.img * self.spec.channels
+    }
+}
+
+pub fn generate_images(spec: &ImageSpec, n: usize, seed: u64) -> ImageDataset {
+    let mut rng = Pcg32::new(seed, 0x1AACE);
+    let px = spec.img * spec.img * spec.channels;
+    // class prototypes: smooth-ish random patterns with unit RMS
+    let prototypes: Vec<Vec<f32>> = (0..spec.n_classes)
+        .map(|_| {
+            let mut p: Vec<f32> = (0..px).map(|_| rng.normal() as f32).collect();
+            // cheap smoothing: average neighbours along the flattened axis
+            let raw = p.clone();
+            for i in 1..px - 1 {
+                p[i] = 0.5 * raw[i] + 0.25 * (raw[i - 1] + raw[i + 1]);
+            }
+            let rms = (p.iter().map(|&v| (v * v) as f64).sum::<f64>() / px as f64).sqrt();
+            p.iter_mut().for_each(|v| *v /= rms as f32);
+            p
+        })
+        .collect();
+
+    let mut x = Vec::with_capacity(n * px);
+    let mut y = Vec::with_capacity(n);
+    let mut hard = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(spec.n_classes as u64) as usize;
+        let is_hard = rng.bernoulli(spec.hard_frac);
+        let sigma = if is_hard { spec.hard_sigma } else { spec.easy_sigma };
+        for j in 0..px {
+            x.push(prototypes[label][j] + (rng.normal() * sigma) as f32);
+        }
+        let final_label = if rng.bernoulli(spec.label_noise) {
+            rng.below(spec.n_classes as u64) as usize
+        } else {
+            label
+        };
+        y.push(final_label as i32);
+        hard.push(is_hard);
+    }
+    ImageDataset { spec: spec.clone(), n, x, y, hard }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = ImageSpec::default();
+        let a = generate_images(&spec, 32, 5);
+        let b = generate_images(&spec, 32, 5);
+        assert_eq!(a.x.len(), 32 * 16 * 16 * 3);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert!(a.y.iter().all(|&c| (c as usize) < 10));
+    }
+
+    #[test]
+    fn easy_samples_closer_to_prototype() {
+        let spec = ImageSpec { label_noise: 0.0, ..Default::default() };
+        let ds = generate_images(&spec, 400, 9);
+        // nearest-prototype classification should be near-perfect on easy rows
+        let px = ds.pixels_per_image();
+        // rebuild prototypes by averaging easy samples per class
+        let mut proto = vec![vec![0f64; px]; spec.n_classes];
+        let mut counts = vec![0usize; spec.n_classes];
+        for i in 0..ds.n {
+            if !ds.hard[i] {
+                counts[ds.y[i] as usize] += 1;
+                for j in 0..px {
+                    proto[ds.y[i] as usize][j] += ds.x[i * px + j] as f64;
+                }
+            }
+        }
+        for (p, &c) in proto.iter_mut().zip(&counts) {
+            if c > 0 {
+                p.iter_mut().for_each(|v| *v /= c as f64);
+            }
+        }
+        let mut correct = 0;
+        let mut easy_total = 0;
+        for i in 0..ds.n {
+            if ds.hard[i] {
+                continue;
+            }
+            easy_total += 1;
+            let best = (0..spec.n_classes)
+                .min_by(|&a, &b| {
+                    let da: f64 = (0..px)
+                        .map(|j| (ds.x[i * px + j] as f64 - proto[a][j]).powi(2))
+                        .sum();
+                    let db: f64 = (0..px)
+                        .map(|j| (ds.x[i * px + j] as f64 - proto[b][j]).powi(2))
+                        .sum();
+                    da.partial_cmp(&db).unwrap()
+                })
+                .unwrap();
+            if best == ds.y[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / easy_total as f64;
+        assert!(acc > 0.9, "easy nearest-prototype acc {acc}");
+    }
+}

@@ -1,0 +1,6 @@
+//! Data substrate: synthetic corpora/tasks (the GLUE/C4/ImageNet stand-ins),
+//! epoch batching, MLM masking, image generation.
+
+pub mod batch;
+pub mod images;
+pub mod tasks;

@@ -1,0 +1,87 @@
+//! CSV metric/series writer: every bench emits its table/figure data as a
+//! CSV under results/ so plots can be regenerated outside this process.
+
+use std::fs;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+pub struct CsvWriter {
+    w: BufWriter<fs::File>,
+    n_cols: usize,
+}
+
+impl CsvWriter {
+    /// Create (truncating) a CSV with the given header row. Parent
+    /// directories are created on demand.
+    pub fn create(path: &Path, columns: &[&str]) -> Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+        }
+        let f = fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", columns.join(","))?;
+        Ok(CsvWriter { w, n_cols: columns.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.n_cols, "column count mismatch");
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.w, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_mixed(&mut self, fields: &[CsvField]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(CsvField::render).collect();
+        self.row(&strs)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+pub enum CsvField {
+    Str(String),
+    F(f64),
+    I(i64),
+}
+
+impl CsvField {
+    fn render(&self) -> String {
+        match self {
+            CsvField::Str(s) => s.clone(),
+            CsvField::F(x) => format!("{x:.6}"),
+            CsvField::I(i) => i.to_string(),
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    if s.contains([',', '"', '\n']) {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let path = std::env::temp_dir().join(format!("vcas_csv_{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["x,1".into(), "plain".into()]).unwrap();
+            w.row_mixed(&[CsvField::F(1.5), CsvField::I(-2)]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n\"x,1\",plain\n1.500000,-2\n");
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,6 @@
+//! Codec substrates: JSON (manifest/metrics), CSV (bench output), raw f32
+//! parameter binaries (init + checkpoints).
+
+pub mod csv;
+pub mod json;
+pub mod params;

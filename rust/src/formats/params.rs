@@ -1,0 +1,155 @@
+//! Parameter tensor store + the `.params.bin` codec.
+//!
+//! The AOT pipeline dumps initial parameters as raw little-endian f32 in
+//! manifest order; checkpoints written by the Rust trainer use the same
+//! layout, so a pretrain run's output can seed a finetune run (Table 9).
+
+use std::fs;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A named, shaped, host-resident f32 tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(name: &str, shape: &[usize]) -> Tensor {
+        Tensor {
+            name: name.to_string(),
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// The full parameter set of a model, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    pub fn total_elems(&self) -> usize {
+        self.tensors.iter().map(Tensor::numel).sum()
+    }
+
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.tensors.iter().position(|t| t.name == name)
+    }
+
+    /// Load from raw little-endian f32 given (name, shape) specs.
+    pub fn load_bin(path: &Path, specs: &[(String, Vec<usize>)]) -> Result<ParamSet> {
+        let bytes = fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let want: usize = specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+        if bytes.len() != want * 4 {
+            bail!(
+                "param file {path:?} has {} bytes, expected {} ({} f32)",
+                bytes.len(),
+                want * 4,
+                want
+            );
+        }
+        let mut tensors = Vec::with_capacity(specs.len());
+        let mut off = 0usize;
+        for (name, shape) in specs {
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            for (i, x) in data.iter_mut().enumerate() {
+                let b = off + i * 4;
+                *x = f32::from_le_bytes([bytes[b], bytes[b + 1], bytes[b + 2], bytes[b + 3]]);
+            }
+            off += n * 4;
+            tensors.push(Tensor { name: name.clone(), shape: shape.clone(), data });
+        }
+        Ok(ParamSet { tensors })
+    }
+
+    /// Write in the same raw layout (checkpointing).
+    pub fn save_bin(&self, path: &Path) -> Result<()> {
+        let mut f = fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut buf = Vec::with_capacity(self.total_elems() * 4);
+        for t in &self.tensors {
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Flatten every tensor into one contiguous vector (probe bookkeeping).
+    pub fn flat(&self) -> Vec<f32> {
+        let mut v = Vec::with_capacity(self.total_elems());
+        for t in &self.tensors {
+            v.extend_from_slice(&t.data);
+        }
+        v
+    }
+
+    /// Re-initialize a tensor with N(0, std) (head reset before finetune).
+    pub fn reinit_normal(&mut self, name: &str, std: f64, rng: &mut crate::util::rng::Pcg32) {
+        if let Some(i) = self.index_of(name) {
+            for x in self.tensors[i].data.iter_mut() {
+                *x = (rng.normal() * std) as f32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    fn tmpfile(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("vcas_params_{tag}_{}.bin", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_bin() {
+        check("params save->load roundtrip", 32, |g: &mut Gen| {
+            let n_tensors = g.usize_in(1, 5);
+            let mut tensors = Vec::new();
+            for ti in 0..n_tensors {
+                let shape = vec![g.usize_in(1, 7), g.usize_in(1, 7)];
+                let n = shape.iter().product();
+                tensors.push(Tensor {
+                    name: format!("t{ti}"),
+                    shape,
+                    data: g.vec_normal(n, 2.0),
+                });
+            }
+            let ps = ParamSet { tensors };
+            let path = tmpfile("rt");
+            ps.save_bin(&path).map_err(|e| e.to_string())?;
+            let specs: Vec<(String, Vec<usize>)> =
+                ps.tensors.iter().map(|t| (t.name.clone(), t.shape.clone())).collect();
+            let back = ParamSet::load_bin(&path, &specs).map_err(|e| e.to_string())?;
+            let _ = std::fs::remove_file(&path);
+            for (a, b) in ps.tensors.iter().zip(&back.tensors) {
+                ensure(a.data == b.data && a.shape == b.shape, "tensor mismatch")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let ps = ParamSet { tensors: vec![Tensor::zeros("a", &[4])] };
+        let path = tmpfile("bad");
+        ps.save_bin(&path).unwrap();
+        let specs = vec![("a".to_string(), vec![5usize])];
+        assert!(ParamSet::load_bin(&path, &specs).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,32 @@
+//! # vcas — Variance-Controlled Adaptive Sampling for Backpropagation
+//!
+//! A three-layer reproduction of *"Efficient Backpropagation with
+//! Variance-Controlled Adaptive Sampling"* (Wang, Chen, Zhu — ICLR 2024):
+//!
+//! - **L1/L2 (build time)**: JAX + Pallas graphs under `python/compile/`,
+//!   AOT-lowered to HLO text artifacts (`make artifacts`).
+//! - **L3 (this crate)**: the training coordinator — PJRT runtime,
+//!   the paper's Alg. 1 variance controller, the SB/UB baselines, data
+//!   pipeline, optimizers, FLOPs accounting, metrics and bench harness.
+//!
+//! Quick start (after `make artifacts`):
+//! ```no_run
+//! use vcas::config::TrainConfig;
+//! use vcas::coordinator::Trainer;
+//! use vcas::runtime::Engine;
+//!
+//! let engine = Engine::load(std::path::Path::new("artifacts")).unwrap();
+//! let cfg = TrainConfig::default(); // VCAS on sst2-sim, paper defaults
+//! let result = Trainer::new(&engine, &cfg).unwrap().run().unwrap();
+//! println!("final loss {:.4}, FLOPs saved {:.1}%",
+//!          result.final_train_loss, result.flops_reduction * 100.0);
+//! ```
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod formats;
+pub mod optim;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,145 @@
+//! `vcas` CLI — train/eval/inspect against the AOT artifacts.
+//!
+//! Subcommands:
+//!   train [config.toml] [--model M --task T --method ... --steps N ...]
+//!   info                      print manifest contents
+//!   tasks                     list the synthetic task registry
+//!
+//! Run `make artifacts` first; the binary is self-contained afterwards.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use vcas::cli::Args;
+use vcas::config::{Method, TrainConfig};
+use vcas::coordinator::Trainer;
+use vcas::data::tasks;
+use vcas::runtime::Engine;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_args() -> Result<Args> {
+    Args::builder()
+        .flag("artifacts", "artifact directory (default: artifacts)")
+        .flag("model", "model name from the manifest (tiny|small|cnn)")
+        .flag("task", "task name (sst2-sim|mnli-sim|qqp-sim|qnli-sim|vision-sim|mlm)")
+        .flag("method", "exact|vcas|sb|ub|uniform")
+        .flag("steps", "training steps")
+        .flag("seed", "run seed")
+        .flag("eval-every", "evaluate every N steps (0 = end only)")
+        .flag("out-dir", "write metric CSVs here")
+        .flag("tau", "vcas variance thresholds tau_act = tau_w")
+        .flag("freq", "vcas adaptation frequency F")
+        .flag("lr", "peak learning rate")
+        .switch("quiet", "suppress per-step logging")
+        .parse_env()
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    let artifacts = PathBuf::from(args.flag_or("artifacts", "artifacts"));
+
+    match args.subcommand.as_str() {
+        "train" | "" => cmd_train(&args, &artifacts),
+        "info" => cmd_info(&artifacts),
+        "tasks" => {
+            for t in tasks::registry() {
+                println!(
+                    "{:12} classes={} paired={} hard_frac={:.2}",
+                    t.name, t.n_classes, t.paired, t.hard_frac
+                );
+            }
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            eprintln!("usage: vcas <train|info|tasks> [flags]\n{}", args.usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn cmd_info(artifacts: &Path) -> Result<()> {
+    let engine = Engine::load(artifacts)?;
+    println!("platform: {}", engine.platform());
+    for (name, m) in &engine.manifest.models {
+        println!("model {name} ({})", m.kind);
+        println!("  params: {} tensors", m.param_specs.len());
+        for (ename, e) in &m.entries {
+            println!("  entry {ename} (batch {})", e.batch);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
+    // config file (optional positional) then flag overrides
+    let mut cfg = match args.positional.first() {
+        Some(path) => TrainConfig::from_file(Path::new(path))?,
+        None => TrainConfig::default(),
+    };
+    if let Some(v) = args.flag("model") {
+        cfg.model = v.to_string();
+    }
+    if let Some(v) = args.flag("task") {
+        cfg.task = v.to_string();
+    }
+    if let Some(v) = args.flag("method") {
+        cfg.method = Method::parse(v)?;
+    }
+    cfg.steps = args.flag_usize("steps", cfg.steps)?;
+    cfg.seed = args.flag_u64("seed", cfg.seed)?;
+    cfg.eval_every = args.flag_usize("eval-every", cfg.eval_every)?;
+    if let Some(v) = args.flag("out-dir") {
+        cfg.out_dir = v.to_string();
+    }
+    if let Some(v) = args.flag("tau") {
+        let tau: f64 = v.parse()?;
+        cfg.vcas.tau_act = tau;
+        cfg.vcas.tau_w = tau;
+    }
+    cfg.vcas.freq = args.flag_usize("freq", cfg.vcas.freq)?;
+    cfg.optim.lr = args.flag_f64("lr", cfg.optim.lr)?;
+
+    let engine = Engine::load(artifacts)?;
+    println!(
+        "training {} on {} with {} for {} steps (platform {})",
+        cfg.model,
+        cfg.task,
+        cfg.method.name(),
+        cfg.steps,
+        engine.platform()
+    );
+    let mut trainer = Trainer::new(&engine, &cfg)?;
+    let result = trainer.run()?;
+
+    if !args.switch("quiet") {
+        for ev in &result.evals {
+            println!(
+                "eval @ {:5}: loss {:.4} acc {:.4}",
+                ev.step, ev.loss, ev.acc
+            );
+        }
+    }
+    println!(
+        "done: final train loss {:.4}, eval acc {:.2}%, FLOPs reduction {:.2}% (bwd {:.2}%), wall {:.1}s",
+        result.final_train_loss,
+        result.final_eval_acc * 100.0,
+        result.flops_reduction * 100.0,
+        result.bwd_flops_reduction * 100.0,
+        result.wall_s
+    );
+    let (rho, nu) = trainer.live_ratios();
+    println!("final rho {rho:?}");
+    if !nu.is_empty() {
+        let nu_mean = nu.iter().sum::<f32>() / nu.len() as f32;
+        println!("final nu mean {nu_mean:.3}");
+    }
+    Ok(())
+}

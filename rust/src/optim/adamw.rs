@@ -1,0 +1,62 @@
+//! AdamW (decoupled weight decay), matching the PyTorch semantics used by
+//! the paper's finetuning recipes (Appendix F).
+
+use crate::formats::params::ParamSet;
+
+use super::{no_decay, Optimizer};
+
+pub struct AdamW {
+    beta1: f64,
+    beta2: f64,
+    eps: f64,
+    weight_decay: f64,
+    step: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    decay_mask: Vec<bool>,
+}
+
+impl AdamW {
+    pub fn new(params: &ParamSet, beta1: f64, beta2: f64, eps: f64, weight_decay: f64) -> AdamW {
+        AdamW {
+            beta1,
+            beta2,
+            eps,
+            weight_decay,
+            step: 0,
+            m: params.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+            v: params.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+            decay_mask: params.tensors.iter().map(|t| !no_decay(&t.name)).collect(),
+        }
+    }
+}
+
+impl Optimizer for AdamW {
+    fn step(&mut self, params: &mut ParamSet, grads: &[Vec<f32>], lr: f64) {
+        debug_assert_eq!(grads.len(), params.tensors.len());
+        self.step += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.step as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.step as i32);
+        let (b1, b2) = (self.beta1 as f32, self.beta2 as f32);
+        for ti in 0..params.tensors.len() {
+            let g = &grads[ti];
+            let m = &mut self.m[ti];
+            let v = &mut self.v[ti];
+            let x = &mut params.tensors[ti].data;
+            debug_assert_eq!(g.len(), x.len());
+            let decay = if self.decay_mask[ti] { self.weight_decay } else { 0.0 };
+            for i in 0..x.len() {
+                m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+                v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+                let mhat = m[i] as f64 / bc1;
+                let vhat = v[i] as f64 / bc2;
+                let upd = lr * (mhat / (vhat.sqrt() + self.eps) + decay * x[i] as f64);
+                x[i] -= upd as f32;
+            }
+        }
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+}

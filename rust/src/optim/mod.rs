@@ -1,0 +1,102 @@
+//! Host-side optimizers + LR schedules. The AOT graphs return gradients;
+//! the coordinator owns parameters and applies updates here. Keeping the
+//! optimizer in Rust makes data-parallel gradient averaging, probe runs
+//! (which must NOT update params) and checkpointing trivial.
+
+mod adamw;
+mod schedule;
+mod sgdm;
+
+pub use adamw::AdamW;
+pub use schedule::LrSchedule;
+pub use sgdm::Sgdm;
+
+use crate::formats::params::ParamSet;
+
+/// Common optimizer interface over flattened per-tensor grads.
+pub trait Optimizer {
+    /// Apply one update step. `grads[i]` matches `params.tensors[i]`.
+    fn step(&mut self, params: &mut ParamSet, grads: &[Vec<f32>], lr: f64);
+
+    /// Number of updates applied so far.
+    fn steps_done(&self) -> u64;
+}
+
+/// Names whose tensors skip weight decay (biases, layernorm, embeddings'
+/// positional rows are decayed in BERT practice — we follow the common
+/// "no decay on bias/LN" rule).
+pub fn no_decay(name: &str) -> bool {
+    name.ends_with("_b")
+        || name.ends_with(".b_qkv")
+        || name.ends_with(".b_o")
+        || name.ends_with(".b_ff1")
+        || name.ends_with(".b_ff2")
+        || name.contains("ln")
+        || name == "mlm_b"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::params::Tensor;
+
+    fn one_param(v: &[f32]) -> ParamSet {
+        ParamSet {
+            tensors: vec![Tensor {
+                name: "w".into(),
+                shape: vec![v.len()],
+                data: v.to_vec(),
+            }],
+        }
+    }
+
+    #[test]
+    fn adamw_first_step_closed_form() {
+        // With bias correction, the first AdamW step moves each coordinate
+        // by lr * sign(g) (plus decay), independent of |g|.
+        let mut p = one_param(&[1.0, -2.0]);
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.0);
+        opt.step(&mut p, &[vec![0.5, -3.0]], 0.01);
+        assert!((p.tensors[0].data[0] - (1.0 - 0.01)).abs() < 1e-4);
+        assert!((p.tensors[0].data[1] - (-2.0 + 0.01)).abs() < 1e-4);
+        assert_eq!(opt.steps_done(), 1);
+    }
+
+    #[test]
+    fn adamw_decay_applies_only_to_decayed_tensors() {
+        let mut p = ParamSet {
+            tensors: vec![
+                Tensor { name: "w".into(), shape: vec![1], data: vec![1.0] },
+                Tensor { name: "ln_g".into(), shape: vec![1], data: vec![1.0] },
+            ],
+        };
+        let mut opt = AdamW::new(&p, 0.9, 0.999, 1e-8, 0.1);
+        opt.step(&mut p, &[vec![0.0], vec![0.0]], 0.01);
+        // zero grad: only decay moves w; ln_g (no-decay) stays put
+        assert!((p.tensors[0].data[0] - (1.0 - 0.01 * 0.1)).abs() < 1e-6);
+        assert_eq!(p.tensors[1].data[0], 1.0);
+    }
+
+    #[test]
+    fn sgdm_matches_closed_form() {
+        let mut p = one_param(&[0.0]);
+        let mut opt = Sgdm::new(&p, 0.9, 0.0);
+        opt.step(&mut p, &[vec![1.0]], 0.1);
+        assert!((p.tensors[0].data[0] + 0.1).abs() < 1e-7); // v=1, x-=lr*v
+        opt.step(&mut p, &[vec![1.0]], 0.1);
+        // v = 0.9*1 + 1 = 1.9; x = -0.1 - 0.19 = -0.29
+        assert!((p.tensors[0].data[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn schedule_linear_warmup_decay() {
+        let s = LrSchedule::linear(1.0, 100, 1000);
+        assert!(s.lr_at(0) < 1e-6 + 0.01);
+        assert!((s.lr_at(100) - 1.0).abs() < 1e-9);
+        assert!((s.lr_at(550) - 0.5).abs() < 1e-9);
+        assert!(s.lr_at(1000) < 1e-9);
+        let c = LrSchedule::constant(0.5);
+        assert_eq!(c.lr_at(0), 0.5);
+        assert_eq!(c.lr_at(999), 0.5);
+    }
+}

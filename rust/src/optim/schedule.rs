@@ -1,0 +1,40 @@
+//! Learning-rate schedules (linear warmup + linear decay, constant).
+
+#[derive(Clone, Debug)]
+pub enum LrSchedule {
+    Constant { lr: f64 },
+    Linear { peak: f64, warmup: usize, total: usize },
+}
+
+impl LrSchedule {
+    pub fn constant(lr: f64) -> LrSchedule {
+        LrSchedule::Constant { lr }
+    }
+
+    pub fn linear(peak: f64, warmup: usize, total: usize) -> LrSchedule {
+        LrSchedule::Linear { peak, warmup, total: total.max(warmup + 1) }
+    }
+
+    /// From config: warmup as fraction of total steps.
+    pub fn from_config(kind: &str, lr: f64, warmup_frac: f64, total: usize) -> LrSchedule {
+        match kind {
+            "const" => LrSchedule::constant(lr),
+            _ => LrSchedule::linear(lr, (warmup_frac * total as f64) as usize, total),
+        }
+    }
+
+    pub fn lr_at(&self, step: usize) -> f64 {
+        match *self {
+            LrSchedule::Constant { lr } => lr,
+            LrSchedule::Linear { peak, warmup, total } => {
+                if step < warmup {
+                    peak * (step + 1) as f64 / warmup.max(1) as f64
+                } else if step >= total {
+                    0.0
+                } else {
+                    peak * (total - step) as f64 / (total - warmup) as f64
+                }
+            }
+        }
+    }
+}

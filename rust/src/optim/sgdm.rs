@@ -1,0 +1,48 @@
+//! SGD with momentum (used for the CNN / Appendix C runs, as in the paper).
+
+use crate::formats::params::ParamSet;
+
+use super::{no_decay, Optimizer};
+
+pub struct Sgdm {
+    momentum: f64,
+    weight_decay: f64,
+    step: u64,
+    v: Vec<Vec<f32>>,
+    decay_mask: Vec<bool>,
+}
+
+impl Sgdm {
+    pub fn new(params: &ParamSet, momentum: f64, weight_decay: f64) -> Sgdm {
+        Sgdm {
+            momentum,
+            weight_decay,
+            step: 0,
+            v: params.tensors.iter().map(|t| vec![0.0; t.numel()]).collect(),
+            decay_mask: params.tensors.iter().map(|t| !no_decay(&t.name)).collect(),
+        }
+    }
+}
+
+impl Optimizer for Sgdm {
+    fn step(&mut self, params: &mut ParamSet, grads: &[Vec<f32>], lr: f64) {
+        debug_assert_eq!(grads.len(), params.tensors.len());
+        self.step += 1;
+        let mu = self.momentum as f32;
+        for ti in 0..params.tensors.len() {
+            let g = &grads[ti];
+            let v = &mut self.v[ti];
+            let x = &mut params.tensors[ti].data;
+            let decay = if self.decay_mask[ti] { self.weight_decay as f32 } else { 0.0 };
+            for i in 0..x.len() {
+                let grad = g[i] + decay * x[i];
+                v[i] = mu * v[i] + grad;
+                x[i] -= (lr as f32) * v[i];
+            }
+        }
+    }
+
+    fn steps_done(&self) -> u64 {
+        self.step
+    }
+}

@@ -1,0 +1,147 @@
+//! PJRT execution engine: loads HLO-text artifacts, compiles them on the
+//! CPU PJRT client once, caches the executables, and marshals literals.
+//!
+//! This is the only module that talks to the `xla` crate. Pattern follows
+//! /opt/xla-example/load_hlo: `HloModuleProto::from_text_file` ->
+//! `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::formats::params::ParamSet;
+
+use super::manifest::{Manifest, ModelManifest};
+
+/// Loaded artifact store + executable cache for one PJRT client.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Cumulative count of entry executions (perf accounting).
+    execs: RefCell<u64>,
+}
+
+impl Engine {
+    /// Load the manifest and create the CPU PJRT client.
+    pub fn load(artifacts_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            execs: RefCell::new(0),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn exec_count(&self) -> u64 {
+        *self.execs.borrow()
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.manifest.model(name)
+    }
+
+    /// Load the model's initial parameters from the artifact directory.
+    pub fn load_params(&self, model: &str) -> Result<ParamSet> {
+        let m = self.manifest.model(model)?;
+        ParamSet::load_bin(&self.manifest.dir.join(&m.params_bin), &m.param_specs)
+    }
+
+    /// Compile (or fetch from cache) an entry executable.
+    fn executable(&self, model: &str, entry: &str) -> Result<()> {
+        let key = format!("{model}/{entry}");
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let m = self.manifest.model(model)?;
+        let e = m.entry(entry)?;
+        let path = self.manifest.dir.join(&e.file);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(to_anyhow)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(to_anyhow)
+            .with_context(|| format!("compiling {key}"))?;
+        self.cache.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of entries (so timing runs exclude compile cost).
+    pub fn warmup(&self, model: &str, entries: &[&str]) -> Result<()> {
+        for e in entries {
+            self.executable(model, e)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an entry. Inputs are literals in calling-convention order;
+    /// the single tuple output is decomposed into its elements.
+    pub fn run(
+        &self,
+        model: &str,
+        entry: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        self.executable(model, entry)?;
+        let key = format!("{model}/{entry}");
+        let cache = self.cache.borrow();
+        let exe = cache.get(&key).expect("just compiled");
+        let result = exe.execute::<xla::Literal>(inputs).map_err(to_anyhow)?;
+        *self.execs.borrow_mut() += 1;
+        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        lit.to_tuple().map_err(to_anyhow)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow!("{e}")
+}
+
+// ---------------------------------------------------------------------------
+// Literal marshalling helpers.
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).map_err(to_anyhow)
+}
+
+pub fn lit_scalar_i32(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(to_anyhow)
+}
+
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(to_anyhow)
+}
+
+/// Convert a ParamSet into input literals (calling-convention prefix).
+pub fn param_literals(params: &ParamSet) -> Result<Vec<xla::Literal>> {
+    params
+        .tensors
+        .iter()
+        .map(|t| lit_f32(&t.data, &t.shape))
+        .collect()
+}

@@ -1,0 +1,185 @@
+//! Artifact manifest: the registry written by `python/compile/aot.py` that
+//! maps model names to HLO entry files, parameter specs and configs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::formats::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct EntrySpec {
+    pub file: String,
+    pub batch: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelManifest {
+    pub name: String,
+    /// "transformer" | "cnn"
+    pub kind: String,
+    /// Raw config map (ints/bools as parsed JSON values).
+    pub config: BTreeMap<String, Json>,
+    pub params_bin: String,
+    /// (name, shape) in calling-convention order.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    /// Weight tensors subject to SampleW, in nu-vector order.
+    pub sampled_linears: Vec<String>,
+    pub entries: BTreeMap<String, EntrySpec>,
+}
+
+impl ModelManifest {
+    pub fn cfg_usize(&self, key: &str) -> Result<usize> {
+        self.config
+            .get(key)
+            .ok_or_else(|| anyhow!("model {}: missing config key {key:?}", self.name))?
+            .as_usize()
+    }
+
+    pub fn entry(&self, name: &str) -> Result<&EntrySpec> {
+        self.entries
+            .get(name)
+            .ok_or_else(|| anyhow!("model {} has no entry {name:?}", self.name))
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_specs.len()
+    }
+
+    /// Indices (into param order) of the SampleW'd weights, nu-vector order.
+    pub fn sampled_indices(&self) -> Vec<usize> {
+        self.sampled_linears
+            .iter()
+            .map(|n| {
+                self.param_specs
+                    .iter()
+                    .position(|(pn, _)| pn == n)
+                    .expect("sampled linear not in params")
+            })
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub main_batch: usize,
+    pub sub_batch: usize,
+    pub cnn_batch: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!("reading {path:?} — run `make artifacts` first")
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj()? {
+            let mut param_specs = Vec::new();
+            for p in m.req("params")?.as_arr()? {
+                param_specs.push((
+                    p.req("name")?.as_str()?.to_string(),
+                    p.req("shape")?.shape_vec()?,
+                ));
+            }
+            let sampled_linears = match m.get("sampled_linears") {
+                Some(v) => v
+                    .as_arr()?
+                    .iter()
+                    .map(|s| s.as_str().map(str::to_string))
+                    .collect::<Result<Vec<_>>>()?,
+                None => Vec::new(),
+            };
+            let mut entries = BTreeMap::new();
+            for (ename, e) in m.req("entries")?.as_obj()? {
+                entries.insert(
+                    ename.clone(),
+                    EntrySpec {
+                        file: e.req("file")?.as_str()?.to_string(),
+                        batch: e.req("batch")?.as_usize()?,
+                    },
+                );
+            }
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    kind: m.req("kind")?.as_str()?.to_string(),
+                    config: m.req("config")?.as_obj()?.clone(),
+                    params_bin: m.req("params_bin")?.as_str()?.to_string(),
+                    param_specs,
+                    sampled_linears,
+                    entries,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            main_batch: j.req("main_batch")?.as_usize()?,
+            sub_batch: j.req("sub_batch")?.as_usize()?,
+            cnn_batch: j.req("cnn_batch")?.as_usize()?,
+            models,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("manifest has no model {name:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "main_batch": 32, "sub_batch": 10, "cnn_batch": 64,
+      "models": {
+        "tiny": {
+          "kind": "transformer",
+          "config": {"vocab": 512, "n_layers": 4, "n_sampled": 16},
+          "params_bin": "tiny.params.bin",
+          "params": [
+            {"name": "embed", "shape": [512, 64]},
+            {"name": "blk0.w_qkv", "shape": [64, 192]}
+          ],
+          "sampled_linears": ["blk0.w_qkv"],
+          "entries": {"fwd_bwd_cls_n32": {"file": "tiny.fwd.hlo.txt", "batch": 32}}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp"), SAMPLE).unwrap();
+        assert_eq!(m.main_batch, 32);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.cfg_usize("n_layers").unwrap(), 4);
+        assert_eq!(tiny.param_specs.len(), 2);
+        assert_eq!(tiny.sampled_indices(), vec![1]);
+        assert_eq!(tiny.entry("fwd_bwd_cls_n32").unwrap().batch, 32);
+        assert!(tiny.entry("nope").is_err());
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        // Opportunistic integration check against the actual artifacts dir.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("tiny"));
+            let tiny = m.model("tiny").unwrap();
+            assert_eq!(tiny.sampled_linears.len(), tiny.cfg_usize("n_sampled").unwrap());
+        }
+    }
+}

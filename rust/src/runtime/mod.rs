@@ -1,0 +1,13 @@
+//! PJRT runtime: artifact registry (manifest), executable cache and typed
+//! call wrappers for the AOT entries. Python never runs here — artifacts
+//! are loaded as HLO text and compiled once per process.
+
+mod engine;
+mod manifest;
+mod session;
+
+pub use engine::{
+    lit_f32, lit_i32, lit_scalar_i32, param_literals, scalar_f32, to_vec_f32, Engine,
+};
+pub use manifest::{EntrySpec, Manifest, ModelManifest};
+pub use session::{CnnGradOut, GradOut, ModelSession};

@@ -1,0 +1,48 @@
+//! Shared substrates: PRNG, statistics, property-testing harness, timing.
+
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Simple wall-clock stopwatch for perf accounting.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a float with engineering-style compactness for table output.
+pub fn fmt_sig(x: f64, digits: usize) -> String {
+    if x == 0.0 || !x.is_finite() {
+        return format!("{x}");
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (digits as i32 - 1 - mag).max(0) as usize;
+    format!("{:.*}", dec, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_sig_basic() {
+        assert_eq!(fmt_sig(0.12345, 3), "0.123");
+        assert_eq!(fmt_sig(1234.5, 3), "1234"); // no decimals beyond magnitude
+        assert_eq!(fmt_sig(0.0, 3), "0");
+    }
+}

@@ -1,0 +1,153 @@
+//! proptest-lite: a tiny property-based testing harness (the real proptest
+//! crate is not in the offline vendor set).
+//!
+//! Usage:
+//! ```ignore
+//! check("batch covers all data", 256, |g| {
+//!     let n = g.usize_in(1, 100);
+//!     /* ... */
+//!     ensure(covered == n, format!("covered {covered} of {n}"))
+//! });
+//! ```
+//! Each iteration gets a fresh deterministic generator; failures report the
+//! iteration seed so the case can be replayed with `check_seeded`.
+
+use super::rng::Pcg32;
+
+/// Random input generator handed to properties.
+pub struct Gen {
+    rng: Pcg32,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg32::new(seed, 0xF00D) }
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg32 {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range_i64(lo as i64, hi as i64) as usize
+    }
+
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        self.rng.range_i64(lo, hi)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bernoulli(0.5)
+    }
+
+    /// Vector of f32 drawn from N(0, scale).
+    pub fn vec_normal(&mut self, len: usize, scale: f64) -> Vec<f32> {
+        (0..len).map(|_| (self.rng.normal() * scale) as f32).collect()
+    }
+
+    /// Vector of positive f32 (|N(0,scale)|), handy for norms/weights.
+    pub fn vec_pos(&mut self, len: usize, scale: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| (self.rng.normal() * scale).abs().max(1e-9) as f32)
+            .collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// ASCII identifier-ish string.
+    pub fn ident(&mut self, max_len: usize) -> String {
+        let len = self.usize_in(1, max_len.max(1));
+        let alphabet = b"abcdefghijklmnopqrstuvwxyz_0123456789";
+        (0..len)
+            .map(|i| {
+                let limit = if i == 0 { 27 } else { alphabet.len() };
+                alphabet[self.rng.below(limit as u64) as usize] as char
+            })
+            .collect()
+    }
+}
+
+/// Property outcome helper.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` for `iters` random cases; panic with the failing seed.
+pub fn check<F>(name: &str, iters: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    for i in 0..iters {
+        let seed = 0x5EED_0000 + i;
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property '{name}' failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Replay a single seed (for debugging a reported failure).
+pub fn check_seeded<F>(name: &str, seed: u64, prop: F)
+where
+    F: Fn(&mut Gen) -> Result<(), String>,
+{
+    let mut g = Gen::new(seed);
+    if let Err(msg) = prop(&mut g) {
+        panic!("property '{name}' failed at seed {seed}: {msg}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("sum is commutative", 64, |g| {
+            let a = g.f64_in(-10.0, 10.0);
+            let b = g.f64_in(-10.0, 10.0);
+            ensure((a + b - (b + a)).abs() < 1e-12, "a+b != b+a")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_ranges_inclusive() {
+        check("usize_in bounds", 256, |g| {
+            let lo = g.usize_in(0, 50);
+            let hi = lo + g.usize_in(0, 50);
+            let x = g.usize_in(lo, hi);
+            ensure(x >= lo && x <= hi, format!("{x} outside [{lo},{hi}]"))
+        });
+    }
+
+    #[test]
+    fn ident_is_valid() {
+        check("ident shape", 128, |g| {
+            let s = g.ident(12);
+            ensure(
+                !s.is_empty() && s.len() <= 12 && !s.starts_with(|c: char| c.is_ascii_digit()),
+                format!("bad ident {s:?}"),
+            )
+        });
+    }
+}

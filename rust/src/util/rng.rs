@@ -1,0 +1,294 @@
+//! Deterministic PRNG substrate (no `rand` crate in the offline vendor set).
+//!
+//! `Pcg32` is PCG-XSH-RR 64/32 (O'Neill 2014): a 64-bit LCG state with an
+//! output permutation — small, fast, and statistically solid for everything
+//! the coordinator needs (batch shuffles, Bernoulli masks, synthetic data,
+//! Monte-Carlo probes). Streams are selectable so every component of the
+//! trainer derives an independent, reproducible substream from one run seed.
+
+/// PCG-XSH-RR 64/32 pseudorandom generator.
+#[derive(Clone, Debug)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+    /// Cached second normal from the last Box-Muller draw.
+    spare_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg32 {
+    /// Create a generator from a seed and a stream id; distinct streams are
+    /// independent sequences even under the same seed.
+    pub fn new(seed: u64, stream: u64) -> Self {
+        let mut rng = Pcg32 {
+            state: 0,
+            inc: (stream << 1) | 1,
+            spare_normal: None,
+        };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive a child generator (used to hand substreams to components).
+    pub fn fork(&mut self, stream: u64) -> Pcg32 {
+        Pcg32::new(self.next_u64(), stream)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "below(0)");
+        let (mut hi, mut lo) = mul_hi_lo(self.next_u64(), n);
+        if lo < n {
+            let threshold = n.wrapping_neg() % n;
+            while lo < threshold {
+                let (h, l) = mul_hi_lo(self.next_u64(), n);
+                hi = h;
+                lo = l;
+            }
+        }
+        hi
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo) as u64 + 1) as i64
+    }
+
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box-Muller (caches the paired draw).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        let (u1, u2) = (self.f64().max(1e-300), self.f64());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Gumbel(0,1) draw — used for weighted sampling without replacement
+    /// (Gumbel-top-k trick).
+    pub fn gumbel(&mut self) -> f64 {
+        -(-self.f64().max(1e-300).ln()).ln()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Index draw from unnormalized non-negative weights.
+    pub fn weighted_index(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weighted_index: zero total weight");
+        let mut t = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            t -= w;
+            if t <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Zipf-distributed integer in [0, n) with exponent `a` (inverse-CDF on
+    /// the precomputed table is avoided: simple rejection-free inversion via
+    /// cumulative harmonic approximation is inaccurate for small n, so this
+    /// uses exact inversion when n is small and rejection sampling above).
+    pub fn zipf(&mut self, n: usize, a: f64) -> usize {
+        debug_assert!(n > 0);
+        if n <= 4096 {
+            // exact inversion over the table-free cumulative sum
+            let total: f64 = (1..=n).map(|k| (k as f64).powf(-a)).sum();
+            let mut t = self.f64() * total;
+            for k in 1..=n {
+                t -= (k as f64).powf(-a);
+                if t <= 0.0 {
+                    return k - 1;
+                }
+            }
+            n - 1
+        } else {
+            // rejection sampling (Devroye) for large supports
+            let b = 2f64.powf(a - 1.0);
+            loop {
+                let u = self.f64();
+                let v = self.f64();
+                let x = (u.powf(-1.0 / (a - 1.0))).floor();
+                let t = (1.0 + 1.0 / x).powf(a - 1.0);
+                if x <= n as f64 && v * x * (t - 1.0) / (b - 1.0) <= t / b {
+                    return x as usize - 1;
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn mul_hi_lo(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+/// Weighted sampling *without* replacement of k indices (Gumbel-top-k).
+pub fn sample_without_replacement(
+    rng: &mut Pcg32,
+    weights: &[f64],
+    k: usize,
+) -> Vec<usize> {
+    let mut keys: Vec<(f64, usize)> = weights
+        .iter()
+        .enumerate()
+        .map(|(i, &w)| {
+            let lw = if w > 0.0 { w.ln() } else { f64::NEG_INFINITY };
+            (lw + rng.gumbel(), i)
+        })
+        .collect();
+    keys.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+    keys.into_iter().take(k).map(|(_, i)| i).collect()
+}
+
+/// Weighted sampling *with* replacement of k indices.
+pub fn sample_with_replacement(rng: &mut Pcg32, weights: &[f64], k: usize) -> Vec<usize> {
+    (0..k).map(|_| rng.weighted_index(weights)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed_and_stream() {
+        let mut a = Pcg32::new(42, 1);
+        let mut b = Pcg32::new(42, 1);
+        let mut c = Pcg32::new(42, 2);
+        let va: Vec<u32> = (0..16).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..16).map(|_| b.next_u32()).collect();
+        let vc: Vec<u32> = (0..16).map(|_| c.next_u32()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut rng = Pcg32::new(7, 0);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_is_unbiased_small_range() {
+        let mut rng = Pcg32::new(3, 9);
+        let mut counts = [0u32; 7];
+        for _ in 0..70_000 {
+            counts[rng.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "counts {counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg32::new(11, 4);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(5, 5);
+        let mut v: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed_and_in_range() {
+        let mut rng = Pcg32::new(1, 2);
+        let mut counts = vec![0u32; 50];
+        for _ in 0..50_000 {
+            let k = rng.zipf(50, 1.2);
+            counts[k] += 1;
+        }
+        assert!(counts[0] > counts[10] && counts[10] > counts[40]);
+    }
+
+    #[test]
+    fn without_replacement_unique_and_weighted() {
+        let mut rng = Pcg32::new(9, 9);
+        let weights = vec![10.0, 1.0, 1.0, 1.0, 1.0, 0.0];
+        let mut first_counts = 0;
+        for _ in 0..2000 {
+            let idx = sample_without_replacement(&mut rng, &weights, 3);
+            assert_eq!(idx.len(), 3);
+            let mut u = idx.clone();
+            u.sort_unstable();
+            u.dedup();
+            assert_eq!(u.len(), 3, "duplicates in {idx:?}");
+            assert!(!idx.contains(&5), "zero-weight index sampled");
+            if idx.contains(&0) {
+                first_counts += 1;
+            }
+        }
+        assert!(first_counts > 1900, "heavy item kept only {first_counts}/2000");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut rng = Pcg32::new(2, 8);
+        let hits = (0..50_000).filter(|_| rng.bernoulli(0.3)).count();
+        assert!((hits as f64 / 50_000.0 - 0.3).abs() < 0.01);
+    }
+}

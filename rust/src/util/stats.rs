@@ -1,0 +1,185 @@
+//! Small numerical/statistics helpers shared across the coordinator.
+
+/// Streaming mean/variance (Welford).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Unbiased sample variance (0 while fewer than 2 observations).
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+}
+
+/// Exponential moving average with bias correction.
+#[derive(Clone, Debug)]
+pub struct Ema {
+    beta: f64,
+    value: f64,
+    steps: u64,
+}
+
+impl Ema {
+    pub fn new(beta: f64) -> Self {
+        Ema { beta, value: 0.0, steps: 0 }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.steps += 1;
+        self.value = self.beta * self.value + (1.0 - self.beta) * x;
+    }
+
+    pub fn get(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.value / (1.0 - self.beta.powi(self.steps as i32))
+        }
+    }
+}
+
+pub fn mean(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64
+}
+
+pub fn sum_f64(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| x as f64).sum()
+}
+
+/// ||a||^2 in f64.
+pub fn norm_sq(xs: &[f32]) -> f64 {
+    xs.iter().map(|&x| (x as f64) * (x as f64)).sum()
+}
+
+/// ||a - b||^2 in f64.
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// q-th percentile (q in [0,1]) by linear interpolation over a sorted copy.
+pub fn percentile(xs: &[f32], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+    if lo == hi {
+        v[lo] as f64
+    } else {
+        let w = pos - lo as f64;
+        v[lo] as f64 * (1.0 - w) + v[hi] as f64 * w
+    }
+}
+
+/// Fraction of entries in the rank-ordered head needed to reach `s` of the
+/// total mass — the paper's gradient-norm sparsity p_l(s) (Eq. 4).
+pub fn mass_fraction(norms: &[f32], s: f64) -> f64 {
+    let n = norms.len();
+    if n == 0 {
+        return 1.0;
+    }
+    let mut v: Vec<f64> = norms.iter().map(|&x| x as f64).collect();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let total: f64 = v.iter().sum();
+    if total <= 0.0 {
+        return 1.0 / n as f64;
+    }
+    let target = s * total;
+    let mut acc = 0.0;
+    for (i, x) in v.iter().enumerate() {
+        acc += x;
+        if acc >= target {
+            return (i + 1) as f64 / n as f64;
+        }
+    }
+    1.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_closed_form() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 5.0).abs() < 1e-12);
+        // sample variance of the classic example = 32/7
+        assert!((w.var() - 32.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ema_bias_corrected() {
+        let mut e = Ema::new(0.9);
+        e.push(10.0);
+        assert!((e.get() - 10.0).abs() < 1e-9, "first value should pass through");
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0f32, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 1.0) - 4.0).abs() < 1e-9);
+        assert!((percentile(&xs, 0.5) - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mass_fraction_eq4_semantics() {
+        // one dominant row: tiny p at low s, grows with s
+        let norms = [100.0f32, 1.0, 1.0, 1.0];
+        assert!((mass_fraction(&norms, 0.5) - 0.25).abs() < 1e-9);
+        assert!((mass_fraction(&norms, 0.99) - 0.75).abs() < 1e-9);
+        assert!((mass_fraction(&norms, 1.0) - 1.0).abs() < 1e-9);
+        // uniform rows: p(s) ~ s
+        let uni = [1.0f32; 10];
+        assert!((mass_fraction(&uni, 0.35) - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dist_and_norm() {
+        let a = [1.0f32, 2.0];
+        let b = [4.0f32, 6.0];
+        assert!((dist_sq(&a, &b) - 25.0).abs() < 1e-9);
+        assert!((norm_sq(&a) - 5.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,289 @@
+//! Integration tests over the real artifacts: PJRT load/compile/execute,
+//! estimator semantics through the full stack, trainer loops for every
+//! method, checkpointing, and the CNN path.
+//!
+//! Executable compilation dominates the cost, so everything shares one
+//! Engine inside a single #[test] (the engine's executable cache is not
+//! Sync; splitting into many tests would recompile per test).
+
+use std::path::{Path, PathBuf};
+
+use vcas::config::{Method, TrainConfig, VcasConfig};
+use vcas::coordinator::Trainer;
+use vcas::data::batch::{gather_cls, EpochSampler};
+use vcas::data::tasks::{find, generate_cls};
+use vcas::formats::params::ParamSet;
+use vcas::runtime::{Engine, ModelSession};
+use vcas::util::stats::dist_sq;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn full_stack_suite() {
+    let dir = artifacts_dir();
+    assert!(
+        dir.join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    let engine = Engine::load(&dir).expect("engine load");
+    println!("platform: {}", engine.platform());
+
+    check_manifest_and_params(&engine);
+    check_pallas_and_ref_paths_agree(&engine);
+    check_exact_grad_determinism(&engine);
+    check_sampling_changes_grads_but_not_loss_path(&engine);
+    check_act_norms_and_vw_shapes(&engine);
+    check_trainer_all_methods(&engine);
+    check_probe_updates_controller(&engine);
+    check_checkpoint_roundtrip(&engine);
+    check_cnn_path(&engine);
+    check_mlm_path(&engine);
+}
+
+fn check_manifest_and_params(engine: &Engine) {
+    let m = engine.model("tiny").expect("tiny in manifest");
+    assert_eq!(m.kind, "transformer");
+    let params = engine.load_params("tiny").expect("params load");
+    assert_eq!(params.tensors.len(), m.param_specs.len());
+    // embedding is the first tensor by convention and non-degenerate
+    assert_eq!(params.tensors[0].name, "embed");
+    let rms = (vcas::util::stats::norm_sq(&params.tensors[0].data)
+        / params.tensors[0].numel() as f64)
+        .sqrt();
+    assert!(rms > 1e-4 && rms < 1.0, "embed rms {rms}");
+    println!("manifest+params ok ({} tensors)", params.tensors.len());
+}
+
+/// "tiny" lowers the samplers through the pure-jnp reference path, "tinyp"
+/// through the Pallas kernels — same architecture, same init seed. Their
+/// exact-mode gradients must agree to float tolerance, proving the L1
+/// kernels compose through AOT + PJRT identically to the oracle.
+fn check_pallas_and_ref_paths_agree(engine: &Engine) {
+    if engine.model("tinyp").is_err() {
+        println!("tinyp artifacts not built — skipping cross-path check");
+        return;
+    }
+    let a = ModelSession::open(engine, "tiny").unwrap();
+    let b = ModelSession::open(engine, "tinyp").unwrap();
+    let pa = a.load_params().unwrap();
+    let pb = b.load_params().unwrap();
+    let batch = tiny_batch(engine, 9);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let ones_l = vec![1.0f32; a.n_layers];
+    let ones_w = vec![1.0f32; a.n_sampled];
+    let ga = a.fwd_bwd_cls(&pa, &batch, &sw, 0, &ones_l, &ones_w, &ones_w).unwrap();
+    let gb = b.fwd_bwd_cls(&pb, &batch, &sw, 0, &ones_l, &ones_w, &ones_w).unwrap();
+    assert!((ga.loss - gb.loss).abs() < 1e-5, "loss {} vs {}", ga.loss, gb.loss);
+    for (ta, tb) in ga.grads.iter().zip(&gb.grads) {
+        let d = dist_sq(ta, tb).sqrt();
+        let scale = vcas::util::stats::norm_sq(ta).sqrt().max(1e-9);
+        assert!(d / scale < 1e-3, "pallas/ref grads diverge: {d} vs scale {scale}");
+    }
+    println!("pallas/ref cross-path agreement ok");
+}
+
+fn tiny_batch(engine: &Engine, seed: u64) -> vcas::data::batch::ClsBatch {
+    let sess = ModelSession::open(engine, "tiny").unwrap();
+    let spec = find("sst2-sim").unwrap();
+    let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 64, seed);
+    let mut sampler = EpochSampler::new(64, seed);
+    gather_cls(&ds, &sampler.take(engine.manifest.main_batch))
+}
+
+fn check_exact_grad_determinism(engine: &Engine) {
+    let sess = ModelSession::open(engine, "tiny").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = tiny_batch(engine, 1);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let ones_l = vec![1.0f32; sess.n_layers];
+    let ones_w = vec![1.0f32; sess.n_sampled];
+    let a = sess
+        .fwd_bwd_cls(&params, &batch, &sw, 7, &ones_l, &ones_w, &ones_w)
+        .unwrap();
+    let b = sess
+        .fwd_bwd_cls(&params, &batch, &sw, 991, &ones_l, &ones_w, &ones_w)
+        .unwrap();
+    assert!((a.loss - b.loss).abs() < 1e-6);
+    for (ga, gb) in a.grads.iter().zip(&b.grads) {
+        assert!(dist_sq(ga, gb) < 1e-10, "exact grads differ across seeds");
+    }
+    // vw must be exactly zero at nu = 1
+    assert!(a.vw.iter().all(|&v| v.abs() < 1e-8));
+    println!("exact determinism ok (loss {:.4})", a.loss);
+}
+
+fn check_sampling_changes_grads_but_not_loss_path(engine: &Engine) {
+    let sess = ModelSession::open(engine, "tiny").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = tiny_batch(engine, 2);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let ones_l = vec![1.0f32; sess.n_layers];
+    let ones_w = vec![1.0f32; sess.n_sampled];
+    let rho = vec![0.5f32; sess.n_layers];
+    let nu = vec![0.5f32; sess.n_sampled];
+    let exact = sess
+        .fwd_bwd_cls(&params, &batch, &sw, 0, &ones_l, &ones_w, &ones_w)
+        .unwrap();
+    let s1 = sess.fwd_bwd_cls(&params, &batch, &sw, 1, &rho, &nu, &nu).unwrap();
+    let s2 = sess.fwd_bwd_cls(&params, &batch, &sw, 2, &rho, &nu, &nu).unwrap();
+    // loss comes from the forward pass — sampling must not touch it
+    assert!((s1.loss - exact.loss).abs() < 1e-6);
+    assert!((s2.loss - exact.loss).abs() < 1e-6);
+    // grads are stochastic and differ per seed
+    let d12: f64 = s1.grads.iter().zip(&s2.grads).map(|(a, b)| dist_sq(a, b)).sum();
+    assert!(d12 > 1e-9, "sampled grads identical across seeds");
+    // and vw is positive once nu < 1
+    assert!(s1.vw.iter().sum::<f32>() > 0.0);
+    println!("sampling semantics ok (grad diff {d12:.3e})");
+}
+
+fn check_act_norms_and_vw_shapes(engine: &Engine) {
+    let sess = ModelSession::open(engine, "tiny").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = tiny_batch(engine, 3);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let ones_l = vec![1.0f32; sess.n_layers];
+    let ones_w = vec![1.0f32; sess.n_sampled];
+    let out = sess
+        .fwd_bwd_cls(&params, &batch, &sw, 0, &ones_l, &ones_w, &ones_w)
+        .unwrap();
+    assert_eq!(out.act_norms.len(), sess.n_layers * batch.n);
+    assert_eq!(out.vw.len(), sess.n_sampled);
+    assert!(out.act_norms.iter().all(|&x| x > 0.0 && x.is_finite()));
+    println!("probe output shapes ok");
+}
+
+fn check_trainer_all_methods(engine: &Engine) {
+    for method in [Method::Exact, Method::Vcas, Method::Sb, Method::Ub, Method::Uniform] {
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            task: "sst2-sim".into(),
+            method: method.clone(),
+            steps: 6,
+            seed: 3,
+            vcas: VcasConfig { freq: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let mut t = Trainer::new(engine, &cfg).unwrap();
+        let r = t.run().unwrap();
+        assert_eq!(r.losses.len(), 6);
+        assert!(
+            r.losses.iter().all(|&(_, l)| l.is_finite() && l > 0.0),
+            "{}: bad losses {:?}",
+            method.name(),
+            r.losses
+        );
+        assert!(r.final_eval_acc >= 0.0 && r.final_eval_acc <= 1.0);
+        if matches!(method, Method::Sb | Method::Ub | Method::Uniform) {
+            assert!(
+                r.flops_reduction > 0.30,
+                "{} reduction {}",
+                method.name(),
+                r.flops_reduction
+            );
+        }
+        println!(
+            "trainer {} ok: loss {:.3} -> {:.3}, flops red {:.1}%",
+            method.name(),
+            r.losses[0].1,
+            r.losses[5].1,
+            r.flops_reduction * 100.0
+        );
+    }
+}
+
+fn check_probe_updates_controller(engine: &Engine) {
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        task: "sst2-sim".into(),
+        method: Method::Vcas,
+        steps: 9,
+        seed: 5,
+        vcas: VcasConfig { freq: 4, ..Default::default() },
+        ..Default::default()
+    };
+    let mut t = Trainer::new(engine, &cfg).unwrap();
+    let r = t.run().unwrap();
+    // probes at steps 0, 4, 8
+    assert_eq!(r.probes.len(), 3, "probe log {:?}", r.probes.len());
+    for p in &r.probes {
+        assert!(p.v_s > 0.0 && p.v_s.is_finite());
+        assert!(p.v_act >= 0.0 && p.v_act.is_finite());
+        assert!(p.s > 0.0 && p.s <= 1.0);
+        for w in p.rho.windows(2) {
+            assert!(w[1] >= w[0], "rho not monotone {:?}", p.rho);
+        }
+    }
+    // s must have moved off its 1.0 init by the first update
+    assert!(r.probes[0].s < 1.0);
+    println!("controller probes ok (s: {:?})", r.probes.iter().map(|p| p.s).collect::<Vec<_>>());
+}
+
+fn check_checkpoint_roundtrip(engine: &Engine) {
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        task: "sst2-sim".into(),
+        method: Method::Exact,
+        steps: 3,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(engine, &cfg).unwrap();
+    let _ = t.run().unwrap();
+    let path = std::env::temp_dir().join(format!("vcas_ckpt_{}.bin", std::process::id()));
+    t.save_checkpoint(&path).unwrap();
+    let mm = engine.model("tiny").unwrap();
+    let loaded = ParamSet::load_bin(&path, &mm.param_specs).unwrap();
+    for (a, b) in t.params.tensors.iter().zip(&loaded.tensors) {
+        assert_eq!(a.data, b.data, "checkpoint mismatch in {}", a.name);
+    }
+    // finetune-from-checkpoint path: fresh trainer adopts the params
+    let mut t2 = Trainer::new(engine, &cfg).unwrap();
+    t2.set_params(loaded);
+    let r2 = t2.run().unwrap();
+    assert!(r2.losses[0].1.is_finite());
+    let _ = std::fs::remove_file(&path);
+    println!("checkpoint roundtrip ok");
+}
+
+fn check_cnn_path(engine: &Engine) {
+    let cfg = TrainConfig {
+        model: "cnn".into(),
+        task: "images".into(),
+        method: Method::Vcas,
+        steps: 4,
+        seed: 2,
+        vcas: VcasConfig { freq: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let mut t = Trainer::new(engine, &cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.losses.iter().all(|&(_, l)| l.is_finite()));
+    // CNN runs the degraded activation-only mode: nu stays empty/1
+    let (rho, nu) = t.live_ratios();
+    assert!(nu.is_empty());
+    assert_eq!(rho.len(), 2); // one site per conv stage
+    assert!(!r.probes.is_empty());
+    println!("cnn path ok (rho {rho:?})");
+}
+
+fn check_mlm_path(engine: &Engine) {
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        task: "mlm".into(),
+        method: Method::Vcas,
+        steps: 4,
+        seed: 2,
+        vcas: VcasConfig { freq: 2, ..Default::default() },
+        eval_batches: 2,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(engine, &cfg).unwrap();
+    let r = t.run().unwrap();
+    assert!(r.losses.iter().all(|&(_, l)| l.is_finite() && l > 0.0));
+    // MLM over a 512 vocab starts near ln(512) ~ 6.2
+    assert!(r.losses[0].1 > 3.0, "initial mlm loss {:?}", r.losses[0]);
+    println!("mlm path ok (loss {:.3})", r.losses[0].1);
+}
