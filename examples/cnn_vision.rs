@@ -5,10 +5,10 @@
 //!
 //!     cargo run --release --example cnn_vision [-- <steps> <workers>]
 //!
-//! Workers are logical shards (PJRT wrapper types are not Send): each
-//! shard's gradient is computed separately and merged with the real
-//! O(log W) tree reduction, so the coordination path — sharding, reduce,
-//! broadcast — is the deployed topology.
+//! On the XLA backend workers are logical shards (PJRT wrapper types are
+//! not Send); the native backend is Send + Sync, so the same coordination
+//! path — sharding, reduce, broadcast — is the deployed topology either
+//! way.
 
 use std::path::Path;
 
@@ -17,14 +17,15 @@ use vcas::coordinator::parallel::{shard_ranges, tree_allreduce_mean, tree_depth}
 use vcas::coordinator::Trainer;
 use vcas::data::batch::gather_img;
 use vcas::data::images::{generate_images, ImageSpec};
+use vcas::error::Result;
 use vcas::optim::{Optimizer, Sgdm};
-use vcas::runtime::{Engine, ModelSession};
+use vcas::runtime::{default_backend, Backend, ModelSession};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    let engine = Engine::load(Path::new("artifacts"))?;
+    let backend = default_backend(Path::new("artifacts"));
 
     // ---- single-stream exact vs VCAS (Table 8 rows) -------------------------
     for method in [Method::Exact, Method::Vcas] {
@@ -42,7 +43,7 @@ fn main() -> anyhow::Result<()> {
             },
             ..Default::default()
         };
-        let r = Trainer::new(&engine, &cfg)?.run()?;
+        let r = Trainer::new(backend.as_ref(), &cfg)?.run()?;
         println!(
             "{:>5}: loss {:.4}, eval acc {:.2}%, FLOPs red {:.2}%, wall {:.1}s",
             r.method,
@@ -55,12 +56,18 @@ fn main() -> anyhow::Result<()> {
 
     // ---- data-parallel round: shard -> per-shard grads -> tree allreduce ----
     println!("\nDDP demo: {workers} workers, tree depth {}", tree_depth(workers));
-    let sess = ModelSession::open(&engine, "cnn")?;
+    let sess = ModelSession::open(backend.as_ref(), "cnn")?;
+    let info = sess.info().clone();
     let mut params = sess.load_params()?;
     let mut opt = Sgdm::new(&params, 0.9, 0.0);
-    let spec = ImageSpec::default();
-    let ds = generate_images(&spec, engine.manifest.cnn_batch * workers, 7);
-    let rho = vec![1.0f32; 2];
+    let spec = ImageSpec {
+        img: info.img,
+        channels: info.in_ch,
+        n_classes: info.n_classes,
+        ..ImageSpec::default()
+    };
+    let ds = generate_images(&spec, backend.cnn_batch() * workers, 7);
+    let rho = vec![1.0f32; info.n_layers];
 
     for step in 0..4 {
         // every worker computes grads on its shard at the full static batch
@@ -71,10 +78,7 @@ fn main() -> anyhow::Result<()> {
         for (w, &(s, e)) in ranges.iter().enumerate() {
             let idx: Vec<usize> = (s..e).collect();
             let batch = gather_img(&ds, &idx);
-            let out = sess.cnn_fwd_bwd(
-                &params, &batch, spec.img, spec.channels,
-                (step * workers + w) as i32, &rho,
-            )?;
+            let out = sess.cnn_fwd_bwd(&params, &batch, (step * workers + w) as i32, &rho)?;
             losses.push(out.loss);
             worker_grads.push(out.grads);
         }

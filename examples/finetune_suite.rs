@@ -8,14 +8,15 @@ use std::path::Path;
 
 use vcas::config::{Method, TrainConfig, VcasConfig};
 use vcas::coordinator::Trainer;
-use vcas::runtime::Engine;
+use vcas::error::Result;
+use vcas::runtime::default_backend;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let steps: usize = std::env::args()
         .nth(1)
         .and_then(|s| s.parse().ok())
         .unwrap_or(150);
-    let engine = Engine::load(Path::new("artifacts"))?;
+    let backend = default_backend(Path::new("artifacts"));
 
     println!("task         method   loss    acc%    FLOPs-red%");
     println!("------------ -------- ------- ------- ----------");
@@ -30,7 +31,7 @@ fn main() -> anyhow::Result<()> {
                 vcas: VcasConfig { freq: (steps / 5).max(10), ..Default::default() },
                 ..Default::default()
             };
-            let r = Trainer::new(&engine, &cfg)?.run()?;
+            let r = Trainer::new(backend.as_ref(), &cfg)?.run()?;
             println!(
                 "{:<12} {:<8} {:<7.4} {:<7.2} {:<10.2}",
                 task,

@@ -14,27 +14,23 @@ use std::path::Path;
 
 use vcas::config::{Method, TrainConfig, VcasConfig};
 use vcas::coordinator::Trainer;
+use vcas::error::Result;
 use vcas::formats::params::ParamSet;
-use vcas::runtime::Engine;
+use vcas::runtime::{default_backend, Backend};
 use vcas::util::rng::Pcg32;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let pretrain_steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(300);
     let finetune_steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(150);
 
-    let engine = Engine::load(Path::new("artifacts"))?;
-    let mm = engine.model("small")?;
-    let n_params: usize = mm
-        .param_specs
-        .iter()
-        .map(|(_, s)| s.iter().product::<usize>())
-        .sum();
+    let backend = default_backend(Path::new("artifacts"));
+    let info = backend.info("small")?;
     println!(
-        "e2e driver: model 'small' ({:.2}M params, {} layers), platform {}",
-        n_params as f64 / 1e6,
-        mm.cfg_usize("n_layers")?,
-        engine.platform()
+        "e2e driver: model 'small' ({:.2}M params, {} layers), backend {}",
+        info.total_elems() as f64 / 1e6,
+        info.n_layers,
+        backend.name()
     );
 
     // ---- phase 1: MLM pretraining with VCAS --------------------------------
@@ -52,7 +48,7 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
     println!("\n== phase 1: MLM pretraining ({pretrain_steps} steps, VCAS) ==");
-    let mut pre = Trainer::new(&engine, &pre_cfg)?;
+    let mut pre = Trainer::new(backend.as_ref(), &pre_cfg)?;
     let pre_result = pre.run()?;
     for ev in &pre_result.evals {
         println!(
@@ -90,11 +86,11 @@ fn main() -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    let mut from_scratch = Trainer::new(&engine, &ft_cfg)?;
+    let mut from_scratch = Trainer::new(backend.as_ref(), &ft_cfg)?;
     let scratch = from_scratch.run()?;
 
-    let mut transfer = Trainer::new(&engine, &ft_cfg)?;
-    let mut pretrained = ParamSet::load_bin(ckpt, &mm.param_specs)?;
+    let mut transfer = Trainer::new(backend.as_ref(), &ft_cfg)?;
+    let mut pretrained = ParamSet::load_bin(ckpt, &info.param_specs)?;
     // fresh task head on top of the pretrained body
     let mut rng = Pcg32::new(99, 0);
     pretrained.reinit_normal("head_w", 0.02, &mut rng);

@@ -1,20 +1,23 @@
 //! Quickstart: train a tiny transformer on a synthetic sentiment task with
 //! VCAS and compare against exact training.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 //!
-//! Demonstrates the whole public surface: engine loading, config, trainer,
-//! results (loss trajectory + FLOPs reduction + adaptation log).
+//! Runs hermetically on the pure-Rust native backend; with `make artifacts`
+//! and the `xla` feature, the same code drives the PJRT engine instead.
+//! Demonstrates the whole public surface: backend selection, config,
+//! trainer, results (loss trajectory + FLOPs reduction + adaptation log).
 
 use std::path::Path;
 
 use vcas::config::{Method, TrainConfig, VcasConfig};
 use vcas::coordinator::Trainer;
-use vcas::runtime::Engine;
+use vcas::error::Result;
+use vcas::runtime::{default_backend, Backend};
 
-fn main() -> anyhow::Result<()> {
-    let engine = Engine::load(Path::new("artifacts"))?;
-    println!("PJRT platform: {}", engine.platform());
+fn main() -> Result<()> {
+    let backend = default_backend(Path::new("artifacts"));
+    println!("backend: {}", backend.name());
 
     let base = TrainConfig {
         model: "tiny".into(),
@@ -29,7 +32,7 @@ fn main() -> anyhow::Result<()> {
 
     for method in [Method::Exact, Method::Vcas] {
         let cfg = TrainConfig { method: method.clone(), ..base.clone() };
-        let mut trainer = Trainer::new(&engine, &cfg)?;
+        let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
         let r = trainer.run()?;
         println!(
             "{:>6}: final train loss {:.4}, eval acc {:.2}%, FLOPs reduction {:>6.2}%, wall {:.1}s",

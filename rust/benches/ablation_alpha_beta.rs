@@ -10,7 +10,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(160);
     let alphas = [0.005, 0.01, 0.02];
     let betas = [0.95, 0.9, 0.8];

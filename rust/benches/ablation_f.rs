@@ -9,7 +9,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(240);
     let freqs = [steps / 24, steps / 12, steps / 6, steps / 3, steps];
     let mut table =

@@ -9,7 +9,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(120);
     let mut table =
         common::Table::new(&["M", "V_s (last probe)", "V_act (last)", "V_act/V_s", "actual/exact FLOPs"]);

@@ -8,7 +8,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(200);
     let taus = [0.0, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5];
     let mut table = common::Table::new(&["tau", "final loss", "eval acc", "FLOPs red."]);

@@ -12,7 +12,7 @@ use std::time::Instant;
 use vcas::config::{Method, TrainConfig, VcasConfig};
 use vcas::coordinator::{RunResult, Trainer};
 use vcas::formats::csv::{CsvField, CsvWriter};
-use vcas::runtime::Engine;
+use vcas::runtime::{default_backend, Backend};
 
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("VCAS_ARTIFACTS")
@@ -26,8 +26,18 @@ pub fn results_dir() -> PathBuf {
     dir
 }
 
-pub fn load_engine() -> Engine {
-    Engine::load(&artifacts_dir()).expect("run `make artifacts` first")
+/// Best available backend: PJRT over the artifacts when present (feature
+/// `xla`), else the hermetic native backend. The banner makes it impossible
+/// to mistake miniature native-model numbers for artifact-scale results in
+/// the emitted tables/CSVs.
+pub fn load_backend() -> Box<dyn Backend> {
+    let b = default_backend(&artifacts_dir());
+    println!(
+        "[bench backend: {} — {} models; native = miniature in-repo dims]",
+        b.name(),
+        b.models().join(",")
+    );
+    b
 }
 
 /// Steps scale: VCAS_BENCH_STEPS overrides the default per-run step count
@@ -60,9 +70,9 @@ pub fn base_config(model: &str, task: &str, method: Method, steps: usize, seed: 
     }
 }
 
-pub fn run(engine: &Engine, cfg: &TrainConfig) -> RunResult {
+pub fn run(backend: &dyn Backend, cfg: &TrainConfig) -> RunResult {
     let t0 = Instant::now();
-    let mut trainer = Trainer::new(engine, cfg).expect("trainer");
+    let mut trainer = Trainer::new(backend, cfg).expect("trainer");
     let mut r = trainer.run().expect("run");
     r.wall_s = t0.elapsed().as_secs_f64();
     r

@@ -11,7 +11,7 @@ use vcas::config::Method;
 use vcas::formats::csv::{CsvField, CsvWriter};
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(240);
     let path = common::results_dir().join("fig11_adaptation.csv");
     let mut csv = CsvWriter::create(

@@ -10,7 +10,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(240);
     let mut table = common::Table::new(&["method", "loss@25%", "loss@50%", "final", "FLOPs vs exact"]);
 

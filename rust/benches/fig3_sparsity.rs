@@ -11,10 +11,11 @@ mod common;
 use vcas::config::Method;
 use vcas::coordinator::Trainer;
 use vcas::formats::csv::{CsvField, CsvWriter};
+use vcas::runtime::Backend;
 use vcas::util::stats::mass_fraction;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(240);
     let snaps = 6usize;
     let chunk = steps / snaps;
@@ -30,7 +31,7 @@ fn main() {
     for snap in 0..snaps {
         let _ = trainer.advance(chunk).unwrap();
         let snap_probe = trainer.measure_sparsity().unwrap();
-        let n = engine.manifest.main_batch;
+        let n = engine.main_batch();
         let n_layers = snap_probe.len() / n;
         let mut row = Vec::new();
         for l in 0..n_layers {

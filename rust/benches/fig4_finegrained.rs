@@ -10,7 +10,7 @@ mod common;
 use vcas::config::{Method, VcasConfig};
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(240);
     let mut table =
         common::Table::new(&["mode", "tau_act", "tau_w", "final loss", "FLOPs red.", "steady-state"]);

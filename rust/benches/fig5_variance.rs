@@ -12,7 +12,7 @@ use vcas::coordinator::Trainer;
 use vcas::formats::csv::{CsvField, CsvWriter};
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(180);
     let snaps = 4usize;
     let chunk = steps / snaps;

@@ -12,27 +12,27 @@ use vcas::coordinator::vcas::{GradSample, VcasController};
 use vcas::config::VcasConfig;
 use vcas::data::batch::{gather_cls, EpochSampler};
 use vcas::data::tasks::{find, generate_cls};
-use vcas::runtime::{param_literals, ModelSession};
+use vcas::runtime::{Backend, ModelSession};
 use vcas::util::rng::Pcg32;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let mut table = common::Table::new(&["component", "median ms", "notes"]);
 
     for model in ["tiny", "small"] {
-        let sess = ModelSession::open(&engine, model).unwrap();
+        let sess = ModelSession::open(engine.as_ref(), model).unwrap();
         let params = sess.load_params().unwrap();
         let spec = find("sst2-sim").unwrap();
         let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 256, 1);
         let mut sampler = EpochSampler::new(256, 1);
-        let batch = gather_cls(&ds, &sampler.take(engine.manifest.main_batch));
+        let batch = gather_cls(&ds, &sampler.take(engine.main_batch()));
         let sw = vec![1.0 / batch.n as f32; batch.n];
         let ones_l = vec![1.0f32; sess.n_layers];
         let ones_w = vec![1.0f32; sess.n_sampled];
         let rho = vec![0.4f32; sess.n_layers];
         let nu = vec![0.4f32; sess.n_sampled];
 
-        // warmup (compile)
+        // warmup (XLA backend: compile; native backend: cache warm)
         let t0 = Instant::now();
         sess.fwd_bwd_cls(&params, &batch, &sw, 0, &ones_l, &ones_w, &ones_w)
             .unwrap();
@@ -65,11 +65,11 @@ fn main() {
         table.row(vec![format!("{model}: eval"), format!("{ms:.1}"), String::new()]);
 
         let ms = common::time_median_ms(15, || {
-            let lits = param_literals(&params).unwrap();
-            std::hint::black_box(&lits);
+            let flat = params.flat();
+            std::hint::black_box(&flat);
         });
         table.row(vec![
-            format!("{model}: param literal marshalling"),
+            format!("{model}: param flatten/marshal"),
             format!("{ms:.2}"),
             format!("{} tensors", params.tensors.len()),
         ]);

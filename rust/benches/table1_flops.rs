@@ -11,7 +11,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(400);
     let tasks = ["sst2-sim", "qnli-sim", "qqp-sim", "mnli-sim"];
     let mut table = common::Table::new(&[

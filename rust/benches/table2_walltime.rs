@@ -14,7 +14,7 @@ mod common;
 use vcas::config::Method;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(200);
     let mut table = common::Table::new(&[
         "method", "train loss", "eval acc", "wall s", "FLOPs red.", "time red.",

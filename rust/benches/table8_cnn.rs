@@ -10,10 +10,11 @@ mod common;
 
 use vcas::config::Method;
 use vcas::coordinator::parallel::{tree_allreduce_mean, tree_depth};
+use vcas::runtime::Backend;
 use vcas::util::rng::Pcg32;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let steps = common::bench_steps(120);
     let mut table = common::Table::new(&[
         "method", "train loss", "eval acc", "FLOPs red.", "wall s",
@@ -47,8 +48,8 @@ fn main() {
     common::write_summary_csv("table8_cnn", &rows);
 
     // DDP comm model: measure the tree allreduce on CNN-sized grads
-    let mm = engine.model("cnn").unwrap();
-    let n_params: usize = mm.param_specs.iter().map(|(_, s)| s.iter().product::<usize>()).sum();
+    let info = engine.info("cnn").unwrap();
+    let n_params: usize = info.total_elems();
     let mut rng = Pcg32::new(1, 1);
     let mut comm = common::Table::new(&["workers", "tree depth", "allreduce ms"]);
     for w in [2usize, 4, 8] {

@@ -10,10 +10,11 @@ mod common;
 use vcas::config::Method;
 use vcas::coordinator::Trainer;
 use vcas::formats::params::ParamSet;
+use vcas::runtime::Backend;
 use vcas::util::rng::Pcg32;
 
 fn main() {
-    let engine = common::load_engine();
+    let engine = common::load_backend();
     let pre_steps = common::bench_steps(200);
     let ft_steps = pre_steps / 2;
     let mut table = common::Table::new(&[
@@ -29,7 +30,7 @@ fn main() {
 
         let ckpt = common::results_dir().join(format!("table9_{}.bin", method.name()));
         pre.save_checkpoint(&ckpt).unwrap();
-        let mm = engine.model("tiny").unwrap();
+        let info = engine.info("tiny").unwrap();
 
         // downstream finetuning (always VCAS, per the paper's GLUE recipe
         // being independent of the pretraining method)
@@ -37,7 +38,7 @@ fn main() {
         for task in ["qnli-sim", "sst2-sim"] {
             let ft_cfg = common::base_config("tiny", task, Method::Vcas, ft_steps, 31);
             let mut ft = Trainer::new(&engine, &ft_cfg).unwrap();
-            let mut params = ParamSet::load_bin(&ckpt, &mm.param_specs).unwrap();
+            let mut params = ParamSet::load_bin(&ckpt, &info.param_specs).unwrap();
             let mut rng = Pcg32::new(77, 0);
             params.reinit_normal("head_w", 0.02, &mut rng);
             params.reinit_normal("head_b", 0.0, &mut rng);

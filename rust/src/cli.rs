@@ -6,7 +6,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 #[derive(Clone, Debug, Default)]
 pub struct Args {
@@ -38,21 +38,21 @@ impl Args {
     pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.flag(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+            Some(v) => v.parse().map_err(|e| crate::anyhow!("--{name}: {e}")),
         }
     }
 
     pub fn flag_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.flag(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+            Some(v) => v.parse().map_err(|e| crate::anyhow!("--{name}: {e}")),
         }
     }
 
     pub fn flag_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.flag(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+            Some(v) => v.parse().map_err(|e| crate::anyhow!("--{name}: {e}")),
         }
     }
 

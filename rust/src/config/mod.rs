@@ -10,7 +10,7 @@ mod toml;
 
 pub use toml::{TomlTable, TomlValue};
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 /// Which training method drives the run (paper Sec. 6 comparison set).
 #[derive(Clone, Debug, PartialEq)]

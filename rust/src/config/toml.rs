@@ -3,7 +3,7 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::error::{bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum TomlValue {
@@ -57,7 +57,7 @@ impl TomlTable {
                 bail!("line {}: empty key", lineno + 1);
             }
             let value = parse_value(line[eq + 1..].trim())
-                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+                .map_err(|e| crate::anyhow!("line {}: {e}", lineno + 1))?;
             let full = if section.is_empty() {
                 key.to_string()
             } else {
@@ -192,7 +192,7 @@ fn split_top_level(s: &str) -> Result<Vec<String>> {
                 cur.push(c);
             }
             ']' if !in_str => {
-                depth = depth.checked_sub(1).ok_or_else(|| anyhow::anyhow!("unbalanced ]"))?;
+                depth = depth.checked_sub(1).ok_or_else(|| crate::anyhow!("unbalanced ]"))?;
                 cur.push(c);
             }
             ',' if !in_str && depth == 0 => {

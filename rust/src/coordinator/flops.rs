@@ -16,7 +16,7 @@
 //! steps) is charged to the VCAS ledger (`probe_*` methods), matching
 //! "VCAS's FLOPs take account of the adaptation overhead" in Tab. 1.
 
-use crate::runtime::ModelManifest;
+use crate::runtime::ModelInfo;
 
 /// Static per-step FLOPs model for one transformer configuration.
 #[derive(Clone, Debug)]
@@ -30,15 +30,15 @@ pub struct TransformerFlops {
 }
 
 impl TransformerFlops {
-    pub fn from_manifest(mm: &ModelManifest) -> anyhow::Result<TransformerFlops> {
-        Ok(TransformerFlops {
-            d_model: mm.cfg_usize("d_model")? as f64,
-            d_ff: mm.cfg_usize("d_ff")? as f64,
-            vocab: mm.cfg_usize("vocab")? as f64,
-            n_layers: mm.cfg_usize("n_layers")?,
-            seq_len: mm.cfg_usize("seq_len")? as f64,
-            n_classes: mm.cfg_usize("n_classes")? as f64,
-        })
+    pub fn from_info(info: &ModelInfo) -> TransformerFlops {
+        TransformerFlops {
+            d_model: info.d_model as f64,
+            d_ff: info.d_ff as f64,
+            vocab: info.vocab as f64,
+            n_layers: info.n_layers,
+            seq_len: info.seq_len as f64,
+            n_classes: info.n_classes as f64,
+        }
     }
 
     /// Forward FLOPs of one block at `n` batch rows.
@@ -120,6 +120,15 @@ pub struct CnnFlops {
 }
 
 impl CnnFlops {
+    pub fn from_info(info: &ModelInfo) -> CnnFlops {
+        CnnFlops {
+            img: info.img as f64,
+            in_ch: info.in_ch as f64,
+            widths: info.widths.iter().map(|&w| w as f64).collect(),
+            n_classes: info.n_classes as f64,
+        }
+    }
+
     pub fn fwd(&self, n: usize) -> f64 {
         let nf = n as f64;
         let mut side = self.img;

@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use crate::error::Result;
 
 use crate::formats::csv::{CsvField, CsvWriter};
 

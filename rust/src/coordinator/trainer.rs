@@ -7,12 +7,12 @@
 //!   passes) and update (s, rho, nu); every step train at the live ratios.
 //! - **sb / ub / uniform**: full-batch forward for per-sample losses / UB
 //!   scores, select k rows, fwd+bwd the gathered sub-batch (static shape
-//!   `sub_batch` from the manifest) with the selector's loss weights.
+//!   `sub_batch` from the backend) with the selector's loss weights.
 //!
-//! FLOPs are charged to the two-ledger accountant per the paper's
-//! accounting (see flops.rs); evaluation runs on held-out data.
-
-use anyhow::{bail, Result};
+//! Execution goes through `&dyn Backend`, so the same loop drives the
+//! hermetic native path and the PJRT artifacts. FLOPs are charged to the
+//! two-ledger accountant per the paper's accounting (see flops.rs);
+//! evaluation runs on held-out data.
 
 use crate::config::{Method, TrainConfig};
 use crate::data::batch::{
@@ -20,9 +20,10 @@ use crate::data::batch::{
 };
 use crate::data::images::{generate_images, ImageDataset, ImageSpec};
 use crate::data::tasks::{find, generate_cls, ClsDataset, MarkovCorpus};
+use crate::error::{bail, Result};
 use crate::formats::params::ParamSet;
 use crate::optim::{AdamW, LrSchedule, Optimizer, Sgdm};
-use crate::runtime::{Engine, GradOut, ModelSession};
+use crate::runtime::{Backend, GradOut, ModelKind, ModelSession};
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
 
@@ -39,7 +40,7 @@ const MLM_MASK_RATE: f64 = 0.15;
 enum TaskData {
     Cls { train: ClsDataset, eval: ClsDataset, sampler: EpochSampler },
     Mlm { corpus: MarkovCorpus },
-    Img { train: ImageDataset, eval: ImageDataset, sampler: EpochSampler, spec: ImageSpec },
+    Img { train: ImageDataset, eval: ImageDataset, sampler: EpochSampler },
 }
 
 pub struct Trainer<'a> {
@@ -61,43 +62,35 @@ pub struct Trainer<'a> {
 }
 
 impl<'a> Trainer<'a> {
-    pub fn new(engine: &'a Engine, cfg: &TrainConfig) -> Result<Trainer<'a>> {
-        let session = ModelSession::open(engine, &cfg.model)?;
+    pub fn new(backend: &'a dyn Backend, cfg: &TrainConfig) -> Result<Trainer<'a>> {
+        let session = ModelSession::open(backend, &cfg.model)?;
         let params = session.load_params()?;
-        let mm = session.manifest();
+        let info = session.info().clone();
         let mut rng = Pcg32::new(cfg.seed, 0x7EA1);
 
-        let (data, tf_flops, cnn_flops, main_batch) = if mm.kind == "cnn" {
-            let spec = ImageSpec::default();
+        let (data, tf_flops, cnn_flops, main_batch) = if info.kind == ModelKind::Cnn {
+            let spec = ImageSpec {
+                img: info.img,
+                channels: info.in_ch,
+                n_classes: info.n_classes,
+                ..ImageSpec::default()
+            };
             let train = generate_images(&spec, TRAIN_SET, cfg.seed ^ 0x11);
             let eval = generate_images(&spec, EVAL_SET, cfg.seed ^ 0x22);
             let sampler = EpochSampler::new(TRAIN_SET, rng.next_u64());
-            let widths: Vec<f64> = mm
-                .config
-                .get("widths")
-                .and_then(|w| w.as_arr().ok().map(|a| {
-                    a.iter().filter_map(|x| x.as_f64().ok()).collect()
-                }))
-                .unwrap_or_default();
-            let flops = CnnFlops {
-                img: mm.cfg_usize("img")? as f64,
-                in_ch: mm.cfg_usize("in_ch")? as f64,
-                widths,
-                n_classes: mm.cfg_usize("n_classes")? as f64,
-            };
             (
-                TaskData::Img { train, eval, sampler, spec },
+                TaskData::Img { train, eval, sampler },
                 None,
-                Some(flops),
-                engine.manifest.cnn_batch,
+                Some(CnnFlops::from_info(&info)),
+                backend.cnn_batch(),
             )
         } else if cfg.task == "mlm" {
             let corpus = MarkovCorpus::new(session.vocab, 0.4, cfg.seed ^ 0x33);
             (
                 TaskData::Mlm { corpus },
-                Some(TransformerFlops::from_manifest(mm)?),
+                Some(TransformerFlops::from_info(&info)),
                 None,
-                engine.manifest.main_batch,
+                backend.main_batch(),
             )
         } else {
             let Some(spec) = find(&cfg.task) else {
@@ -108,27 +101,27 @@ impl<'a> Trainer<'a> {
             let sampler = EpochSampler::new(TRAIN_SET, rng.next_u64());
             (
                 TaskData::Cls { train, eval, sampler },
-                Some(TransformerFlops::from_manifest(mm)?),
+                Some(TransformerFlops::from_info(&info)),
                 None,
-                engine.manifest.main_batch,
+                backend.main_batch(),
             )
         };
 
         let controller = if cfg.method == Method::Vcas {
-            let act_only = mm.kind == "cnn" || cfg.vcas.act_only;
+            let act_only = info.kind == ModelKind::Cnn || cfg.vcas.act_only;
             let mut vc = cfg.vcas.clone();
             vc.act_only = act_only;
             Some(VcasController::new(
                 vc,
                 session.n_layers,
-                mm.sampled_indices(),
+                info.sampled_indices(),
                 main_batch,
             ))
         } else {
             None
         };
 
-        let opt: Box<dyn Optimizer> = if cfg.optim.kind == "sgdm" || mm.kind == "cnn" {
+        let opt: Box<dyn Optimizer> = if cfg.optim.kind == "sgdm" || info.kind == ModelKind::Cnn {
             Box::new(Sgdm::new(&params, cfg.optim.momentum, cfg.optim.weight_decay))
         } else {
             Box::new(AdamW::new(
@@ -146,7 +139,7 @@ impl<'a> Trainer<'a> {
             cfg.steps,
         );
 
-        let sub_batch = engine.manifest.sub_batch;
+        let sub_batch = backend.sub_batch();
         Ok(Trainer {
             cfg: cfg.clone(),
             session,
@@ -250,18 +243,8 @@ impl<'a> Trainer<'a> {
 
     fn grad_img(&mut self, batch: &ImgBatch, rho: &[f32]) -> Result<GradOut> {
         let seed = self.next_seed();
-        let (img, ch) = self.img_dims();
-        let out = self
-            .session
-            .cnn_fwd_bwd(&self.params, batch, img, ch, seed, rho)?;
+        let out = self.session.cnn_fwd_bwd(&self.params, batch, seed, rho)?;
         Ok(GradOut { loss: out.loss, grads: out.grads, act_norms: out.act_norms, vw: vec![] })
-    }
-
-    fn img_dims(&self) -> (usize, usize) {
-        match &self.data {
-            TaskData::Img { spec, .. } => (spec.img, spec.channels),
-            _ => unreachable!(),
-        }
     }
 
     fn ones(&self) -> (Vec<f32>, Vec<f32>) {
@@ -499,15 +482,14 @@ impl<'a> Trainer<'a> {
                     acc: correct / weight.max(1.0),
                 })
             }
-            TaskData::Img { eval, spec, .. } => {
+            TaskData::Img { eval, .. } => {
                 let n = self.main_batch;
                 let batches = self.cfg.eval_batches.min(eval.n / n).max(1);
                 let (mut loss_sum, mut correct, mut total) = (0.0f64, 0.0f64, 0.0f64);
-                let (img, ch) = (spec.img, spec.channels);
                 for b in 0..batches {
                     let idx: Vec<usize> = (b * n..(b + 1) * n).collect();
                     let batch = gather_img(eval, &idx);
-                    let (ls, c) = self.session.cnn_eval(&self.params, &batch, img, ch)?;
+                    let (ls, c) = self.session.cnn_eval(&self.params, &batch)?;
                     loss_sum += ls as f64;
                     correct += c as f64;
                     total += n as f64;
@@ -697,7 +679,7 @@ impl<'a> Trainer<'a> {
     }
 
     /// Save a parameter checkpoint (raw .bin, loadable via set_params +
-    /// ParamSet::load_bin with the same manifest specs).
+    /// ParamSet::load_bin with the same param specs).
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         self.params.save_bin(path)
     }

@@ -367,4 +367,109 @@ mod tests {
         assert!(c.due(50));
         assert!(c.due(100));
     }
+
+    /// Eq. 5: s moves by exactly +/- alpha with the sign of
+    /// V_act - tau_act * V_s.
+    #[test]
+    fn eq5_s_moves_by_alpha_with_variance_sign() {
+        let cfg = VcasConfig::default();
+        let alpha = cfg.alpha;
+        // Case 1: zero extra variance, nonzero SGD variance -> s -= alpha.
+        let mut c = mk(cfg.clone(), 1, 1, 2);
+        c.s = 0.5;
+        let e0 = sample(vec![vec![1.0, 0.0]], vec![1.0, 1.0], vec![0.0]);
+        let e1 = sample(vec![vec![-1.0, 2.0]], vec![1.0, 1.0], vec![0.0]);
+        c.update(0, &[e0.clone(), e1.clone()], &[vec![e0.clone()], vec![e1.clone()]]);
+        assert!((c.s - (0.5 - alpha)).abs() < 1e-12, "s {}", c.s);
+        // Case 2: identical exact grads (V_s = 0), noisy sampled -> s += alpha.
+        let mut c = mk(cfg, 1, 1, 2);
+        c.s = 0.5;
+        let e = sample(vec![vec![1.0, 1.0]], vec![1.0, 1.0], vec![0.0]);
+        let noisy = sample(vec![vec![4.0, -2.0]], vec![1.0, 1.0], vec![0.0]);
+        c.update(0, &[e.clone(), e.clone()], &[vec![noisy.clone()], vec![noisy]]);
+        assert!((c.s - (0.5 + alpha)).abs() < 1e-12, "s {}", c.s);
+    }
+
+    /// Eq. 4: rho_l = max_{j<=l} p_j(s) — the keep ratio can only grow (or
+    /// hold) toward the top of the network, equivalently it is monotone
+    /// non-increasing walking *down* from the output.
+    #[test]
+    fn eq4_rho_running_max_semantics() {
+        let c = mk(VcasConfig::default(), 3, 4, 4);
+        // layer 0 dense (uniform norms -> large p), layers 1/2 sparse
+        let norms = vec![
+            1.0, 1.0, 1.0, 1.0, // layer 0: p(0.9) = 1.0
+            10.0, 0.1, 0.1, 0.1, // layer 1: one dominant row -> small p
+            10.0, 0.1, 0.1, 0.1, // layer 2
+        ];
+        let exact = vec![sample(vec![vec![0.0]], norms, vec![0.0; 4])];
+        let rho = c.rho_for_s(0.9, &exact);
+        // running max: the dense bottom layer pins every layer above it
+        assert!((rho[0] - 1.0).abs() < 1e-6, "{rho:?}");
+        assert!(rho[1] >= rho[0] && rho[2] >= rho[1], "{rho:?}");
+        // and with the dense layer on top instead, lower layers keep less
+        let norms_rev = vec![
+            10.0, 0.1, 0.1, 0.1,
+            10.0, 0.1, 0.1, 0.1,
+            1.0, 1.0, 1.0, 1.0,
+        ];
+        let exact = vec![sample(vec![vec![0.0]], norms_rev, vec![0.0; 4])];
+        let rho = c.rho_for_s(0.9, &exact);
+        assert!(rho[0] < 1.0, "sparse bottom layer should keep < 1: {rho:?}");
+        assert!((rho[2] - 1.0).abs() < 1e-6, "{rho:?}");
+        for w in rho.windows(2) {
+            assert!(w[1] >= w[0]);
+        }
+    }
+
+    /// Eq. 7: each nu entry moves *multiplicatively* by beta^{+/-1},
+    /// judged against its own tensor's variance budget.
+    #[test]
+    fn eq7_nu_updates_per_tensor_and_multiplicative() {
+        let cfg = VcasConfig::default();
+        let beta = cfg.beta;
+        // two sampled linears mapping to param tensors 0 and 1
+        let mut c = mk(cfg, 1, 2, 2);
+        c.nu = vec![0.5, 0.5];
+        // exact grads: tensor 0 has huge SGD variance (large budget),
+        // tensor 1 has zero SGD variance (zero budget)
+        let e0 = sample(vec![vec![10.0], vec![1.0]], vec![1.0, 1.0], vec![0.0, 0.0]);
+        let e1 = sample(vec![vec![-10.0], vec![1.0]], vec![1.0, 1.0], vec![0.0, 0.0]);
+        // sampled passes report mid-size vw for both linears
+        let s = sample(vec![vec![0.0], vec![0.0]], vec![1.0, 1.0], vec![0.5, 0.5]);
+        c.update(0, &[e0, e1], &[vec![s.clone()], vec![s]]);
+        // linear 0: vw 0.5 << tau_w * 200 -> headroom -> nu *= beta
+        assert!((c.nu[0] as f64 - 0.5 * beta).abs() < 1e-6, "nu {:?}", c.nu);
+        // linear 1: vw 0.5 >= tau_w * 0 -> over budget -> nu /= beta
+        assert!((c.nu[1] as f64 - 0.5 / beta).abs() < 1e-6, "nu {:?}", c.nu);
+    }
+
+    /// All ratios stay clamped: s in (0, 1], rho in (0, 1], nu in
+    /// [nu_min, 1] — even under pathological probes.
+    #[test]
+    fn ratios_clamped_under_extreme_probes() {
+        let cfg = VcasConfig { alpha: 0.5, beta: 0.1, ..Default::default() };
+        let mut c = mk(cfg.clone(), 2, 2, 2);
+        // repeatedly push everything down
+        for step in 0..8 {
+            let e0 = sample(vec![vec![5.0, -5.0]], vec![1.0, 1.0, 1.0, 1.0], vec![0.0, 0.0]);
+            let e1 = sample(vec![vec![-5.0, 5.0]], vec![1.0, 1.0, 1.0, 1.0], vec![0.0, 0.0]);
+            c.update(step, &[e0.clone(), e1.clone()], &[vec![e0], vec![e1]]);
+        }
+        assert!(c.s >= cfg.alpha && c.s <= 1.0, "s {}", c.s);
+        assert!(c.rho.iter().all(|&r| r > 0.0 && r <= 1.0), "{:?}", c.rho);
+        assert!(
+            c.nu.iter().all(|&v| v >= cfg.nu_min as f32 && v <= 1.0),
+            "{:?}",
+            c.nu
+        );
+        // now push everything up: identical exact grads, huge vw
+        for step in 0..8 {
+            let e = sample(vec![vec![1.0, 1.0]], vec![1.0, 1.0, 1.0, 1.0], vec![0.0, 0.0]);
+            let noisy = sample(vec![vec![9.0, -9.0]], vec![1.0, 1.0, 1.0, 1.0], vec![99.0, 99.0]);
+            c.update(step, &[e.clone(), e.clone()], &[vec![noisy.clone()], vec![noisy]]);
+        }
+        assert!(c.s <= 1.0 && c.s > 0.0, "s {}", c.s);
+        assert!(c.nu.iter().all(|&v| v <= 1.0), "{:?}", c.nu);
+    }
 }

@@ -1,0 +1,159 @@
+//! Minimal error substrate (the `anyhow` crate is not in the offline
+//! vendor set, and the hermetic build carries zero dependencies).
+//!
+//! API mirrors the `anyhow` subset this crate uses — `anyhow!`, `bail!`,
+//! `ensure!`, `Result<T>`, and a `Context` extension trait — so call sites
+//! read identically. Errors are flattened to a message string with
+//! `": "`-joined context layers, which is all the coordinator ever needs.
+
+use std::fmt;
+
+/// A flattened, context-prefixed error message.
+#[derive(Clone)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+
+    /// Prefix a context layer: `ctx: cause`.
+    pub fn wrap(self, ctx: impl fmt::Display) -> Error {
+        Error(format!("{ctx}: {}", self.0))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+// Note: `Error` deliberately does NOT implement `std::error::Error`, which
+// is what makes this blanket conversion coherent (same trick as anyhow).
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Context extension for `Result` and `Option`, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| e.into().wrap(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().wrap(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::error::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::error::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+// Re-export the macros under `crate::error::` so call sites can import the
+// whole surface from one path.
+pub use crate::{anyhow, bail, ensure};
+
+#[cfg(test)]
+mod tests {
+    use super::{Context, Error, Result};
+
+    fn fails() -> Result<()> {
+        bail!("base {}", 7)
+    }
+
+    fn ensures(x: usize) -> Result<usize> {
+        ensure!(x > 1);
+        ensure!(x < 10, "x too big: {x}");
+        Ok(x)
+    }
+
+    #[test]
+    fn macros_format_messages() {
+        let e = anyhow!("got {} of {}", 1, 2);
+        assert_eq!(e.to_string(), "got 1 of 2");
+        assert_eq!(fails().unwrap_err().to_string(), "base 7");
+    }
+
+    #[test]
+    fn ensure_both_arities() {
+        assert_eq!(ensures(5).unwrap(), 5);
+        assert!(ensures(0).unwrap_err().to_string().contains("x > 1"));
+        assert_eq!(ensures(11).unwrap_err().to_string(), "x too big: 11");
+    }
+
+    #[test]
+    fn context_wraps_and_option_converts() {
+        let r: Result<()> = fails().context("outer");
+        assert_eq!(r.unwrap_err().to_string(), "outer: base 7");
+        let o: Option<u8> = None;
+        let r = o.with_context(|| format!("missing {}", "key"));
+        assert_eq!(r.unwrap_err().to_string(), "missing key");
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let r: Result<i32> = "nope".parse::<i32>().map_err(Error::from);
+        assert!(r.is_err());
+        fn via_question_mark() -> Result<i32> {
+            let v: i32 = "12".parse()?;
+            Ok(v)
+        }
+        assert_eq!(via_question_mark().unwrap(), 12);
+    }
+}

@@ -5,7 +5,7 @@ use std::fs;
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 pub struct CsvWriter {
     w: BufWriter<fs::File>,

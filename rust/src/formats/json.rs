@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
-use anyhow::{anyhow, bail, Result};
+use crate::error::{anyhow, bail, Result};
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {

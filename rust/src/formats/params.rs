@@ -8,7 +8,7 @@ use std::fs;
 use std::io::Write as _;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use crate::error::{bail, Context, Result};
 
 /// A named, shaped, host-resident f32 tensor.
 #[derive(Clone, Debug)]

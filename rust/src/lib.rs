@@ -3,29 +3,44 @@
 //! A three-layer reproduction of *"Efficient Backpropagation with
 //! Variance-Controlled Adaptive Sampling"* (Wang, Chen, Zhu — ICLR 2024):
 //!
-//! - **L1/L2 (build time)**: JAX + Pallas graphs under `python/compile/`,
-//!   AOT-lowered to HLO text artifacts (`make artifacts`).
-//! - **L3 (this crate)**: the training coordinator — PJRT runtime,
+//! - **L1/L2 (build time, optional)**: JAX + Pallas graphs under
+//!   `python/compile/`, AOT-lowered to HLO text artifacts (`make artifacts`).
+//! - **L3 (this crate)**: the training coordinator — execution backends,
 //!   the paper's Alg. 1 variance controller, the SB/UB baselines, data
 //!   pipeline, optimizers, FLOPs accounting, metrics and bench harness.
 //!
-//! Quick start (after `make artifacts`):
+//! Execution goes through the [`runtime::Backend`] trait:
+//!
+//! - [`runtime::NativeBackend`] — a pure-Rust, dependency-free,
+//!   `Send + Sync` forward/backward of the tiny transformer and CNN paths,
+//!   including the VCAS activation (Eq. 4) and weight (Eq. 3/7) samplers.
+//!   Always available; the hermetic test suite runs entirely on it.
+//! - `runtime::XlaBackend` (feature `xla`) — the PJRT engine over the AOT
+//!   HLO artifacts, used when `artifacts/manifest.json` exists.
+//!
+//! Quick start (no artifacts needed):
 //! ```no_run
 //! use vcas::config::TrainConfig;
 //! use vcas::coordinator::Trainer;
-//! use vcas::runtime::Engine;
+//! use vcas::runtime::NativeBackend;
 //!
-//! let engine = Engine::load(std::path::Path::new("artifacts")).unwrap();
+//! let backend = NativeBackend::with_default_models();
 //! let cfg = TrainConfig::default(); // VCAS on sst2-sim, paper defaults
-//! let result = Trainer::new(&engine, &cfg).unwrap().run().unwrap();
+//! let result = Trainer::new(&backend, &cfg).unwrap().run().unwrap();
 //! println!("final loss {:.4}, FLOPs saved {:.1}%",
 //!          result.final_train_loss, result.flops_reduction * 100.0);
 //! ```
+
+// The native backend's kernels are written as explicit index loops so they
+// read like the math (and so the zero-row skips are visible); the iterator
+// rewrites this lint suggests obscure both.
+#![allow(clippy::needless_range_loop)]
 
 pub mod cli;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod error;
 pub mod formats;
 pub mod optim;
 pub mod runtime;

@@ -1,21 +1,22 @@
-//! `vcas` CLI — train/eval/inspect against the AOT artifacts.
+//! `vcas` CLI — train/eval/inspect through the best available backend.
 //!
 //! Subcommands:
 //!   train [config.toml] [--model M --task T --method ... --steps N ...]
-//!   info                      print manifest contents
+//!   info                      print backend + model registry
 //!   tasks                     list the synthetic task registry
 //!
-//! Run `make artifacts` first; the binary is self-contained afterwards.
+//! With `artifacts/manifest.json` present (and the `xla` feature built in)
+//! the PJRT backend runs the AOT graphs; otherwise the pure-Rust native
+//! backend serves its in-repo model zoo — no artifacts required.
 
 use std::path::{Path, PathBuf};
-
-use anyhow::Result;
 
 use vcas::cli::Args;
 use vcas::config::{Method, TrainConfig};
 use vcas::coordinator::Trainer;
 use vcas::data::tasks;
-use vcas::runtime::Engine;
+use vcas::error::Result;
+use vcas::runtime::{default_backend, Backend};
 
 fn main() {
     if let Err(e) = run() {
@@ -27,7 +28,7 @@ fn main() {
 fn parse_args() -> Result<Args> {
     Args::builder()
         .flag("artifacts", "artifact directory (default: artifacts)")
-        .flag("model", "model name from the manifest (tiny|small|cnn)")
+        .flag("model", "model name from the backend registry (tiny|small|cnn)")
         .flag("task", "task name (sst2-sim|mnli-sim|qqp-sim|qnli-sim|vision-sim|mlm)")
         .flag("method", "exact|vcas|sb|ub|uniform")
         .flag("steps", "training steps")
@@ -66,14 +67,23 @@ fn run() -> Result<()> {
 }
 
 fn cmd_info(artifacts: &Path) -> Result<()> {
-    let engine = Engine::load(artifacts)?;
-    println!("platform: {}", engine.platform());
-    for (name, m) in &engine.manifest.models {
-        println!("model {name} ({})", m.kind);
-        println!("  params: {} tensors", m.param_specs.len());
-        for (ename, e) in &m.entries {
-            println!("  entry {ename} (batch {})", e.batch);
-        }
+    let backend = default_backend(artifacts);
+    println!("backend: {}", backend.name());
+    println!(
+        "batches: main={} sub={} cnn={}",
+        backend.main_batch(),
+        backend.sub_batch(),
+        backend.cnn_batch()
+    );
+    for name in backend.models() {
+        let info = backend.info(&name)?;
+        println!("model {name} ({:?})", info.kind);
+        println!(
+            "  params: {} tensors ({} elems), sampled linears: {}",
+            info.n_params(),
+            info.total_elems(),
+            info.n_sampled()
+        );
     }
     Ok(())
 }
@@ -107,16 +117,16 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     cfg.vcas.freq = args.flag_usize("freq", cfg.vcas.freq)?;
     cfg.optim.lr = args.flag_f64("lr", cfg.optim.lr)?;
 
-    let engine = Engine::load(artifacts)?;
+    let backend = default_backend(artifacts);
     println!(
-        "training {} on {} with {} for {} steps (platform {})",
+        "training {} on {} with {} for {} steps (backend {})",
         cfg.model,
         cfg.task,
         cfg.method.name(),
         cfg.steps,
-        engine.platform()
+        backend.name()
     );
-    let mut trainer = Trainer::new(&engine, &cfg)?;
+    let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
     let result = trainer.run()?;
 
     if !args.switch("quiet") {

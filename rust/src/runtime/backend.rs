@@ -1,0 +1,190 @@
+//! The execution-backend abstraction.
+//!
+//! Every way of computing the instrumented forward/backward — the pure-Rust
+//! [`NativeBackend`](super::NativeBackend) or the PJRT engine over AOT
+//! artifacts (`XlaBackend`, feature `xla`) — implements [`Backend`]. The
+//! coordinator (trainer, baselines, benches, CLI) only ever sees the trait,
+//! so the whole training loop, Alg. 1 controller probes and checkpointing
+//! run identically with or without artifacts.
+//!
+//! Semantics shared by all implementations:
+//! - ratios of exactly 1.0 make every sampler a no-op, so the same entry
+//!   serves exact training, VCAS training and the Alg. 1 probe passes;
+//! - `act_norms` is the (n_layers, N) row-major matrix of per-sample
+//!   activation-gradient norms *before* each SampleA site;
+//! - `vw` is the analytic Eq. 3 weight-gradient variance per sampled
+//!   linear, evaluated at `nu_probe`.
+
+use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
+use crate::error::Result;
+use crate::formats::params::ParamSet;
+
+/// Output of a transformer grad entry.
+#[derive(Clone, Debug)]
+pub struct GradOut {
+    pub loss: f32,
+    /// Per-tensor flattened gradients, param-spec order.
+    pub grads: Vec<Vec<f32>>,
+    /// Per-layer per-sample activation-gradient norms, shape (L, N) flat.
+    pub act_norms: Vec<f32>,
+    /// Analytic Eq. 3 weight variance per sampled linear at nu_probe.
+    pub vw: Vec<f32>,
+}
+
+/// Output of the CNN grad entry (activation-only VCAS: no vw).
+#[derive(Clone, Debug)]
+pub struct CnnGradOut {
+    pub loss: f32,
+    pub grads: Vec<Vec<f32>>,
+    pub act_norms: Vec<f32>,
+}
+
+/// What a model computes with.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Transformer,
+    Cnn,
+}
+
+/// Structural description of one model, backend-independent.
+///
+/// For transformers `n_layers` counts encoder blocks; for CNNs it counts
+/// SampleA sites (one per conv stage), i.e. the length of the `rho` vector
+/// either way. CNN-only fields are zero/empty on transformers and vice
+/// versa.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    pub name: String,
+    pub kind: ModelKind,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub img: usize,
+    pub in_ch: usize,
+    pub widths: Vec<usize>,
+    /// (name, shape) in calling-convention order.
+    pub param_specs: Vec<(String, Vec<usize>)>,
+    /// Weight tensors subject to SampleW, in nu-vector order.
+    pub sampled_linears: Vec<String>,
+}
+
+impl ModelInfo {
+    pub fn n_params(&self) -> usize {
+        self.param_specs.len()
+    }
+
+    pub fn n_sampled(&self) -> usize {
+        self.sampled_linears.len()
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.param_specs
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Indices (into param order) of the SampleW'd weights, nu-vector order.
+    pub fn sampled_indices(&self) -> Vec<usize> {
+        self.sampled_linears
+            .iter()
+            .map(|n| {
+                self.param_specs
+                    .iter()
+                    .position(|(pn, _)| pn == n)
+                    .expect("sampled linear not in params")
+            })
+            .collect()
+    }
+}
+
+/// An execution backend: typed entry points over one set of models.
+///
+/// Implementations are free to restrict batch shapes (the AOT path only has
+/// executables for the manifest batch sizes); the native path accepts any.
+#[allow(clippy::too_many_arguments)]
+pub trait Backend {
+    /// Short human-readable identifier ("native", "xla").
+    fn name(&self) -> &'static str;
+
+    /// Full batch size every method sees (transformer tasks).
+    fn main_batch(&self) -> usize;
+
+    /// Sub-batch size the SB/UB/uniform baselines backprop.
+    fn sub_batch(&self) -> usize;
+
+    /// Batch size of the CNN path.
+    fn cnn_batch(&self) -> usize;
+
+    /// Registered model names.
+    fn models(&self) -> Vec<String>;
+
+    /// Structural description of a model.
+    fn info(&self, model: &str) -> Result<ModelInfo>;
+
+    /// The model's initial parameters (deterministic per backend).
+    fn init_params(&self, model: &str) -> Result<ParamSet>;
+
+    /// Transformer classification grad step. `sw`: per-sample loss weights
+    /// (1/N for plain mean). `rho` has n_layers entries, `nu_*` n_sampled
+    /// entries; ratios of 1.0 make the step bitwise exact.
+    fn fwd_bwd_cls(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+    ) -> Result<GradOut>;
+
+    /// Transformer masked-LM grad step.
+    fn fwd_bwd_mlm(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+    ) -> Result<GradOut>;
+
+    /// Per-sample losses + UB importance scores (baseline selection pass).
+    fn fwd_loss_cls(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+    ) -> Result<(Vec<f32>, Vec<f32>)>;
+
+    /// Eval: returns (loss_sum, correct_count).
+    fn eval_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)>;
+
+    /// MLM eval: returns (weighted_loss_sum, weighted_correct, weight_sum).
+    fn eval_mlm(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+    ) -> Result<(f32, f32, f32)>;
+
+    /// CNN grad step (activation-only VCAS; rho has n_sites entries).
+    fn cnn_fwd_bwd(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        rho: &[f32],
+    ) -> Result<CnnGradOut>;
+
+    /// CNN eval: (loss_sum, correct).
+    fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)>;
+}

@@ -9,8 +9,7 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{anyhow, Context, Result};
 use crate::formats::params::ParamSet;
 
 use super::manifest::{Manifest, ModelManifest};
@@ -105,7 +104,7 @@ impl Engine {
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
+fn to_anyhow(e: xla::Error) -> crate::error::Error {
     anyhow!("{e}")
 }
 

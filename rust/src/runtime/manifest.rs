@@ -4,9 +4,10 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::error::{anyhow, Context, Result};
 use crate::formats::json::Json;
+
+use super::backend::{ModelInfo, ModelKind};
 
 #[derive(Clone, Debug)]
 pub struct EntrySpec {
@@ -58,6 +59,51 @@ impl ModelManifest {
                     .expect("sampled linear not in params")
             })
             .collect()
+    }
+
+    /// Backend-independent structural description (the `Backend::info`
+    /// payload for the XLA path). Keys the kind requires are mandatory —
+    /// a truncated manifest fails loudly here rather than propagating
+    /// zero dims into the FLOPs model or a native mirror.
+    pub fn to_info(&self) -> Result<ModelInfo> {
+        let mut info = ModelInfo {
+            name: self.name.clone(),
+            kind: ModelKind::Transformer,
+            vocab: 0,
+            d_model: 0,
+            n_heads: 0,
+            d_ff: 0,
+            n_layers: 0,
+            seq_len: 0,
+            n_classes: self.cfg_usize("n_classes")?,
+            img: 0,
+            in_ch: 0,
+            widths: Vec::new(),
+            param_specs: self.param_specs.clone(),
+            sampled_linears: self.sampled_linears.clone(),
+        };
+        if self.kind == "transformer" {
+            info.n_layers = self.cfg_usize("n_layers")?;
+            info.vocab = self.cfg_usize("vocab")?;
+            info.d_model = self.cfg_usize("d_model")?;
+            info.n_heads = self.cfg_usize("n_heads")?;
+            info.d_ff = self.cfg_usize("d_ff")?;
+            info.seq_len = self.cfg_usize("seq_len")?;
+        } else {
+            info.kind = ModelKind::Cnn;
+            info.n_layers = self.cfg_usize("n_sites")?;
+            info.img = self.cfg_usize("img")?;
+            info.in_ch = self.cfg_usize("in_ch")?;
+            info.widths = self
+                .config
+                .get("widths")
+                .ok_or_else(|| anyhow!("model {}: missing config key \"widths\"", self.name))?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_usize())
+                .collect::<Result<Vec<_>>>()?;
+        }
+        Ok(info)
     }
 }
 

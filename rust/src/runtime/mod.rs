@@ -1,13 +1,51 @@
-//! PJRT runtime: artifact registry (manifest), executable cache and typed
-//! call wrappers for the AOT entries. Python never runs here — artifacts
-//! are loaded as HLO text and compiled once per process.
+//! Execution runtime: the [`Backend`] trait, the pure-Rust
+//! [`NativeBackend`], the artifact manifest, and (behind the `xla`
+//! feature) the PJRT engine + `XlaBackend`.
+//!
+//! The coordinator is written against `&dyn Backend`; use
+//! [`default_backend`] to get the best available implementation — XLA when
+//! the feature is on and artifacts exist, native otherwise.
 
-mod engine;
+mod backend;
 mod manifest;
 mod session;
 
+pub mod native;
+
+#[cfg(feature = "xla")]
+mod engine;
+#[cfg(feature = "xla")]
+mod xla;
+
+pub use backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
+pub use manifest::{EntrySpec, Manifest, ModelManifest};
+pub use native::{CnnCfg, NativeBackend, TransformerCfg};
+pub use session::ModelSession;
+
+#[cfg(feature = "xla")]
 pub use engine::{
     lit_f32, lit_i32, lit_scalar_i32, param_literals, scalar_f32, to_vec_f32, Engine,
 };
-pub use manifest::{EntrySpec, Manifest, ModelManifest};
-pub use session::{CnnGradOut, GradOut, ModelSession};
+#[cfg(feature = "xla")]
+pub use xla::XlaBackend;
+
+use std::path::Path;
+
+/// Best available backend: `XlaBackend` when built with the `xla` feature
+/// and `artifacts/manifest.json` exists (and loads), otherwise the
+/// hermetic [`NativeBackend`] with its default model zoo.
+pub fn default_backend(artifacts: &Path) -> Box<dyn Backend> {
+    #[cfg(feature = "xla")]
+    {
+        if artifacts.join("manifest.json").exists() {
+            match XlaBackend::load(artifacts) {
+                Ok(b) => return Box::new(b),
+                Err(e) => {
+                    eprintln!("warning: artifacts unusable ({e}); falling back to native backend")
+                }
+            }
+        }
+    }
+    let _ = artifacts;
+    Box::new(NativeBackend::with_default_models())
+}

@@ -1,0 +1,410 @@
+//! Pure-Rust CNN path (the Appendix C / Table 8 setting), mirroring
+//! `python/compile/cnn.py`: stages of [conv3x3 SAME, relu] x2 + maxpool2,
+//! a linear classifier head, and *activation-only* VCAS — SampleA between
+//! stage backwards, no SampleW (the paper's sampler is linear-specific).
+
+use crate::error::{ensure, Result};
+use crate::formats::params::{ParamSet, Tensor};
+use crate::runtime::backend::{CnnGradOut, ModelInfo, ModelKind};
+use crate::util::rng::Pcg32;
+
+use super::math::{
+    add_bias, argmax_row, ce_loss_and_dlogits, col_sums, matmul, matmul_nt, weighted_tn,
+};
+use super::sampling::sample_rows;
+
+/// Static architecture config of a native CNN.
+#[derive(Clone, Debug)]
+pub struct CnnCfg {
+    pub img: usize,
+    pub in_ch: usize,
+    /// Channel width per stage (2 convs each).
+    pub widths: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl CnnCfg {
+    /// SampleA sites: one per conv stage (see cnn.py for site semantics).
+    pub fn n_sites(&self) -> usize {
+        self.widths.len()
+    }
+
+    fn final_side(&self) -> usize {
+        self.img >> self.widths.len()
+    }
+
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let mut specs = Vec::new();
+        let mut cin = self.in_ch;
+        for (s, &w) in self.widths.iter().enumerate() {
+            specs.push((format!("st{s}.conv1_w"), vec![3, 3, cin, w]));
+            specs.push((format!("st{s}.conv1_b"), vec![w]));
+            specs.push((format!("st{s}.conv2_w"), vec![3, 3, w, w]));
+            specs.push((format!("st{s}.conv2_b"), vec![w]));
+            cin = w;
+        }
+        let side = self.final_side();
+        specs.push((
+            "fc_w".into(),
+            vec![side * side * self.widths[self.widths.len() - 1], self.n_classes],
+        ));
+        specs.push(("fc_b".into(), vec![self.n_classes]));
+        specs
+    }
+
+    pub fn info(&self, name: &str) -> ModelInfo {
+        ModelInfo {
+            name: name.to_string(),
+            kind: ModelKind::Cnn,
+            vocab: 0,
+            d_model: 0,
+            n_heads: 0,
+            d_ff: 0,
+            n_layers: self.n_sites(),
+            seq_len: 0,
+            n_classes: self.n_classes,
+            img: self.img,
+            in_ch: self.in_ch,
+            widths: self.widths.clone(),
+            param_specs: self.param_specs(),
+            sampled_linears: Vec::new(),
+        }
+    }
+
+    /// He init for conv/dense weights, zero biases (mirrors cnn.py).
+    pub fn init_params(&self, seed: u64) -> ParamSet {
+        let mut rng = Pcg32::new(seed, 0xC411);
+        let tensors = self
+            .param_specs()
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let data = if name.ends_with("_b") {
+                    vec![0.0f32; n]
+                } else {
+                    let fan_in: usize = shape[..shape.len() - 1].iter().product();
+                    let scale = (2.0 / fan_in as f64).sqrt();
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                };
+                Tensor { name, shape, data }
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    fn validate(&self, params: &ParamSet, batch_px: usize, n: usize) -> Result<()> {
+        ensure!(!self.widths.is_empty(), "cnn has no stages (empty widths)");
+        ensure!(params.tensors.len() == 4 * self.widths.len() + 2);
+        ensure!(n > 0, "empty batch");
+        let px = self.img * self.img * self.in_ch;
+        ensure!(
+            batch_px == n * px,
+            "image batch has {batch_px} values, expected {n} x {px}"
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Conv / pool primitives (NHWC activations, HWIO weights, SAME padding).
+// ---------------------------------------------------------------------------
+
+fn conv3x3_fwd(
+    x: &[f32],
+    n: usize,
+    side: usize,
+    cin: usize,
+    w: &[f32],
+    b: &[f32],
+    cout: usize,
+) -> Vec<f32> {
+    let mut y = vec![0.0f32; n * side * side * cout];
+    for ni in 0..n {
+        for oy in 0..side {
+            for ox in 0..side {
+                let yrow_base = ((ni * side + oy) * side + ox) * cout;
+                for ky in 0..3usize {
+                    let iy = (oy + ky).wrapping_sub(1);
+                    if iy >= side {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let ix = (ox + kx).wrapping_sub(1);
+                        if ix >= side {
+                            continue;
+                        }
+                        let xrow = &x[((ni * side + iy) * side + ix) * cin..][..cin];
+                        let wbase = (ky * 3 + kx) * cin * cout;
+                        for (ci, &xv) in xrow.iter().enumerate() {
+                            if xv == 0.0 {
+                                continue;
+                            }
+                            let wrow = &w[wbase + ci * cout..][..cout];
+                            let yrow = &mut y[yrow_base..yrow_base + cout];
+                            for (o, &wv) in yrow.iter_mut().zip(wrow) {
+                                *o += xv * wv;
+                            }
+                        }
+                    }
+                }
+                let yrow = &mut y[yrow_base..yrow_base + cout];
+                for (o, &bv) in yrow.iter_mut().zip(b) {
+                    *o += bv;
+                }
+            }
+        }
+    }
+    y
+}
+
+/// Backward of conv3x3 SAME: returns (dw, db, dx).
+fn conv3x3_bwd(
+    x: &[f32],
+    dy: &[f32],
+    n: usize,
+    side: usize,
+    cin: usize,
+    w: &[f32],
+    cout: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dw = vec![0.0f32; 9 * cin * cout];
+    let mut dx = vec![0.0f32; n * side * side * cin];
+    let db = col_sums(dy, cout);
+    for ni in 0..n {
+        for oy in 0..side {
+            for ox in 0..side {
+                let dyrow = &dy[((ni * side + oy) * side + ox) * cout..][..cout];
+                for ky in 0..3usize {
+                    let iy = (oy + ky).wrapping_sub(1);
+                    if iy >= side {
+                        continue;
+                    }
+                    for kx in 0..3usize {
+                        let ix = (ox + kx).wrapping_sub(1);
+                        if ix >= side {
+                            continue;
+                        }
+                        let xbase = ((ni * side + iy) * side + ix) * cin;
+                        let wbase = (ky * 3 + kx) * cin * cout;
+                        for ci in 0..cin {
+                            let xv = x[xbase + ci];
+                            let wrow = &w[wbase + ci * cout..][..cout];
+                            let dwrow = &mut dw[wbase + ci * cout..][..cout];
+                            let mut dxv = 0.0f32;
+                            for co in 0..cout {
+                                let dyv = dyrow[co];
+                                dwrow[co] += xv * dyv;
+                                dxv += dyv * wrow[co];
+                            }
+                            dx[xbase + ci] += dxv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (dw, db, dx)
+}
+
+fn relu_fwd(x: &mut [f32]) {
+    for v in x.iter_mut() {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+fn relu_bwd(post: &[f32], dy: &mut [f32]) {
+    for (d, &p) in dy.iter_mut().zip(post) {
+        if p <= 0.0 {
+            *d = 0.0;
+        }
+    }
+}
+
+/// 2x2 max-pool, stride 2. Returns (pooled, argmax flat input indices).
+fn pool2_fwd(x: &[f32], n: usize, side: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+    let half = side / 2;
+    let mut y = vec![0.0f32; n * half * half * c];
+    let mut idx = vec![0u32; n * half * half * c];
+    for ni in 0..n {
+        for oy in 0..half {
+            for ox in 0..half {
+                for ci in 0..c {
+                    let mut best = f32::NEG_INFINITY;
+                    let mut best_i = 0u32;
+                    for dy_ in 0..2usize {
+                        for dx_ in 0..2usize {
+                            let i = ((ni * side + 2 * oy + dy_) * side + 2 * ox + dx_) * c + ci;
+                            if x[i] > best {
+                                best = x[i];
+                                best_i = i as u32;
+                            }
+                        }
+                    }
+                    let o = ((ni * half + oy) * half + ox) * c + ci;
+                    y[o] = best;
+                    idx[o] = best_i;
+                }
+            }
+        }
+    }
+    (y, idx)
+}
+
+fn pool2_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; in_len];
+    for (&d, &i) in dy.iter().zip(idx) {
+        dx[i as usize] += d;
+    }
+    dx
+}
+
+struct StageSaved {
+    x_in: Vec<f32>,
+    r1: Vec<f32>,
+    r2: Vec<f32>,
+    pool_idx: Vec<u32>,
+    side: usize,
+    cin: usize,
+    cout: usize,
+}
+
+/// Forward through the conv stages. With `save` the per-stage activations
+/// are retained for the backward; eval passes `false` so each stage's
+/// buffers drop as the next stage is computed.
+fn stages_fwd(
+    cfg: &CnnCfg,
+    params: &ParamSet,
+    x: &[f32],
+    n: usize,
+    save: bool,
+) -> (Vec<StageSaved>, Vec<f32>) {
+    let mut h = x.to_vec();
+    let mut side = cfg.img;
+    let mut cin = cfg.in_ch;
+    let mut saved = Vec::with_capacity(cfg.widths.len());
+    for (s, &wch) in cfg.widths.iter().enumerate() {
+        let w1 = &params.tensors[4 * s].data;
+        let b1 = &params.tensors[4 * s + 1].data;
+        let w2 = &params.tensors[4 * s + 2].data;
+        let b2 = &params.tensors[4 * s + 3].data;
+        let mut r1 = conv3x3_fwd(&h, n, side, cin, w1, b1, wch);
+        relu_fwd(&mut r1);
+        let mut r2 = conv3x3_fwd(&r1, n, side, wch, w2, b2, wch);
+        relu_fwd(&mut r2);
+        let (pooled, pool_idx) = pool2_fwd(&r2, n, side, wch);
+        if save {
+            saved.push(StageSaved { x_in: h, r1, r2, pool_idx, side, cin, cout: wch });
+        }
+        h = pooled;
+        side /= 2;
+        cin = wch;
+    }
+    (saved, h)
+}
+
+fn rng_site(seed: i32, site: usize) -> Pcg32 {
+    Pcg32::new(seed as u32 as u64, 0xC000 + site as u64)
+}
+
+// ---------------------------------------------------------------------------
+// Entry points.
+// ---------------------------------------------------------------------------
+
+pub fn fwd_bwd(
+    cfg: &CnnCfg,
+    params: &ParamSet,
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    seed: i32,
+    rho: &[f32],
+) -> Result<CnnGradOut> {
+    cfg.validate(params, x.len(), n)?;
+    let n_sites = cfg.n_sites();
+    ensure!(rho.len() == n_sites, "rho has {} entries, want {n_sites}", rho.len());
+    ensure!(y.len() == n);
+    let c = cfg.n_classes;
+
+    let (saved, feat) = stages_fwd(cfg, params, x, n, true);
+    let df = feat.len() / n;
+    let fc_w = &params.tensors[4 * n_sites].data;
+    let fc_b = &params.tensors[4 * n_sites + 1].data;
+    let mut logits = matmul(&feat, fc_w, n, df, c);
+    add_bias(&mut logits, fc_b);
+    let (losses, dlogits) = ce_loss_and_dlogits(&logits, y, c);
+    let loss = losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
+
+    let mut grads: Vec<Vec<f32>> = cfg
+        .param_specs()
+        .iter()
+        .map(|(_, s)| vec![0.0f32; s.iter().product()])
+        .collect();
+    let mut act_norms = vec![0.0f32; n_sites * n];
+
+    // fc grads exact, then SampleA at site n_sites-1 on the feature grad
+    let inv_n = 1.0 / n as f32;
+    let g: Vec<f32> = dlogits.iter().map(|&v| v * inv_n).collect();
+    grads[4 * n_sites] = weighted_tn(&feat, &g, None, n, df, c);
+    grads[4 * n_sites + 1] = col_sums(&g, c);
+    let mut gfeat = matmul_nt(&g, fc_w, n, c, df);
+    let mut site_rng = rng_site(seed, n_sites - 1);
+    let norms = sample_rows(&mut gfeat, df, rho[n_sites - 1], &mut site_rng);
+    act_norms[(n_sites - 1) * n..n_sites * n].copy_from_slice(&norms);
+
+    let mut g = gfeat; // (n, side, side, c_last) flat
+    for s in (0..cfg.widths.len()).rev() {
+        let st = &saved[s];
+        // pool -> relu2 -> conv2 -> relu1 -> conv1
+        let mut dr2 = pool2_bwd(&g, &st.pool_idx, st.r2.len());
+        relu_bwd(&st.r2, &mut dr2);
+        let w2 = &params.tensors[4 * s + 2].data;
+        let (dw2, db2, mut dr1) = conv3x3_bwd(&st.r1, &dr2, n, st.side, st.cout, w2, st.cout);
+        relu_bwd(&st.r1, &mut dr1);
+        let w1 = &params.tensors[4 * s].data;
+        let (dw1, db1, mut dx) = conv3x3_bwd(&st.x_in, &dr1, n, st.side, st.cin, w1, st.cout);
+        grads[4 * s] = dw1;
+        grads[4 * s + 1] = db1;
+        grads[4 * s + 2] = dw2;
+        grads[4 * s + 3] = db2;
+        if s > 0 {
+            // site s-1: sample before stage s-1's backward
+            let cols = dx.len() / n;
+            let mut rng = rng_site(seed, s - 1);
+            let norms = sample_rows(&mut dx, cols, rho[s - 1], &mut rng);
+            act_norms[(s - 1) * n..s * n].copy_from_slice(&norms);
+        }
+        g = dx;
+    }
+
+    Ok(CnnGradOut { loss: loss as f32, grads, act_norms })
+}
+
+pub fn eval_step(
+    cfg: &CnnCfg,
+    params: &ParamSet,
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+) -> Result<(f32, f32)> {
+    cfg.validate(params, x.len(), n)?;
+    ensure!(y.len() == n);
+    let n_sites = cfg.n_sites();
+    let c = cfg.n_classes;
+    let (_saved, feat) = stages_fwd(cfg, params, x, n, false);
+    let df = feat.len() / n;
+    let fc_w = &params.tensors[4 * n_sites].data;
+    let fc_b = &params.tensors[4 * n_sites + 1].data;
+    let mut logits = matmul(&feat, fc_w, n, df, c);
+    add_bias(&mut logits, fc_b);
+    let (losses, _) = ce_loss_and_dlogits(&logits, y, c);
+    let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
+    let mut correct = 0u32;
+    for i in 0..n {
+        if argmax_row(&logits[i * c..(i + 1) * c]) == y[i] as usize {
+            correct += 1;
+        }
+    }
+    Ok((loss_sum as f32, correct as f32))
+}

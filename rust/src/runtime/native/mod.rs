@@ -1,0 +1,325 @@
+//! The native execution backend: pure-Rust, dependency-free, `Send + Sync`
+//! forward/backward for the transformer and CNN paths, with the VCAS
+//! samplers inlined exactly where Sec. 4 places them.
+//!
+//! Models are built from in-repo config (no artifacts, no Python): the
+//! default registry mirrors the AOT model zoo's names at CPU-friendly
+//! miniature dims, so the full trainer loop, Alg. 1 controller probes,
+//! baselines and checkpointing run hermetically — including under
+//! `cargo test` on a machine that has never seen `make artifacts`. A model
+//! matching an artifact manifest's exact dims can be registered with
+//! [`NativeBackend::add_from_info`] (the cross-backend agreement test does
+//! this).
+//!
+//! Being plain data, the backend is `Send + Sync` — the prerequisite for
+//! real multi-threaded data parallelism in `coordinator::parallel`, which
+//! the PJRT path cannot provide (its wrapper types are not `Send`).
+
+pub mod math;
+pub mod sampling;
+
+mod cnn;
+mod transformer;
+
+pub use cnn::CnnCfg;
+pub use transformer::TransformerCfg;
+
+use std::collections::BTreeMap;
+
+use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
+use crate::error::{anyhow, bail, ensure, Result};
+use crate::formats::params::ParamSet;
+
+use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
+
+#[derive(Clone, Debug)]
+enum NativeModel {
+    Transformer(TransformerCfg),
+    Cnn(CnnCfg),
+}
+
+/// Pure-Rust backend over a registry of in-memory model configs.
+#[derive(Clone, Debug)]
+pub struct NativeBackend {
+    models: BTreeMap<String, NativeModel>,
+    main_batch: usize,
+    sub_batch: usize,
+    cnn_batch: usize,
+}
+
+/// FNV-1a, used to derive a stable per-model init seed from its name.
+fn name_seed(name: &str) -> u64 {
+    name.bytes()
+        .fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+impl NativeBackend {
+    /// An empty registry with the given batch sizes.
+    pub fn new(main_batch: usize, sub_batch: usize, cnn_batch: usize) -> NativeBackend {
+        NativeBackend { models: BTreeMap::new(), main_batch, sub_batch, cnn_batch }
+    }
+
+    /// The default model zoo: miniature counterparts of the AOT models
+    /// ("tiny", "small", "cnn"), sized so full training runs are fast on a
+    /// single CPU core even in test builds.
+    pub fn with_default_models() -> NativeBackend {
+        let mut b = NativeBackend::new(16, 5, 16);
+        b.add_transformer(
+            "tiny",
+            TransformerCfg {
+                vocab: 256,
+                d_model: 32,
+                n_heads: 2,
+                d_ff: 64,
+                n_layers: 2,
+                seq_len: 16,
+                n_classes: 4,
+            },
+        );
+        b.add_transformer(
+            "small",
+            TransformerCfg {
+                vocab: 512,
+                d_model: 64,
+                n_heads: 4,
+                d_ff: 128,
+                n_layers: 3,
+                seq_len: 32,
+                n_classes: 4,
+            },
+        );
+        b.add_cnn(
+            "cnn",
+            CnnCfg { img: 8, in_ch: 3, widths: vec![8, 16], n_classes: 10 },
+        );
+        b
+    }
+
+    pub fn add_transformer(&mut self, name: &str, cfg: TransformerCfg) {
+        self.models.insert(name.to_string(), NativeModel::Transformer(cfg));
+    }
+
+    pub fn add_cnn(&mut self, name: &str, cfg: CnnCfg) {
+        self.models.insert(name.to_string(), NativeModel::Cnn(cfg));
+    }
+
+    /// Register a model with the exact dims another backend reports — used
+    /// to run the native path against artifact-matched shapes/params.
+    pub fn add_from_info(&mut self, info: &ModelInfo) -> Result<()> {
+        match info.kind {
+            ModelKind::Transformer => self.add_transformer(
+                &info.name,
+                TransformerCfg {
+                    vocab: info.vocab,
+                    d_model: info.d_model,
+                    n_heads: info.n_heads,
+                    d_ff: info.d_ff,
+                    n_layers: info.n_layers,
+                    seq_len: info.seq_len,
+                    n_classes: info.n_classes,
+                },
+            ),
+            ModelKind::Cnn => {
+                ensure!(
+                    !info.widths.is_empty(),
+                    "cnn model {:?} has no stages (empty widths)", info.name
+                );
+                self.add_cnn(
+                    &info.name,
+                    CnnCfg {
+                        img: info.img,
+                        in_ch: info.in_ch,
+                        widths: info.widths.clone(),
+                        n_classes: info.n_classes,
+                    },
+                )
+            }
+        }
+        Ok(())
+    }
+
+    fn model(&self, name: &str) -> Result<&NativeModel> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("native backend has no model {name:?}"))
+    }
+
+    fn transformer(&self, name: &str) -> Result<&TransformerCfg> {
+        match self.model(name)? {
+            NativeModel::Transformer(cfg) => Ok(cfg),
+            NativeModel::Cnn(_) => bail!("model {name:?} is a cnn, not a transformer"),
+        }
+    }
+
+    fn cnn(&self, name: &str) -> Result<&CnnCfg> {
+        match self.model(name)? {
+            NativeModel::Cnn(cfg) => Ok(cfg),
+            NativeModel::Transformer(_) => bail!("model {name:?} is a transformer, not a cnn"),
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn main_batch(&self) -> usize {
+        self.main_batch
+    }
+
+    fn sub_batch(&self) -> usize {
+        self.sub_batch
+    }
+
+    fn cnn_batch(&self) -> usize {
+        self.cnn_batch
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+
+    fn info(&self, model: &str) -> Result<ModelInfo> {
+        Ok(match self.model(model)? {
+            NativeModel::Transformer(cfg) => cfg.info(model),
+            NativeModel::Cnn(cfg) => cfg.info(model),
+        })
+    }
+
+    fn init_params(&self, model: &str) -> Result<ParamSet> {
+        let seed = 0x1234 ^ name_seed(model);
+        Ok(match self.model(model)? {
+            NativeModel::Transformer(cfg) => cfg.init_params(seed),
+            NativeModel::Cnn(cfg) => cfg.init_params(seed),
+        })
+    }
+
+    fn fwd_bwd_cls(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+    ) -> Result<GradOut> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_bwd_cls(
+            cfg, params, &batch.x, &batch.y, sw, batch.n, batch.seq_len, seed, rho, nu_apply,
+            nu_probe,
+        )
+    }
+
+    fn fwd_bwd_mlm(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+    ) -> Result<GradOut> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_bwd_mlm(
+            cfg, params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len, seed, rho,
+            nu_apply, nu_probe,
+        )
+    }
+
+    fn fwd_loss_cls(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_loss_cls(cfg, params, &batch.x, &batch.y, batch.n, batch.seq_len)
+    }
+
+    fn eval_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)> {
+        let cfg = self.transformer(model)?;
+        transformer::eval_cls(cfg, params, &batch.x, &batch.y, batch.n, batch.seq_len)
+    }
+
+    fn eval_mlm(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+    ) -> Result<(f32, f32, f32)> {
+        let cfg = self.transformer(model)?;
+        transformer::eval_mlm(
+            cfg, params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
+        )
+    }
+
+    fn cnn_fwd_bwd(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        rho: &[f32],
+    ) -> Result<CnnGradOut> {
+        let cfg = self.cnn(model)?;
+        cnn::fwd_bwd(cfg, params, &batch.x, &batch.y, batch.n, seed, rho)
+    }
+
+    fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {
+        let cfg = self.cnn(model)?;
+        cnn::eval_step(cfg, params, &batch.x, &batch.y, batch.n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn native_backend_is_send_sync() {
+        // The whole point of the native path: shareable across threads,
+        // unlike the PJRT wrapper types.
+        assert_send_sync::<NativeBackend>();
+    }
+
+    #[test]
+    fn default_registry_and_specs() {
+        let b = NativeBackend::with_default_models();
+        assert_eq!(b.models(), vec!["cnn".to_string(), "small".into(), "tiny".into()]);
+        let info = b.info("tiny").unwrap();
+        assert_eq!(info.kind, ModelKind::Transformer);
+        assert_eq!(info.n_sampled(), 4 * info.n_layers);
+        assert_eq!(info.sampled_indices().len(), info.n_sampled());
+        let params = b.init_params("tiny").unwrap();
+        assert_eq!(params.tensors.len(), info.n_params());
+        for (t, (name, shape)) in params.tensors.iter().zip(&info.param_specs) {
+            assert_eq!(&t.name, name);
+            assert_eq!(&t.shape, shape);
+        }
+        let cnn = b.info("cnn").unwrap();
+        assert_eq!(cnn.kind, ModelKind::Cnn);
+        assert_eq!(cnn.n_layers, 2); // one SampleA site per stage
+        assert!(cnn.sampled_linears.is_empty());
+    }
+
+    #[test]
+    fn init_params_deterministic_per_model() {
+        let b = NativeBackend::with_default_models();
+        let a1 = b.init_params("tiny").unwrap();
+        let a2 = b.init_params("tiny").unwrap();
+        let s = b.init_params("small").unwrap();
+        assert_eq!(a1.tensors[0].data, a2.tensors[0].data);
+        assert_ne!(a1.tensors[0].data, s.tensors[0].data);
+        // embedding non-degenerate
+        let rms = (crate::util::stats::norm_sq(&a1.tensors[0].data)
+            / a1.tensors[0].numel() as f64)
+            .sqrt();
+        assert!(rms > 1e-4 && rms < 1.0, "embed rms {rms}");
+    }
+}

@@ -1,0 +1,271 @@
+//! The VCAS samplers, pure Rust — exact ports of the kernel oracles in
+//! `python/compile/kernels/ref.py`.
+//!
+//! - [`keep_probs`]: paper Sec. 4.1 proportional-to-norm keep probabilities
+//!   with caps, solved exactly by water-filling over the sorted norms. At
+//!   ratio >= 1 every probability is exactly 1.0, so masks are exactly 1
+//!   and sampled passes are *bitwise* identical to exact passes.
+//! - [`bern_mask`]: the unbiased Bern(p)/p mask.
+//! - [`sample_rows`]: SampleA (Sec. 4.1) over the data dimension — records
+//!   pre-mask row norms (the controller's Eq. 4 input), then zeroes/scales
+//!   rows in place.
+//! - [`eq3_variance`]: the analytic SampleW variance (paper Eq. 3) at probe
+//!   keep probabilities, emitted per sampled linear for the Eq. 7 update.
+
+use crate::util::rng::Pcg32;
+
+/// Per-row L2 norm of a `(rows, cols)` matrix.
+pub fn row_norms(g: &[f32], cols: usize) -> Vec<f32> {
+    g.chunks(cols)
+        .map(|row| {
+            let s: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
+            s.sqrt() as f32
+        })
+        .collect()
+}
+
+/// Keep probabilities `p_i = min(1, c * n_i)` with `c` chosen so that
+/// `sum(p) = nnz * ratio` (water-filling with caps; see ref.py for the
+/// budget rationale — already-zero rows don't consume keep budget).
+pub fn keep_probs(norms: &[f32], ratio: f32) -> Vec<f32> {
+    let r = norms.len();
+    if r == 0 {
+        return Vec::new();
+    }
+    let nnz = norms.iter().filter(|&&x| x > 0.0).count() as f64;
+    let budget = nnz * ratio as f64;
+    let mut ns: Vec<f64> = norms.iter().map(|&x| x as f64).collect();
+    ns.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+    let total: f64 = ns.iter().sum();
+    // smallest k (number of capped rows) whose water level fits under the cap
+    let mut c_star = 0.0f64;
+    let mut found = false;
+    let mut tail = total; // sum of ns[k..]
+    for (k, &nk) in ns.iter().enumerate() {
+        let c = (budget - k as f64) / tail.max(1e-30);
+        if c * nk <= 1.0 + 1e-6 {
+            c_star = c;
+            found = true;
+            break;
+        }
+        tail -= nk;
+    }
+    // no fit -> everything capped at 1; degenerate ratio/total -> keep all
+    let all_one = !found || ratio >= 1.0 || total <= 0.0;
+    norms
+        .iter()
+        .map(|&x| {
+            let p = if all_one { 1.0 } else { (x as f64 * c_star).min(1.0) };
+            p.max(1e-12) as f32
+        })
+        .collect()
+}
+
+/// Unbiased mask Bern(p)/p; dropped rows are exactly 0, p = 1 rows exactly 1.
+pub fn bern_mask(rng: &mut Pcg32, p: &[f32]) -> Vec<f32> {
+    p.iter()
+        .map(|&pi| if rng.f32() < pi { 1.0 / pi } else { 0.0 })
+        .collect()
+}
+
+/// SampleA over the leading dimension of `g (rows, cols)` at keep ratio
+/// `rho`: returns the pre-mask row norms and applies the Bern(p)/p mask in
+/// place.
+pub fn sample_rows(g: &mut [f32], cols: usize, rho: f32, rng: &mut Pcg32) -> Vec<f32> {
+    let norms = row_norms(g, cols);
+    let p = keep_probs(&norms, rho);
+    let m = bern_mask(rng, &p);
+    for (row, &mi) in g.chunks_mut(cols).zip(&m) {
+        if mi == 0.0 {
+            row.fill(0.0);
+        } else if mi != 1.0 {
+            for v in row.iter_mut() {
+                *v *= mi;
+            }
+        }
+    }
+    norms
+}
+
+/// Analytic SampleW variance (paper Eq. 3):
+/// `sum_i (1-q_i)/q_i * ||g_i||^2 * ||z_i||^2` over rows.
+pub fn eq3_variance(g: &[f32], z: &[f32], q: &[f32], cg: usize, cz: usize) -> f32 {
+    let mut total = 0.0f64;
+    for (i, &qi) in q.iter().enumerate() {
+        let g2: f64 = g[i * cg..(i + 1) * cg]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum();
+        let z2: f64 = z[i * cz..(i + 1) * cz]
+            .iter()
+            .map(|&v| (v as f64) * (v as f64))
+            .sum();
+        total += (1.0 - qi as f64) / qi as f64 * g2 * z2;
+    }
+    total as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    #[test]
+    fn keep_probs_budget_and_caps_property() {
+        check("keep_probs sums to budget within caps", 128, |g: &mut Gen| {
+            let r = g.usize_in(1, 64);
+            let ratio = g.f32_in(0.05, 0.95);
+            let norms = g.vec_pos(r, 1.0);
+            let p = keep_probs(&norms, ratio);
+            ensure(p.iter().all(|&x| x > 0.0 && x <= 1.0), format!("p out of range {p:?}"))?;
+            let sum: f64 = p.iter().map(|&x| x as f64).sum();
+            let budget = r as f64 * ratio as f64;
+            // water-filling hits the budget exactly unless everything capped
+            let all_capped = p.iter().all(|&x| (x - 1.0).abs() < 1e-6);
+            if !all_capped {
+                ensure(
+                    (sum - budget).abs() < 1e-3 * r as f64,
+                    format!("sum {sum} vs budget {budget}"),
+                )?;
+            }
+            // proportionality: bigger norm never gets smaller p
+            for i in 0..r {
+                for j in 0..r {
+                    if norms[i] > norms[j] {
+                        ensure(p[i] >= p[j] - 1e-6, "p not monotone in norm")?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn keep_probs_unity_ratio_is_exactly_one() {
+        check("ratio 1 keeps everything with p = 1 exactly", 64, |g: &mut Gen| {
+            let r = g.usize_in(1, 32);
+            let mut norms = g.vec_pos(r, 1.0);
+            if g.bool() {
+                norms[0] = 0.0; // zero-norm rows must also get p = 1
+            }
+            let p = keep_probs(&norms, 1.0);
+            ensure(p.iter().all(|&x| x == 1.0), format!("{p:?}"))
+        });
+    }
+
+    #[test]
+    fn bern_mask_is_unbiased_property() {
+        check("E[mask] = 1 per row", 8, |g: &mut Gen| {
+            let r = g.usize_in(1, 8);
+            let p = keep_probs(&g.vec_pos(r, 1.0), g.f32_in(0.2, 0.9));
+            let mut rng = Pcg32::new(g.usize_in(0, 1 << 20) as u64, 0x3A5);
+            let trials = 20_000;
+            let mut acc = vec![0.0f64; r];
+            for _ in 0..trials {
+                let m = bern_mask(&mut rng, &p);
+                for (a, &x) in acc.iter_mut().zip(&m) {
+                    *a += x as f64;
+                }
+            }
+            for (i, a) in acc.iter().enumerate() {
+                let mean = a / trials as f64;
+                // 5-sigma band around the Bernoulli-mask standard error
+                let pi = p[i] as f64;
+                let tol = 5.0 * ((1.0 - pi) / (pi * trials as f64)).sqrt() + 0.01;
+                ensure(
+                    (mean - 1.0).abs() < tol,
+                    format!("row {i}: E[mask] {mean} (p {pi})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sample_rows_unbiased_and_norms_premask() {
+        // mean over many seeds of the masked matrix converges to the input
+        let rows = 12;
+        let cols = 5;
+        let mut gen = Gen::new(0xD00D);
+        let base = gen.vec_normal(rows * cols, 1.0);
+        let mut rng = Pcg32::new(9, 9);
+        let trials = 6000;
+        let mut acc = vec![0.0f64; rows * cols];
+        let mut norms0 = Vec::new();
+        for t in 0..trials {
+            let mut g = base.clone();
+            let norms = sample_rows(&mut g, cols, 0.45, &mut rng);
+            if t == 0 {
+                norms0 = norms;
+            }
+            for (a, &x) in acc.iter_mut().zip(&g) {
+                *a += x as f64;
+            }
+        }
+        // norms reported are pre-mask (match the clean matrix)
+        let clean = row_norms(&base, cols);
+        for (a, b) in clean.iter().zip(&norms0) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        let scale: f64 = base.iter().map(|&x| (x as f64).abs()).sum::<f64>() / base.len() as f64;
+        for (i, a) in acc.iter().enumerate() {
+            let mean = a / trials as f64;
+            assert!(
+                (mean - base[i] as f64).abs() < 0.15 * scale.max(1.0),
+                "elem {i}: mean {mean} vs {}",
+                base[i]
+            );
+        }
+    }
+
+    #[test]
+    fn eq3_variance_zero_at_unity_and_positive_below() {
+        let g = [1.0f32, 2.0, -1.0, 0.5];
+        let z = [0.3f32, 0.7, 1.1, -0.2];
+        let q1 = [1.0f32, 1.0];
+        assert_eq!(eq3_variance(&g, &z, &q1, 2, 2), 0.0);
+        let q = [0.5f32, 0.25];
+        let v = eq3_variance(&g, &z, &q, 2, 2);
+        assert!(v > 0.0);
+        // closed form check for row 0: (1-.5)/.5 * ||g0||^2 ||z0||^2
+        let g0 = 1.0f64 + 4.0;
+        let z0 = 0.09f64 + 0.49;
+        let g1 = 1.0f64 + 0.25;
+        let z1 = 1.21f64 + 0.04;
+        let want = g0 * z0 + 3.0 * g1 * z1;
+        assert!((v as f64 - want).abs() < 1e-4 * want);
+    }
+
+    #[test]
+    fn eq3_matches_empirical_weight_grad_variance() {
+        // Var of the sampled contraction a^T diag(m) b around a^T b should
+        // match Eq. 3 within Monte-Carlo tolerance.
+        use crate::runtime::native::math::weighted_tn;
+        use crate::util::stats::dist_sq;
+        let mut gen = Gen::new(42);
+        let (r, m, n) = (10, 3, 4);
+        let a = gen.vec_normal(r * m, 1.0);
+        let b = gen.vec_normal(r * n, 1.0);
+        let scores: Vec<f32> = row_norms(&a, m)
+            .iter()
+            .zip(&row_norms(&b, n))
+            .map(|(&x, &y)| x * y)
+            .collect();
+        let q = keep_probs(&scores, 0.5);
+        let exact = weighted_tn(&a, &b, None, r, m, n);
+        let mut rng = Pcg32::new(3, 3);
+        let trials = 8000;
+        let mut var = 0.0f64;
+        for _ in 0..trials {
+            let mask = bern_mask(&mut rng, &q);
+            let est = weighted_tn(&a, &b, Some(&mask), r, m, n);
+            var += dist_sq(&est, &exact);
+        }
+        var /= trials as f64;
+        let analytic = eq3_variance(&a, &b, &q, m, n) as f64;
+        assert!(
+            (var - analytic).abs() < 0.1 * analytic.max(1e-6),
+            "empirical {var} vs Eq.3 {analytic}"
+        );
+    }
+}

@@ -1,0 +1,804 @@
+//! Pure-Rust instrumented transformer: the same pre-LN encoder, heads and
+//! manual backward as `python/compile/model.py`, with SampleA at the top of
+//! every block's backward and SampleW at every linear's weight gradient.
+//!
+//! Parameter order, sampler placement, rng-stream layout per (layer,
+//! linear), `act_norms`/`vw` shapes and the exact-at-ratio-1 guarantee all
+//! mirror the AOT graphs, so the controller and trainer cannot tell the
+//! backends apart.
+
+use crate::error::{ensure, Result};
+use crate::formats::params::{ParamSet, Tensor};
+use crate::runtime::backend::{GradOut, ModelInfo, ModelKind};
+use crate::util::rng::Pcg32;
+
+use super::math::{
+    add, add_bias, argmax_row, ce_loss_and_dlogits, col_sums, gelu_bwd, gelu_fwd,
+    layernorm_bwd, layernorm_fwd, matmul, matmul_nt, softmax_rows, weighted_tn, LnStats,
+};
+use super::sampling::{bern_mask, eq3_variance, keep_probs, row_norms, sample_rows};
+
+/// Number of sampled linears per transformer block: qkv, attn-out, ff1, ff2.
+pub const LINEARS_PER_BLOCK: usize = 4;
+
+/// Parameters per block in the calling convention.
+const BLOCK_PARAMS: usize = 12;
+// Offsets within a block's parameter slice.
+const LN1_G: usize = 0;
+const LN1_B: usize = 1;
+const W_QKV: usize = 2;
+const B_QKV: usize = 3;
+const W_O: usize = 4;
+const B_O: usize = 5;
+const LN2_G: usize = 6;
+const LN2_B: usize = 7;
+const W_FF1: usize = 8;
+const B_FF1: usize = 9;
+const W_FF2: usize = 10;
+const B_FF2: usize = 11;
+
+/// Static architecture config of a native transformer.
+#[derive(Clone, Debug)]
+pub struct TransformerCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+}
+
+impl TransformerCfg {
+    pub fn n_sampled(&self) -> usize {
+        LINEARS_PER_BLOCK * self.n_layers
+    }
+
+    fn blk(&self, l: usize, off: usize) -> usize {
+        2 + BLOCK_PARAMS * l + off
+    }
+
+    fn tail(&self, off: usize) -> usize {
+        2 + BLOCK_PARAMS * self.n_layers + off
+    }
+
+    fn idx_ln_f_g(&self) -> usize {
+        self.tail(0)
+    }
+    fn idx_ln_f_b(&self) -> usize {
+        self.tail(1)
+    }
+    fn idx_head_w(&self) -> usize {
+        self.tail(2)
+    }
+    fn idx_head_b(&self) -> usize {
+        self.tail(3)
+    }
+    fn idx_mlm_b(&self) -> usize {
+        self.tail(4)
+    }
+
+    /// (name, shape) list — identical to model.py's `param_specs`.
+    pub fn param_specs(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, f, v, t, c) = (
+            self.d_model,
+            self.d_ff,
+            self.vocab,
+            self.seq_len,
+            self.n_classes,
+        );
+        let mut specs: Vec<(String, Vec<usize>)> =
+            vec![("embed".into(), vec![v, d]), ("pos".into(), vec![t, d])];
+        for l in 0..self.n_layers {
+            let p = |s: &str| format!("blk{l}.{s}");
+            specs.push((p("ln1_g"), vec![d]));
+            specs.push((p("ln1_b"), vec![d]));
+            specs.push((p("w_qkv"), vec![d, 3 * d]));
+            specs.push((p("b_qkv"), vec![3 * d]));
+            specs.push((p("w_o"), vec![d, d]));
+            specs.push((p("b_o"), vec![d]));
+            specs.push((p("ln2_g"), vec![d]));
+            specs.push((p("ln2_b"), vec![d]));
+            specs.push((p("w_ff1"), vec![d, f]));
+            specs.push((p("b_ff1"), vec![f]));
+            specs.push((p("w_ff2"), vec![f, d]));
+            specs.push((p("b_ff2"), vec![d]));
+        }
+        specs.push(("ln_f_g".into(), vec![d]));
+        specs.push(("ln_f_b".into(), vec![d]));
+        specs.push(("head_w".into(), vec![d, c]));
+        specs.push(("head_b".into(), vec![c]));
+        specs.push(("mlm_b".into(), vec![v]));
+        specs
+    }
+
+    /// Weight tensors subject to SampleW, nu-vector order.
+    pub fn sampled_linear_names(&self) -> Vec<String> {
+        let mut names = Vec::with_capacity(self.n_sampled());
+        for l in 0..self.n_layers {
+            for s in ["w_qkv", "w_o", "w_ff1", "w_ff2"] {
+                names.push(format!("blk{l}.{s}"));
+            }
+        }
+        names
+    }
+
+    pub fn info(&self, name: &str) -> ModelInfo {
+        ModelInfo {
+            name: name.to_string(),
+            kind: ModelKind::Transformer,
+            vocab: self.vocab,
+            d_model: self.d_model,
+            n_heads: self.n_heads,
+            d_ff: self.d_ff,
+            n_layers: self.n_layers,
+            seq_len: self.seq_len,
+            n_classes: self.n_classes,
+            img: 0,
+            in_ch: 0,
+            widths: Vec::new(),
+            param_specs: self.param_specs(),
+            sampled_linears: self.sampled_linear_names(),
+        }
+    }
+
+    /// Deterministic init mirroring model.py: zero biases, unit LN gains,
+    /// N(0, 0.02) embeddings, fan-in-scaled dense weights.
+    pub fn init_params(&self, seed: u64) -> ParamSet {
+        let mut rng = Pcg32::new(seed, 0x7171);
+        let tensors = self
+            .param_specs()
+            .into_iter()
+            .map(|(name, shape)| {
+                let n: usize = shape.iter().product();
+                let is_bias = name.ends_with("_b")
+                    || name.ends_with(".b_qkv")
+                    || name.ends_with(".b_o")
+                    || name.ends_with(".b_ff1")
+                    || name.ends_with(".b_ff2");
+                let data = if is_bias {
+                    vec![0.0f32; n]
+                } else if name.contains("ln") && name.ends_with("_g") {
+                    vec![1.0f32; n]
+                } else if name == "embed" || name == "pos" {
+                    (0..n).map(|_| (rng.normal() * 0.02) as f32).collect()
+                } else {
+                    let fan_in = shape[0] as f64;
+                    let scale = 1.0 / fan_in.sqrt();
+                    (0..n).map(|_| (rng.normal() * scale) as f32).collect()
+                };
+                Tensor { name, shape, data }
+            })
+            .collect();
+        ParamSet { tensors }
+    }
+
+    fn validate(&self, params: &ParamSet, n: usize, seq_len: usize, x_len: usize) -> Result<()> {
+        ensure!(
+            self.n_heads > 0 && self.d_model % self.n_heads == 0,
+            "d_model {} not divisible by n_heads {}", self.d_model, self.n_heads
+        );
+        ensure!(
+            params.tensors.len() == 2 + BLOCK_PARAMS * self.n_layers + 5,
+            "transformer param count {} != spec", params.tensors.len()
+        );
+        ensure!(n > 0, "empty batch");
+        ensure!(
+            seq_len == self.seq_len,
+            "batch seq_len {seq_len} != model seq_len {}", self.seq_len
+        );
+        ensure!(x_len == n * self.seq_len, "x has {x_len} tokens, want {n} x {}", self.seq_len);
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward with saved activations.
+// ---------------------------------------------------------------------------
+
+struct BlockSaved {
+    h_in: Vec<f32>,
+    ln1: LnStats,
+    a: Vec<f32>,
+    qkv: Vec<f32>,
+    probs: Vec<f32>,
+    attn: Vec<f32>,
+    h2: Vec<f32>,
+    ln2: LnStats,
+    b2: Vec<f32>,
+    u1: Vec<f32>,
+    f1: Vec<f32>,
+}
+
+struct Saved {
+    blocks: Vec<BlockSaved>,
+    /// Output of the last block (N*T, D).
+    h_final: Vec<f32>,
+}
+
+fn tdata(params: &ParamSet, idx: usize) -> &[f32] {
+    &params.tensors[idx].data
+}
+
+/// Bidirectional softmax attention forward; returns (ctx, probs).
+fn attention_fwd(qkv: &[f32], n: usize, t: usize, d: usize, heads: usize) -> (Vec<f32>, Vec<f32>) {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut ctx = vec![0.0f32; n * t * d];
+    let mut probs = vec![0.0f32; n * heads * t * t];
+    let mut q = vec![0.0f32; t * dh];
+    let mut k = vec![0.0f32; t * dh];
+    let mut v = vec![0.0f32; t * dh];
+    for ni in 0..n {
+        for hi in 0..heads {
+            for ti in 0..t {
+                let base = (ni * t + ti) * 3 * d + hi * dh;
+                q[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base..base + dh]);
+                k[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + d..base + d + dh]);
+                v[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
+            }
+            let mut scores = matmul_nt(&q, &k, t, dh, t);
+            for s in scores.iter_mut() {
+                *s *= scale;
+            }
+            softmax_rows(&mut scores, t);
+            let c = matmul(&scores, &v, t, t, dh);
+            let pbase = (ni * heads + hi) * t * t;
+            probs[pbase..pbase + t * t].copy_from_slice(&scores);
+            for ti in 0..t {
+                let out = &mut ctx[(ni * t + ti) * d + hi * dh..(ni * t + ti) * d + hi * dh + dh];
+                out.copy_from_slice(&c[ti * dh..(ti + 1) * dh]);
+            }
+        }
+    }
+    (ctx, probs)
+}
+
+/// Attention backward: gradient wrt qkv given gradient wrt ctx.
+fn attention_bwd(
+    qkv: &[f32],
+    probs: &[f32],
+    dctx: &[f32],
+    n: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+) -> Vec<f32> {
+    let dh = d / heads;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut dqkv = vec![0.0f32; n * t * 3 * d];
+    let mut q = vec![0.0f32; t * dh];
+    let mut k = vec![0.0f32; t * dh];
+    let mut v = vec![0.0f32; t * dh];
+    let mut dc = vec![0.0f32; t * dh];
+    for ni in 0..n {
+        for hi in 0..heads {
+            for ti in 0..t {
+                let base = (ni * t + ti) * 3 * d + hi * dh;
+                q[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base..base + dh]);
+                k[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + d..base + d + dh]);
+                v[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
+                let cb = (ni * t + ti) * d + hi * dh;
+                dc[ti * dh..(ti + 1) * dh].copy_from_slice(&dctx[cb..cb + dh]);
+            }
+            let p = &probs[(ni * heads + hi) * t * t..(ni * heads + hi + 1) * t * t];
+            // dv = probs^T @ dc ; dprobs = dc @ v^T
+            let dv = weighted_tn(p, &dc, None, t, t, dh);
+            let dprobs = matmul_nt(&dc, &v, t, dh, t);
+            // softmax backward per row
+            let mut dscores = vec![0.0f32; t * t];
+            for ti in 0..t {
+                let pr = &p[ti * t..(ti + 1) * t];
+                let dpr = &dprobs[ti * t..(ti + 1) * t];
+                let dot: f64 = pr.iter().zip(dpr).map(|(&a, &b)| (a * b) as f64).sum();
+                let ds = &mut dscores[ti * t..(ti + 1) * t];
+                for s in 0..t {
+                    ds[s] = pr[s] * (dpr[s] - dot as f32) * scale;
+                }
+            }
+            // dq = dscores @ k ; dk = dscores^T @ q
+            let dq = matmul(&dscores, &k, t, t, dh);
+            let dk = weighted_tn(&dscores, &q, None, t, t, dh);
+            for ti in 0..t {
+                let base = (ni * t + ti) * 3 * d + hi * dh;
+                dqkv[base..base + dh].copy_from_slice(&dq[ti * dh..(ti + 1) * dh]);
+                dqkv[base + d..base + d + dh].copy_from_slice(&dk[ti * dh..(ti + 1) * dh]);
+                dqkv[base + 2 * d..base + 2 * d + dh]
+                    .copy_from_slice(&dv[ti * dh..(ti + 1) * dh]);
+            }
+        }
+    }
+    dqkv
+}
+
+/// Forward through embedding + blocks. With `save` the per-block
+/// activations are retained for the instrumented backward; eval/loss-only
+/// entries pass `false` so each block's buffers drop as soon as the next
+/// block is computed.
+fn encode_fwd(cfg: &TransformerCfg, params: &ParamSet, x: &[i32], n: usize, save: bool) -> Saved {
+    let (t, d) = (cfg.seq_len, cfg.d_model);
+    let embed = tdata(params, 0);
+    let pos = tdata(params, 1);
+    let mut h = vec![0.0f32; n * t * d];
+    for i in 0..n {
+        for ti in 0..t {
+            let tok = x[i * t + ti] as usize;
+            let row = &mut h[(i * t + ti) * d..(i * t + ti + 1) * d];
+            for (j, r) in row.iter_mut().enumerate() {
+                *r = embed[tok * d + j] + pos[ti * d + j];
+            }
+        }
+    }
+    let mut blocks = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let h_in = h;
+        let (a, ln1) = layernorm_fwd(
+            &h_in,
+            tdata(params, cfg.blk(l, LN1_G)),
+            tdata(params, cfg.blk(l, LN1_B)),
+            d,
+        );
+        let mut qkv = matmul(&a, tdata(params, cfg.blk(l, W_QKV)), n * t, d, 3 * d);
+        add_bias(&mut qkv, tdata(params, cfg.blk(l, B_QKV)));
+        let (attn, probs) = attention_fwd(&qkv, n, t, d, cfg.n_heads);
+        let mut o = matmul(&attn, tdata(params, cfg.blk(l, W_O)), n * t, d, d);
+        add_bias(&mut o, tdata(params, cfg.blk(l, B_O)));
+        let h2 = add(&h_in, &o);
+        let (b2, ln2) = layernorm_fwd(
+            &h2,
+            tdata(params, cfg.blk(l, LN2_G)),
+            tdata(params, cfg.blk(l, LN2_B)),
+            d,
+        );
+        let mut u1 = matmul(&b2, tdata(params, cfg.blk(l, W_FF1)), n * t, d, cfg.d_ff);
+        add_bias(&mut u1, tdata(params, cfg.blk(l, B_FF1)));
+        let f1 = gelu_fwd(&u1);
+        let mut f2 = matmul(&f1, tdata(params, cfg.blk(l, W_FF2)), n * t, cfg.d_ff, d);
+        add_bias(&mut f2, tdata(params, cfg.blk(l, B_FF2)));
+        h = add(&h2, &f2);
+        if save {
+            blocks.push(BlockSaved { h_in, ln1, a, qkv, probs, attn, h2, ln2, b2, u1, f1 });
+        }
+    }
+    Saved { blocks, h_final: h }
+}
+
+// ---------------------------------------------------------------------------
+// Instrumented backward.
+// ---------------------------------------------------------------------------
+
+/// Backward of `y = z @ w + b` with SampleW on the weight gradient.
+/// Returns `(gw, gb, gz, vw_probe)` — see model.py's `linear_bwd_sampled`.
+#[allow(clippy::too_many_arguments)]
+fn linear_bwd_sampled(
+    w: &[f32],
+    din: usize,
+    dout: usize,
+    z2d: &[f32],
+    g2d: &[f32],
+    rows: usize,
+    nu_apply: f32,
+    nu_probe: f32,
+    rng: &mut Pcg32,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
+    let gn = row_norms(g2d, dout);
+    let zn = row_norms(z2d, din);
+    let scores: Vec<f32> = gn.iter().zip(&zn).map(|(&a, &b)| a * b).collect();
+    let q_apply = keep_probs(&scores, nu_apply);
+    let q_probe = keep_probs(&scores, nu_probe);
+    let wmask = bern_mask(rng, &q_apply);
+    let gw = weighted_tn(z2d, g2d, Some(&wmask), rows, din, dout);
+    let gb = col_sums(g2d, dout);
+    let gz = matmul_nt(g2d, w, rows, dout, din);
+    let vw = eq3_variance(g2d, z2d, &q_probe, dout, din);
+    (gw, gb, gz, vw)
+}
+
+fn rng_sample_a(seed: i32, layer: usize) -> Pcg32 {
+    Pcg32::new(seed as u32 as u64, 0xA000 + layer as u64)
+}
+
+fn rng_sample_w(seed: i32, layer: usize, linear: usize) -> Pcg32 {
+    Pcg32::new(seed as u32 as u64, 0xB000 + (LINEARS_PER_BLOCK * layer + linear) as u64)
+}
+
+/// Instrumented backward through the blocks. `g` is the gradient wrt the
+/// final hidden state (N*T, D). Fills block/embed/pos grads in `grads`;
+/// returns (act_norms (L, N) flat, vw (4L,)).
+#[allow(clippy::too_many_arguments)]
+fn encode_bwd(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    x: &[i32],
+    saved: &Saved,
+    mut g: Vec<f32>,
+    n: usize,
+    seed: i32,
+    rho: &[f32],
+    nu_apply: &[f32],
+    nu_probe: &[f32],
+    grads: &mut [Vec<f32>],
+) -> (Vec<f32>, Vec<f32>) {
+    let (t, d, f) = (cfg.seq_len, cfg.d_model, cfg.d_ff);
+    let mut act_norms = vec![0.0f32; cfg.n_layers * n];
+    let mut vw = vec![0.0f32; cfg.n_sampled()];
+
+    for l in (0..cfg.n_layers).rev() {
+        let s = &saved.blocks[l];
+        let mut ka = rng_sample_a(seed, l);
+
+        let norms = sample_rows(&mut g, t * d, rho[l], &mut ka);
+        act_norms[l * n..(l + 1) * n].copy_from_slice(&norms);
+
+        // --- FFN ---
+        let mut k3 = rng_sample_w(seed, l, 3);
+        let (gw2, gb2, gf1, v3) = linear_bwd_sampled(
+            tdata(params, cfg.blk(l, W_FF2)),
+            f,
+            d,
+            &s.f1,
+            &g,
+            n * t,
+            nu_apply[LINEARS_PER_BLOCK * l + 3],
+            nu_probe[LINEARS_PER_BLOCK * l + 3],
+            &mut k3,
+        );
+        grads[cfg.blk(l, W_FF2)] = gw2;
+        grads[cfg.blk(l, B_FF2)] = gb2;
+        vw[LINEARS_PER_BLOCK * l + 3] = v3;
+
+        let gu1 = gelu_bwd(&s.u1, &gf1);
+
+        let mut k2 = rng_sample_w(seed, l, 2);
+        let (gw1, gb1, gb2in, v2) = linear_bwd_sampled(
+            tdata(params, cfg.blk(l, W_FF1)),
+            d,
+            f,
+            &s.b2,
+            &gu1,
+            n * t,
+            nu_apply[LINEARS_PER_BLOCK * l + 2],
+            nu_probe[LINEARS_PER_BLOCK * l + 2],
+            &mut k2,
+        );
+        grads[cfg.blk(l, W_FF1)] = gw1;
+        grads[cfg.blk(l, B_FF1)] = gb1;
+        vw[LINEARS_PER_BLOCK * l + 2] = v2;
+
+        let (gh2_ln, gln2g, gln2b) = layernorm_bwd(
+            &s.h2,
+            tdata(params, cfg.blk(l, LN2_G)),
+            &s.ln2,
+            &gb2in,
+            d,
+        );
+        grads[cfg.blk(l, LN2_G)] = gln2g;
+        grads[cfg.blk(l, LN2_B)] = gln2b;
+        let gh2 = add(&g, &gh2_ln); // residual
+
+        // --- attention ---
+        let mut k1 = rng_sample_w(seed, l, 1);
+        let (gwo, gbo, gattn, v1) = linear_bwd_sampled(
+            tdata(params, cfg.blk(l, W_O)),
+            d,
+            d,
+            &s.attn,
+            &gh2,
+            n * t,
+            nu_apply[LINEARS_PER_BLOCK * l + 1],
+            nu_probe[LINEARS_PER_BLOCK * l + 1],
+            &mut k1,
+        );
+        grads[cfg.blk(l, W_O)] = gwo;
+        grads[cfg.blk(l, B_O)] = gbo;
+        vw[LINEARS_PER_BLOCK * l + 1] = v1;
+
+        let gqkv = attention_bwd(&s.qkv, &s.probs, &gattn, n, t, d, cfg.n_heads);
+
+        let mut k0 = rng_sample_w(seed, l, 0);
+        let (gwqkv, gbqkv, ga, v0) = linear_bwd_sampled(
+            tdata(params, cfg.blk(l, W_QKV)),
+            d,
+            3 * d,
+            &s.a,
+            &gqkv,
+            n * t,
+            nu_apply[LINEARS_PER_BLOCK * l],
+            nu_probe[LINEARS_PER_BLOCK * l],
+            &mut k0,
+        );
+        grads[cfg.blk(l, W_QKV)] = gwqkv;
+        grads[cfg.blk(l, B_QKV)] = gbqkv;
+        vw[LINEARS_PER_BLOCK * l] = v0;
+
+        let (gh_ln, gln1g, gln1b) = layernorm_bwd(
+            &s.h_in,
+            tdata(params, cfg.blk(l, LN1_G)),
+            &s.ln1,
+            &ga,
+            d,
+        );
+        grads[cfg.blk(l, LN1_G)] = gln1g;
+        grads[cfg.blk(l, LN1_B)] = gln1b;
+        g = add(&gh2, &gh_ln); // residual into block l-1
+    }
+
+    // --- embedding + positions ---
+    {
+        let gembed = &mut grads[0];
+        for i in 0..n {
+            for ti in 0..t {
+                let tok = x[i * t + ti] as usize;
+                let src = &g[(i * t + ti) * d..(i * t + ti + 1) * d];
+                let dst = &mut gembed[tok * d..(tok + 1) * d];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+    }
+    {
+        let gpos = &mut grads[1];
+        for i in 0..n {
+            for ti in 0..t {
+                let src = &g[(i * t + ti) * d..(i * t + ti + 1) * d];
+                let dst = &mut gpos[ti * d..(ti + 1) * d];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o += v;
+                }
+            }
+        }
+    }
+    (act_norms, vw)
+}
+
+fn zero_grads(cfg: &TransformerCfg) -> Vec<Vec<f32>> {
+    cfg.param_specs()
+        .iter()
+        .map(|(_, s)| vec![0.0f32; s.iter().product()])
+        .collect()
+}
+
+/// Classification head forward: final LN + mean-pool + linear.
+/// Returns (hf, ln stats, pooled (N,D), logits (N,C)).
+fn cls_head_fwd(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    hl: &[f32],
+    n: usize,
+) -> (Vec<f32>, LnStats, Vec<f32>, Vec<f32>) {
+    let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
+    let (hf, stats) = layernorm_fwd(
+        hl,
+        tdata(params, cfg.idx_ln_f_g()),
+        tdata(params, cfg.idx_ln_f_b()),
+        d,
+    );
+    let mut pooled = vec![0.0f32; n * d];
+    let inv_t = 1.0 / t as f32;
+    for i in 0..n {
+        let dst = &mut pooled[i * d..(i + 1) * d];
+        for ti in 0..t {
+            let src = &hf[(i * t + ti) * d..(i * t + ti + 1) * d];
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o += v;
+            }
+        }
+        for o in dst.iter_mut() {
+            *o *= inv_t;
+        }
+    }
+    let mut logits = matmul(&pooled, tdata(params, cfg.idx_head_w()), n, d, c);
+    add_bias(&mut logits, tdata(params, cfg.idx_head_b()));
+    (hf, stats, pooled, logits)
+}
+
+// ---------------------------------------------------------------------------
+// Entry points (the Backend method bodies).
+// ---------------------------------------------------------------------------
+
+#[allow(clippy::too_many_arguments)]
+pub fn fwd_bwd_cls(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    sw: &[f32],
+    n: usize,
+    seq_len: usize,
+    seed: i32,
+    rho: &[f32],
+    nu_apply: &[f32],
+    nu_probe: &[f32],
+) -> Result<GradOut> {
+    cfg.validate(params, n, seq_len, x.len())?;
+    ensure!(rho.len() == cfg.n_layers && nu_apply.len() == cfg.n_sampled());
+    ensure!(nu_probe.len() == cfg.n_sampled() && sw.len() == n && y.len() == n);
+    let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
+
+    let saved = encode_fwd(cfg, params, x, n, true);
+    let (_hf, lnf, pooled, logits) = cls_head_fwd(cfg, params, &saved.h_final, n);
+    let (losses, mut dlogits) = ce_loss_and_dlogits(&logits, y, c);
+    let loss: f64 = losses.iter().zip(sw).map(|(&l, &w)| (l as f64) * (w as f64)).sum();
+    for i in 0..n {
+        for j in 0..c {
+            dlogits[i * c + j] *= sw[i];
+        }
+    }
+
+    let mut grads = zero_grads(cfg);
+    grads[cfg.idx_head_b()] = col_sums(&dlogits, c);
+    grads[cfg.idx_head_w()] = weighted_tn(&pooled, &dlogits, None, n, d, c);
+    let gpooled = matmul_nt(&dlogits, tdata(params, cfg.idx_head_w()), n, c, d);
+    let mut dhf = vec![0.0f32; n * t * d];
+    let inv_t = 1.0 / t as f32;
+    for i in 0..n {
+        let src = &gpooled[i * d..(i + 1) * d];
+        for ti in 0..t {
+            let dst = &mut dhf[(i * t + ti) * d..(i * t + ti + 1) * d];
+            for (o, &v) in dst.iter_mut().zip(src) {
+                *o = v * inv_t;
+            }
+        }
+    }
+    let (g, glnf_g, glnf_b) = layernorm_bwd(
+        &saved.h_final,
+        tdata(params, cfg.idx_ln_f_g()),
+        &lnf,
+        &dhf,
+        d,
+    );
+    grads[cfg.idx_ln_f_g()] = glnf_g;
+    grads[cfg.idx_ln_f_b()] = glnf_b;
+
+    let (act_norms, vw) =
+        encode_bwd(cfg, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads);
+    Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn fwd_bwd_mlm(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    w: &[f32],
+    n: usize,
+    seq_len: usize,
+    seed: i32,
+    rho: &[f32],
+    nu_apply: &[f32],
+    nu_probe: &[f32],
+) -> Result<GradOut> {
+    cfg.validate(params, n, seq_len, x.len())?;
+    ensure!(rho.len() == cfg.n_layers && nu_apply.len() == cfg.n_sampled());
+    ensure!(nu_probe.len() == cfg.n_sampled());
+    ensure!(w.len() == n * cfg.seq_len && y.len() == n * cfg.seq_len);
+    let (t, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
+    let rows = n * t;
+
+    let saved = encode_fwd(cfg, params, x, n, true);
+    let (hf, lnf) = layernorm_fwd(
+        &saved.h_final,
+        tdata(params, cfg.idx_ln_f_g()),
+        tdata(params, cfg.idx_ln_f_b()),
+        d,
+    );
+    // logits = hf @ embed^T + mlm_b, (N*T, V)
+    let mut logits = matmul_nt(&hf, tdata(params, 0), rows, d, v);
+    add_bias(&mut logits, tdata(params, cfg.idx_mlm_b()));
+    let (losses, mut dlogits) = ce_loss_and_dlogits(&logits, y, v);
+    let wsum: f64 = w.iter().map(|&x| x as f64).sum();
+    let denom = wsum.max(1.0);
+    let loss: f64 =
+        losses.iter().zip(w).map(|(&l, &wi)| (l as f64) * (wi as f64)).sum::<f64>() / denom;
+    let inv = (1.0 / denom) as f32;
+    for r in 0..rows {
+        let scale = w[r] * inv;
+        for j in 0..v {
+            dlogits[r * v + j] *= scale;
+        }
+    }
+
+    let mut grads = zero_grads(cfg);
+    grads[cfg.idx_mlm_b()] = col_sums(&dlogits, v);
+    // tied-embedding head gradient: dlogits^T @ hf -> (V, D)
+    let gemb_head = weighted_tn(&dlogits, &hf, None, rows, v, d);
+    let dhf = matmul(&dlogits, tdata(params, 0), rows, v, d);
+    let (g, glnf_g, glnf_b) = layernorm_bwd(
+        &saved.h_final,
+        tdata(params, cfg.idx_ln_f_g()),
+        &lnf,
+        &dhf,
+        d,
+    );
+    grads[cfg.idx_ln_f_g()] = glnf_g;
+    grads[cfg.idx_ln_f_b()] = glnf_b;
+
+    let (act_norms, vw) =
+        encode_bwd(cfg, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads);
+    // tied embedding: encoder scatter + head contribution
+    for (o, &hv) in grads[0].iter_mut().zip(&gemb_head) {
+        *o += hv;
+    }
+    Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
+}
+
+pub fn fwd_loss_cls(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    n: usize,
+    seq_len: usize,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    cfg.validate(params, n, seq_len, x.len())?;
+    ensure!(y.len() == n);
+    let c = cfg.n_classes;
+    let saved = encode_fwd(cfg, params, x, n, false);
+    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, params, &saved.h_final, n);
+    let (losses, dlogits) = ce_loss_and_dlogits(&logits, y, c);
+    let ub = row_norms(&dlogits, c);
+    Ok((losses, ub))
+}
+
+pub fn eval_cls(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    n: usize,
+    seq_len: usize,
+) -> Result<(f32, f32)> {
+    cfg.validate(params, n, seq_len, x.len())?;
+    ensure!(y.len() == n);
+    let c = cfg.n_classes;
+    let saved = encode_fwd(cfg, params, x, n, false);
+    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, params, &saved.h_final, n);
+    let (losses, _) = ce_loss_and_dlogits(&logits, y, c);
+    let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
+    let mut correct = 0u32;
+    for i in 0..n {
+        if argmax_row(&logits[i * c..(i + 1) * c]) == y[i] as usize {
+            correct += 1;
+        }
+    }
+    Ok((loss_sum as f32, correct as f32))
+}
+
+pub fn eval_mlm(
+    cfg: &TransformerCfg,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    w: &[f32],
+    n: usize,
+    seq_len: usize,
+) -> Result<(f32, f32, f32)> {
+    cfg.validate(params, n, seq_len, x.len())?;
+    let (t, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
+    let rows = n * t;
+    ensure!(w.len() == rows && y.len() == rows);
+    let saved = encode_fwd(cfg, params, x, n, false);
+    let (hf, _lnf) = layernorm_fwd(
+        &saved.h_final,
+        tdata(params, cfg.idx_ln_f_g()),
+        tdata(params, cfg.idx_ln_f_b()),
+        d,
+    );
+    let mut logits = matmul_nt(&hf, tdata(params, 0), rows, d, v);
+    add_bias(&mut logits, tdata(params, cfg.idx_mlm_b()));
+    let (losses, _) = ce_loss_and_dlogits(&logits, y, v);
+    let mut loss_sum = 0.0f64;
+    let mut correct = 0.0f64;
+    let mut weight = 0.0f64;
+    for r in 0..rows {
+        let wi = w[r] as f64;
+        loss_sum += losses[r] as f64 * wi;
+        weight += wi;
+        if argmax_row(&logits[r * v..(r + 1) * v]) == y[r] as usize {
+            correct += wi;
+        }
+    }
+    Ok((loss_sum as f32, correct as f32, weight as f32))
+}

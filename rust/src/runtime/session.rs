@@ -1,98 +1,53 @@
-//! Typed session over one model's AOT entries: builds the input literal
-//! vectors in calling-convention order and unpacks the output tuples.
-
-use anyhow::{ensure, Result};
+//! Typed session over one model of any [`Backend`]: caches the structural
+//! dims and forwards the entry points, so the trainer and benches never
+//! carry the model name and dims around separately.
 
 use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
+use crate::error::Result;
 use crate::formats::params::ParamSet;
 
-use super::engine::{
-    lit_f32, lit_i32, lit_scalar_i32, param_literals, scalar_f32, to_vec_f32, Engine,
-};
-use super::manifest::ModelManifest;
+use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo};
 
-/// Output of a transformer grad entry.
-#[derive(Clone, Debug)]
-pub struct GradOut {
-    pub loss: f32,
-    /// Per-tensor flattened gradients, manifest order.
-    pub grads: Vec<Vec<f32>>,
-    /// Per-layer per-sample activation-gradient norms, shape (L, N) flat.
-    pub act_norms: Vec<f32>,
-    /// Analytic Eq. 3 weight variance per sampled linear at nu_probe.
-    pub vw: Vec<f32>,
-}
-
-/// Output of the CNN grad entry (activation-only VCAS: no vw).
-#[derive(Clone, Debug)]
-pub struct CnnGradOut {
-    pub loss: f32,
-    pub grads: Vec<Vec<f32>>,
-    pub act_norms: Vec<f32>,
-}
-
-/// A model bound to the engine, with its structural dims cached.
+/// A model bound to a backend, with its structural dims cached.
 pub struct ModelSession<'a> {
-    pub engine: &'a Engine,
+    backend: &'a dyn Backend,
     pub name: String,
+    info: ModelInfo,
     pub n_layers: usize,
     pub n_sampled: usize,
     pub seq_len: usize,
     pub n_classes: usize,
     pub vocab: usize,
-    n_params: usize,
 }
 
 impl<'a> ModelSession<'a> {
-    pub fn open(engine: &'a Engine, model: &str) -> Result<ModelSession<'a>> {
-        let mm = engine.model(model)?;
-        let (n_layers, n_sampled, seq_len, n_classes, vocab) = if mm.kind == "transformer" {
-            (
-                mm.cfg_usize("n_layers")?,
-                mm.cfg_usize("n_sampled")?,
-                mm.cfg_usize("seq_len")?,
-                mm.cfg_usize("n_classes")?,
-                mm.cfg_usize("vocab")?,
-            )
-        } else {
-            (mm.cfg_usize("n_sites")?, 0, 0, mm.cfg_usize("n_classes")?, 0)
-        };
+    pub fn open(backend: &'a dyn Backend, model: &str) -> Result<ModelSession<'a>> {
+        let info = backend.info(model)?;
         Ok(ModelSession {
-            engine,
+            backend,
             name: model.to_string(),
-            n_layers,
-            n_sampled,
-            seq_len,
-            n_classes,
-            vocab,
-            n_params: mm.n_params(),
+            n_layers: info.n_layers,
+            n_sampled: info.n_sampled(),
+            seq_len: info.seq_len,
+            n_classes: info.n_classes,
+            vocab: info.vocab,
+            info,
         })
     }
 
-    pub fn manifest(&self) -> &ModelManifest {
-        self.engine.model(&self.name).expect("model vanished")
+    pub fn backend(&self) -> &'a dyn Backend {
+        self.backend
+    }
+
+    pub fn info(&self) -> &ModelInfo {
+        &self.info
     }
 
     pub fn load_params(&self) -> Result<ParamSet> {
-        self.engine.load_params(&self.name)
+        self.backend.init_params(&self.name)
     }
 
-    fn unpack_grad(&self, out: Vec<xla::Literal>, has_vw: bool) -> Result<GradOut> {
-        let p = self.n_params;
-        let want = 1 + p + 1 + usize::from(has_vw);
-        ensure!(out.len() == want, "grad entry returned {} outputs, want {want}", out.len());
-        let loss = scalar_f32(&out[0])?;
-        let grads = out[1..=p].iter().map(to_vec_f32).collect::<Result<Vec<_>>>()?;
-        let act_norms = to_vec_f32(&out[p + 1])?;
-        let vw = if has_vw { to_vec_f32(&out[p + 2])? } else { Vec::new() };
-        Ok(GradOut { loss, grads, act_norms, vw })
-    }
-
-    /// Transformer classification grad step.
-    ///
-    /// `sw`: per-sample loss weights (1/N for plain mean). `rho` has
-    /// n_layers entries, `nu_*` n_sampled entries; ratios of 1.0 make the
-    /// step bitwise exact.
+    /// Transformer classification grad step (see [`Backend::fwd_bwd_cls`]).
     #[allow(clippy::too_many_arguments)]
     pub fn fwd_bwd_cls(
         &self,
@@ -104,18 +59,8 @@ impl<'a> ModelSession<'a> {
         nu_apply: &[f32],
         nu_probe: &[f32],
     ) -> Result<GradOut> {
-        ensure!(rho.len() == self.n_layers && nu_apply.len() == self.n_sampled);
-        let entry = format!("fwd_bwd_cls_n{}", batch.n);
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_i32(&batch.x, &[batch.n, batch.seq_len])?);
-        inputs.push(lit_i32(&batch.y, &[batch.n])?);
-        inputs.push(lit_f32(sw, &[batch.n])?);
-        inputs.push(lit_scalar_i32(seed));
-        inputs.push(lit_f32(rho, &[self.n_layers])?);
-        inputs.push(lit_f32(nu_apply, &[self.n_sampled])?);
-        inputs.push(lit_f32(nu_probe, &[self.n_sampled])?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        self.unpack_grad(out, true)
+        self.backend
+            .fwd_bwd_cls(&self.name, params, batch, sw, seed, rho, nu_apply, nu_probe)
     }
 
     /// Transformer masked-LM grad step.
@@ -128,18 +73,8 @@ impl<'a> ModelSession<'a> {
         nu_apply: &[f32],
         nu_probe: &[f32],
     ) -> Result<GradOut> {
-        let entry = format!("fwd_bwd_mlm_n{}", batch.n);
-        let shape2 = [batch.n, batch.seq_len];
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_i32(&batch.x, &shape2)?);
-        inputs.push(lit_i32(&batch.y, &shape2)?);
-        inputs.push(lit_f32(&batch.w, &shape2)?);
-        inputs.push(lit_scalar_i32(seed));
-        inputs.push(lit_f32(rho, &[self.n_layers])?);
-        inputs.push(lit_f32(nu_apply, &[self.n_sampled])?);
-        inputs.push(lit_f32(nu_probe, &[self.n_sampled])?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        self.unpack_grad(out, true)
+        self.backend
+            .fwd_bwd_mlm(&self.name, params, batch, seed, rho, nu_apply, nu_probe)
     }
 
     /// Per-sample losses + UB importance scores (baseline selection pass).
@@ -148,37 +83,17 @@ impl<'a> ModelSession<'a> {
         params: &ParamSet,
         batch: &ClsBatch,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
-        let entry = format!("fwd_loss_cls_n{}", batch.n);
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_i32(&batch.x, &[batch.n, batch.seq_len])?);
-        inputs.push(lit_i32(&batch.y, &[batch.n])?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        ensure!(out.len() == 2, "fwd_loss returned {} outputs", out.len());
-        Ok((to_vec_f32(&out[0])?, to_vec_f32(&out[1])?))
+        self.backend.fwd_loss_cls(&self.name, params, batch)
     }
 
     /// Eval: returns (loss_sum, correct_count).
     pub fn eval_cls(&self, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)> {
-        let entry = format!("eval_cls_n{}", batch.n);
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_i32(&batch.x, &[batch.n, batch.seq_len])?);
-        inputs.push(lit_i32(&batch.y, &[batch.n])?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        ensure!(out.len() == 2);
-        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+        self.backend.eval_cls(&self.name, params, batch)
     }
 
     /// MLM eval: returns (weighted_loss_sum, weighted_correct, weight_sum).
     pub fn eval_mlm(&self, params: &ParamSet, batch: &MlmBatch) -> Result<(f32, f32, f32)> {
-        let entry = format!("eval_mlm_n{}", batch.n);
-        let shape2 = [batch.n, batch.seq_len];
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_i32(&batch.x, &shape2)?);
-        inputs.push(lit_i32(&batch.y, &shape2)?);
-        inputs.push(lit_f32(&batch.w, &shape2)?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        ensure!(out.len() == 3);
-        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?, scalar_f32(&out[2])?))
+        self.backend.eval_mlm(&self.name, params, batch)
     }
 
     /// CNN grad step (activation-only VCAS; rho has n_stages entries).
@@ -186,40 +101,14 @@ impl<'a> ModelSession<'a> {
         &self,
         params: &ParamSet,
         batch: &ImgBatch,
-        img: usize,
-        channels: usize,
         seed: i32,
         rho: &[f32],
     ) -> Result<CnnGradOut> {
-        let entry = format!("fwd_bwd_n{}", batch.n);
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_f32(&batch.x, &[batch.n, img, img, channels])?);
-        inputs.push(lit_i32(&batch.y, &[batch.n])?);
-        inputs.push(lit_scalar_i32(seed));
-        inputs.push(lit_f32(rho, &[rho.len()])?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        let p = self.n_params;
-        ensure!(out.len() == p + 2, "cnn grad returned {} outputs", out.len());
-        let loss = scalar_f32(&out[0])?;
-        let grads = out[1..=p].iter().map(to_vec_f32).collect::<Result<Vec<_>>>()?;
-        let act_norms = to_vec_f32(&out[p + 1])?;
-        Ok(CnnGradOut { loss, grads, act_norms })
+        self.backend.cnn_fwd_bwd(&self.name, params, batch, seed, rho)
     }
 
     /// CNN eval: (loss_sum, correct).
-    pub fn cnn_eval(
-        &self,
-        params: &ParamSet,
-        batch: &ImgBatch,
-        img: usize,
-        channels: usize,
-    ) -> Result<(f32, f32)> {
-        let entry = format!("eval_n{}", batch.n);
-        let mut inputs = param_literals(params)?;
-        inputs.push(lit_f32(&batch.x, &[batch.n, img, img, channels])?);
-        inputs.push(lit_i32(&batch.y, &[batch.n])?);
-        let out = self.engine.run(&self.name, &entry, &inputs)?;
-        ensure!(out.len() == 2);
-        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    pub fn cnn_eval(&self, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {
+        self.backend.cnn_eval(&self.name, params, batch)
     }
 }

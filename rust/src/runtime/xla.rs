@@ -1,0 +1,222 @@
+//! `XlaBackend`: the [`Backend`](super::Backend) implementation over the
+//! PJRT engine + AOT HLO artifacts (feature `xla`).
+//!
+//! Holds the executable cache and the per-model [`ModelInfo`] derived from
+//! the manifest; marshals batches to literals in calling-convention order
+//! and unpacks the output tuples. Unlike the native path this backend only
+//! supports the batch sizes the artifacts were lowered for, and it is NOT
+//! `Send` (PJRT wrapper types are thread-bound).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
+use crate::error::{anyhow, ensure, Result};
+use crate::formats::params::ParamSet;
+
+use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo};
+use super::engine::{
+    lit_f32, lit_i32, lit_scalar_i32, param_literals, scalar_f32, to_vec_f32, Engine,
+};
+
+/// PJRT-backed execution over one artifact directory.
+pub struct XlaBackend {
+    engine: Engine,
+    infos: BTreeMap<String, ModelInfo>,
+}
+
+impl XlaBackend {
+    /// Load the manifest, create the PJRT client and derive model infos.
+    pub fn load(artifacts_dir: &Path) -> Result<XlaBackend> {
+        let engine = Engine::load(artifacts_dir)?;
+        let mut infos = BTreeMap::new();
+        for (name, mm) in &engine.manifest.models {
+            infos.insert(name.clone(), mm.to_info()?);
+        }
+        Ok(XlaBackend { engine, infos })
+    }
+
+    /// The underlying engine (manifest access, exec counters).
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn platform(&self) -> String {
+        self.engine.platform()
+    }
+
+    fn info_ref(&self, model: &str) -> Result<&ModelInfo> {
+        self.infos
+            .get(model)
+            .ok_or_else(|| anyhow!("manifest has no model {model:?}"))
+    }
+
+    fn unpack_grad(&self, info: &ModelInfo, out: Vec<xla::Literal>, has_vw: bool) -> Result<GradOut> {
+        let p = info.n_params();
+        let want = 1 + p + 1 + usize::from(has_vw);
+        ensure!(out.len() == want, "grad entry returned {} outputs, want {want}", out.len());
+        let loss = scalar_f32(&out[0])?;
+        let grads = out[1..=p].iter().map(to_vec_f32).collect::<Result<Vec<_>>>()?;
+        let act_norms = to_vec_f32(&out[p + 1])?;
+        let vw = if has_vw { to_vec_f32(&out[p + 2])? } else { Vec::new() };
+        Ok(GradOut { loss, grads, act_norms, vw })
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn main_batch(&self) -> usize {
+        self.engine.manifest.main_batch
+    }
+
+    fn sub_batch(&self) -> usize {
+        self.engine.manifest.sub_batch
+    }
+
+    fn cnn_batch(&self) -> usize {
+        self.engine.manifest.cnn_batch
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.infos.keys().cloned().collect()
+    }
+
+    fn info(&self, model: &str) -> Result<ModelInfo> {
+        Ok(self.info_ref(model)?.clone())
+    }
+
+    fn init_params(&self, model: &str) -> Result<ParamSet> {
+        self.engine.load_params(model)
+    }
+
+    fn fwd_bwd_cls(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+    ) -> Result<GradOut> {
+        let info = self.info_ref(model)?;
+        ensure!(rho.len() == info.n_layers && nu_apply.len() == info.n_sampled());
+        let entry = format!("fwd_bwd_cls_n{}", batch.n);
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_i32(&batch.x, &[batch.n, batch.seq_len])?);
+        inputs.push(lit_i32(&batch.y, &[batch.n])?);
+        inputs.push(lit_f32(sw, &[batch.n])?);
+        inputs.push(lit_scalar_i32(seed));
+        inputs.push(lit_f32(rho, &[info.n_layers])?);
+        inputs.push(lit_f32(nu_apply, &[info.n_sampled()])?);
+        inputs.push(lit_f32(nu_probe, &[info.n_sampled()])?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        self.unpack_grad(info, out, true)
+    }
+
+    fn fwd_bwd_mlm(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+    ) -> Result<GradOut> {
+        let info = self.info_ref(model)?;
+        let entry = format!("fwd_bwd_mlm_n{}", batch.n);
+        let shape2 = [batch.n, batch.seq_len];
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_i32(&batch.x, &shape2)?);
+        inputs.push(lit_i32(&batch.y, &shape2)?);
+        inputs.push(lit_f32(&batch.w, &shape2)?);
+        inputs.push(lit_scalar_i32(seed));
+        inputs.push(lit_f32(rho, &[info.n_layers])?);
+        inputs.push(lit_f32(nu_apply, &[info.n_sampled()])?);
+        inputs.push(lit_f32(nu_probe, &[info.n_sampled()])?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        self.unpack_grad(info, out, true)
+    }
+
+    fn fwd_loss_cls(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let entry = format!("fwd_loss_cls_n{}", batch.n);
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_i32(&batch.x, &[batch.n, batch.seq_len])?);
+        inputs.push(lit_i32(&batch.y, &[batch.n])?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        ensure!(out.len() == 2, "fwd_loss returned {} outputs", out.len());
+        Ok((to_vec_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    fn eval_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)> {
+        let entry = format!("eval_cls_n{}", batch.n);
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_i32(&batch.x, &[batch.n, batch.seq_len])?);
+        inputs.push(lit_i32(&batch.y, &[batch.n])?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        ensure!(out.len() == 2);
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+
+    fn eval_mlm(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+    ) -> Result<(f32, f32, f32)> {
+        let entry = format!("eval_mlm_n{}", batch.n);
+        let shape2 = [batch.n, batch.seq_len];
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_i32(&batch.x, &shape2)?);
+        inputs.push(lit_i32(&batch.y, &shape2)?);
+        inputs.push(lit_f32(&batch.w, &shape2)?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        ensure!(out.len() == 3);
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?, scalar_f32(&out[2])?))
+    }
+
+    fn cnn_fwd_bwd(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        rho: &[f32],
+    ) -> Result<CnnGradOut> {
+        let info = self.info_ref(model)?;
+        let entry = format!("fwd_bwd_n{}", batch.n);
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_f32(&batch.x, &[batch.n, info.img, info.img, info.in_ch])?);
+        inputs.push(lit_i32(&batch.y, &[batch.n])?);
+        inputs.push(lit_scalar_i32(seed));
+        inputs.push(lit_f32(rho, &[rho.len()])?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        let p = info.n_params();
+        ensure!(out.len() == p + 2, "cnn grad returned {} outputs", out.len());
+        let loss = scalar_f32(&out[0])?;
+        let grads = out[1..=p].iter().map(to_vec_f32).collect::<Result<Vec<_>>>()?;
+        let act_norms = to_vec_f32(&out[p + 1])?;
+        Ok(CnnGradOut { loss, grads, act_norms })
+    }
+
+    fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {
+        let info = self.info_ref(model)?;
+        let entry = format!("eval_n{}", batch.n);
+        let mut inputs = param_literals(params)?;
+        inputs.push(lit_f32(&batch.x, &[batch.n, info.img, info.img, info.in_ch])?);
+        inputs.push(lit_i32(&batch.y, &[batch.n])?);
+        let out = self.engine.run(model, &entry, &inputs)?;
+        ensure!(out.len() == 2);
+        Ok((scalar_f32(&out[0])?, scalar_f32(&out[1])?))
+    }
+}
