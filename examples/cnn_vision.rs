@@ -5,27 +5,32 @@
 //!
 //!     cargo run --release --example cnn_vision [-- <steps> <workers>]
 //!
-//! On the XLA backend workers are logical shards (PJRT wrapper types are
-//! not Send); the native backend is Send + Sync, so the same coordination
-//! path — sharding, reduce, broadcast — is the deployed topology either
-//! way.
-
-use std::path::Path;
+//! The DDP round is real data parallelism: `NativeBackend` is
+//! `Send + Sync`, so every worker is an OS thread (`std::thread::scope`
+//! via `coordinator::parallel::scoped_workers`) computing its shard
+//! against the shared backend. The PJRT path cannot cross threads (its
+//! wrapper types are not `Send`), which is why the demo drives the native
+//! backend directly here.
 
 use vcas::config::{Method, TrainConfig, VcasConfig};
-use vcas::coordinator::parallel::{shard_ranges, tree_allreduce_mean, tree_depth};
+use vcas::coordinator::parallel::{scoped_workers, shard_ranges, tree_allreduce_mean, tree_depth};
 use vcas::coordinator::Trainer;
 use vcas::data::batch::gather_img;
 use vcas::data::images::{generate_images, ImageSpec};
 use vcas::error::Result;
 use vcas::optim::{Optimizer, Sgdm};
-use vcas::runtime::{default_backend, Backend, ModelSession};
+use vcas::runtime::{Backend, NativeBackend};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let steps: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
-    let backend = default_backend(Path::new("artifacts"));
+    let backend = NativeBackend::with_default_models();
+    println!(
+        "native backend: {} kernel threads, {} DDP workers",
+        backend.threads(),
+        workers
+    );
 
     // ---- single-stream exact vs VCAS (Table 8 rows) -------------------------
     for method in [Method::Exact, Method::Vcas] {
@@ -43,7 +48,7 @@ fn main() -> Result<()> {
             },
             ..Default::default()
         };
-        let r = Trainer::new(backend.as_ref(), &cfg)?.run()?;
+        let r = Trainer::new(&backend, &cfg)?.run()?;
         println!(
             "{:>5}: loss {:.4}, eval acc {:.2}%, FLOPs red {:.2}%, wall {:.1}s",
             r.method,
@@ -54,11 +59,14 @@ fn main() -> Result<()> {
         );
     }
 
-    // ---- data-parallel round: shard -> per-shard grads -> tree allreduce ----
-    println!("\nDDP demo: {workers} workers, tree depth {}", tree_depth(workers));
-    let sess = ModelSession::open(backend.as_ref(), "cnn")?;
-    let info = sess.info().clone();
-    let mut params = sess.load_params()?;
+    // ---- data-parallel rounds: shard -> threaded shard grads -> allreduce ---
+    // The DDP workers own the cores here: give each worker's kernels a
+    // single thread so workers x threads stays <= cores (the README rule)
+    // instead of oversubscribing every conv with a full fan-out.
+    let backend = backend.with_threads(1);
+    println!("\nDDP demo: {workers} worker threads, tree depth {}", tree_depth(workers));
+    let info = backend.info("cnn")?;
+    let mut params = backend.init_params("cnn")?;
     let mut opt = Sgdm::new(&params, 0.9, 0.0);
     let spec = ImageSpec {
         img: info.img,
@@ -70,23 +78,28 @@ fn main() -> Result<()> {
     let rho = vec![1.0f32; info.n_layers];
 
     for step in 0..4 {
-        // every worker computes grads on its shard at the full static batch
-        // shape (shards here are whole batches per worker, as in DDP)
-        let mut worker_grads = Vec::with_capacity(workers);
-        let mut losses = Vec::with_capacity(workers);
+        // every worker thread computes grads on its shard at the full
+        // static batch shape (shards are whole batches per worker, as in
+        // DDP), sharing the backend/params/dataset by reference
         let ranges = shard_ranges(ds.n, workers);
-        for (w, &(s, e)) in ranges.iter().enumerate() {
+        let outs = scoped_workers(workers, |w| {
+            let (s, e) = ranges[w];
             let idx: Vec<usize> = (s..e).collect();
             let batch = gather_img(&ds, &idx);
-            let out = sess.cnn_fwd_bwd(&params, &batch, (step * workers + w) as i32, &rho)?;
+            backend.cnn_fwd_bwd("cnn", &params, &batch, (step * workers + w) as i32, &rho)
+        });
+        let mut worker_grads = Vec::with_capacity(workers);
+        let mut losses = Vec::with_capacity(workers);
+        for out in outs {
+            let out = out?;
             losses.push(out.loss);
             worker_grads.push(out.grads);
         }
-        let mean_grads = tree_allreduce_mean(worker_grads);
+        let mean_grads = tree_allreduce_mean(worker_grads)?;
         opt.step(&mut params, &mean_grads, 0.05);
         let mean_loss: f32 = losses.iter().sum::<f32>() / workers as f32;
         println!("  step {step}: mean shard loss {mean_loss:.4} (shards {losses:?})");
     }
-    println!("DDP round complete — gradients merged via tree allreduce.");
+    println!("DDP rounds complete — shard gradients computed on real threads, merged via tree allreduce.");
     Ok(())
 }

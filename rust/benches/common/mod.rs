@@ -27,15 +27,19 @@ pub fn results_dir() -> PathBuf {
 }
 
 /// Best available backend: PJRT over the artifacts when present (feature
-/// `xla`), else the hermetic native backend. The banner makes it impossible
-/// to mistake miniature native-model numbers for artifact-scale results in
-/// the emitted tables/CSVs.
+/// `xla`), else the hermetic native backend. Kernel threads follow
+/// `VCAS_THREADS` / `available_parallelism()` via `default_backend`;
+/// results are bitwise identical at any thread count, so timings are the
+/// only thing the knob moves. The banner makes it impossible to mistake
+/// miniature native-model numbers for artifact-scale results in the
+/// emitted tables/CSVs.
 pub fn load_backend() -> Box<dyn Backend> {
     let b = default_backend(&artifacts_dir());
     println!(
-        "[bench backend: {} — {} models; native = miniature in-repo dims]",
+        "[bench backend: {} — {} models, {} kernel threads; native = miniature in-repo dims]",
         b.name(),
-        b.models().join(",")
+        b.models().join(","),
+        b.threads()
     );
     b
 }

@@ -1,10 +1,14 @@
 //! §Perf micro-benchmarks: per-entry execute latency, marshalling cost,
-//! controller update cost, allreduce cost — the L3 hot-path profile.
+//! controller update cost, allreduce cost, and the kernel layer's
+//! single- vs multi-thread scaling — the L3 hot-path profile. The kernel
+//! section also writes `results/BENCH_kernels.json` so the repo's perf
+//! trajectory has machine-readable data points.
 //!
 //! Run: cargo bench --bench perf_micro
 
 mod common;
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use vcas::coordinator::parallel::tree_allreduce_mean;
@@ -12,7 +16,9 @@ use vcas::coordinator::vcas::{GradSample, VcasController};
 use vcas::config::VcasConfig;
 use vcas::data::batch::{gather_cls, EpochSampler};
 use vcas::data::tasks::{find, generate_cls};
-use vcas::runtime::{Backend, ModelSession};
+use vcas::formats::json::Json;
+use vcas::runtime::kernels::{reference, Layout, MatmulPlan};
+use vcas::runtime::{Backend, ModelSession, NativeBackend};
 use vcas::util::rng::Pcg32;
 
 fn main() {
@@ -107,7 +113,7 @@ fn main() {
             .map(|_| vec![(0..700_000).map(|_| rng.f32()).collect()])
             .collect();
         let ms = common::time_median_ms(5, || {
-            let _ = tree_allreduce_mean(grads.clone());
+            let _ = tree_allreduce_mean(grads.clone()).unwrap();
         });
         table.row(vec![
             "tree allreduce (8 workers, 700k params)".into(),
@@ -115,6 +121,79 @@ fn main() {
             "incl clone".into(),
         ]);
     }
+
+    // kernel layer: naive loop vs blocked+threaded MatmulPlan, plus the
+    // end-to-end fwd_bwd scaling — the acceptance target is >= 2x matmul
+    // speedup at 4 threads on 512^3 over the naive reference.
+    let mut kernels_json: BTreeMap<String, Json> = BTreeMap::new();
+    {
+        let (m, k, n) = (512usize, 512, 512);
+        let mut rng = Pcg32::new(7, 7);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let naive_ms = common::time_median_ms(5, || {
+            std::hint::black_box(reference::matmul(&a, &b, m, k, n));
+        });
+        table.row(vec![
+            format!("matmul {m}x{k}x{n} naive"),
+            format!("{naive_ms:.1}"),
+            "PR 1 baseline".into(),
+        ]);
+        let mut mm: BTreeMap<String, Json> = BTreeMap::new();
+        mm.insert("naive_ms".into(), Json::Num(naive_ms));
+        let mut ms4 = naive_ms;
+        for threads in [1usize, 2, 4] {
+            let plan = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads);
+            let ms = common::time_median_ms(5, || {
+                std::hint::black_box(plan.run(&a, &b));
+            });
+            table.row(vec![
+                format!("matmul {m}x{k}x{n} blocked, {threads} thr"),
+                format!("{ms:.1}"),
+                format!("{:.2}x vs naive", naive_ms / ms),
+            ]);
+            mm.insert(format!("threads_{threads}_ms"), Json::Num(ms));
+            if threads == 4 {
+                ms4 = ms;
+            }
+        }
+        mm.insert("speedup_4t_vs_naive".into(), Json::Num(naive_ms / ms4));
+        kernels_json.insert("matmul_512".into(), Json::Obj(mm));
+    }
+    {
+        // fwd_bwd on "small" at 1 vs 4 kernel threads (bitwise-identical
+        // results; only wall-clock moves)
+        let spec = find("sst2-sim").unwrap();
+        let mut fb: BTreeMap<String, Json> = BTreeMap::new();
+        let mut ms_by_threads = [0.0f64; 2];
+        for (slot, threads) in [1usize, 4].into_iter().enumerate() {
+            let nb = NativeBackend::with_default_models().with_threads(threads);
+            let sess = ModelSession::open(&nb, "small").unwrap();
+            let params = sess.load_params().unwrap();
+            let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 256, 1);
+            let mut sampler = EpochSampler::new(256, 1);
+            let batch = gather_cls(&ds, &sampler.take(nb.main_batch()));
+            let sw = vec![1.0 / batch.n as f32; batch.n];
+            let ones_l = vec![1.0f32; sess.n_layers];
+            let ones_w = vec![1.0f32; sess.n_sampled];
+            let ms = common::time_median_ms(7, || {
+                sess.fwd_bwd_cls(&params, &batch, &sw, 1, &ones_l, &ones_w, &ones_w)
+                    .unwrap();
+            });
+            table.row(vec![
+                format!("small: fwd_bwd exact, {threads} thr"),
+                format!("{ms:.1}"),
+                "kernel scaling".into(),
+            ]);
+            fb.insert(format!("threads_{threads}_ms"), Json::Num(ms));
+            ms_by_threads[slot] = ms;
+        }
+        fb.insert("speedup_4t".into(), Json::Num(ms_by_threads[0] / ms_by_threads[1]));
+        kernels_json.insert("fwd_bwd_small".into(), Json::Obj(fb));
+    }
+    let json_path = common::results_dir().join("BENCH_kernels.json");
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(kernels_json))).unwrap();
+    println!("(kernel scaling json: {})", json_path.display());
 
     table.print("perf_micro — L3 hot-path profile");
 }

@@ -9,8 +9,10 @@
 mod common;
 
 use vcas::config::Method;
-use vcas::coordinator::parallel::{tree_allreduce_mean, tree_depth};
-use vcas::runtime::Backend;
+use vcas::coordinator::parallel::{data_parallel_grads, tree_allreduce_mean, tree_depth};
+use vcas::data::batch::gather_img;
+use vcas::data::images::{generate_images, ImageSpec};
+use vcas::runtime::{Backend, NativeBackend};
 use vcas::util::rng::Pcg32;
 
 fn main() {
@@ -57,9 +59,44 @@ fn main() {
             .map(|_| vec![(0..n_params).map(|_| rng.f32()).collect()])
             .collect();
         let ms = common::time_median_ms(5, || {
-            let _ = tree_allreduce_mean(grads.clone());
+            let _ = tree_allreduce_mean(grads.clone()).unwrap();
         });
         comm.row(vec![w.to_string(), tree_depth(w).to_string(), format!("{ms:.2}")]);
     }
     comm.print(&format!("Table 8 (cont.) — DDP allreduce cost, {n_params} params"));
+
+    // Real-thread DDP round: wall-clock of shard grads + combine as worker
+    // threads scale (the Amdahl story next to the FLOPs table above). Runs
+    // on the native backend with 1 kernel thread per worker so the DDP
+    // workers, not the kernel layer, own the cores — dims must come from
+    // the native registry, which can differ from an artifact-scale engine.
+    let native = NativeBackend::with_default_models().with_threads(1);
+    let native_info = native.info("cnn").unwrap();
+    let params = native.init_params("cnn").unwrap();
+    let spec = ImageSpec {
+        img: native_info.img,
+        channels: native_info.in_ch,
+        n_classes: native_info.n_classes,
+        ..ImageSpec::default()
+    };
+    let max_workers = 8usize;
+    let ds = generate_images(&spec, native.cnn_batch() * max_workers, 13);
+    let rho = vec![1.0f32; native_info.n_layers];
+    let mut ddp = common::Table::new(&["workers", "round ms", "notes"]);
+    for w in [1usize, 2, 4, 8] {
+        let ms = common::time_median_ms(5, || {
+            let _ = data_parallel_grads(w, ds.n, |wk, (s, e)| {
+                let idx: Vec<usize> = (s..e).collect();
+                let batch = gather_img(&ds, &idx);
+                native.cnn_fwd_bwd("cnn", &params, &batch, wk as i32, &rho).map(|o| o.grads)
+            })
+            .unwrap();
+        });
+        ddp.row(vec![
+            w.to_string(),
+            format!("{ms:.1}"),
+            "fixed total batch, real threads".into(),
+        ]);
+    }
+    ddp.print("Table 8 (cont.) — real-thread DDP round, fixed total batch");
 }

@@ -140,6 +140,9 @@ pub struct TrainConfig {
     pub optim: OptimConfig,
     /// Data-parallel worker count (1 = single stream).
     pub workers: usize,
+    /// Native kernel threads (0 = auto: `VCAS_THREADS` env when set, else
+    /// `available_parallelism()`). Bitwise-identical results at any value.
+    pub threads: usize,
     /// Where to write metrics CSVs (empty = no CSV).
     pub out_dir: String,
 }
@@ -158,6 +161,7 @@ impl Default for TrainConfig {
             vcas: VcasConfig::default(),
             optim: OptimConfig::default(),
             workers: 1,
+            threads: 0,
             out_dir: String::new(),
         }
     }
@@ -193,6 +197,9 @@ impl TrainConfig {
         }
         if let Some(v) = t.get_int("train", "workers") {
             c.workers = v as usize;
+        }
+        if let Some(v) = t.get_int("train", "threads") {
+            c.threads = v as usize;
         }
         if let Some(v) = t.get_str("train", "out_dir") {
             c.out_dir = v;
@@ -273,6 +280,7 @@ mod tests {
             method = "ub"
             steps = 123
             keep_ratio = 0.25
+            threads = 3
             [vcas]
             tau_act = 0.1
             m_repeats = 4
@@ -290,8 +298,10 @@ mod tests {
         assert_eq!(c.vcas.m_repeats, 4);
         assert_eq!(c.optim.lr, 1e-3);
         assert_eq!(c.optim.schedule, "const");
+        assert_eq!(c.threads, 3);
         // untouched keys keep defaults
         assert_eq!(c.vcas.beta, 0.95);
+        assert_eq!(TrainConfig::default().threads, 0, "default threads = auto");
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The L3 coordinator: the paper's variance-controlled adaptation (Alg. 1),
 //! the comparison baselines, FLOPs accounting, the training loop and the
-//! in-process data-parallel worker pool.
+//! real-thread data-parallel substrate (`parallel`).
 
 pub mod baselines;
 pub mod flops;

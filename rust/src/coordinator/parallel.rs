@@ -1,19 +1,29 @@
 //! In-process data-parallel substrate (Appendix C ran 8-GPU DDP).
 //!
-//! PJRT wrapper types are not `Send`, so workers here are *logical*: the
-//! leader executes each worker's shard against the shared executable and
-//! the gradient combine is a real tree allreduce over the shard gradients —
-//! the same reduction topology a multi-process deployment would run, with
-//! the communication pattern (and its O(log W) depth) preserved and
-//! unit-tested. `flat` combines are exposed so the Table 8 bench can charge
-//! per-round communication volume.
+//! `NativeBackend` is `Send + Sync`, so workers here are **real OS
+//! threads**: [`scoped_workers`] fans a closure out over
+//! `std::thread::scope` (worker w = thread w, borrowed state shared
+//! without `Arc`), and [`data_parallel_grads`] runs one DDP round — shard
+//! the batch, compute shard gradients concurrently against the shared
+//! backend, combine with the same binary-tree allreduce a multi-process
+//! deployment would run (O(log W) depth, unit-tested). Each worker's shard
+//! gradient is deterministic given its seed, and the combine runs on the
+//! caller thread in fixed tree order, so a DDP round is bitwise
+//! reproducible regardless of scheduling.
+//!
+//! The PJRT path still cannot cross threads (its wrapper types are not
+//! `Send`); callers that hold a `dyn Backend` keep the leader-loop shape,
+//! native callers get true concurrency.
+
+use crate::error::{ensure, Result};
 
 /// Average a set of per-worker gradient vectors with a binary-tree
 /// reduction. `grads[w][t]` is worker w's flattened tensor t.
-/// Returns the averaged gradients (same layout as one worker's).
-pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
+/// Returns the averaged gradients (same layout as one worker's); an empty
+/// worker set is an error.
+pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>>> {
     let w = grads.len();
-    assert!(w > 0, "no workers");
+    ensure!(w > 0, "tree_allreduce_mean: no worker gradients to combine");
     let mut stride = 1usize;
     while stride < w {
         let mut dst = 0;
@@ -38,7 +48,7 @@ pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Vec<Vec<f32>> {
             *x *= scale;
         }
     }
-    out
+    Ok(out)
 }
 
 /// Number of pairwise combine rounds the tree performs (comm-depth model
@@ -69,6 +79,51 @@ pub fn shard_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Fan `f` out over `workers` real OS threads (`std::thread::scope`);
+/// returns the results in worker order. A single worker runs inline on
+/// the caller thread. Worker panics propagate.
+pub fn scoped_workers<T, F>(workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    assert!(workers > 0, "scoped_workers: zero workers");
+    if workers == 1 {
+        return vec![f(0)];
+    }
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let f = &f;
+                s.spawn(move || f(w))
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("worker thread panicked"))
+            .collect()
+    })
+}
+
+/// One data-parallel training round: shard `n` rows across `workers` real
+/// threads, compute each shard's gradients via
+/// `grad_fn(worker, (start, end))`, and average with the tree allreduce.
+/// The first worker error (in worker order) is returned if any shard
+/// fails.
+pub fn data_parallel_grads<F>(workers: usize, n: usize, grad_fn: F) -> Result<Vec<Vec<f32>>>
+where
+    F: Fn(usize, (usize, usize)) -> Result<Vec<Vec<f32>>> + Sync,
+{
+    ensure!(workers > 0, "data_parallel_grads: zero workers");
+    let ranges = shard_ranges(n, workers);
+    let per_worker = scoped_workers(workers, |w| grad_fn(w, ranges[w]));
+    let mut grads = Vec::with_capacity(workers);
+    for r in per_worker {
+        grads.push(r?);
+    }
+    tree_allreduce_mean(grads)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,7 +147,7 @@ mod tests {
                         .collect()
                 })
                 .collect();
-            let got = tree_allreduce_mean(grads);
+            let got = tree_allreduce_mean(grads).expect("non-empty worker set");
             for (a, b) in got.iter().zip(&want) {
                 for (&x, &y) in a.iter().zip(b) {
                     ensure((x - y).abs() < 1e-4, format!("{x} vs {y}"))?;
@@ -100,6 +155,12 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn allreduce_of_no_workers_is_an_error() {
+        let err = tree_allreduce_mean(Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("no worker gradients"), "{err}");
     }
 
     #[test]
@@ -131,5 +192,67 @@ mod tests {
         assert_eq!(tree_depth(2), 1);
         assert_eq!(tree_depth(8), 3);
         assert_eq!(tree_depth(9), 4);
+    }
+
+    #[test]
+    fn scoped_workers_return_in_worker_order() {
+        let results = scoped_workers(8, |w| w * 10);
+        assert_eq!(results, vec![0, 10, 20, 30, 40, 50, 60, 70]);
+        assert_eq!(scoped_workers(1, |w| w + 1), vec![1]);
+    }
+
+    #[test]
+    fn real_thread_ddp_round_matches_leader_loop_bitwise() {
+        use crate::data::batch::gather_img;
+        use crate::data::images::{generate_images, ImageSpec};
+        use crate::runtime::{Backend, NativeBackend};
+
+        let backend = NativeBackend::with_default_models();
+        let info = backend.info("cnn").unwrap();
+        let params = backend.init_params("cnn").unwrap();
+        let spec = ImageSpec {
+            img: info.img,
+            channels: info.in_ch,
+            n_classes: info.n_classes,
+            ..ImageSpec::default()
+        };
+        let workers = 4;
+        let ds = generate_images(&spec, backend.cnn_batch() * workers, 11);
+        let rho = vec![1.0f32; info.n_layers];
+        let shard_grads = |w: usize, (s, e): (usize, usize)| {
+            let idx: Vec<usize> = (s..e).collect();
+            let batch = gather_img(&ds, &idx);
+            backend
+                .cnn_fwd_bwd("cnn", &params, &batch, w as i32, &rho)
+                .map(|o| o.grads)
+        };
+
+        // the old logical-worker leader loop, run sequentially
+        let ranges = shard_ranges(ds.n, workers);
+        let seq: Vec<Vec<Vec<f32>>> = ranges
+            .iter()
+            .enumerate()
+            .map(|(w, &r)| shard_grads(w, r).unwrap())
+            .collect();
+        let want = tree_allreduce_mean(seq).unwrap();
+
+        // real threads through the shared &NativeBackend
+        let got = data_parallel_grads(workers, ds.n, &shard_grads).unwrap();
+        assert_eq!(got.len(), want.len());
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a, b, "threaded DDP must reproduce the leader loop bitwise");
+        }
+    }
+
+    #[test]
+    fn data_parallel_propagates_worker_errors() {
+        let r = data_parallel_grads(3, 9, |w, _range| {
+            if w == 1 {
+                Err(crate::anyhow!("shard {w} failed"))
+            } else {
+                Ok(vec![vec![1.0f32]])
+            }
+        });
+        assert!(r.unwrap_err().to_string().contains("shard 1 failed"));
     }
 }

@@ -14,6 +14,9 @@
 //! - [`runtime::NativeBackend`] — a pure-Rust, dependency-free,
 //!   `Send + Sync` forward/backward of the tiny transformer and CNN paths,
 //!   including the VCAS activation (Eq. 4) and weight (Eq. 3/7) samplers.
+//!   Its math runs on the blocked, multi-threaded `runtime::kernels` layer
+//!   (bitwise-identical results at any thread count), and
+//!   `coordinator::parallel` adds real OS-thread data parallelism on top.
 //!   Always available; the hermetic test suite runs entirely on it.
 //! - `runtime::XlaBackend` (feature `xla`) — the PJRT engine over the AOT
 //!   HLO artifacts, used when `artifacts/manifest.json` exists.

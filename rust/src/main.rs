@@ -16,7 +16,7 @@ use vcas::config::{Method, TrainConfig};
 use vcas::coordinator::Trainer;
 use vcas::data::tasks;
 use vcas::error::Result;
-use vcas::runtime::{default_backend, Backend};
+use vcas::runtime::{default_backend, default_backend_with_threads, default_threads, Backend};
 
 fn main() {
     if let Err(e) = run() {
@@ -34,6 +34,7 @@ fn parse_args() -> Result<Args> {
         .flag("steps", "training steps")
         .flag("seed", "run seed")
         .flag("eval-every", "evaluate every N steps (0 = end only)")
+        .flag("threads", "native kernel threads (0 = auto; results identical at any value)")
         .flag("out-dir", "write metric CSVs here")
         .flag("tau", "vcas variance thresholds tau_act = tau_w")
         .flag("freq", "vcas adaptation frequency F")
@@ -68,7 +69,7 @@ fn run() -> Result<()> {
 
 fn cmd_info(artifacts: &Path) -> Result<()> {
     let backend = default_backend(artifacts);
-    println!("backend: {}", backend.name());
+    println!("backend: {} ({} kernel threads)", backend.name(), backend.threads());
     println!(
         "batches: main={} sub={} cnn={}",
         backend.main_batch(),
@@ -106,6 +107,7 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     cfg.steps = args.flag_usize("steps", cfg.steps)?;
     cfg.seed = args.flag_u64("seed", cfg.seed)?;
     cfg.eval_every = args.flag_usize("eval-every", cfg.eval_every)?;
+    cfg.threads = args.flag_usize("threads", cfg.threads)?;
     if let Some(v) = args.flag("out-dir") {
         cfg.out_dir = v.to_string();
     }
@@ -117,14 +119,16 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     cfg.vcas.freq = args.flag_usize("freq", cfg.vcas.freq)?;
     cfg.optim.lr = args.flag_f64("lr", cfg.optim.lr)?;
 
-    let backend = default_backend(artifacts);
+    let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
+    let backend = default_backend_with_threads(artifacts, threads);
     println!(
-        "training {} on {} with {} for {} steps (backend {})",
+        "training {} on {} with {} for {} steps (backend {}, {} kernel threads)",
         cfg.model,
         cfg.task,
         cfg.method.name(),
         cfg.steps,
-        backend.name()
+        backend.name(),
+        backend.threads()
     );
     let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
     let result = trainer.run()?;

@@ -120,6 +120,13 @@ pub trait Backend {
     /// Batch size of the CNN path.
     fn cnn_batch(&self) -> usize;
 
+    /// Kernel-layer worker threads this backend computes with (1 for
+    /// backends that parallelise internally or not at all). Informational:
+    /// results never depend on it.
+    fn threads(&self) -> usize {
+        1
+    }
+
     /// Registered model names.
     fn models(&self) -> Vec<String>;
 

@@ -1,0 +1,415 @@
+//! Elementwise / per-row passes: layernorm, GELU, softmax, softmax-CE and
+//! the small serial helpers (bias add, column sums, residual add, argmax).
+//!
+//! The per-row passes thread over contiguous row chunks with disjoint
+//! outputs — each row's arithmetic is untouched, so results are bitwise
+//! identical at any thread count. The cross-row reductions (`col_sums`,
+//! layernorm's gain/bias gradients) accumulate rows in ascending order on
+//! the caller thread: partial-sum combining would re-associate f32
+//! addition and break the determinism contract for the O(elements) part
+//! of the work.
+
+use super::{par_row_chunks, par_row_chunks2, par_row_chunks3, workers_for, KernelCtx};
+
+/// Add a bias row to every row of `x (rows, n)`.
+pub fn add_bias(x: &mut [f32], bias: &[f32]) {
+    let n = bias.len();
+    for row in x.chunks_mut(n) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// Column sums of `x (rows, n)` -> `(n,)`. Serial by design: a cross-row
+/// reduction, kept in ascending row order.
+pub fn col_sums(x: &[f32], n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for row in x.chunks(n) {
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Elementwise sum of two equal-length vectors.
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// Saved per-row layernorm statistics for the backward pass.
+#[derive(Clone, Debug)]
+pub struct LnStats {
+    pub mu: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+/// Layernorm over the last dim: `y = (x - mu) * rstd * g + b`.
+pub fn layernorm_fwd(
+    ctx: KernelCtx,
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    d: usize,
+) -> (Vec<f32>, LnStats) {
+    let rows = x.len() / d;
+    let mut y = vec![0.0f32; x.len()];
+    let mut mu = vec![0.0f32; rows];
+    let mut rstd = vec![0.0f32; rows];
+    let threads = workers_for(ctx, x.len());
+    par_row_chunks3(threads, &mut y, d, &mut mu, 1, &mut rstd, 1, |row0, yc, muc, rsc| {
+        for i in 0..muc.len() {
+            let xr = &x[(row0 + i) * d..(row0 + i + 1) * d];
+            let m = xr.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
+            let var =
+                xr.iter().map(|&v| (v as f64 - m) * (v as f64 - m)).sum::<f64>() / d as f64;
+            let rs = 1.0 / (var + LN_EPS as f64).sqrt();
+            let (m32, rs32) = (m as f32, rs as f32);
+            let yr = &mut yc[i * d..(i + 1) * d];
+            for j in 0..d {
+                yr[j] = (xr[j] - m32) * rs32 * g[j] + b[j];
+            }
+            muc[i] = m32;
+            rsc[i] = rs32;
+        }
+    });
+    (y, LnStats { mu, rstd })
+}
+
+/// Layernorm backward. Returns `(dx, dgamma, dbeta)`. `dx` rows thread;
+/// the `dgamma`/`dbeta` row reduction stays serial (ascending rows) so
+/// the result is bitwise independent of the thread count.
+pub fn layernorm_bwd(
+    ctx: KernelCtx,
+    x: &[f32],
+    g: &[f32],
+    stats: &LnStats,
+    dy: &[f32],
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    let mut dx = vec![0.0f32; x.len()];
+    let mut dg = vec![0.0f32; d];
+    let mut db = vec![0.0f32; d];
+    let threads = workers_for(ctx, x.len());
+
+    if threads <= 1 {
+        // Fused single pass: the c1/c2 sweep doubles as the dg/db
+        // accumulation, so xhat/dxhat are computed once per element.
+        for r in 0..rows {
+            let xr = &x[r * d..(r + 1) * d];
+            let dyr = &dy[r * d..(r + 1) * d];
+            let (m, rs) = (stats.mu[r], stats.rstd[r]);
+            let mut c1 = 0.0f64; // mean(dxhat)
+            let mut c2 = 0.0f64; // mean(dxhat * xhat)
+            for j in 0..d {
+                let xhat = (xr[j] - m) * rs;
+                let dxhat = dyr[j] * g[j];
+                c1 += dxhat as f64;
+                c2 += (dxhat * xhat) as f64;
+                dg[j] += dyr[j] * xhat;
+                db[j] += dyr[j];
+            }
+            let c1 = (c1 / d as f64) as f32;
+            let c2 = (c2 / d as f64) as f32;
+            let dxr = &mut dx[r * d..(r + 1) * d];
+            for j in 0..d {
+                let xhat = (xr[j] - m) * rs;
+                let dxhat = dyr[j] * g[j];
+                dxr[j] = rs * (dxhat - c1 - xhat * c2);
+            }
+        }
+        return (dx, dg, db);
+    }
+
+    // Threaded: dx rows fan out; dg/db is a cross-row reduction, so it
+    // runs as a serial ascending-row sweep on the caller — the same order
+    // (and the same bits) as the fused pass above.
+    par_row_chunks(threads, &mut dx, d, |row0, chunk| {
+        for (i, dxr) in chunk.chunks_mut(d).enumerate() {
+            let r = row0 + i;
+            let xr = &x[r * d..(r + 1) * d];
+            let dyr = &dy[r * d..(r + 1) * d];
+            let (m, rs) = (stats.mu[r], stats.rstd[r]);
+            let mut c1 = 0.0f64; // mean(dxhat)
+            let mut c2 = 0.0f64; // mean(dxhat * xhat)
+            for j in 0..d {
+                let xhat = (xr[j] - m) * rs;
+                let dxhat = dyr[j] * g[j];
+                c1 += dxhat as f64;
+                c2 += (dxhat * xhat) as f64;
+            }
+            let c1 = (c1 / d as f64) as f32;
+            let c2 = (c2 / d as f64) as f32;
+            for j in 0..d {
+                let xhat = (xr[j] - m) * rs;
+                let dxhat = dyr[j] * g[j];
+                dxr[j] = rs * (dxhat - c1 - xhat * c2);
+            }
+        }
+    });
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let (m, rs) = (stats.mu[r], stats.rstd[r]);
+        for j in 0..d {
+            let xhat = (xr[j] - m) * rs;
+            dg[j] += dyr[j] * xhat;
+            db[j] += dyr[j];
+        }
+    }
+    (dx, dg, db)
+}
+
+const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
+const GELU_K: f32 = 0.044_715;
+
+fn gelu_one(x: f32) -> f32 {
+    let t = (GELU_C * (x + GELU_K * x * x * x)).tanh();
+    0.5 * x * (1.0 + t)
+}
+
+/// Tanh-approximation GELU (matches the JAX graphs).
+pub fn gelu_fwd(ctx: KernelCtx, u: &[f32]) -> Vec<f32> {
+    let mut out = vec![0.0f32; u.len()];
+    let threads = workers_for(ctx, u.len());
+    par_row_chunks(threads, &mut out, 1, |i0, chunk| {
+        for (o, &x) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
+            *o = gelu_one(x);
+        }
+    });
+    out
+}
+
+/// GELU backward: `du = df * gelu'(u)`.
+pub fn gelu_bwd(ctx: KernelCtx, u: &[f32], df: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(u.len(), df.len());
+    let mut out = vec![0.0f32; u.len()];
+    let threads = workers_for(ctx, u.len());
+    par_row_chunks(threads, &mut out, 1, |i0, chunk| {
+        for (i, o) in chunk.iter_mut().enumerate() {
+            let x = u[i0 + i];
+            let dy = df[i0 + i];
+            let inner = GELU_C * (x + GELU_K * x * x * x);
+            let t = inner.tanh();
+            let sech2 = 1.0 - t * t;
+            let deriv =
+                0.5 * (1.0 + t) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_K * x * x);
+            *o = dy * deriv;
+        }
+    });
+    out
+}
+
+/// In-place row softmax of `x (rows, n)`.
+pub fn softmax_rows(ctx: KernelCtx, x: &mut [f32], n: usize) {
+    let threads = workers_for(ctx, x.len());
+    par_row_chunks(threads, x, n, |_, chunk| {
+        for row in chunk.chunks_mut(n) {
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f64;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v as f64;
+            }
+            let inv = (1.0 / sum) as f32;
+            for v in row.iter_mut() {
+                *v *= inv;
+            }
+        }
+    });
+}
+
+/// Index of the row maximum (first max wins on ties; tolerant of NaN via
+/// the Equal fallback) — the shared eval accuracy rule.
+pub fn argmax_row(row: &[f32]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(j, _)| j)
+        .unwrap_or(0)
+}
+
+/// Softmax cross-entropy over `logits (rows, c)` with integer labels.
+/// Returns per-row losses and `dlogits = softmax - onehot`.
+pub fn ce_loss_and_dlogits(
+    ctx: KernelCtx,
+    logits: &[f32],
+    y: &[i32],
+    c: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    let rows = y.len();
+    debug_assert_eq!(logits.len(), rows * c);
+    let mut losses = vec![0.0f32; rows];
+    let mut dlogits = vec![0.0f32; rows * c];
+    let threads = workers_for(ctx, logits.len());
+    par_row_chunks2(threads, &mut dlogits, c, &mut losses, 1, |row0, dc, lc| {
+        for i in 0..lc.len() {
+            let r = row0 + i;
+            let lr = &logits[r * c..(r + 1) * c];
+            let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f64;
+            for &v in lr {
+                sum += ((v - mx) as f64).exp();
+            }
+            let lse = mx as f64 + sum.ln();
+            let yi = y[r] as usize;
+            lc[i] = (lse - lr[yi] as f64) as f32;
+            let dr = &mut dc[i * c..(i + 1) * c];
+            for (j, &v) in lr.iter().enumerate() {
+                dr[j] = ((v as f64 - lse).exp()) as f32;
+            }
+            dr[yi] -= 1.0;
+        }
+    });
+    (losses, dlogits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn ctx() -> KernelCtx {
+        KernelCtx::serial()
+    }
+
+    #[test]
+    fn layernorm_roundtrip_stats() {
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let (y, st) = layernorm_fwd(ctx(), &x, &g, &b, 4);
+        let mean: f32 = y.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.iter().map(|&v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+        assert_eq!(st.mu.len(), 1);
+    }
+
+    #[test]
+    fn layernorm_bwd_finite_difference() {
+        let x = [0.3f32, -1.2, 0.7, 2.1, -0.4, 0.9];
+        let g = [1.1f32, 0.9, 1.3];
+        let b = [0.1f32, -0.2, 0.0];
+        let d = 3;
+        // scalar objective: sum(y * w)
+        let w: Vec<f32> = (0..6).map(|i| 0.3 + 0.1 * i as f32).collect();
+        let (y, st) = layernorm_fwd(ctx(), &x, &g, &b, d);
+        let _ = y;
+        let (dx, dg, db) = layernorm_bwd(ctx(), &x, &g, &st, &w, d);
+        let f = |x: &[f32], g: &[f32], b: &[f32]| -> f64 {
+            let (y, _) = layernorm_fwd(ctx(), x, g, b, d);
+            y.iter().zip(&w).map(|(&a, &c)| (a * c) as f64).sum()
+        };
+        let eps = 1e-3f32;
+        for i in 0..x.len() {
+            let mut xp = x.to_vec();
+            let mut xm = x.to_vec();
+            xp[i] += eps;
+            xm[i] -= eps;
+            let fd = (f(&xp, &g, &b) - f(&xm, &g, &b)) / (2.0 * eps as f64);
+            assert!((fd - dx[i] as f64).abs() < 2e-3, "dx[{i}]: fd {fd} vs {}", dx[i]);
+        }
+        for j in 0..d {
+            let mut gp = g.to_vec();
+            let mut gm = g.to_vec();
+            gp[j] += eps;
+            gm[j] -= eps;
+            let fd = (f(&x, &gp, &b) - f(&x, &gm, &b)) / (2.0 * eps as f64);
+            assert!((fd - dg[j] as f64).abs() < 2e-3, "dg[{j}]");
+            let mut bp = b.to_vec();
+            let mut bm = b.to_vec();
+            bp[j] += eps;
+            bm[j] -= eps;
+            let fd = (f(&x, &g, &bp) - f(&x, &g, &bm)) / (2.0 * eps as f64);
+            assert!((fd - db[j] as f64).abs() < 2e-3, "db[{j}]");
+        }
+    }
+
+    #[test]
+    fn gelu_bwd_finite_difference() {
+        let u = [-2.0f32, -0.5, 0.0, 0.3, 1.7];
+        let df = [1.0f32; 5];
+        let du = gelu_bwd(ctx(), &u, &df);
+        let eps = 1e-3f32;
+        for i in 0..u.len() {
+            let fp = gelu_fwd(ctx(), &[u[i] + eps])[0] as f64;
+            let fm = gelu_fwd(ctx(), &[u[i] - eps])[0] as f64;
+            let fd = (fp - fm) / (2.0 * eps as f64);
+            assert!((fd - du[i] as f64).abs() < 1e-3, "gelu'[{i}] fd {fd} vs {}", du[i]);
+        }
+    }
+
+    #[test]
+    fn ce_matches_manual_and_grad_sums_to_zero() {
+        let logits = [1.0f32, 2.0, 0.5, -1.0, 0.0, 3.0];
+        let y = [1i32, 2];
+        let (losses, dl) = ce_loss_and_dlogits(ctx(), &logits, &y, 3);
+        // row 0: lse = ln(e^1 + e^2 + e^0.5)
+        let lse = ((1.0f64).exp() + (2.0f64).exp() + (0.5f64).exp()).ln();
+        assert!((losses[0] as f64 - (lse - 2.0)).abs() < 1e-5);
+        for i in 0..2 {
+            let s: f32 = dl[i * 3..(i + 1) * 3].iter().sum();
+            assert!(s.abs() < 1e-5, "dlogits rows must sum to 0");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_normalizes() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(ctx(), &mut x, 3);
+        for row in x.chunks(3) {
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(row[2] > row[1] && row[1] > row[0]);
+        }
+    }
+
+    /// All threaded per-row passes must be bitwise invariant to the thread
+    /// count on inputs large enough to cross the parallel work gate.
+    #[test]
+    fn elementwise_passes_thread_invariant_bitwise() {
+        let d = 64;
+        let rows = super::super::PAR_MIN_WORK / d + 3; // crosses the gate
+        let mut rng = Pcg32::new(0xE1E, 0xE1E);
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..rows).map(|_| rng.below(d as u64) as i32).collect();
+
+        let serial = KernelCtx::serial();
+        let (y1, st1) = layernorm_fwd(serial, &x, &g, &b, d);
+        let (dx1, dg1, db1) = layernorm_bwd(serial, &x, &g, &st1, &dy, d);
+        let gf1 = gelu_fwd(serial, &x);
+        let gb1 = gelu_bwd(serial, &x, &dy);
+        let (l1, dl1) = ce_loss_and_dlogits(serial, &x, &y, d);
+        let mut sm1 = x.clone();
+        softmax_rows(serial, &mut sm1, d);
+
+        for threads in [2usize, 4] {
+            let tctx = KernelCtx::new(threads);
+            let (yt, stt) = layernorm_fwd(tctx, &x, &g, &b, d);
+            assert_eq!(y1, yt, "ln fwd y diverges at {threads} threads");
+            assert_eq!(st1.mu, stt.mu);
+            assert_eq!(st1.rstd, stt.rstd);
+            let (dxt, dgt, dbt) = layernorm_bwd(tctx, &x, &g, &stt, &dy, d);
+            assert_eq!(dx1, dxt, "ln bwd dx diverges at {threads} threads");
+            assert_eq!(dg1, dgt, "ln bwd dgamma diverges at {threads} threads");
+            assert_eq!(db1, dbt);
+            assert_eq!(gf1, gelu_fwd(tctx, &x));
+            assert_eq!(gb1, gelu_bwd(tctx, &x, &dy));
+            let (lt, dlt) = ce_loss_and_dlogits(tctx, &x, &y, d);
+            assert_eq!(l1, lt, "ce losses diverge at {threads} threads");
+            assert_eq!(dl1, dlt, "ce dlogits diverge at {threads} threads");
+            let mut smt = x.clone();
+            softmax_rows(tctx, &mut smt, d);
+            assert_eq!(sm1, smt, "softmax diverges at {threads} threads");
+        }
+    }
+}

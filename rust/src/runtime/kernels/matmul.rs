@@ -1,0 +1,556 @@
+//! Matmul kernels in the three transposition layouts the models need,
+//! planned, cache-blocked and threaded.
+//!
+//! [`MatmulPlan`] partitions output rows across scoped worker threads
+//! (disjoint `&mut` tiles, no synchronisation) and tiles the inner loops
+//! so the streamed panel stays cache-resident. Accumulation order per
+//! output element is exactly the [`reference`] loop's ascending
+//! contraction order, which is what makes the blocked/threaded kernels
+//! bitwise-identical to the naive serial reference at any thread count.
+//!
+//! The zero-skip that makes SampleA/SampleW drops free is preserved: a
+//! left-hand element (NN) or weighted row (TN) that is exactly 0.0 is
+//! skipped inside every tile, so dropped rows cost nothing on any path.
+
+use super::{par_row_chunks, workers_for, KernelCtx};
+
+/// Contraction-dimension tile: rows of the `b` panel processed per pass.
+const KC: usize = 64;
+/// Output-column tile: the hot `b` panel is `KC x NC` floats (~32 KiB).
+const NC: usize = 128;
+
+/// Transposition layout of a planned matmul.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// `a (m,k) @ b (k,n) -> (m,n)`.
+    Nn,
+    /// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)` (row-dot-row).
+    Nt,
+    /// `a^T [diag(w)] b` with `a (k,m)`, `b (k,n)` -> `(m,n)`; the
+    /// contraction runs over the `k` leading rows.
+    Tn,
+}
+
+/// A planned matmul: layout, dims and the worker count that will execute
+/// it. Output rows are partitioned across workers; each worker runs the
+/// blocked inner loops over its own disjoint output tile.
+#[derive(Clone, Copy, Debug)]
+pub struct MatmulPlan {
+    pub layout: Layout,
+    /// Output rows (for [`Layout::Tn`]: columns of the transposed left
+    /// operand).
+    pub m: usize,
+    /// Contraction length (for [`Layout::Tn`]: the shared leading row
+    /// count `r`).
+    pub k: usize,
+    /// Output columns.
+    pub n: usize,
+    /// Workers this plan fans out to (1 = inline serial).
+    pub threads: usize,
+}
+
+impl MatmulPlan {
+    /// Plan under a context, with the work-size gate: products below
+    /// [`super::PAR_MIN_WORK`] fused multiply-adds stay serial so the
+    /// fork/join cost never dominates. Same bits either way.
+    pub fn new(layout: Layout, m: usize, k: usize, n: usize, ctx: KernelCtx) -> MatmulPlan {
+        MatmulPlan::with_threads(layout, m, k, n, workers_for(ctx, m * k * n))
+    }
+
+    /// Plan with an explicit worker count (clamped to the output row
+    /// count), bypassing the work-size gate — the property tests use this
+    /// to drive the parallel path on small inputs.
+    pub fn with_threads(
+        layout: Layout,
+        m: usize,
+        k: usize,
+        n: usize,
+        threads: usize,
+    ) -> MatmulPlan {
+        MatmulPlan { layout, m, k, n, threads: threads.clamp(1, m.max(1)) }
+    }
+
+    /// Execute the plan. For [`Layout::Tn`] this is the unweighted
+    /// contraction; use [`MatmulPlan::run_weighted`] for `a^T diag(w) b`.
+    pub fn run(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        match self.layout {
+            Layout::Nn => self.run_nn(a, b),
+            Layout::Nt => self.run_nt(a, b),
+            Layout::Tn => self.run_weighted(a, b, None),
+        }
+    }
+
+    fn run_nn(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let (m, k, n) = (self.m, self.k, self.n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * n];
+        par_row_chunks(self.threads, &mut out, n.max(1), |row0, chunk| {
+            nn_tile(a, b, k, n, row0, chunk);
+        });
+        out
+    }
+
+    fn run_nt(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let (m, k, n) = (self.m, self.k, self.n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = vec![0.0f32; m * n];
+        par_row_chunks(self.threads, &mut out, n.max(1), |row0, chunk| {
+            nt_tile(a, b, k, n, row0, chunk);
+        });
+        out
+    }
+
+    /// `a^T diag(w) b` over the plan's [`Layout::Tn`] dims; rows with
+    /// `w == 0` are skipped entirely (the SampleW contraction: dropped
+    /// token rows cost nothing). `w = None` is the dense path — no
+    /// per-element weight multiply or extra branch.
+    pub fn run_weighted(&self, a: &[f32], b: &[f32], w: Option<&[f32]>) -> Vec<f32> {
+        assert!(
+            matches!(self.layout, Layout::Tn),
+            "run_weighted needs a TN plan, got {:?}",
+            self.layout
+        );
+        let (m, r, n) = (self.m, self.k, self.n);
+        debug_assert_eq!(a.len(), r * m);
+        debug_assert_eq!(b.len(), r * n);
+        let mut out = vec![0.0f32; m * n];
+        par_row_chunks(self.threads, &mut out, n.max(1), |c0, chunk| {
+            tn_tile(a, b, w, r, m, n, c0, chunk);
+        });
+        out
+    }
+}
+
+/// NN worker body: rows `row0..` of the output. The `KC x NC` panel of
+/// `b` is reused across every row of the tile before moving on; for a
+/// fixed output element the contraction index still runs strictly
+/// ascending (tiles ascending, `p` ascending inside each), so the result
+/// is bitwise the naive loop's.
+fn nn_tile(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    let mut p0 = 0;
+    while p0 < k {
+        let p1 = (p0 + KC).min(k);
+        let mut j0 = 0;
+        while j0 < n {
+            let j1 = (j0 + NC).min(n);
+            for i in 0..rows {
+                let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+                let orow = &mut out[i * n + j0..i * n + j1];
+                for p in p0..p1 {
+                    let av = arow[p];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &b[p * n + j0..p * n + j1];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += av * bv;
+                    }
+                }
+            }
+            j0 = j1;
+        }
+        p0 = p1;
+    }
+}
+
+/// NT worker body: row-dot-row is already the cache-friendly layout (both
+/// operands stream contiguously), so the inner loop is the reference dot
+/// with a single ascending accumulator.
+fn nt_tile(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..(row0 + i) * k + k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *o = acc;
+        }
+    }
+}
+
+/// TN worker body: output rows `c0..c0+cols` (columns of `a`). Column
+/// tiles keep the accumulating output panel resident while the `r` rows
+/// stream past; per element the row index runs ascending exactly as in
+/// the reference. The dense path tests only `av == 0.0` — the weight test
+/// is hoisted to the row level, so no per-multiply weight branch.
+#[allow(clippy::too_many_arguments)]
+fn tn_tile(
+    a: &[f32],
+    b: &[f32],
+    w: Option<&[f32]>,
+    r: usize,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let cols = out.len() / n;
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + NC).min(n);
+        match w {
+            None => {
+                for row in 0..r {
+                    let arow = &a[row * m + c0..row * m + c0 + cols];
+                    let brow = &b[row * n + j0..row * n + j1];
+                    for (p, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut out[p * n + j0..p * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += av * bv;
+                        }
+                    }
+                }
+            }
+            Some(w) => {
+                for row in 0..r {
+                    let wv = w[row];
+                    if wv == 0.0 {
+                        continue;
+                    }
+                    let arow = &a[row * m + c0..row * m + c0 + cols];
+                    let brow = &b[row * n + j0..row * n + j1];
+                    for (p, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue;
+                        }
+                        let avw = av * wv;
+                        let orow = &mut out[p * n + j0..p * n + j1];
+                        for (o, &bv) in orow.iter_mut().zip(brow) {
+                            *o += avw * bv;
+                        }
+                    }
+                }
+            }
+        }
+        j0 = j1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Functional entry points (what the models call).
+// ---------------------------------------------------------------------------
+
+/// `a (m,k) @ b (k,n) -> (m,n)`.
+pub fn matmul(ctx: KernelCtx, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    MatmulPlan::new(Layout::Nn, m, k, n, ctx).run(a, b)
+}
+
+/// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)`.
+pub fn matmul_nt(ctx: KernelCtx, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    MatmulPlan::new(Layout::Nt, m, k, n, ctx).run(a, b)
+}
+
+/// `a^T @ b` with `a (r,m)`, `b (r,n)` -> `(m,n)`.
+pub fn matmul_tn(ctx: KernelCtx, a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+    weighted_tn(ctx, a, b, None, r, m, n)
+}
+
+/// `a^T diag(w) b` -> `(m,n)`; rows with `w == 0` are skipped entirely.
+pub fn weighted_tn(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    w: Option<&[f32]>,
+    r: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    MatmulPlan::new(Layout::Tn, m, r, n, ctx).run_weighted(a, b, w)
+}
+
+// ---------------------------------------------------------------------------
+// Naive reference.
+// ---------------------------------------------------------------------------
+
+/// The original naive single-threaded triple loops — the bitwise ground
+/// truth the property tests compare against, and the baseline the
+/// `perf_micro` bench charges speedups to.
+pub mod reference {
+    /// `a (m,k) @ b (k,n) -> (m,n)`.
+    pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+        out
+    }
+
+    /// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)`.
+    pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (j, o) in orow.iter_mut().enumerate() {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for (&av, &bv) in arow.iter().zip(brow) {
+                    acc += av * bv;
+                }
+                *o = acc;
+            }
+        }
+        out
+    }
+
+    /// `a^T @ b` with `a (r,m)`, `b (r,n)` -> `(m,n)`.
+    pub fn matmul_tn(a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
+        weighted_tn(a, b, None, r, m, n)
+    }
+
+    /// `a^T diag(w) b` -> `(m,n)` with the same skip semantics as the
+    /// planned kernel: zero-weight rows and zero left elements contribute
+    /// nothing, and the dense path never multiplies by a weight.
+    pub fn weighted_tn(
+        a: &[f32],
+        b: &[f32],
+        w: Option<&[f32]>,
+        r: usize,
+        m: usize,
+        n: usize,
+    ) -> Vec<f32> {
+        debug_assert_eq!(a.len(), r * m);
+        debug_assert_eq!(b.len(), r * n);
+        let mut out = vec![0.0f32; m * n];
+        for row in 0..r {
+            let wv = w.map_or(1.0, |w| w[row]);
+            if wv == 0.0 {
+                continue;
+            }
+            let arow = &a[row * m..(row + 1) * m];
+            let brow = &b[row * n..(row + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let avw = if w.is_some() { av * wv } else { av };
+                let orow = &mut out[p * n..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += avw * bv;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    fn bitwise_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Random matrix with exact-zero entries sprinkled in, exercising the
+    /// zero-skip branches the samplers rely on.
+    fn sparse_normal(g: &mut Gen, len: usize) -> Vec<f32> {
+        let mut v = g.vec_normal(len, 1.0);
+        for x in v.iter_mut() {
+            if g.bool() && g.bool() {
+                *x = 0.0;
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn matmul_layouts_agree_on_known_values() {
+        let ctx = KernelCtx::serial();
+        // a (2,3), b (3,2)
+        let a = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let b = [1.0, 0.5, -1.0, 2.0, 0.0, 1.0];
+        let ab = matmul(ctx, &a, &b, 2, 3, 2);
+        assert_eq!(ab, vec![-1.0, 7.5, -1.0, 18.0]);
+        // a @ b == a @ (b^T)^T via matmul_nt with bt (2,3)
+        let bt = [1.0, -1.0, 0.0, 0.5, 2.0, 1.0];
+        assert_eq!(matmul_nt(ctx, &a, &bt, 2, 3, 2), ab);
+        // a^T @ a is symmetric with the right diagonal
+        let ata = matmul_tn(ctx, &a, &a, 2, 3, 3);
+        assert_eq!(ata[0], 1.0 + 16.0);
+        assert_eq!(ata[1], ata[3]);
+    }
+
+    #[test]
+    fn weighted_tn_skips_zero_rows() {
+        let ctx = KernelCtx::serial();
+        let a = [1.0, 2.0, 3.0, 4.0]; // (2,2)
+        let b = [5.0, 6.0, 7.0, 8.0]; // (2,2)
+        let w = [0.0, 2.0];
+        let out = weighted_tn(ctx, &a, &b, Some(&w), 2, 2, 2);
+        assert_eq!(out, vec![3.0 * 2.0 * 7.0, 3.0 * 2.0 * 8.0, 4.0 * 2.0 * 7.0, 4.0 * 2.0 * 8.0]);
+    }
+
+    #[test]
+    fn blocked_parallel_nn_bitwise_matches_naive_property() {
+        check("NN plan == naive bitwise at 1/2/4 threads", 96, |g: &mut Gen| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 160); // crosses the KC=64 tile boundary
+            let n = g.usize_in(1, 150); // crosses the NC=128 tile boundary
+            let a = sparse_normal(g, m * k);
+            let b = g.vec_normal(k * n, 1.0);
+            let want = reference::matmul(&a, &b, m, k, n);
+            for threads in [1usize, 2, 4] {
+                let got = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads).run(&a, &b);
+                ensure(
+                    bitwise_eq(&got, &want),
+                    format!("NN {m}x{k}x{n} diverges at {threads} threads"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn parallel_nt_bitwise_matches_naive_property() {
+        check("NT plan == naive bitwise at 1/2/4 threads", 96, |g: &mut Gen| {
+            let m = g.usize_in(1, 40);
+            let k = g.usize_in(1, 48);
+            let n = g.usize_in(1, 40);
+            let a = sparse_normal(g, m * k);
+            let b = g.vec_normal(n * k, 1.0);
+            let want = reference::matmul_nt(&a, &b, m, k, n);
+            for threads in [1usize, 2, 4] {
+                let got = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads).run(&a, &b);
+                ensure(
+                    bitwise_eq(&got, &want),
+                    format!("NT {m}x{k}x{n} diverges at {threads} threads"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn blocked_parallel_tn_bitwise_matches_naive_property() {
+        check("TN plan == naive bitwise at 1/2/4 threads", 96, |g: &mut Gen| {
+            let r = g.usize_in(1, 48);
+            let m = g.usize_in(1, 40);
+            let n = g.usize_in(1, 150); // crosses the NC tile boundary
+            let a = sparse_normal(g, r * m);
+            let b = g.vec_normal(r * n, 1.0);
+            // weights mix kept (1/p-style), dropped (0) and unit rows
+            let w: Vec<f32> = (0..r)
+                .map(|_| match g.usize_in(0, 3) {
+                    0 => 0.0,
+                    1 => 1.0,
+                    _ => g.f32_in(0.5, 3.0),
+                })
+                .collect();
+            for wopt in [None, Some(&w[..])] {
+                let want = reference::weighted_tn(&a, &b, wopt, r, m, n);
+                for threads in [1usize, 2, 4] {
+                    let got = MatmulPlan::with_threads(Layout::Tn, m, r, n, threads)
+                        .run_weighted(&a, &b, wopt);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!(
+                            "TN {r}x{m}x{n} (w={}) diverges at {threads} threads",
+                            wopt.is_some()
+                        ),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_tn_equals_dense_weighted_tn_bitwise() {
+        // The satellite micro-assert: the unweighted contraction and the
+        // dense (w = None) weighted path must never drift apart.
+        check("matmul_tn == weighted_tn(None) bitwise", 64, |g: &mut Gen| {
+            let r = g.usize_in(1, 32);
+            let m = g.usize_in(1, 24);
+            let n = g.usize_in(1, 24);
+            let a = sparse_normal(g, r * m);
+            let b = g.vec_normal(r * n, 1.0);
+            for threads in [1usize, 4] {
+                let ctx = KernelCtx::new(threads);
+                let plain = matmul_tn(ctx, &a, &b, r, m, n);
+                let dense = weighted_tn(ctx, &a, &b, None, r, m, n);
+                ensure(bitwise_eq(&plain, &dense), "tn vs dense weighted tn drifted")?;
+            }
+            let rp = reference::matmul_tn(&a, &b, r, m, n);
+            let rd = reference::weighted_tn(&a, &b, None, r, m, n);
+            ensure(bitwise_eq(&rp, &rd), "reference tn vs dense weighted tn drifted")
+        });
+    }
+
+    #[test]
+    fn unit_weights_match_dense_path_bitwise() {
+        // w = all-ones must equal the dense path: ratio-1 SampleW masks
+        // are exactly 1.0 and must not perturb a single bit.
+        check("weighted_tn(ones) == weighted_tn(None)", 64, |g: &mut Gen| {
+            let r = g.usize_in(1, 24);
+            let m = g.usize_in(1, 16);
+            let n = g.usize_in(1, 16);
+            let a = sparse_normal(g, r * m);
+            let b = g.vec_normal(r * n, 1.0);
+            let ones = vec![1.0f32; r];
+            let ctx = KernelCtx::new(2);
+            let with_ones = weighted_tn(ctx, &a, &b, Some(&ones), r, m, n);
+            let dense = weighted_tn(ctx, &a, &b, None, r, m, n);
+            ensure(bitwise_eq(&with_ones, &dense), "unit weights perturbed the contraction")
+        });
+    }
+
+    #[test]
+    fn work_gate_keeps_small_products_serial() {
+        let ctx = KernelCtx::new(8);
+        assert_eq!(MatmulPlan::new(Layout::Nn, 8, 8, 8, ctx).threads, 1);
+        let big = MatmulPlan::new(Layout::Nn, 256, 64, 64, ctx);
+        assert_eq!(big.threads, 8);
+        // explicit thread counts clamp to the row count
+        assert_eq!(MatmulPlan::with_threads(Layout::Nn, 3, 64, 64, 8).threads, 3);
+    }
+
+    #[test]
+    fn degenerate_dims_are_empty_or_zero() {
+        let ctx = KernelCtx::new(4);
+        // m = 0 / n = 0: empty outputs
+        assert!(matmul(ctx, &[], &[0.0; 15], 0, 5, 3).is_empty());
+        assert!(matmul(ctx, &[0.0; 4], &[], 2, 2, 0).is_empty());
+        // k = 0 (r = 0 for TN): well-defined all-zeros output
+        let out = matmul(ctx, &[], &[], 3, 0, 2);
+        assert_eq!(out, vec![0.0; 6]);
+        let out = matmul_nt(ctx, &[], &[], 2, 0, 3);
+        assert_eq!(out, vec![0.0; 6]);
+        let out = weighted_tn(ctx, &[], &[], None, 0, 2, 3);
+        assert_eq!(out, vec![0.0; 6]);
+    }
+}

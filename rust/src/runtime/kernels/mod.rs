@@ -1,0 +1,285 @@
+//! The threaded kernel layer: cache-blocked matmul plans and threaded
+//! elementwise passes shared by every native model, parallelised with
+//! scoped `std::thread` workers over disjoint output tiles — still zero
+//! dependencies.
+//!
+//! # Determinism contract
+//!
+//! Every kernel assigns each output element to exactly one worker and
+//! preserves the single-threaded per-element accumulation order (f32
+//! addition is never re-associated), so results are **bitwise identical to
+//! the naive serial reference at any thread count**. Changing `--threads`
+//! changes wall-clock, never results. Reductions that cross the partition
+//! dimension (bias/column sums, layernorm gain/bias grads, embedding
+//! scatters) stay serial to keep that guarantee — they are O(elements)
+//! next to the O(elements x width) passes that dominate.
+//!
+//! The SampleA/SampleW zero-row skipping survives inside every tile:
+//! dropped rows still cost nothing, so sampling reduces wall-clock on the
+//! threaded path exactly as it reduces counted FLOPs.
+//!
+//! # Work gating
+//!
+//! A scoped fork/join costs tens of microseconds; [`workers_for`] keeps
+//! kernels inline below [`PAR_MIN_WORK`] fused ops so the miniature test
+//! models never pay spawn overhead for microsecond loops. Because serial
+//! and threaded execution produce the same bits, the gate affects timing
+//! only.
+
+mod elementwise;
+mod matmul;
+
+pub use elementwise::{
+    add, add_bias, argmax_row, ce_loss_and_dlogits, col_sums, gelu_bwd, gelu_fwd,
+    layernorm_bwd, layernorm_fwd, softmax_rows, LnStats, LN_EPS,
+};
+pub use matmul::{matmul, matmul_nt, matmul_tn, reference, weighted_tn, Layout, MatmulPlan};
+
+/// Immutable execution context handed down to every kernel: how many
+/// scoped worker threads a call may fan out to (1 = fully serial).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelCtx {
+    threads: usize,
+}
+
+impl KernelCtx {
+    /// Context with the given worker budget (clamped to >= 1).
+    pub fn new(threads: usize) -> KernelCtx {
+        KernelCtx { threads: threads.max(1) }
+    }
+
+    /// Single-threaded context — the bitwise reference execution.
+    pub fn serial() -> KernelCtx {
+        KernelCtx::new(1)
+    }
+
+    pub fn threads(self) -> usize {
+        self.threads
+    }
+}
+
+impl Default for KernelCtx {
+    fn default() -> Self {
+        KernelCtx::serial()
+    }
+}
+
+/// Minimum per-call work (fused multiply-adds for matmuls, elements for
+/// elementwise passes) before the scoped-thread fork/join cost amortises.
+/// Below this every kernel runs inline on the caller thread — same bits,
+/// no spawn overhead.
+pub const PAR_MIN_WORK: usize = 1 << 18;
+
+/// Worker count a kernel should use for `work` fused ops under `ctx`.
+pub fn workers_for(ctx: KernelCtx, work: usize) -> usize {
+    if work < PAR_MIN_WORK {
+        1
+    } else {
+        ctx.threads()
+    }
+}
+
+/// Default kernel thread count: `VCAS_THREADS` when set (clamped to >= 1),
+/// else `std::thread::available_parallelism()`.
+pub fn default_threads() -> usize {
+    match std::env::var("VCAS_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) => n.max(1),
+        None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Run `f(first_row, chunk)` over per-worker contiguous row chunks of
+/// `out`. The caller thread takes the first chunk itself and the rest go
+/// to scoped threads, so `parts` workers cost `parts - 1` spawns and no
+/// core sits idle. Chunks are disjoint and `f` sees the same rows it
+/// would in a serial sweep, so threading cannot change any output
+/// element's value or accumulation order.
+pub fn par_row_chunks<F>(threads: usize, out: &mut [f32], row_len: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    debug_assert!(row_len > 0 && out.len() % row_len == 0);
+    let rows = out.len() / row_len;
+    let parts = threads.min(rows);
+    if parts <= 1 {
+        f(0, out);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(parts);
+    let (first, rest) = out.split_at_mut(chunk_rows * row_len);
+    std::thread::scope(|s| {
+        for (ci, chunk) in rest.chunks_mut(chunk_rows * row_len).enumerate() {
+            let f = &f;
+            s.spawn(move || f((ci + 1) * chunk_rows, chunk));
+        }
+        f(0, first);
+    });
+}
+
+/// Two-output variant of [`par_row_chunks`]: both buffers are chunked at
+/// the same row boundaries (`a` has `la` floats per row, `b` has `lb`).
+pub fn par_row_chunks2<F>(
+    threads: usize,
+    a: &mut [f32],
+    la: usize,
+    b: &mut [f32],
+    lb: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert!(la > 0 && lb > 0 && a.len() % la == 0);
+    let rows = a.len() / la;
+    debug_assert_eq!(rows, b.len() / lb);
+    let parts = threads.min(rows);
+    if parts <= 1 {
+        f(0, a, b);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(parts);
+    let (fa, ra) = a.split_at_mut(chunk_rows * la);
+    let (fb, rb) = b.split_at_mut(chunk_rows * lb);
+    std::thread::scope(|s| {
+        for (ci, (ca, cb)) in ra
+            .chunks_mut(chunk_rows * la)
+            .zip(rb.chunks_mut(chunk_rows * lb))
+            .enumerate()
+        {
+            let f = &f;
+            s.spawn(move || f((ci + 1) * chunk_rows, ca, cb));
+        }
+        f(0, fa, fb);
+    });
+}
+
+/// Three-output variant of [`par_row_chunks`] (layernorm forward writes
+/// the normalised rows plus two per-row statistics).
+#[allow(clippy::too_many_arguments)]
+pub fn par_row_chunks3<F>(
+    threads: usize,
+    a: &mut [f32],
+    la: usize,
+    b: &mut [f32],
+    lb: usize,
+    c: &mut [f32],
+    lc: usize,
+    f: F,
+) where
+    F: Fn(usize, &mut [f32], &mut [f32], &mut [f32]) + Sync,
+{
+    debug_assert!(la > 0 && lb > 0 && lc > 0 && a.len() % la == 0);
+    let rows = a.len() / la;
+    debug_assert_eq!(rows, b.len() / lb);
+    debug_assert_eq!(rows, c.len() / lc);
+    let parts = threads.min(rows);
+    if parts <= 1 {
+        f(0, a, b, c);
+        return;
+    }
+    let chunk_rows = rows.div_ceil(parts);
+    let (fa, ra) = a.split_at_mut(chunk_rows * la);
+    let (fb, rb) = b.split_at_mut(chunk_rows * lb);
+    let (fc, rc) = c.split_at_mut(chunk_rows * lc);
+    std::thread::scope(|s| {
+        for (ci, ((ca, cb), cc)) in ra
+            .chunks_mut(chunk_rows * la)
+            .zip(rb.chunks_mut(chunk_rows * lb))
+            .zip(rc.chunks_mut(chunk_rows * lc))
+            .enumerate()
+        {
+            let f = &f;
+            s.spawn(move || f((ci + 1) * chunk_rows, ca, cb, cc));
+        }
+        f(0, fa, fb, fc);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctx_clamps_and_defaults() {
+        assert_eq!(KernelCtx::new(0).threads(), 1);
+        assert_eq!(KernelCtx::new(8).threads(), 8);
+        assert_eq!(KernelCtx::default(), KernelCtx::serial());
+        assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn workers_gate_small_problems() {
+        let ctx = KernelCtx::new(4);
+        assert_eq!(workers_for(ctx, PAR_MIN_WORK - 1), 1);
+        assert_eq!(workers_for(ctx, PAR_MIN_WORK), 4);
+        assert_eq!(workers_for(KernelCtx::serial(), usize::MAX), 1);
+    }
+
+    #[test]
+    fn par_row_chunks_covers_every_row_once() {
+        for threads in [1usize, 2, 3, 4, 7] {
+            for rows in [0usize, 1, 2, 5, 16, 33] {
+                let row_len = 3;
+                let mut out = vec![0.0f32; rows * row_len];
+                par_row_chunks(threads, &mut out, row_len, |row0, chunk| {
+                    for (i, row) in chunk.chunks_mut(row_len).enumerate() {
+                        for v in row.iter_mut() {
+                            *v += (row0 + i) as f32 + 1.0;
+                        }
+                    }
+                });
+                for r in 0..rows {
+                    for j in 0..row_len {
+                        assert_eq!(out[r * row_len + j], r as f32 + 1.0, "t={threads} r={r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_chunks2_keeps_buffers_aligned() {
+        let rows = 13;
+        let (la, lb) = (4, 2);
+        for threads in [1usize, 2, 5] {
+            let mut a = vec![0.0f32; rows * la];
+            let mut b = vec![0.0f32; rows * lb];
+            par_row_chunks2(threads, &mut a, la, &mut b, lb, |row0, ca, cb| {
+                let n = ca.len() / la;
+                assert_eq!(n, cb.len() / lb);
+                for i in 0..n {
+                    ca[i * la] = (row0 + i) as f32;
+                    cb[i * lb] = (row0 + i) as f32;
+                }
+            });
+            for r in 0..rows {
+                assert_eq!(a[r * la], r as f32);
+                assert_eq!(b[r * lb], r as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn par_row_chunks3_keeps_buffers_aligned() {
+        let rows = 9;
+        for threads in [1usize, 4] {
+            let mut a = vec![0.0f32; rows * 2];
+            let mut b = vec![0.0f32; rows];
+            let mut c = vec![0.0f32; rows];
+            par_row_chunks3(threads, &mut a, 2, &mut b, 1, &mut c, 1, |row0, ca, cb, cc| {
+                for i in 0..cb.len() {
+                    ca[i * 2 + 1] = (row0 + i) as f32;
+                    cb[i] = (row0 + i) as f32;
+                    cc[i] = -((row0 + i) as f32);
+                }
+            });
+            for r in 0..rows {
+                assert_eq!(a[r * 2 + 1], r as f32);
+                assert_eq!(b[r], r as f32);
+                assert_eq!(c[r], -(r as f32));
+            }
+        }
+    }
+}

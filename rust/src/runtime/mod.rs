@@ -1,6 +1,6 @@
-//! Execution runtime: the [`Backend`] trait, the pure-Rust
-//! [`NativeBackend`], the artifact manifest, and (behind the `xla`
-//! feature) the PJRT engine + `XlaBackend`.
+//! Execution runtime: the [`Backend`] trait, the threaded [`kernels`]
+//! layer, the pure-Rust [`NativeBackend`], the artifact manifest, and
+//! (behind the `xla` feature) the PJRT engine + `XlaBackend`.
 //!
 //! The coordinator is written against `&dyn Backend`; use
 //! [`default_backend`] to get the best available implementation — XLA when
@@ -10,6 +10,7 @@ mod backend;
 mod manifest;
 mod session;
 
+pub mod kernels;
 pub mod native;
 
 #[cfg(feature = "xla")]
@@ -18,6 +19,7 @@ mod engine;
 mod xla;
 
 pub use backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
+pub use kernels::{default_threads, KernelCtx, MatmulPlan};
 pub use manifest::{EntrySpec, Manifest, ModelManifest};
 pub use native::{CnnCfg, NativeBackend, TransformerCfg};
 pub use session::ModelSession;
@@ -33,8 +35,18 @@ use std::path::Path;
 
 /// Best available backend: `XlaBackend` when built with the `xla` feature
 /// and `artifacts/manifest.json` exists (and loads), otherwise the
-/// hermetic [`NativeBackend`] with its default model zoo.
+/// hermetic [`NativeBackend`] with its default model zoo. Native kernel
+/// threads come from [`default_threads`] (`VCAS_THREADS` env when set,
+/// else `available_parallelism()`).
 pub fn default_backend(artifacts: &Path) -> Box<dyn Backend> {
+    default_backend_with_threads(artifacts, default_threads())
+}
+
+/// [`default_backend`] with an explicit kernel thread count (the CLI
+/// `--threads` / config `[train] threads` knob). Only the native backend
+/// consumes it — the PJRT path parallelises inside XLA. Results are
+/// bitwise identical at any thread count.
+pub fn default_backend_with_threads(artifacts: &Path, threads: usize) -> Box<dyn Backend> {
     #[cfg(feature = "xla")]
     {
         if artifacts.join("manifest.json").exists() {
@@ -47,5 +59,5 @@ pub fn default_backend(artifacts: &Path) -> Box<dyn Backend> {
         }
     }
     let _ = artifacts;
-    Box::new(NativeBackend::with_default_models())
+    Box::new(NativeBackend::with_default_models().with_threads(threads))
 }

@@ -2,15 +2,22 @@
 //! `python/compile/cnn.py`: stages of [conv3x3 SAME, relu] x2 + maxpool2,
 //! a linear classifier head, and *activation-only* VCAS — SampleA between
 //! stage backwards, no SampleW (the paper's sampler is linear-specific).
+//!
+//! Convolutions thread over batch samples (each worker owns a contiguous
+//! slice of samples and their disjoint output rows); the weight-gradient
+//! reduction crosses samples and therefore stays serial in ascending
+//! sample order, keeping results bitwise independent of the thread count
+//! (see `runtime::kernels` for the determinism contract).
 
 use crate::error::{ensure, Result};
 use crate::formats::params::{ParamSet, Tensor};
 use crate::runtime::backend::{CnnGradOut, ModelInfo, ModelKind};
+use crate::runtime::kernels::{
+    add_bias, argmax_row, ce_loss_and_dlogits, col_sums, matmul, matmul_nt, par_row_chunks,
+    weighted_tn, workers_for, KernelCtx,
+};
 use crate::util::rng::Pcg32;
 
-use super::math::{
-    add_bias, argmax_row, ce_loss_and_dlogits, col_sums, matmul, matmul_nt, weighted_tn,
-};
 use super::sampling::sample_rows;
 
 /// Static architecture config of a native CNN.
@@ -109,7 +116,9 @@ impl CnnCfg {
 // Conv / pool primitives (NHWC activations, HWIO weights, SAME padding).
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 fn conv3x3_fwd(
+    kctx: KernelCtx,
     x: &[f32],
     n: usize,
     side: usize,
@@ -118,47 +127,57 @@ fn conv3x3_fwd(
     b: &[f32],
     cout: usize,
 ) -> Vec<f32> {
-    let mut y = vec![0.0f32; n * side * side * cout];
-    for ni in 0..n {
-        for oy in 0..side {
-            for ox in 0..side {
-                let yrow_base = ((ni * side + oy) * side + ox) * cout;
-                for ky in 0..3usize {
-                    let iy = (oy + ky).wrapping_sub(1);
-                    if iy >= side {
-                        continue;
-                    }
-                    for kx in 0..3usize {
-                        let ix = (ox + kx).wrapping_sub(1);
-                        if ix >= side {
+    let sample_len = side * side * cout;
+    let mut y = vec![0.0f32; n * sample_len];
+    let threads = workers_for(kctx, 2 * n * side * side * 9 * cin * cout);
+    par_row_chunks(threads, &mut y, sample_len, |n0, chunk| {
+        for li in 0..chunk.len() / sample_len {
+            let ni = n0 + li;
+            for oy in 0..side {
+                for ox in 0..side {
+                    let yrow_base = ((li * side + oy) * side + ox) * cout;
+                    for ky in 0..3usize {
+                        let iy = (oy + ky).wrapping_sub(1);
+                        if iy >= side {
                             continue;
                         }
-                        let xrow = &x[((ni * side + iy) * side + ix) * cin..][..cin];
-                        let wbase = (ky * 3 + kx) * cin * cout;
-                        for (ci, &xv) in xrow.iter().enumerate() {
-                            if xv == 0.0 {
+                        for kx in 0..3usize {
+                            let ix = (ox + kx).wrapping_sub(1);
+                            if ix >= side {
                                 continue;
                             }
-                            let wrow = &w[wbase + ci * cout..][..cout];
-                            let yrow = &mut y[yrow_base..yrow_base + cout];
-                            for (o, &wv) in yrow.iter_mut().zip(wrow) {
-                                *o += xv * wv;
+                            let xrow = &x[((ni * side + iy) * side + ix) * cin..][..cin];
+                            let wbase = (ky * 3 + kx) * cin * cout;
+                            for (ci, &xv) in xrow.iter().enumerate() {
+                                if xv == 0.0 {
+                                    continue;
+                                }
+                                let wrow = &w[wbase + ci * cout..][..cout];
+                                let yrow = &mut chunk[yrow_base..yrow_base + cout];
+                                for (o, &wv) in yrow.iter_mut().zip(wrow) {
+                                    *o += xv * wv;
+                                }
                             }
                         }
                     }
-                }
-                let yrow = &mut y[yrow_base..yrow_base + cout];
-                for (o, &bv) in yrow.iter_mut().zip(b) {
-                    *o += bv;
+                    let yrow = &mut chunk[yrow_base..yrow_base + cout];
+                    for (o, &bv) in yrow.iter_mut().zip(b) {
+                        *o += bv;
+                    }
                 }
             }
         }
-    }
+    });
     y
 }
 
-/// Backward of conv3x3 SAME: returns (dw, db, dx).
+/// Backward of conv3x3 SAME: returns (dw, db, dx). `dx` is per-sample and
+/// threads over samples; `dw` sums over every sample, so it is computed by
+/// a serial ascending-sample sweep — the combined serial loop and the
+/// split threaded path produce identical bits (same per-element order).
+#[allow(clippy::too_many_arguments)]
 fn conv3x3_bwd(
+    kctx: KernelCtx,
     x: &[f32],
     dy: &[f32],
     n: usize,
@@ -170,6 +189,82 @@ fn conv3x3_bwd(
     let mut dw = vec![0.0f32; 9 * cin * cout];
     let mut dx = vec![0.0f32; n * side * side * cin];
     let db = col_sums(dy, cout);
+    let threads = workers_for(kctx, 4 * n * side * side * 9 * cin * cout);
+
+    if threads <= 1 {
+        // Combined single pass: dw and dx share the x/dy loads.
+        for ni in 0..n {
+            for oy in 0..side {
+                for ox in 0..side {
+                    let dyrow = &dy[((ni * side + oy) * side + ox) * cout..][..cout];
+                    for ky in 0..3usize {
+                        let iy = (oy + ky).wrapping_sub(1);
+                        if iy >= side {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let ix = (ox + kx).wrapping_sub(1);
+                            if ix >= side {
+                                continue;
+                            }
+                            let xbase = ((ni * side + iy) * side + ix) * cin;
+                            let wbase = (ky * 3 + kx) * cin * cout;
+                            for ci in 0..cin {
+                                let xv = x[xbase + ci];
+                                let wrow = &w[wbase + ci * cout..][..cout];
+                                let dwrow = &mut dw[wbase + ci * cout..][..cout];
+                                let mut dxv = 0.0f32;
+                                for co in 0..cout {
+                                    let dyv = dyrow[co];
+                                    dwrow[co] += xv * dyv;
+                                    dxv += dyv * wrow[co];
+                                }
+                                dx[xbase + ci] += dxv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        return (dw, db, dx);
+    }
+
+    // Threaded: dx per sample on workers...
+    let sample_len = side * side * cin;
+    par_row_chunks(threads, &mut dx, sample_len, |n0, chunk| {
+        for li in 0..chunk.len() / sample_len {
+            let ni = n0 + li;
+            for oy in 0..side {
+                for ox in 0..side {
+                    let dyrow = &dy[((ni * side + oy) * side + ox) * cout..][..cout];
+                    for ky in 0..3usize {
+                        let iy = (oy + ky).wrapping_sub(1);
+                        if iy >= side {
+                            continue;
+                        }
+                        for kx in 0..3usize {
+                            let ix = (ox + kx).wrapping_sub(1);
+                            if ix >= side {
+                                continue;
+                            }
+                            let xbase_local = ((li * side + iy) * side + ix) * cin;
+                            let wbase = (ky * 3 + kx) * cin * cout;
+                            for ci in 0..cin {
+                                let wrow = &w[wbase + ci * cout..][..cout];
+                                let mut dxv = 0.0f32;
+                                for co in 0..cout {
+                                    dxv += dyrow[co] * wrow[co];
+                                }
+                                chunk[xbase_local + ci] += dxv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+    // ...dw on the caller thread, ascending samples (same order as the
+    // combined pass, so the same bits).
     for ni in 0..n {
         for oy in 0..side {
             for ox in 0..side {
@@ -188,15 +283,10 @@ fn conv3x3_bwd(
                         let wbase = (ky * 3 + kx) * cin * cout;
                         for ci in 0..cin {
                             let xv = x[xbase + ci];
-                            let wrow = &w[wbase + ci * cout..][..cout];
                             let dwrow = &mut dw[wbase + ci * cout..][..cout];
-                            let mut dxv = 0.0f32;
-                            for co in 0..cout {
-                                let dyv = dyrow[co];
-                                dwrow[co] += xv * dyv;
-                                dxv += dyv * wrow[co];
+                            for (o, &dyv) in dwrow.iter_mut().zip(dyrow) {
+                                *o += xv * dyv;
                             }
-                            dx[xbase + ci] += dxv;
                         }
                     }
                 }
@@ -275,6 +365,7 @@ struct StageSaved {
 /// buffers drop as the next stage is computed.
 fn stages_fwd(
     cfg: &CnnCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[f32],
     n: usize,
@@ -289,9 +380,9 @@ fn stages_fwd(
         let b1 = &params.tensors[4 * s + 1].data;
         let w2 = &params.tensors[4 * s + 2].data;
         let b2 = &params.tensors[4 * s + 3].data;
-        let mut r1 = conv3x3_fwd(&h, n, side, cin, w1, b1, wch);
+        let mut r1 = conv3x3_fwd(kctx, &h, n, side, cin, w1, b1, wch);
         relu_fwd(&mut r1);
-        let mut r2 = conv3x3_fwd(&r1, n, side, wch, w2, b2, wch);
+        let mut r2 = conv3x3_fwd(kctx, &r1, n, side, wch, w2, b2, wch);
         relu_fwd(&mut r2);
         let (pooled, pool_idx) = pool2_fwd(&r2, n, side, wch);
         if save {
@@ -312,8 +403,10 @@ fn rng_site(seed: i32, site: usize) -> Pcg32 {
 // Entry points.
 // ---------------------------------------------------------------------------
 
+#[allow(clippy::too_many_arguments)]
 pub fn fwd_bwd(
     cfg: &CnnCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[f32],
     y: &[i32],
@@ -327,13 +420,13 @@ pub fn fwd_bwd(
     ensure!(y.len() == n);
     let c = cfg.n_classes;
 
-    let (saved, feat) = stages_fwd(cfg, params, x, n, true);
+    let (saved, feat) = stages_fwd(cfg, kctx, params, x, n, true);
     let df = feat.len() / n;
     let fc_w = &params.tensors[4 * n_sites].data;
     let fc_b = &params.tensors[4 * n_sites + 1].data;
-    let mut logits = matmul(&feat, fc_w, n, df, c);
+    let mut logits = matmul(kctx, &feat, fc_w, n, df, c);
     add_bias(&mut logits, fc_b);
-    let (losses, dlogits) = ce_loss_and_dlogits(&logits, y, c);
+    let (losses, dlogits) = ce_loss_and_dlogits(kctx, &logits, y, c);
     let loss = losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
 
     let mut grads: Vec<Vec<f32>> = cfg
@@ -346,9 +439,9 @@ pub fn fwd_bwd(
     // fc grads exact, then SampleA at site n_sites-1 on the feature grad
     let inv_n = 1.0 / n as f32;
     let g: Vec<f32> = dlogits.iter().map(|&v| v * inv_n).collect();
-    grads[4 * n_sites] = weighted_tn(&feat, &g, None, n, df, c);
+    grads[4 * n_sites] = weighted_tn(kctx, &feat, &g, None, n, df, c);
     grads[4 * n_sites + 1] = col_sums(&g, c);
-    let mut gfeat = matmul_nt(&g, fc_w, n, c, df);
+    let mut gfeat = matmul_nt(kctx, &g, fc_w, n, c, df);
     let mut site_rng = rng_site(seed, n_sites - 1);
     let norms = sample_rows(&mut gfeat, df, rho[n_sites - 1], &mut site_rng);
     act_norms[(n_sites - 1) * n..n_sites * n].copy_from_slice(&norms);
@@ -360,10 +453,12 @@ pub fn fwd_bwd(
         let mut dr2 = pool2_bwd(&g, &st.pool_idx, st.r2.len());
         relu_bwd(&st.r2, &mut dr2);
         let w2 = &params.tensors[4 * s + 2].data;
-        let (dw2, db2, mut dr1) = conv3x3_bwd(&st.r1, &dr2, n, st.side, st.cout, w2, st.cout);
+        let (dw2, db2, mut dr1) =
+            conv3x3_bwd(kctx, &st.r1, &dr2, n, st.side, st.cout, w2, st.cout);
         relu_bwd(&st.r1, &mut dr1);
         let w1 = &params.tensors[4 * s].data;
-        let (dw1, db1, mut dx) = conv3x3_bwd(&st.x_in, &dr1, n, st.side, st.cin, w1, st.cout);
+        let (dw1, db1, mut dx) =
+            conv3x3_bwd(kctx, &st.x_in, &dr1, n, st.side, st.cin, w1, st.cout);
         grads[4 * s] = dw1;
         grads[4 * s + 1] = db1;
         grads[4 * s + 2] = dw2;
@@ -383,6 +478,7 @@ pub fn fwd_bwd(
 
 pub fn eval_step(
     cfg: &CnnCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[f32],
     y: &[i32],
@@ -392,13 +488,13 @@ pub fn eval_step(
     ensure!(y.len() == n);
     let n_sites = cfg.n_sites();
     let c = cfg.n_classes;
-    let (_saved, feat) = stages_fwd(cfg, params, x, n, false);
+    let (_saved, feat) = stages_fwd(cfg, kctx, params, x, n, false);
     let df = feat.len() / n;
     let fc_w = &params.tensors[4 * n_sites].data;
     let fc_b = &params.tensors[4 * n_sites + 1].data;
-    let mut logits = matmul(&feat, fc_w, n, df, c);
+    let mut logits = matmul(kctx, &feat, fc_w, n, df, c);
     add_bias(&mut logits, fc_b);
-    let (losses, _) = ce_loss_and_dlogits(&logits, y, c);
+    let (losses, _) = ce_loss_and_dlogits(kctx, &logits, y, c);
     let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
     let mut correct = 0u32;
     for i in 0..n {

@@ -11,11 +11,16 @@
 //! [`NativeBackend::add_from_info`] (the cross-backend agreement test does
 //! this).
 //!
-//! Being plain data, the backend is `Send + Sync` — the prerequisite for
-//! real multi-threaded data parallelism in `coordinator::parallel`, which
-//! the PJRT path cannot provide (its wrapper types are not `Send`).
+//! Being plain data, the backend is `Send + Sync` — which is what lets
+//! `coordinator::parallel` run real `std::thread::scope` workers against a
+//! shared `&NativeBackend`, something the PJRT path cannot provide (its
+//! wrapper types are not `Send`).
+//!
+//! All dense math routes through the `runtime::kernels` layer with this
+//! backend's thread count ([`NativeBackend::with_threads`]); results are
+//! bitwise identical at any thread count, so `threads` is purely a
+//! wall-clock knob.
 
-pub mod math;
 pub mod sampling;
 
 mod cnn;
@@ -31,6 +36,7 @@ use crate::error::{anyhow, bail, ensure, Result};
 use crate::formats::params::ParamSet;
 
 use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
+use super::kernels::{default_threads, KernelCtx};
 
 #[derive(Clone, Debug)]
 enum NativeModel {
@@ -45,6 +51,7 @@ pub struct NativeBackend {
     main_batch: usize,
     sub_batch: usize,
     cnn_batch: usize,
+    threads: usize,
 }
 
 /// FNV-1a, used to derive a stable per-model init seed from its name.
@@ -54,16 +61,29 @@ fn name_seed(name: &str) -> u64 {
 }
 
 impl NativeBackend {
-    /// An empty registry with the given batch sizes.
+    /// An empty registry with the given batch sizes, single-threaded
+    /// kernels (add threads with [`NativeBackend::with_threads`]).
     pub fn new(main_batch: usize, sub_batch: usize, cnn_batch: usize) -> NativeBackend {
-        NativeBackend { models: BTreeMap::new(), main_batch, sub_batch, cnn_batch }
+        NativeBackend { models: BTreeMap::new(), main_batch, sub_batch, cnn_batch, threads: 1 }
+    }
+
+    /// Set the kernel-layer thread budget (clamped to >= 1). Results are
+    /// bitwise identical at any value; only wall-clock changes.
+    pub fn with_threads(mut self, threads: usize) -> NativeBackend {
+        self.threads = threads.max(1);
+        self
+    }
+
+    fn kctx(&self) -> KernelCtx {
+        KernelCtx::new(self.threads)
     }
 
     /// The default model zoo: miniature counterparts of the AOT models
     /// ("tiny", "small", "cnn"), sized so full training runs are fast on a
-    /// single CPU core even in test builds.
+    /// single CPU core even in test builds. Kernel threads come from
+    /// [`default_threads`] (`VCAS_THREADS` env, else available cores).
     pub fn with_default_models() -> NativeBackend {
-        let mut b = NativeBackend::new(16, 5, 16);
+        let mut b = NativeBackend::new(16, 5, 16).with_threads(default_threads());
         b.add_transformer(
             "tiny",
             TransformerCfg {
@@ -176,6 +196,10 @@ impl Backend for NativeBackend {
         self.cnn_batch
     }
 
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
     fn models(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
@@ -208,8 +232,8 @@ impl Backend for NativeBackend {
     ) -> Result<GradOut> {
         let cfg = self.transformer(model)?;
         transformer::fwd_bwd_cls(
-            cfg, params, &batch.x, &batch.y, sw, batch.n, batch.seq_len, seed, rho, nu_apply,
-            nu_probe,
+            cfg, self.kctx(), params, &batch.x, &batch.y, sw, batch.n, batch.seq_len, seed,
+            rho, nu_apply, nu_probe,
         )
     }
 
@@ -225,8 +249,8 @@ impl Backend for NativeBackend {
     ) -> Result<GradOut> {
         let cfg = self.transformer(model)?;
         transformer::fwd_bwd_mlm(
-            cfg, params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len, seed, rho,
-            nu_apply, nu_probe,
+            cfg, self.kctx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
+            seed, rho, nu_apply, nu_probe,
         )
     }
 
@@ -237,12 +261,16 @@ impl Backend for NativeBackend {
         batch: &ClsBatch,
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let cfg = self.transformer(model)?;
-        transformer::fwd_loss_cls(cfg, params, &batch.x, &batch.y, batch.n, batch.seq_len)
+        transformer::fwd_loss_cls(
+            cfg, self.kctx(), params, &batch.x, &batch.y, batch.n, batch.seq_len,
+        )
     }
 
     fn eval_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)> {
         let cfg = self.transformer(model)?;
-        transformer::eval_cls(cfg, params, &batch.x, &batch.y, batch.n, batch.seq_len)
+        transformer::eval_cls(
+            cfg, self.kctx(), params, &batch.x, &batch.y, batch.n, batch.seq_len,
+        )
     }
 
     fn eval_mlm(
@@ -253,7 +281,7 @@ impl Backend for NativeBackend {
     ) -> Result<(f32, f32, f32)> {
         let cfg = self.transformer(model)?;
         transformer::eval_mlm(
-            cfg, params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
+            cfg, self.kctx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
         )
     }
 
@@ -266,12 +294,12 @@ impl Backend for NativeBackend {
         rho: &[f32],
     ) -> Result<CnnGradOut> {
         let cfg = self.cnn(model)?;
-        cnn::fwd_bwd(cfg, params, &batch.x, &batch.y, batch.n, seed, rho)
+        cnn::fwd_bwd(cfg, self.kctx(), params, &batch.x, &batch.y, batch.n, seed, rho)
     }
 
     fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {
         let cfg = self.cnn(model)?;
-        cnn::eval_step(cfg, params, &batch.x, &batch.y, batch.n)
+        cnn::eval_step(cfg, self.kctx(), params, &batch.x, &batch.y, batch.n)
     }
 }
 

@@ -240,7 +240,7 @@ mod tests {
     fn eq3_matches_empirical_weight_grad_variance() {
         // Var of the sampled contraction a^T diag(m) b around a^T b should
         // match Eq. 3 within Monte-Carlo tolerance.
-        use crate::runtime::native::math::weighted_tn;
+        use crate::runtime::kernels::{weighted_tn, KernelCtx};
         use crate::util::stats::dist_sq;
         let mut gen = Gen::new(42);
         let (r, m, n) = (10, 3, 4);
@@ -252,13 +252,14 @@ mod tests {
             .map(|(&x, &y)| x * y)
             .collect();
         let q = keep_probs(&scores, 0.5);
-        let exact = weighted_tn(&a, &b, None, r, m, n);
+        let kctx = KernelCtx::serial();
+        let exact = weighted_tn(kctx, &a, &b, None, r, m, n);
         let mut rng = Pcg32::new(3, 3);
         let trials = 8000;
         let mut var = 0.0f64;
         for _ in 0..trials {
             let mask = bern_mask(&mut rng, &q);
-            let est = weighted_tn(&a, &b, Some(&mask), r, m, n);
+            let est = weighted_tn(kctx, &a, &b, Some(&mask), r, m, n);
             var += dist_sq(&est, &exact);
         }
         var /= trials as f64;

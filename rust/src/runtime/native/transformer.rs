@@ -6,16 +6,25 @@
 //! linear), `act_norms`/`vw` shapes and the exact-at-ratio-1 guarantee all
 //! mirror the AOT graphs, so the controller and trainer cannot tell the
 //! backends apart.
+//!
+//! All dense math routes through `runtime::kernels` with the backend's
+//! [`KernelCtx`]: matmuls and layernorm/GELU/softmax-CE passes thread over
+//! disjoint output tiles, attention threads over batch samples, and every
+//! result is bitwise identical to the single-threaded path at any thread
+//! count (see the kernels module docs for the determinism contract). The
+//! rng-consuming sampler calls stay serial so mask streams never depend on
+//! scheduling.
 
 use crate::error::{ensure, Result};
 use crate::formats::params::{ParamSet, Tensor};
 use crate::runtime::backend::{GradOut, ModelInfo, ModelKind};
+use crate::runtime::kernels::{
+    add, add_bias, argmax_row, ce_loss_and_dlogits, col_sums, gelu_bwd, gelu_fwd,
+    layernorm_bwd, layernorm_fwd, matmul, matmul_nt, par_row_chunks, par_row_chunks2,
+    softmax_rows, weighted_tn, workers_for, KernelCtx, LnStats,
+};
 use crate::util::rng::Pcg32;
 
-use super::math::{
-    add, add_bias, argmax_row, ce_loss_and_dlogits, col_sums, gelu_bwd, gelu_fwd,
-    layernorm_bwd, layernorm_fwd, matmul, matmul_nt, softmax_rows, weighted_tn, LnStats,
-};
 use super::sampling::{bern_mask, eq3_variance, keep_probs, row_norms, sample_rows};
 
 /// Number of sampled linears per transformer block: qkv, attn-out, ff1, ff2.
@@ -220,42 +229,67 @@ fn tdata(params: &ParamSet, idx: usize) -> &[f32] {
     &params.tensors[idx].data
 }
 
-/// Bidirectional softmax attention forward; returns (ctx, probs).
-fn attention_fwd(qkv: &[f32], n: usize, t: usize, d: usize, heads: usize) -> (Vec<f32>, Vec<f32>) {
+/// Bidirectional softmax attention forward; returns (ctx, probs). Threads
+/// over batch samples: each worker owns a contiguous slice of samples and
+/// their disjoint ctx/probs rows; the per-head matmuls inside run serial.
+fn attention_fwd(
+    kctx: KernelCtx,
+    qkv: &[f32],
+    n: usize,
+    t: usize,
+    d: usize,
+    heads: usize,
+) -> (Vec<f32>, Vec<f32>) {
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
     let mut ctx = vec![0.0f32; n * t * d];
     let mut probs = vec![0.0f32; n * heads * t * t];
-    let mut q = vec![0.0f32; t * dh];
-    let mut k = vec![0.0f32; t * dh];
-    let mut v = vec![0.0f32; t * dh];
-    for ni in 0..n {
-        for hi in 0..heads {
-            for ti in 0..t {
-                let base = (ni * t + ti) * 3 * d + hi * dh;
-                q[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base..base + dh]);
-                k[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + d..base + d + dh]);
-                v[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
+    let threads = workers_for(kctx, 4 * n * t * t * d);
+    par_row_chunks2(
+        threads,
+        &mut ctx,
+        t * d,
+        &mut probs,
+        heads * t * t,
+        |n0, cc, pc| {
+            let serial = KernelCtx::serial();
+            let mut q = vec![0.0f32; t * dh];
+            let mut k = vec![0.0f32; t * dh];
+            let mut v = vec![0.0f32; t * dh];
+            for li in 0..cc.len() / (t * d) {
+                let ni = n0 + li;
+                for hi in 0..heads {
+                    for ti in 0..t {
+                        let base = (ni * t + ti) * 3 * d + hi * dh;
+                        q[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base..base + dh]);
+                        k[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + d..base + d + dh]);
+                        v[ti * dh..(ti + 1) * dh]
+                            .copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
+                    }
+                    let mut scores = matmul_nt(serial, &q, &k, t, dh, t);
+                    for s in scores.iter_mut() {
+                        *s *= scale;
+                    }
+                    softmax_rows(serial, &mut scores, t);
+                    let c = matmul(serial, &scores, &v, t, t, dh);
+                    let pbase = (li * heads + hi) * t * t;
+                    pc[pbase..pbase + t * t].copy_from_slice(&scores);
+                    for ti in 0..t {
+                        let ob = (li * t + ti) * d + hi * dh;
+                        cc[ob..ob + dh].copy_from_slice(&c[ti * dh..(ti + 1) * dh]);
+                    }
+                }
             }
-            let mut scores = matmul_nt(&q, &k, t, dh, t);
-            for s in scores.iter_mut() {
-                *s *= scale;
-            }
-            softmax_rows(&mut scores, t);
-            let c = matmul(&scores, &v, t, t, dh);
-            let pbase = (ni * heads + hi) * t * t;
-            probs[pbase..pbase + t * t].copy_from_slice(&scores);
-            for ti in 0..t {
-                let out = &mut ctx[(ni * t + ti) * d + hi * dh..(ni * t + ti) * d + hi * dh + dh];
-                out.copy_from_slice(&c[ti * dh..(ti + 1) * dh]);
-            }
-        }
-    }
+        },
+    );
     (ctx, probs)
 }
 
-/// Attention backward: gradient wrt qkv given gradient wrt ctx.
+/// Attention backward: gradient wrt qkv given gradient wrt ctx. Threads
+/// over batch samples exactly like the forward.
+#[allow(clippy::too_many_arguments)]
 fn attention_bwd(
+    kctx: KernelCtx,
     qkv: &[f32],
     probs: &[f32],
     dctx: &[f32],
@@ -267,47 +301,54 @@ fn attention_bwd(
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
     let mut dqkv = vec![0.0f32; n * t * 3 * d];
-    let mut q = vec![0.0f32; t * dh];
-    let mut k = vec![0.0f32; t * dh];
-    let mut v = vec![0.0f32; t * dh];
-    let mut dc = vec![0.0f32; t * dh];
-    for ni in 0..n {
-        for hi in 0..heads {
-            for ti in 0..t {
-                let base = (ni * t + ti) * 3 * d + hi * dh;
-                q[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base..base + dh]);
-                k[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + d..base + d + dh]);
-                v[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
-                let cb = (ni * t + ti) * d + hi * dh;
-                dc[ti * dh..(ti + 1) * dh].copy_from_slice(&dctx[cb..cb + dh]);
-            }
-            let p = &probs[(ni * heads + hi) * t * t..(ni * heads + hi + 1) * t * t];
-            // dv = probs^T @ dc ; dprobs = dc @ v^T
-            let dv = weighted_tn(p, &dc, None, t, t, dh);
-            let dprobs = matmul_nt(&dc, &v, t, dh, t);
-            // softmax backward per row
-            let mut dscores = vec![0.0f32; t * t];
-            for ti in 0..t {
-                let pr = &p[ti * t..(ti + 1) * t];
-                let dpr = &dprobs[ti * t..(ti + 1) * t];
-                let dot: f64 = pr.iter().zip(dpr).map(|(&a, &b)| (a * b) as f64).sum();
-                let ds = &mut dscores[ti * t..(ti + 1) * t];
-                for s in 0..t {
-                    ds[s] = pr[s] * (dpr[s] - dot as f32) * scale;
+    let threads = workers_for(kctx, 8 * n * t * t * d);
+    par_row_chunks(threads, &mut dqkv, t * 3 * d, |n0, chunk| {
+        let serial = KernelCtx::serial();
+        let mut q = vec![0.0f32; t * dh];
+        let mut k = vec![0.0f32; t * dh];
+        let mut v = vec![0.0f32; t * dh];
+        let mut dc = vec![0.0f32; t * dh];
+        for li in 0..chunk.len() / (t * 3 * d) {
+            let ni = n0 + li;
+            for hi in 0..heads {
+                for ti in 0..t {
+                    let base = (ni * t + ti) * 3 * d + hi * dh;
+                    q[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base..base + dh]);
+                    k[ti * dh..(ti + 1) * dh].copy_from_slice(&qkv[base + d..base + d + dh]);
+                    v[ti * dh..(ti + 1) * dh]
+                        .copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
+                    let cb = (ni * t + ti) * d + hi * dh;
+                    dc[ti * dh..(ti + 1) * dh].copy_from_slice(&dctx[cb..cb + dh]);
+                }
+                let p = &probs[(ni * heads + hi) * t * t..(ni * heads + hi + 1) * t * t];
+                // dv = probs^T @ dc ; dprobs = dc @ v^T
+                let dv = weighted_tn(serial, p, &dc, None, t, t, dh);
+                let dprobs = matmul_nt(serial, &dc, &v, t, dh, t);
+                // softmax backward per row
+                let mut dscores = vec![0.0f32; t * t];
+                for ti in 0..t {
+                    let pr = &p[ti * t..(ti + 1) * t];
+                    let dpr = &dprobs[ti * t..(ti + 1) * t];
+                    let dot: f64 = pr.iter().zip(dpr).map(|(&a, &b)| (a * b) as f64).sum();
+                    let ds = &mut dscores[ti * t..(ti + 1) * t];
+                    for s in 0..t {
+                        ds[s] = pr[s] * (dpr[s] - dot as f32) * scale;
+                    }
+                }
+                // dq = dscores @ k ; dk = dscores^T @ q
+                let dq = matmul(serial, &dscores, &k, t, t, dh);
+                let dk = weighted_tn(serial, &dscores, &q, None, t, t, dh);
+                for ti in 0..t {
+                    let base = (li * t + ti) * 3 * d + hi * dh;
+                    chunk[base..base + dh].copy_from_slice(&dq[ti * dh..(ti + 1) * dh]);
+                    chunk[base + d..base + d + dh]
+                        .copy_from_slice(&dk[ti * dh..(ti + 1) * dh]);
+                    chunk[base + 2 * d..base + 2 * d + dh]
+                        .copy_from_slice(&dv[ti * dh..(ti + 1) * dh]);
                 }
             }
-            // dq = dscores @ k ; dk = dscores^T @ q
-            let dq = matmul(&dscores, &k, t, t, dh);
-            let dk = weighted_tn(&dscores, &q, None, t, t, dh);
-            for ti in 0..t {
-                let base = (ni * t + ti) * 3 * d + hi * dh;
-                dqkv[base..base + dh].copy_from_slice(&dq[ti * dh..(ti + 1) * dh]);
-                dqkv[base + d..base + d + dh].copy_from_slice(&dk[ti * dh..(ti + 1) * dh]);
-                dqkv[base + 2 * d..base + 2 * d + dh]
-                    .copy_from_slice(&dv[ti * dh..(ti + 1) * dh]);
-            }
         }
-    }
+    });
     dqkv
 }
 
@@ -315,7 +356,14 @@ fn attention_bwd(
 /// activations are retained for the instrumented backward; eval/loss-only
 /// entries pass `false` so each block's buffers drop as soon as the next
 /// block is computed.
-fn encode_fwd(cfg: &TransformerCfg, params: &ParamSet, x: &[i32], n: usize, save: bool) -> Saved {
+fn encode_fwd(
+    cfg: &TransformerCfg,
+    kctx: KernelCtx,
+    params: &ParamSet,
+    x: &[i32],
+    n: usize,
+    save: bool,
+) -> Saved {
     let (t, d) = (cfg.seq_len, cfg.d_model);
     let embed = tdata(params, 0);
     let pos = tdata(params, 1);
@@ -333,27 +381,29 @@ fn encode_fwd(cfg: &TransformerCfg, params: &ParamSet, x: &[i32], n: usize, save
     for l in 0..cfg.n_layers {
         let h_in = h;
         let (a, ln1) = layernorm_fwd(
+            kctx,
             &h_in,
             tdata(params, cfg.blk(l, LN1_G)),
             tdata(params, cfg.blk(l, LN1_B)),
             d,
         );
-        let mut qkv = matmul(&a, tdata(params, cfg.blk(l, W_QKV)), n * t, d, 3 * d);
+        let mut qkv = matmul(kctx, &a, tdata(params, cfg.blk(l, W_QKV)), n * t, d, 3 * d);
         add_bias(&mut qkv, tdata(params, cfg.blk(l, B_QKV)));
-        let (attn, probs) = attention_fwd(&qkv, n, t, d, cfg.n_heads);
-        let mut o = matmul(&attn, tdata(params, cfg.blk(l, W_O)), n * t, d, d);
+        let (attn, probs) = attention_fwd(kctx, &qkv, n, t, d, cfg.n_heads);
+        let mut o = matmul(kctx, &attn, tdata(params, cfg.blk(l, W_O)), n * t, d, d);
         add_bias(&mut o, tdata(params, cfg.blk(l, B_O)));
         let h2 = add(&h_in, &o);
         let (b2, ln2) = layernorm_fwd(
+            kctx,
             &h2,
             tdata(params, cfg.blk(l, LN2_G)),
             tdata(params, cfg.blk(l, LN2_B)),
             d,
         );
-        let mut u1 = matmul(&b2, tdata(params, cfg.blk(l, W_FF1)), n * t, d, cfg.d_ff);
+        let mut u1 = matmul(kctx, &b2, tdata(params, cfg.blk(l, W_FF1)), n * t, d, cfg.d_ff);
         add_bias(&mut u1, tdata(params, cfg.blk(l, B_FF1)));
-        let f1 = gelu_fwd(&u1);
-        let mut f2 = matmul(&f1, tdata(params, cfg.blk(l, W_FF2)), n * t, cfg.d_ff, d);
+        let f1 = gelu_fwd(kctx, &u1);
+        let mut f2 = matmul(kctx, &f1, tdata(params, cfg.blk(l, W_FF2)), n * t, cfg.d_ff, d);
         add_bias(&mut f2, tdata(params, cfg.blk(l, B_FF2)));
         h = add(&h2, &f2);
         if save {
@@ -369,8 +419,10 @@ fn encode_fwd(cfg: &TransformerCfg, params: &ParamSet, x: &[i32], n: usize, save
 
 /// Backward of `y = z @ w + b` with SampleW on the weight gradient.
 /// Returns `(gw, gb, gz, vw_probe)` — see model.py's `linear_bwd_sampled`.
+/// The rng-consuming mask draw stays serial; only the contractions thread.
 #[allow(clippy::too_many_arguments)]
 fn linear_bwd_sampled(
+    kctx: KernelCtx,
     w: &[f32],
     din: usize,
     dout: usize,
@@ -387,9 +439,9 @@ fn linear_bwd_sampled(
     let q_apply = keep_probs(&scores, nu_apply);
     let q_probe = keep_probs(&scores, nu_probe);
     let wmask = bern_mask(rng, &q_apply);
-    let gw = weighted_tn(z2d, g2d, Some(&wmask), rows, din, dout);
+    let gw = weighted_tn(kctx, z2d, g2d, Some(&wmask), rows, din, dout);
     let gb = col_sums(g2d, dout);
-    let gz = matmul_nt(g2d, w, rows, dout, din);
+    let gz = matmul_nt(kctx, g2d, w, rows, dout, din);
     let vw = eq3_variance(g2d, z2d, &q_probe, dout, din);
     (gw, gb, gz, vw)
 }
@@ -408,6 +460,7 @@ fn rng_sample_w(seed: i32, layer: usize, linear: usize) -> Pcg32 {
 #[allow(clippy::too_many_arguments)]
 fn encode_bwd(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[i32],
     saved: &Saved,
@@ -433,6 +486,7 @@ fn encode_bwd(
         // --- FFN ---
         let mut k3 = rng_sample_w(seed, l, 3);
         let (gw2, gb2, gf1, v3) = linear_bwd_sampled(
+            kctx,
             tdata(params, cfg.blk(l, W_FF2)),
             f,
             d,
@@ -447,10 +501,11 @@ fn encode_bwd(
         grads[cfg.blk(l, B_FF2)] = gb2;
         vw[LINEARS_PER_BLOCK * l + 3] = v3;
 
-        let gu1 = gelu_bwd(&s.u1, &gf1);
+        let gu1 = gelu_bwd(kctx, &s.u1, &gf1);
 
         let mut k2 = rng_sample_w(seed, l, 2);
         let (gw1, gb1, gb2in, v2) = linear_bwd_sampled(
+            kctx,
             tdata(params, cfg.blk(l, W_FF1)),
             d,
             f,
@@ -466,6 +521,7 @@ fn encode_bwd(
         vw[LINEARS_PER_BLOCK * l + 2] = v2;
 
         let (gh2_ln, gln2g, gln2b) = layernorm_bwd(
+            kctx,
             &s.h2,
             tdata(params, cfg.blk(l, LN2_G)),
             &s.ln2,
@@ -479,6 +535,7 @@ fn encode_bwd(
         // --- attention ---
         let mut k1 = rng_sample_w(seed, l, 1);
         let (gwo, gbo, gattn, v1) = linear_bwd_sampled(
+            kctx,
             tdata(params, cfg.blk(l, W_O)),
             d,
             d,
@@ -493,10 +550,11 @@ fn encode_bwd(
         grads[cfg.blk(l, B_O)] = gbo;
         vw[LINEARS_PER_BLOCK * l + 1] = v1;
 
-        let gqkv = attention_bwd(&s.qkv, &s.probs, &gattn, n, t, d, cfg.n_heads);
+        let gqkv = attention_bwd(kctx, &s.qkv, &s.probs, &gattn, n, t, d, cfg.n_heads);
 
         let mut k0 = rng_sample_w(seed, l, 0);
         let (gwqkv, gbqkv, ga, v0) = linear_bwd_sampled(
+            kctx,
             tdata(params, cfg.blk(l, W_QKV)),
             d,
             3 * d,
@@ -512,6 +570,7 @@ fn encode_bwd(
         vw[LINEARS_PER_BLOCK * l] = v0;
 
         let (gh_ln, gln1g, gln1b) = layernorm_bwd(
+            kctx,
             &s.h_in,
             tdata(params, cfg.blk(l, LN1_G)),
             &s.ln1,
@@ -523,7 +582,7 @@ fn encode_bwd(
         g = add(&gh2, &gh_ln); // residual into block l-1
     }
 
-    // --- embedding + positions ---
+    // --- embedding + positions (serial: scatters collide across rows) ---
     {
         let gembed = &mut grads[0];
         for i in 0..n {
@@ -563,12 +622,14 @@ fn zero_grads(cfg: &TransformerCfg) -> Vec<Vec<f32>> {
 /// Returns (hf, ln stats, pooled (N,D), logits (N,C)).
 fn cls_head_fwd(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     hl: &[f32],
     n: usize,
 ) -> (Vec<f32>, LnStats, Vec<f32>, Vec<f32>) {
     let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
     let (hf, stats) = layernorm_fwd(
+        kctx,
         hl,
         tdata(params, cfg.idx_ln_f_g()),
         tdata(params, cfg.idx_ln_f_b()),
@@ -588,7 +649,7 @@ fn cls_head_fwd(
             *o *= inv_t;
         }
     }
-    let mut logits = matmul(&pooled, tdata(params, cfg.idx_head_w()), n, d, c);
+    let mut logits = matmul(kctx, &pooled, tdata(params, cfg.idx_head_w()), n, d, c);
     add_bias(&mut logits, tdata(params, cfg.idx_head_b()));
     (hf, stats, pooled, logits)
 }
@@ -600,6 +661,7 @@ fn cls_head_fwd(
 #[allow(clippy::too_many_arguments)]
 pub fn fwd_bwd_cls(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -616,9 +678,9 @@ pub fn fwd_bwd_cls(
     ensure!(nu_probe.len() == cfg.n_sampled() && sw.len() == n && y.len() == n);
     let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
 
-    let saved = encode_fwd(cfg, params, x, n, true);
-    let (_hf, lnf, pooled, logits) = cls_head_fwd(cfg, params, &saved.h_final, n);
-    let (losses, mut dlogits) = ce_loss_and_dlogits(&logits, y, c);
+    let saved = encode_fwd(cfg, kctx, params, x, n, true);
+    let (_hf, lnf, pooled, logits) = cls_head_fwd(cfg, kctx, params, &saved.h_final, n);
+    let (losses, mut dlogits) = ce_loss_and_dlogits(kctx, &logits, y, c);
     let loss: f64 = losses.iter().zip(sw).map(|(&l, &w)| (l as f64) * (w as f64)).sum();
     for i in 0..n {
         for j in 0..c {
@@ -628,8 +690,8 @@ pub fn fwd_bwd_cls(
 
     let mut grads = zero_grads(cfg);
     grads[cfg.idx_head_b()] = col_sums(&dlogits, c);
-    grads[cfg.idx_head_w()] = weighted_tn(&pooled, &dlogits, None, n, d, c);
-    let gpooled = matmul_nt(&dlogits, tdata(params, cfg.idx_head_w()), n, c, d);
+    grads[cfg.idx_head_w()] = weighted_tn(kctx, &pooled, &dlogits, None, n, d, c);
+    let gpooled = matmul_nt(kctx, &dlogits, tdata(params, cfg.idx_head_w()), n, c, d);
     let mut dhf = vec![0.0f32; n * t * d];
     let inv_t = 1.0 / t as f32;
     for i in 0..n {
@@ -642,6 +704,7 @@ pub fn fwd_bwd_cls(
         }
     }
     let (g, glnf_g, glnf_b) = layernorm_bwd(
+        kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         &lnf,
@@ -651,14 +714,16 @@ pub fn fwd_bwd_cls(
     grads[cfg.idx_ln_f_g()] = glnf_g;
     grads[cfg.idx_ln_f_b()] = glnf_b;
 
-    let (act_norms, vw) =
-        encode_bwd(cfg, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads);
+    let (act_norms, vw) = encode_bwd(
+        cfg, kctx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
+    );
     Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
 }
 
 #[allow(clippy::too_many_arguments)]
 pub fn fwd_bwd_mlm(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -677,17 +742,18 @@ pub fn fwd_bwd_mlm(
     let (t, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
     let rows = n * t;
 
-    let saved = encode_fwd(cfg, params, x, n, true);
+    let saved = encode_fwd(cfg, kctx, params, x, n, true);
     let (hf, lnf) = layernorm_fwd(
+        kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         tdata(params, cfg.idx_ln_f_b()),
         d,
     );
     // logits = hf @ embed^T + mlm_b, (N*T, V)
-    let mut logits = matmul_nt(&hf, tdata(params, 0), rows, d, v);
+    let mut logits = matmul_nt(kctx, &hf, tdata(params, 0), rows, d, v);
     add_bias(&mut logits, tdata(params, cfg.idx_mlm_b()));
-    let (losses, mut dlogits) = ce_loss_and_dlogits(&logits, y, v);
+    let (losses, mut dlogits) = ce_loss_and_dlogits(kctx, &logits, y, v);
     let wsum: f64 = w.iter().map(|&x| x as f64).sum();
     let denom = wsum.max(1.0);
     let loss: f64 =
@@ -703,9 +769,10 @@ pub fn fwd_bwd_mlm(
     let mut grads = zero_grads(cfg);
     grads[cfg.idx_mlm_b()] = col_sums(&dlogits, v);
     // tied-embedding head gradient: dlogits^T @ hf -> (V, D)
-    let gemb_head = weighted_tn(&dlogits, &hf, None, rows, v, d);
-    let dhf = matmul(&dlogits, tdata(params, 0), rows, v, d);
+    let gemb_head = weighted_tn(kctx, &dlogits, &hf, None, rows, v, d);
+    let dhf = matmul(kctx, &dlogits, tdata(params, 0), rows, v, d);
     let (g, glnf_g, glnf_b) = layernorm_bwd(
+        kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         &lnf,
@@ -715,8 +782,9 @@ pub fn fwd_bwd_mlm(
     grads[cfg.idx_ln_f_g()] = glnf_g;
     grads[cfg.idx_ln_f_b()] = glnf_b;
 
-    let (act_norms, vw) =
-        encode_bwd(cfg, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads);
+    let (act_norms, vw) = encode_bwd(
+        cfg, kctx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
+    );
     // tied embedding: encoder scatter + head contribution
     for (o, &hv) in grads[0].iter_mut().zip(&gemb_head) {
         *o += hv;
@@ -726,6 +794,7 @@ pub fn fwd_bwd_mlm(
 
 pub fn fwd_loss_cls(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -735,15 +804,16 @@ pub fn fwd_loss_cls(
     cfg.validate(params, n, seq_len, x.len())?;
     ensure!(y.len() == n);
     let c = cfg.n_classes;
-    let saved = encode_fwd(cfg, params, x, n, false);
-    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, params, &saved.h_final, n);
-    let (losses, dlogits) = ce_loss_and_dlogits(&logits, y, c);
+    let saved = encode_fwd(cfg, kctx, params, x, n, false);
+    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, kctx, params, &saved.h_final, n);
+    let (losses, dlogits) = ce_loss_and_dlogits(kctx, &logits, y, c);
     let ub = row_norms(&dlogits, c);
     Ok((losses, ub))
 }
 
 pub fn eval_cls(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -753,9 +823,9 @@ pub fn eval_cls(
     cfg.validate(params, n, seq_len, x.len())?;
     ensure!(y.len() == n);
     let c = cfg.n_classes;
-    let saved = encode_fwd(cfg, params, x, n, false);
-    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, params, &saved.h_final, n);
-    let (losses, _) = ce_loss_and_dlogits(&logits, y, c);
+    let saved = encode_fwd(cfg, kctx, params, x, n, false);
+    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, kctx, params, &saved.h_final, n);
+    let (losses, _) = ce_loss_and_dlogits(kctx, &logits, y, c);
     let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
     let mut correct = 0u32;
     for i in 0..n {
@@ -766,8 +836,10 @@ pub fn eval_cls(
     Ok((loss_sum as f32, correct as f32))
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn eval_mlm(
     cfg: &TransformerCfg,
+    kctx: KernelCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -779,16 +851,17 @@ pub fn eval_mlm(
     let (t, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
     let rows = n * t;
     ensure!(w.len() == rows && y.len() == rows);
-    let saved = encode_fwd(cfg, params, x, n, false);
+    let saved = encode_fwd(cfg, kctx, params, x, n, false);
     let (hf, _lnf) = layernorm_fwd(
+        kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         tdata(params, cfg.idx_ln_f_b()),
         d,
     );
-    let mut logits = matmul_nt(&hf, tdata(params, 0), rows, d, v);
+    let mut logits = matmul_nt(kctx, &hf, tdata(params, 0), rows, d, v);
     add_bias(&mut logits, tdata(params, cfg.idx_mlm_b()));
-    let (losses, _) = ce_loss_and_dlogits(&logits, y, v);
+    let (losses, _) = ce_loss_and_dlogits(kctx, &logits, y, v);
     let mut loss_sum = 0.0f64;
     let mut correct = 0.0f64;
     let mut weight = 0.0f64;

@@ -453,6 +453,123 @@ fn mlm_path_native() {
 }
 
 // ---------------------------------------------------------------------------
+// Threaded kernel layer: results must be bitwise independent of the
+// backend's thread count, and the ratio-1 "exact" guarantee must survive
+// threading (the PR 2 determinism contract).
+// ---------------------------------------------------------------------------
+
+fn cls_batch_for(b: &NativeBackend, model: &str, seed: u64) -> vcas::data::batch::ClsBatch {
+    let sess = ModelSession::open(b, model).unwrap();
+    let spec = find("sst2-sim").unwrap();
+    let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 64, seed);
+    let mut sampler = EpochSampler::new(64, seed);
+    gather_cls(&ds, &sampler.take(b.main_batch()))
+}
+
+fn assert_gradout_bits_eq(a: &vcas::runtime::GradOut, b: &vcas::runtime::GradOut, what: &str) {
+    assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "{what}: loss bits differ");
+    for (ga, gb) in a.grads.iter().zip(&b.grads) {
+        assert_eq!(ga, gb, "{what}: grads differ");
+    }
+    assert_eq!(a.act_norms, b.act_norms, "{what}: act_norms differ");
+    assert_eq!(a.vw, b.vw, "{what}: vw differ");
+}
+
+#[test]
+fn threaded_fwd_bwd_bitwise_matches_serial() {
+    // "small" is big enough (512 rows x d 64) that its matmuls cross the
+    // kernel layer's parallel work gate, so threads 2/4 genuinely fan out.
+    let serial = NativeBackend::with_default_models().with_threads(1);
+    let sess = ModelSession::open(&serial, "small").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = cls_batch_for(&serial, "small", 21);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let (ones_l, ones_w) = ones(&sess);
+    let rho = vec![0.5f32; sess.n_layers];
+    let nu = vec![0.5f32; sess.n_sampled];
+
+    let exact1 = sess.fwd_bwd_cls(&params, &batch, &sw, 3, &ones_l, &ones_w, &ones_w).unwrap();
+    let sampled1 = sess.fwd_bwd_cls(&params, &batch, &sw, 3, &rho, &nu, &nu).unwrap();
+
+    for threads in [2usize, 4] {
+        let bt = NativeBackend::with_default_models().with_threads(threads);
+        let sess_t = ModelSession::open(&bt, "small").unwrap();
+        let exact_t =
+            sess_t.fwd_bwd_cls(&params, &batch, &sw, 3, &ones_l, &ones_w, &ones_w).unwrap();
+        assert_gradout_bits_eq(&exact1, &exact_t, &format!("exact @ {threads} threads"));
+        // sampled path: the rng mask streams are drawn serially, so the
+        // same seed gives the same masks — and the same bits — at any
+        // thread count
+        let sampled_t = sess_t.fwd_bwd_cls(&params, &batch, &sw, 3, &rho, &nu, &nu).unwrap();
+        assert_gradout_bits_eq(&sampled1, &sampled_t, &format!("sampled @ {threads} threads"));
+    }
+}
+
+#[test]
+fn threaded_cnn_bitwise_matches_serial() {
+    let serial = NativeBackend::with_default_models().with_threads(1);
+    let sess = ModelSession::open(&serial, "cnn").unwrap();
+    let params = sess.load_params().unwrap();
+    let n = serial.cnn_batch();
+    let info = serial.info("cnn").unwrap();
+    let mut rng = Pcg32::new(31, 0x31);
+    let px = info.img * info.img * info.in_ch;
+    let x: Vec<f32> = (0..n * px).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(info.n_classes as u64) as i32).collect();
+    let batch = vcas::data::batch::ImgBatch { n, x, y, idx: vec![] };
+    let rho = vec![0.6f32; sess.n_layers];
+    let base = sess.cnn_fwd_bwd(&params, &batch, 5, &rho).unwrap();
+    for threads in [2usize, 4] {
+        let bt = NativeBackend::with_default_models().with_threads(threads);
+        let sess_t = ModelSession::open(&bt, "cnn").unwrap();
+        let out = sess_t.cnn_fwd_bwd(&params, &batch, 5, &rho).unwrap();
+        assert_eq!(base.loss.to_bits(), out.loss.to_bits());
+        for (ga, gb) in base.grads.iter().zip(&out.grads) {
+            assert_eq!(ga, gb, "cnn grads differ at {threads} threads");
+        }
+        assert_eq!(base.act_norms, out.act_norms);
+    }
+}
+
+#[test]
+fn ratio1_vcas_bitwise_exact_under_threading() {
+    // The seed-PR guarantee — ratios of exactly 1.0 reproduce the exact
+    // gradient bitwise across rng seeds — must survive the threaded
+    // kernels: masks of exactly 1.0 and disjoint-tile accumulation leave
+    // no scheduling fingerprint.
+    let bt = NativeBackend::with_default_models().with_threads(4);
+    let sess = ModelSession::open(&bt, "small").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = cls_batch_for(&bt, "small", 22);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let (ones_l, ones_w) = ones(&sess);
+    let a = sess.fwd_bwd_cls(&params, &batch, &sw, 7, &ones_l, &ones_w, &ones_w).unwrap();
+    let b = sess.fwd_bwd_cls(&params, &batch, &sw, 991, &ones_l, &ones_w, &ones_w).unwrap();
+    assert_gradout_bits_eq(&a, &b, "ratio-1 across seeds @ 4 threads");
+    assert!(a.vw.iter().all(|&v| v == 0.0), "vw must be exactly 0 at nu = 1");
+}
+
+#[test]
+fn trainer_loss_curve_thread_invariant() {
+    let cfg = TrainConfig {
+        model: "tiny".into(),
+        task: "sst2-sim".into(),
+        method: Method::Vcas,
+        steps: 5,
+        seed: 13,
+        eval_batches: 2,
+        vcas: VcasConfig { freq: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let b1 = NativeBackend::with_default_models().with_threads(1);
+    let b4 = NativeBackend::with_default_models().with_threads(4);
+    let r1 = Trainer::new(&b1, &cfg).unwrap().run().unwrap();
+    let r4 = Trainer::new(&b4, &cfg).unwrap().run().unwrap();
+    assert_eq!(r1.losses, r4.losses, "thread count must not change the training trajectory");
+    assert_eq!(r1.final_eval_acc, r4.final_eval_acc);
+}
+
+// ---------------------------------------------------------------------------
 // XLA checks: feature- and artifact-gated, with graceful skips.
 // ---------------------------------------------------------------------------
 
