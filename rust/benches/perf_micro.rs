@@ -1,8 +1,10 @@
 //! §Perf micro-benchmarks: per-entry execute latency, marshalling cost,
-//! controller update cost, allreduce cost, and the kernel layer's
-//! single- vs multi-thread scaling — the L3 hot-path profile. The kernel
-//! section also writes `results/BENCH_kernels.json` so the repo's perf
-//! trajectory has machine-readable data points.
+//! controller update cost, allreduce cost, the kernel layer's single- vs
+//! multi-thread scaling, and the zero-scan vs gather-compacted sampled
+//! backward across keep ratios — the L3 hot-path profile. The kernel
+//! section writes `results/BENCH_kernels.json` and the sampling section
+//! `results/BENCH_sampling.json` so the repo's perf trajectory has
+//! machine-readable data points.
 //!
 //! Run: cargo bench --bench perf_micro
 
@@ -17,8 +19,9 @@ use vcas::config::VcasConfig;
 use vcas::data::batch::{gather_cls, EpochSampler};
 use vcas::data::tasks::{find, generate_cls};
 use vcas::formats::json::Json;
-use vcas::runtime::kernels::{reference, Layout, MatmulPlan};
-use vcas::runtime::{Backend, ModelSession, NativeBackend};
+use vcas::runtime::kernels::{reference, weighted_gather_tn, Layout, MatmulPlan, Workspace};
+use vcas::runtime::native::sampling::SampledRows;
+use vcas::runtime::{Backend, KernelCtx, ModelSession, NativeBackend};
 use vcas::util::rng::Pcg32;
 
 fn main() {
@@ -194,6 +197,104 @@ fn main() {
     let json_path = common::results_dir().join("BENCH_kernels.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(kernels_json))).unwrap();
     println!("(kernel scaling json: {})", json_path.display());
+
+    // compacted sampled execution: zero-scan vs gather/scatter backward
+    // rows across keep ratios. The "backward rows" composite is the two
+    // contractions a sampled linear's backward runs over the row-sampled
+    // gradient: gz = g @ W^T (NT) and gw = z^T diag(m) g (TN). The
+    // acceptance target is compacted wall-clock decreasing monotonically
+    // with the keep ratio and >= 2x over zero-scan at ratio 0.25.
+    let mut sampling_json: BTreeMap<String, Json> = BTreeMap::new();
+    {
+        let (rows, dout, din) = (1024usize, 192, 192);
+        let threads = 4usize;
+        let ctx = KernelCtx::new(threads);
+        let ws = Workspace::new();
+        let mut rng = Pcg32::new(11, 11);
+        let gdense: Vec<f32> = (0..rows * dout).map(|_| rng.normal() as f32).collect();
+        let z: Vec<f32> = (0..rows * din).map(|_| rng.normal() as f32).collect();
+        let w: Vec<f32> = (0..din * dout).map(|_| rng.normal() as f32).collect();
+        let nt = MatmulPlan::with_threads(Layout::Nt, rows, dout, din, threads);
+        let tn = MatmulPlan::with_threads(Layout::Tn, din, rows, dout, threads);
+        for ratio in [0.1f64, 0.25, 0.5, 0.75, 1.0] {
+            let mut mask_rng = Pcg32::new(5, 5);
+            let sr = SampledRows::sample(&gdense, dout, ratio as f32, &mut mask_rng).unwrap();
+            let mut zeroed = gdense.clone();
+            sr.apply(&mut zeroed, dout);
+            // full-length weight vector for the zero-scan TN row scan
+            let mut wfull = vec![0.0f32; rows];
+            for (&i, &s) in sr.kept.iter().zip(&sr.scales) {
+                wfull[i as usize] = s;
+            }
+            let zero_ms = common::time_median_ms(5, || {
+                std::hint::black_box(nt.run(&zeroed, &w));
+                std::hint::black_box(tn.run_weighted(&z, &zeroed, Some(&wfull)));
+            });
+            let mut gz = vec![0.0f32; rows * din];
+            let compact_ms = common::time_median_ms(5, || {
+                nt.run_gather_nt(&ws, &gdense, &w, &sr.kept, &sr.scales, &mut gz);
+                std::hint::black_box(&gz);
+                std::hint::black_box(weighted_gather_tn(
+                    ctx, &z, &zeroed, &sr.kept, &sr.scales, din, dout,
+                ));
+            });
+            table.row(vec![
+                format!("sampled bwd rows {rows}x{dout} keep {ratio}"),
+                format!("{compact_ms:.2}"),
+                format!(
+                    "zero-scan {zero_ms:.2} ms, {:.2}x, {} rows kept",
+                    zero_ms / compact_ms,
+                    sr.n_kept()
+                ),
+            ]);
+            let mut o: BTreeMap<String, Json> = BTreeMap::new();
+            o.insert("kept_rows".into(), Json::Num(sr.n_kept() as f64));
+            o.insert("zero_scan_ms".into(), Json::Num(zero_ms));
+            o.insert("compact_ms".into(), Json::Num(compact_ms));
+            o.insert("speedup".into(), Json::Num(zero_ms / compact_ms));
+            sampling_json.insert(format!("kernel_bwd_rows_ratio_{ratio}"), Json::Obj(o));
+        }
+    }
+    {
+        // end-to-end: "small" sampled fwd_bwd at rho = nu = 0.25, zero-scan
+        // vs compacted backend (bitwise-identical results, wall-clock only)
+        let spec = find("sst2-sim").unwrap();
+        let mut e2e: BTreeMap<String, Json> = BTreeMap::new();
+        let mut ms_by_mode = [0.0f64; 2];
+        for (slot, (mode, compact)) in
+            [("zero_scan", false), ("compacted", true)].into_iter().enumerate()
+        {
+            let nb = NativeBackend::with_default_models()
+                .with_threads(1)
+                .with_compaction(compact);
+            let sess = ModelSession::open(&nb, "small").unwrap();
+            let params = sess.load_params().unwrap();
+            let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 256, 1);
+            let mut sampler = EpochSampler::new(256, 1);
+            let batch = gather_cls(&ds, &sampler.take(nb.main_batch()));
+            let sw = vec![1.0 / batch.n as f32; batch.n];
+            let rho = vec![0.25f32; sess.n_layers];
+            let nu = vec![0.25f32; sess.n_sampled];
+            // warm the workspace so steady-state timing excludes first
+            // allocations
+            sess.fwd_bwd_cls(&params, &batch, &sw, 1, &rho, &nu, &nu).unwrap();
+            let ms = common::time_median_ms(7, || {
+                sess.fwd_bwd_cls(&params, &batch, &sw, 1, &rho, &nu, &nu).unwrap();
+            });
+            table.row(vec![
+                format!("small: fwd_bwd rho 0.25, {mode}"),
+                format!("{ms:.1}"),
+                "compaction".into(),
+            ]);
+            e2e.insert(format!("{mode}_ms"), Json::Num(ms));
+            ms_by_mode[slot] = ms;
+        }
+        e2e.insert("speedup".into(), Json::Num(ms_by_mode[0] / ms_by_mode[1]));
+        sampling_json.insert("fwd_bwd_small_rho_0.25".into(), Json::Obj(e2e));
+    }
+    let json_path = common::results_dir().join("BENCH_sampling.json");
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(sampling_json))).unwrap();
+    println!("(compacted sampling json: {})", json_path.display());
 
     table.print("perf_micro — L3 hot-path profile");
 }

@@ -127,6 +127,14 @@ pub trait Backend {
         1
     }
 
+    /// Whether sampled backwards run gather-compacted: dropped rows are
+    /// carried as a kept-index set and never materialised, so wall-clock
+    /// tracks the kept rows instead of the full shapes. Informational —
+    /// results are bitwise identical either way.
+    fn compaction(&self) -> bool {
+        false
+    }
+
     /// Registered model names.
     fn models(&self) -> Vec<String>;
 

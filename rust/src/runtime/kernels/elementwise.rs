@@ -25,18 +25,43 @@ pub fn add_bias(x: &mut [f32], bias: &[f32]) {
 /// reduction, kept in ascending row order.
 pub fn col_sums(x: &[f32], n: usize) -> Vec<f32> {
     let mut out = vec![0.0f32; n];
+    col_sums_into(x, n, &mut out);
+    out
+}
+
+/// [`col_sums`] into a caller-provided `(n,)` buffer (overwritten).
+pub fn col_sums_into(x: &[f32], n: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), n);
+    out.fill(0.0);
     for row in x.chunks(n) {
         for (o, &v) in out.iter_mut().zip(row) {
             *o += v;
         }
     }
-    out
 }
 
 /// Elementwise sum of two equal-length vectors.
 pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// [`add`] into a caller-provided buffer (overwritten).
+pub fn add_into(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+/// `dst += src` in place. f32 addition is commutative, so this produces
+/// the same bits as [`add`] regardless of which operand owns the buffer.
+pub fn add_assign(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
 }
 
 pub const LN_EPS: f32 = 1e-5;
@@ -60,8 +85,29 @@ pub fn layernorm_fwd(
     let mut y = vec![0.0f32; x.len()];
     let mut mu = vec![0.0f32; rows];
     let mut rstd = vec![0.0f32; rows];
+    layernorm_fwd_into(ctx, x, g, b, d, &mut y, &mut mu, &mut rstd);
+    (y, LnStats { mu, rstd })
+}
+
+/// [`layernorm_fwd`] into caller-provided buffers: `y (rows*d)`,
+/// `mu (rows)`, `rstd (rows)` — all overwritten.
+#[allow(clippy::too_many_arguments)]
+pub fn layernorm_fwd_into(
+    ctx: KernelCtx,
+    x: &[f32],
+    g: &[f32],
+    b: &[f32],
+    d: usize,
+    y: &mut [f32],
+    mu: &mut [f32],
+    rstd: &mut [f32],
+) {
+    let rows = x.len() / d;
+    debug_assert_eq!(y.len(), x.len());
+    debug_assert_eq!(mu.len(), rows);
+    debug_assert_eq!(rstd.len(), rows);
     let threads = workers_for(ctx, x.len());
-    par_row_chunks3(threads, &mut y, d, &mut mu, 1, &mut rstd, 1, |row0, yc, muc, rsc| {
+    par_row_chunks3(threads, y, d, mu, 1, rstd, 1, |row0, yc, muc, rsc| {
         for i in 0..muc.len() {
             let xr = &x[(row0 + i) * d..(row0 + i + 1) * d];
             let m = xr.iter().map(|&v| v as f64).sum::<f64>() / d as f64;
@@ -77,7 +123,6 @@ pub fn layernorm_fwd(
             rsc[i] = rs32;
         }
     });
-    (y, LnStats { mu, rstd })
 }
 
 /// Layernorm backward. Returns `(dx, dgamma, dbeta)`. `dx` rows thread;
@@ -91,8 +136,25 @@ pub fn layernorm_bwd(
     dy: &[f32],
     d: usize,
 ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let rows = x.len() / d;
     let mut dx = vec![0.0f32; x.len()];
+    let (dg, db) = layernorm_bwd_into(ctx, x, g, stats, dy, d, &mut dx);
+    (dx, dg, db)
+}
+
+/// [`layernorm_bwd`] writing `dx` into a caller-provided buffer
+/// (overwritten); the `dgamma`/`dbeta` gradients still come back as fresh
+/// vectors because they escape into the returned grad set.
+pub fn layernorm_bwd_into(
+    ctx: KernelCtx,
+    x: &[f32],
+    g: &[f32],
+    stats: &LnStats,
+    dy: &[f32],
+    d: usize,
+    dx: &mut [f32],
+) -> (Vec<f32>, Vec<f32>) {
+    let rows = x.len() / d;
+    debug_assert_eq!(dx.len(), x.len());
     let mut dg = vec![0.0f32; d];
     let mut db = vec![0.0f32; d];
     let threads = workers_for(ctx, x.len());
@@ -123,13 +185,13 @@ pub fn layernorm_bwd(
                 dxr[j] = rs * (dxhat - c1 - xhat * c2);
             }
         }
-        return (dx, dg, db);
+        return (dg, db);
     }
 
     // Threaded: dx rows fan out; dg/db is a cross-row reduction, so it
     // runs as a serial ascending-row sweep on the caller — the same order
     // (and the same bits) as the fused pass above.
-    par_row_chunks(threads, &mut dx, d, |row0, chunk| {
+    par_row_chunks(threads, dx, d, |row0, chunk| {
         for (i, dxr) in chunk.chunks_mut(d).enumerate() {
             let r = row0 + i;
             let xr = &x[r * d..(r + 1) * d];
@@ -162,7 +224,7 @@ pub fn layernorm_bwd(
             db[j] += dyr[j];
         }
     }
-    (dx, dg, db)
+    (dg, db)
 }
 
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
@@ -176,21 +238,34 @@ fn gelu_one(x: f32) -> f32 {
 /// Tanh-approximation GELU (matches the JAX graphs).
 pub fn gelu_fwd(ctx: KernelCtx, u: &[f32]) -> Vec<f32> {
     let mut out = vec![0.0f32; u.len()];
+    gelu_fwd_into(ctx, u, &mut out);
+    out
+}
+
+/// [`gelu_fwd`] into a caller-provided buffer (overwritten).
+pub fn gelu_fwd_into(ctx: KernelCtx, u: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(u.len(), out.len());
     let threads = workers_for(ctx, u.len());
-    par_row_chunks(threads, &mut out, 1, |i0, chunk| {
+    par_row_chunks(threads, out, 1, |i0, chunk| {
         for (o, &x) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
             *o = gelu_one(x);
         }
     });
-    out
 }
 
 /// GELU backward: `du = df * gelu'(u)`.
 pub fn gelu_bwd(ctx: KernelCtx, u: &[f32], df: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(u.len(), df.len());
     let mut out = vec![0.0f32; u.len()];
+    gelu_bwd_into(ctx, u, df, &mut out);
+    out
+}
+
+/// [`gelu_bwd`] into a caller-provided buffer (overwritten).
+pub fn gelu_bwd_into(ctx: KernelCtx, u: &[f32], df: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(u.len(), df.len());
+    debug_assert_eq!(u.len(), out.len());
     let threads = workers_for(ctx, u.len());
-    par_row_chunks(threads, &mut out, 1, |i0, chunk| {
+    par_row_chunks(threads, out, 1, |i0, chunk| {
         for (i, o) in chunk.iter_mut().enumerate() {
             let x = u[i0 + i];
             let dy = df[i0 + i];
@@ -243,11 +318,28 @@ pub fn ce_loss_and_dlogits(
     c: usize,
 ) -> (Vec<f32>, Vec<f32>) {
     let rows = y.len();
-    debug_assert_eq!(logits.len(), rows * c);
     let mut losses = vec![0.0f32; rows];
     let mut dlogits = vec![0.0f32; rows * c];
+    ce_loss_and_dlogits_into(ctx, logits, y, c, &mut losses, &mut dlogits);
+    (losses, dlogits)
+}
+
+/// [`ce_loss_and_dlogits`] into caller-provided `losses (rows)` and
+/// `dlogits (rows, c)` buffers (both overwritten).
+pub fn ce_loss_and_dlogits_into(
+    ctx: KernelCtx,
+    logits: &[f32],
+    y: &[i32],
+    c: usize,
+    losses: &mut [f32],
+    dlogits: &mut [f32],
+) {
+    let rows = y.len();
+    debug_assert_eq!(logits.len(), rows * c);
+    debug_assert_eq!(losses.len(), rows);
+    debug_assert_eq!(dlogits.len(), rows * c);
     let threads = workers_for(ctx, logits.len());
-    par_row_chunks2(threads, &mut dlogits, c, &mut losses, 1, |row0, dc, lc| {
+    par_row_chunks2(threads, dlogits, c, losses, 1, |row0, dc, lc| {
         for i in 0..lc.len() {
             let r = row0 + i;
             let lr = &logits[r * c..(r + 1) * c];
@@ -266,7 +358,6 @@ pub fn ce_loss_and_dlogits(
             dr[yi] -= 1.0;
         }
     });
-    (losses, dlogits)
 }
 
 #[cfg(test)]
@@ -368,6 +459,59 @@ mod tests {
             assert!((s - 1.0).abs() < 1e-5);
             assert!(row[2] > row[1] && row[1] > row[0]);
         }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_forms() {
+        let mut rng = Pcg32::new(0x17, 0x17);
+        let d = 5;
+        let rows = 7;
+        let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let dy: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+        let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal() as f32).collect();
+        let y: Vec<i32> = (0..rows).map(|_| rng.below(d as u64) as i32).collect();
+
+        let mut out = vec![f32::NAN; rows * d];
+        let mut mu = vec![f32::NAN; rows];
+        let mut rstd = vec![f32::NAN; rows];
+        layernorm_fwd_into(ctx(), &x, &g, &b, d, &mut out, &mut mu, &mut rstd);
+        let (y0, st0) = layernorm_fwd(ctx(), &x, &g, &b, d);
+        assert_eq!(out, y0);
+        assert_eq!(mu, st0.mu);
+        assert_eq!(rstd, st0.rstd);
+
+        let mut dx = vec![f32::NAN; rows * d];
+        let (dg, db) = layernorm_bwd_into(ctx(), &x, &g, &st0, &dy, d, &mut dx);
+        let (dx0, dg0, db0) = layernorm_bwd(ctx(), &x, &g, &st0, &dy, d);
+        assert_eq!(dx, dx0);
+        assert_eq!(dg, dg0);
+        assert_eq!(db, db0);
+
+        let mut gf = vec![f32::NAN; rows * d];
+        gelu_fwd_into(ctx(), &x, &mut gf);
+        assert_eq!(gf, gelu_fwd(ctx(), &x));
+        let mut gb = vec![f32::NAN; rows * d];
+        gelu_bwd_into(ctx(), &x, &dy, &mut gb);
+        assert_eq!(gb, gelu_bwd(ctx(), &x, &dy));
+
+        let mut losses = vec![f32::NAN; rows];
+        let mut dl = vec![f32::NAN; rows * d];
+        ce_loss_and_dlogits_into(ctx(), &x, &y, d, &mut losses, &mut dl);
+        let (l0, dl0) = ce_loss_and_dlogits(ctx(), &x, &y, d);
+        assert_eq!(losses, l0);
+        assert_eq!(dl, dl0);
+
+        let mut cs = vec![f32::NAN; d];
+        col_sums_into(&x, d, &mut cs);
+        assert_eq!(cs, col_sums(&x, d));
+
+        let mut sum = vec![f32::NAN; rows * d];
+        add_into(&x, &dy, &mut sum);
+        assert_eq!(sum, add(&x, &dy));
+        let mut acc = x.clone();
+        add_assign(&mut acc, &dy);
+        assert_eq!(acc, sum, "add_assign must match add bitwise (commutativity)");
     }
 
     /// All threaded per-row passes must be bitwise invariant to the thread

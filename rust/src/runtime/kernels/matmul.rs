@@ -11,8 +11,27 @@
 //! The zero-skip that makes SampleA/SampleW drops free is preserved: a
 //! left-hand element (NN) or weighted row (TN) that is exactly 0.0 is
 //! skipped inside every tile, so dropped rows cost nothing on any path.
+//!
+//! # Gather-compacted execution
+//!
+//! The zero-scan kernels still *touch* every dropped row (zero memory
+//! traffic and scan cost stay O(full size)). The gather entry points take
+//! the kept-row set explicitly instead: [`MatmulPlan::run_gather_nn`] /
+//! [`MatmulPlan::run_gather_nt`] pack only the kept rows of the left
+//! operand (scaled by their 1/p mask), compute dense on the compact shape
+//! and scatter rows back (dropped rows exactly +0.0);
+//! [`gather_tn`] / [`weighted_gather_tn`] contract over the kept rows
+//! only, in ascending index order. Per output element the accumulation
+//! order is exactly the zero-scan kernels' order, so results are bitwise
+//! identical to running the zero-filled matrices through `run` /
+//! `run_weighted` at any thread count — wall-clock finally tracks the
+//! kept set instead of the full shape.
+//!
+//! Every entry point also has a `*_into(&mut out)` form so steady-state
+//! callers can run matmuls with zero allocations through a
+//! [`Workspace`](super::Workspace) buffer.
 
-use super::{par_row_chunks, workers_for, KernelCtx};
+use super::{gather_rows_scaled, par_row_chunks, scatter_rows, workers_for, KernelCtx, Workspace};
 
 /// Contraction-dimension tile: rows of the `b` panel processed per pass.
 const KC: usize = 64;
@@ -73,33 +92,41 @@ impl MatmulPlan {
     /// Execute the plan. For [`Layout::Tn`] this is the unweighted
     /// contraction; use [`MatmulPlan::run_weighted`] for `a^T diag(w) b`.
     pub fn run(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m * self.n];
+        self.run_into(a, b, &mut out);
+        out
+    }
+
+    /// [`MatmulPlan::run`] into a caller-provided `(m, n)` buffer
+    /// (overwritten — incoming contents are irrelevant).
+    pub fn run_into(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
         match self.layout {
-            Layout::Nn => self.run_nn(a, b),
-            Layout::Nt => self.run_nt(a, b),
-            Layout::Tn => self.run_weighted(a, b, None),
+            Layout::Nn => self.run_nn_into(a, b, out),
+            Layout::Nt => self.run_nt_into(a, b, out),
+            Layout::Tn => self.run_weighted_into(a, b, None, out),
         }
     }
 
-    fn run_nn(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+    fn run_nn_into(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
         let (m, k, n) = (self.m, self.k, self.n);
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
-        let mut out = vec![0.0f32; m * n];
-        par_row_chunks(self.threads, &mut out, n.max(1), |row0, chunk| {
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        par_row_chunks(self.threads, out, n.max(1), |row0, chunk| {
             nn_tile(a, b, k, n, row0, chunk);
         });
-        out
     }
 
-    fn run_nt(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+    fn run_nt_into(&self, a: &[f32], b: &[f32], out: &mut [f32]) {
         let (m, k, n) = (self.m, self.k, self.n);
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), n * k);
-        let mut out = vec![0.0f32; m * n];
-        par_row_chunks(self.threads, &mut out, n.max(1), |row0, chunk| {
+        debug_assert_eq!(out.len(), m * n);
+        // NT writes every output element directly — no zero fill needed.
+        par_row_chunks(self.threads, out, n.max(1), |row0, chunk| {
             nt_tile(a, b, k, n, row0, chunk);
         });
-        out
     }
 
     /// `a^T diag(w) b` over the plan's [`Layout::Tn`] dims; rows with
@@ -107,6 +134,14 @@ impl MatmulPlan {
     /// token rows cost nothing). `w = None` is the dense path — no
     /// per-element weight multiply or extra branch.
     pub fn run_weighted(&self, a: &[f32], b: &[f32], w: Option<&[f32]>) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.m * self.n];
+        self.run_weighted_into(a, b, w, &mut out);
+        out
+    }
+
+    /// [`MatmulPlan::run_weighted`] into a caller-provided `(m, n)` buffer
+    /// (overwritten).
+    pub fn run_weighted_into(&self, a: &[f32], b: &[f32], w: Option<&[f32]>, out: &mut [f32]) {
         assert!(
             matches!(self.layout, Layout::Tn),
             "run_weighted needs a TN plan, got {:?}",
@@ -115,11 +150,73 @@ impl MatmulPlan {
         let (m, r, n) = (self.m, self.k, self.n);
         debug_assert_eq!(a.len(), r * m);
         debug_assert_eq!(b.len(), r * n);
-        let mut out = vec![0.0f32; m * n];
-        par_row_chunks(self.threads, &mut out, n.max(1), |c0, chunk| {
+        debug_assert_eq!(out.len(), m * n);
+        out.fill(0.0);
+        par_row_chunks(self.threads, out, n.max(1), |c0, chunk| {
             tn_tile(a, b, w, r, m, n, c0, chunk);
         });
-        out
+    }
+
+    /// Gather-compacted NN: the left operand is row-sampled — only the
+    /// `kept` rows (ascending), scaled by their 1/p mask, carry signal.
+    /// Packs those rows into a workspace buffer, multiplies dense on the
+    /// compact `(kept, k)` shape, and scatters the result rows back into
+    /// `out (m, n)` with dropped rows exactly +0.0. Bitwise identical to
+    /// [`MatmulPlan::run`] on the zero-filled scaled matrix at any thread
+    /// count — each output row's contraction is untouched, only the rows
+    /// that would be all-zero are never computed.
+    pub fn run_gather_nn(
+        &self,
+        ws: &Workspace,
+        a: &[f32],
+        b: &[f32],
+        kept: &[u32],
+        scales: &[f32],
+        out: &mut [f32],
+    ) {
+        self.run_gather(ws, a, b, kept, scales, out, Layout::Nn);
+    }
+
+    /// Gather-compacted NT — see [`MatmulPlan::run_gather_nn`]; the same
+    /// pack/compute/scatter with `b (n, k)` row-dot-row.
+    pub fn run_gather_nt(
+        &self,
+        ws: &Workspace,
+        a: &[f32],
+        b: &[f32],
+        kept: &[u32],
+        scales: &[f32],
+        out: &mut [f32],
+    ) {
+        self.run_gather(ws, a, b, kept, scales, out, Layout::Nt);
+    }
+
+    fn run_gather(
+        &self,
+        ws: &Workspace,
+        a: &[f32],
+        b: &[f32],
+        kept: &[u32],
+        scales: &[f32],
+        out: &mut [f32],
+        layout: Layout,
+    ) {
+        assert!(
+            self.layout == layout,
+            "run_gather_{layout:?} needs a {layout:?} plan, got {:?}",
+            self.layout
+        );
+        let (m, k, n) = (self.m, self.k, self.n);
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(out.len(), m * n);
+        let kk = kept.len();
+        let mut pa = ws.take(kk * k);
+        gather_rows_scaled(a, k, kept, scales, &mut pa);
+        let mut po = ws.take(kk * n);
+        MatmulPlan::with_threads(layout, kk, k, n, self.threads).run_into(&pa, b, &mut po);
+        scatter_rows(&po, n, kept, out);
+        ws.give(pa);
+        ws.give(po);
     }
 }
 
@@ -245,6 +342,59 @@ fn tn_tile(
     }
 }
 
+/// Gather-compacted TN worker body: the contraction runs over the rows
+/// listed in `idx` (ascending original indices) instead of scanning all
+/// `r` rows. `w`, when present, is *aligned with `idx`* (one weight per
+/// kept row; zeros still skip). Ascending `idx` is ascending original row
+/// order, so per output element the accumulation is bitwise
+/// [`tn_tile`]'s with the absent rows contributing nothing — exactly what
+/// they contribute in the zero-scan kernel when their data or weight is 0.
+#[allow(clippy::too_many_arguments)]
+fn gather_tn_tile(
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    w: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    if n == 0 {
+        return;
+    }
+    let cols = out.len() / n;
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + NC).min(n);
+        for (j, &row) in idx.iter().enumerate() {
+            let wv = match w {
+                Some(w) => {
+                    if w[j] == 0.0 {
+                        continue;
+                    }
+                    w[j]
+                }
+                None => 1.0,
+            };
+            let row = row as usize;
+            let arow = &a[row * m + c0..row * m + c0 + cols];
+            let brow = &b[row * n + j0..row * n + j1];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let avw = if w.is_some() { av * wv } else { av };
+                let orow = &mut out[p * n + j0..p * n + j1];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += avw * bv;
+                }
+            }
+        }
+        j0 = j1;
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Functional entry points (what the models call).
 // ---------------------------------------------------------------------------
@@ -254,14 +404,53 @@ pub fn matmul(ctx: KernelCtx, a: &[f32], b: &[f32], m: usize, k: usize, n: usize
     MatmulPlan::new(Layout::Nn, m, k, n, ctx).run(a, b)
 }
 
+/// [`matmul`] into a caller-provided buffer (overwritten).
+pub fn matmul_into(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    MatmulPlan::new(Layout::Nn, m, k, n, ctx).run_into(a, b, out);
+}
+
 /// `a (m,k) @ b^T` with `b (n,k)` -> `(m,n)`.
 pub fn matmul_nt(ctx: KernelCtx, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     MatmulPlan::new(Layout::Nt, m, k, n, ctx).run(a, b)
 }
 
+/// [`matmul_nt`] into a caller-provided buffer (overwritten).
+pub fn matmul_nt_into(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    MatmulPlan::new(Layout::Nt, m, k, n, ctx).run_into(a, b, out);
+}
+
 /// `a^T @ b` with `a (r,m)`, `b (r,n)` -> `(m,n)`.
 pub fn matmul_tn(ctx: KernelCtx, a: &[f32], b: &[f32], r: usize, m: usize, n: usize) -> Vec<f32> {
     weighted_tn(ctx, a, b, None, r, m, n)
+}
+
+/// [`matmul_tn`] into a caller-provided buffer (overwritten).
+pub fn matmul_tn_into(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    weighted_tn_into(ctx, a, b, None, r, m, n, out);
 }
 
 /// `a^T diag(w) b` -> `(m,n)`; rows with `w == 0` are skipped entirely.
@@ -275,6 +464,105 @@ pub fn weighted_tn(
     n: usize,
 ) -> Vec<f32> {
     MatmulPlan::new(Layout::Tn, m, r, n, ctx).run_weighted(a, b, w)
+}
+
+/// [`weighted_tn`] into a caller-provided buffer (overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn weighted_tn_into(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    w: Option<&[f32]>,
+    r: usize,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    MatmulPlan::new(Layout::Tn, m, r, n, ctx).run_weighted_into(a, b, w, out);
+}
+
+/// Gather-compacted `a^T @ b` with `a (r,m)`, `b (r,n)`: contract only the
+/// rows listed in `idx` (ascending). Bitwise identical to [`matmul_tn`]
+/// when every absent row of `a` or `b` is exactly 0.
+pub fn gather_tn(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    gather_tn_into(ctx, a, b, idx, m, n, &mut out);
+    out
+}
+
+/// [`gather_tn`] into a caller-provided `(m, n)` buffer (overwritten).
+pub fn gather_tn_into(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    gather_tn_dispatch(ctx, a, b, idx, None, m, n, out);
+}
+
+/// Gather-compacted `a^T diag(w) b`: contract only the `idx` rows with
+/// weights *aligned with `idx`* (`w[j]` belongs to row `idx[j]`; zero
+/// weights still skip). Bitwise identical to [`weighted_tn`] with a full
+/// weight vector that is zero off-`idx` — the SampleW contraction with the
+/// kept set made explicit, so the O(r) row scan disappears.
+pub fn weighted_gather_tn(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    weighted_gather_tn_into(ctx, a, b, idx, w, m, n, &mut out);
+    out
+}
+
+/// [`weighted_gather_tn`] into a caller-provided `(m, n)` buffer
+/// (overwritten).
+#[allow(clippy::too_many_arguments)]
+pub fn weighted_gather_tn_into(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    w: &[f32],
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    gather_tn_dispatch(ctx, a, b, idx, Some(w), m, n, out);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn gather_tn_dispatch(
+    ctx: KernelCtx,
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    w: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len(), m * n);
+    debug_assert!(idx.windows(2).all(|p| p[0] < p[1]), "gather idx must be strictly ascending");
+    out.fill(0.0);
+    let threads = workers_for(ctx, idx.len() * m * n).clamp(1, m.max(1));
+    par_row_chunks(threads, out, n.max(1), |c0, chunk| {
+        gather_tn_tile(a, b, idx, w, m, n, c0, chunk);
+    });
 }
 
 // ---------------------------------------------------------------------------
@@ -527,6 +815,171 @@ mod tests {
             let dense = weighted_tn(ctx, &a, &b, None, r, m, n);
             ensure(bitwise_eq(&with_ones, &dense), "unit weights perturbed the contraction")
         });
+    }
+
+    /// Random kept-row set at the given keep probability, with mixed 1/p-
+    /// style scales. Returns `(dense, zeroed, kept, scales)` where
+    /// `zeroed` is the zero-scan twin: dropped rows exactly 0.0, kept rows
+    /// pre-scaled by the same multiply the gather path applies.
+    #[allow(clippy::type_complexity)]
+    fn sampled_rows(
+        g: &mut Gen,
+        rows: usize,
+        cols: usize,
+        keep: f32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<u32>, Vec<f32>) {
+        let dense = g.vec_normal(rows * cols, 1.0);
+        let mut kept = Vec::new();
+        let mut scales = Vec::new();
+        for i in 0..rows {
+            if g.f32_in(0.0, 1.0) < keep {
+                kept.push(i as u32);
+                scales.push(if g.bool() { 1.0 } else { g.f32_in(0.5, 4.0) });
+            }
+        }
+        let mut zeroed = vec![0.0f32; rows * cols];
+        for (&i, &s) in kept.iter().zip(&scales) {
+            let src = &dense[i as usize * cols..(i as usize + 1) * cols];
+            let dst = &mut zeroed[i as usize * cols..(i as usize + 1) * cols];
+            if s == 1.0 {
+                dst.copy_from_slice(src);
+            } else {
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o = v * s;
+                }
+            }
+        }
+        (dense, zeroed, kept, scales)
+    }
+
+    #[test]
+    fn gather_nn_nt_bitwise_match_zero_scan_property() {
+        // Satellite: gather/scatter == zero-scan bitwise for NN and NT at
+        // keep ratios {0.1, 0.5, 1.0} and 1/2/4 threads.
+        let ws = Workspace::new();
+        for keep in [0.1f32, 0.5, 1.0] {
+            check("gather NN/NT == zero-scan bitwise", 32, |g: &mut Gen| {
+                let m = g.usize_in(1, 32);
+                let k = g.usize_in(1, 96);
+                let n = g.usize_in(1, 140);
+                let (dense, zeroed, kept, scales) = sampled_rows(g, m, k, keep);
+                let bn = g.vec_normal(k * n, 1.0);
+                let bt = g.vec_normal(n * k, 1.0);
+                for threads in [1usize, 2, 4] {
+                    let nn = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads);
+                    let want = nn.run(&zeroed, &bn);
+                    let mut got = vec![f32::NAN; m * n]; // scatter must overwrite
+                    nn.run_gather_nn(&ws, &dense, &bn, &kept, &scales, &mut got);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!("gather NN {m}x{k}x{n} keep {keep} diverges at {threads} thr"),
+                    )?;
+                    let nt = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads);
+                    let want = nt.run(&zeroed, &bt);
+                    let mut got = vec![f32::NAN; m * n];
+                    nt.run_gather_nt(&ws, &dense, &bt, &kept, &scales, &mut got);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!("gather NT {m}x{k}x{n} keep {keep} diverges at {threads} thr"),
+                    )?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn gather_tn_bitwise_matches_zero_scan_property() {
+        // TN twin of the satellite: the contraction over an explicit kept
+        // set must equal the zero-scan kernels bitwise — dense against the
+        // zero-filled left operand, weighted against the full mask vector
+        // that is zero off-index.
+        for keep in [0.1f32, 0.5, 1.0] {
+            check("gather TN == zero-scan bitwise", 32, |g: &mut Gen| {
+                let r = g.usize_in(1, 40);
+                let m = g.usize_in(1, 24);
+                let n = g.usize_in(1, 140);
+                let (_dense, zeroed, kept, scales) = sampled_rows(g, r, m, keep);
+                let b = g.vec_normal(r * n, 1.0);
+                // full-length weight vector, zero off the kept set
+                let mut wfull = vec![0.0f32; r];
+                for (&i, &s) in kept.iter().zip(&scales) {
+                    wfull[i as usize] = s;
+                }
+                let dense_a = g.vec_normal(r * m, 1.0);
+                for threads in [1usize, 2, 4] {
+                    let ctx = KernelCtx::new(threads);
+                    let plan = MatmulPlan::with_threads(Layout::Tn, m, r, n, threads);
+                    // dense: absent rows of `a` are exactly zero
+                    let want = plan.run_weighted(&zeroed, &b, None);
+                    let got = gather_tn(ctx, &zeroed, &b, &kept, m, n);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!("gather TN {r}x{m}x{n} keep {keep} diverges at {threads} thr"),
+                    )?;
+                    // weighted: absent rows have weight exactly zero
+                    let want = plan.run_weighted(&dense_a, &b, Some(&wfull));
+                    let got = weighted_gather_tn(ctx, &dense_a, &b, &kept, &scales, m, n);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!("wgather TN {r}x{m}x{n} keep {keep} diverges at {threads} thr"),
+                    )?;
+                }
+                Ok(())
+            });
+        }
+    }
+
+    #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let ctx = KernelCtx::new(2);
+        let mut g = Gen::new(0xD17);
+        let (m, k, n) = (9, 17, 13);
+        let a = g.vec_normal(m * k, 1.0);
+        let b = g.vec_normal(k * n, 1.0);
+        let bt = g.vec_normal(n * k, 1.0);
+        let mut out = vec![f32::NAN; m * n];
+        matmul_into(ctx, &a, &b, m, k, n, &mut out);
+        assert_eq!(out, matmul(ctx, &a, &b, m, k, n));
+        out.fill(f32::NAN);
+        matmul_nt_into(ctx, &a, &bt, m, k, n, &mut out);
+        assert_eq!(out, matmul_nt(ctx, &a, &bt, m, k, n));
+        let (r, mm, nn) = (11, 6, 7);
+        let ta = g.vec_normal(r * mm, 1.0);
+        let tb = g.vec_normal(r * nn, 1.0);
+        let mut tout = vec![f32::NAN; mm * nn];
+        matmul_tn_into(ctx, &ta, &tb, r, mm, nn, &mut tout);
+        assert_eq!(tout, matmul_tn(ctx, &ta, &tb, r, mm, nn));
+        let w: Vec<f32> = (0..r).map(|i| if i % 3 == 0 { 0.0 } else { 1.5 }).collect();
+        tout.fill(f32::NAN);
+        weighted_tn_into(ctx, &ta, &tb, Some(&w), r, mm, nn, &mut tout);
+        assert_eq!(tout, weighted_tn(ctx, &ta, &tb, Some(&w), r, mm, nn));
+    }
+
+    #[test]
+    fn gather_with_empty_and_full_kept_sets() {
+        let ws = Workspace::new();
+        let mut g = Gen::new(0xF1F);
+        let (m, k, n) = (6, 8, 5);
+        let a = g.vec_normal(m * k, 1.0);
+        let b = g.vec_normal(k * n, 1.0);
+        // empty kept set -> all-zero output
+        let plan = MatmulPlan::with_threads(Layout::Nn, m, k, n, 2);
+        let mut out = vec![f32::NAN; m * n];
+        plan.run_gather_nn(&ws, &a, &b, &[], &[], &mut out);
+        assert_eq!(out, vec![0.0; m * n]);
+        // full kept set with unit scales == plain run
+        let kept: Vec<u32> = (0..m as u32).collect();
+        let scales = vec![1.0f32; m];
+        plan.run_gather_nn(&ws, &a, &b, &kept, &scales, &mut out);
+        assert_eq!(out, plan.run(&a, &b));
+        // TN: empty idx -> zeros; full idx == matmul_tn
+        let ctx = KernelCtx::serial();
+        let ta = g.vec_normal(4 * 3, 1.0);
+        let tb = g.vec_normal(4 * 2, 1.0);
+        assert_eq!(gather_tn(ctx, &ta, &tb, &[], 3, 2), vec![0.0; 6]);
+        let idx: Vec<u32> = (0..4).collect();
+        assert_eq!(gather_tn(ctx, &ta, &tb, &idx, 3, 2), matmul_tn(ctx, &ta, &tb, 4, 3, 2));
     }
 
     #[test]

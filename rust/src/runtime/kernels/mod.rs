@@ -28,12 +28,20 @@
 
 mod elementwise;
 mod matmul;
+mod workspace;
 
 pub use elementwise::{
-    add, add_bias, argmax_row, ce_loss_and_dlogits, col_sums, gelu_bwd, gelu_fwd,
-    layernorm_bwd, layernorm_fwd, softmax_rows, LnStats, LN_EPS,
+    add, add_assign, add_bias, add_into, argmax_row, ce_loss_and_dlogits,
+    ce_loss_and_dlogits_into, col_sums, col_sums_into, gelu_bwd, gelu_bwd_into, gelu_fwd,
+    gelu_fwd_into, layernorm_bwd, layernorm_bwd_into, layernorm_fwd, layernorm_fwd_into,
+    softmax_rows, LnStats, LN_EPS,
 };
-pub use matmul::{matmul, matmul_nt, matmul_tn, reference, weighted_tn, Layout, MatmulPlan};
+pub use matmul::{
+    gather_tn, gather_tn_into, matmul, matmul_into, matmul_nt, matmul_nt_into, matmul_tn,
+    matmul_tn_into, reference, weighted_gather_tn, weighted_gather_tn_into, weighted_tn,
+    weighted_tn_into, Layout, MatmulPlan,
+};
+pub use workspace::Workspace;
 
 /// Immutable execution context handed down to every kernel: how many
 /// scoped worker threads a call may fan out to (1 = fully serial).
@@ -88,6 +96,43 @@ pub fn default_threads() -> usize {
     {
         Some(n) => n.max(1),
         None => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// Pack the `idx` rows of `src (rows, cols)` into `out (idx.len(), cols)`.
+pub fn gather_rows(src: &[f32], cols: usize, idx: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), idx.len() * cols);
+    for (&k, dst) in idx.iter().zip(out.chunks_mut(cols)) {
+        dst.copy_from_slice(&src[k as usize * cols..(k as usize + 1) * cols]);
+    }
+}
+
+/// [`gather_rows`] with a per-row scale (aligned with `idx`). A scale of
+/// exactly 1.0 copies bits untouched — the same contract as the in-place
+/// sampler masking, so gathered rows are bitwise the zero-scan rows.
+pub fn gather_rows_scaled(src: &[f32], cols: usize, idx: &[u32], scales: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), idx.len() * cols);
+    debug_assert_eq!(idx.len(), scales.len());
+    for ((&k, &s), dst) in idx.iter().zip(scales).zip(out.chunks_mut(cols)) {
+        let srow = &src[k as usize * cols..(k as usize + 1) * cols];
+        if s == 1.0 {
+            dst.copy_from_slice(srow);
+        } else {
+            for (o, &v) in dst.iter_mut().zip(srow) {
+                *o = v * s;
+            }
+        }
+    }
+}
+
+/// Scatter `compact (idx.len(), cols)` rows back to their `idx` positions
+/// in `out (rows, cols)`; every other row becomes exactly +0.0 — the same
+/// bits the zero-scan kernels produce for dropped rows.
+pub fn scatter_rows(compact: &[f32], cols: usize, idx: &[u32], out: &mut [f32]) {
+    debug_assert_eq!(compact.len(), idx.len() * cols);
+    out.fill(0.0);
+    for (&k, src) in idx.iter().zip(compact.chunks(cols)) {
+        out[k as usize * cols..(k as usize + 1) * cols].copy_from_slice(src);
     }
 }
 

@@ -1,0 +1,203 @@
+//! Reusable f32 buffer pool — the per-backend scratch arena that removes
+//! the per-step `vec![0.0; …]` allocations from the native hot loops.
+//!
+//! The pool is deliberately dumb: [`Workspace::take`] hands out a
+//! `Vec<f32>` of exactly the requested length with unspecified contents
+//! (reusing the pooled buffer with the smallest sufficient capacity,
+//! growing one only when none fits) and
+//! [`Workspace::give`] returns it. Ownership moves in and out, so callers
+//! can stash buffers in structs (saved activations live from forward to
+//! backward) without fighting lifetimes; a buffer that is never given back
+//! simply drops — the pool degrades to plain allocation, never leaks or
+//! aliases.
+//!
+//! Thread safety: the free list sits behind a `Mutex` and the counters are
+//! atomic, so DDP workers and scoped kernel threads can share one pool
+//! through `&Workspace`. Buffers are plain values while taken — the lock is
+//! held only for the push/pop, never across compute.
+//!
+//! [`Workspace::allocations`] counts the takes that had to touch the heap;
+//! in steady state (shapes stable, every buffer given back) it stops
+//! growing, which is exactly what the workspace-reuse test asserts.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Free-list cap: more simultaneous live buffers than this means shapes
+/// are churning and pooling has stopped paying; excess buffers just drop.
+const MAX_POOLED: usize = 128;
+
+/// A shared pool of reusable `Vec<f32>` scratch buffers.
+pub struct Workspace {
+    pool: Mutex<Vec<Vec<f32>>>,
+    takes: AtomicUsize,
+    allocs: AtomicUsize,
+}
+
+impl Workspace {
+    /// An empty pool.
+    pub fn new() -> Workspace {
+        Workspace {
+            pool: Mutex::new(Vec::new()),
+            takes: AtomicUsize::new(0),
+            allocs: AtomicUsize::new(0),
+        }
+    }
+
+    /// A buffer of exactly `len` elements with **unspecified contents**
+    /// (every consumer either writes all elements or zero-fills
+    /// explicitly, so a steady-state same-size reuse costs no memset).
+    /// Reuses the pooled buffer with the *smallest sufficient* capacity
+    /// (best-fit, so large buffers are never wasted on small requests and
+    /// identical request sequences reach an allocation-free steady
+    /// state); only when none fits does the take count as a heap
+    /// allocation.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.takes.fetch_add(1, Ordering::Relaxed);
+        let mut buf = {
+            let mut pool = self.pool.lock().unwrap();
+            let mut best: Option<(usize, usize)> = None; // (index, capacity)
+            for (i, b) in pool.iter().enumerate() {
+                let cap = b.capacity();
+                if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
+                    best = Some((i, cap));
+                }
+            }
+            match best {
+                Some((i, _)) => pool.swap_remove(i),
+                None => Vec::new(),
+            }
+        };
+        if buf.capacity() < len {
+            self.allocs.fetch_add(1, Ordering::Relaxed);
+        }
+        // shrink is O(1), grow writes only the new tail — contents are
+        // unspecified either way, so no full memset is ever paid
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool (capacity is what gets reused; length
+    /// is irrelevant). Zero-capacity buffers and overflow beyond
+    /// [`MAX_POOLED`] are silently dropped.
+    pub fn give(&self, buf: Vec<f32>) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let mut pool = self.pool.lock().unwrap();
+        if pool.len() < MAX_POOLED {
+            pool.push(buf);
+        }
+    }
+
+    /// Total `take` calls served.
+    pub fn takes(&self) -> usize {
+        self.takes.load(Ordering::Relaxed)
+    }
+
+    /// Takes that had to allocate (no pooled buffer fit). Flat across
+    /// steady-state steps == every hot-loop buffer is being reused.
+    pub fn allocations(&self) -> usize {
+        self.allocs.load(Ordering::Relaxed)
+    }
+
+    /// Buffers currently parked in the free list.
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Workspace::new()
+    }
+}
+
+/// Clones start with an empty pool: scratch buffers are per-instance
+/// caches, not state.
+impl Clone for Workspace {
+    fn clone(&self) -> Self {
+        Workspace::new()
+    }
+}
+
+impl std::fmt::Debug for Workspace {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Workspace")
+            .field("pooled", &self.pooled())
+            .field("takes", &self.takes())
+            .field("allocations", &self.allocations())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_sizes_correctly_and_reuse_stops_allocating() {
+        let ws = Workspace::new();
+        let mut a = ws.take(64);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|&v| v == 0.0), "freshly grown buffers start zeroed");
+        a.iter_mut().for_each(|v| *v = 7.0);
+        ws.give(a);
+        assert_eq!(ws.allocations(), 1);
+        // same-size take reuses without reallocating; contents are
+        // unspecified (here: the previous values, no memset paid)
+        let b = ws.take(64);
+        assert_eq!(b.len(), 64);
+        ws.give(b);
+        assert_eq!(ws.allocations(), 1, "reuse must not allocate");
+        // smaller take also reuses (resized down)
+        let c = ws.take(16);
+        assert_eq!(c.len(), 16);
+        ws.give(c);
+        assert_eq!(ws.allocations(), 1);
+        // bigger take allocates
+        let d = ws.take(256);
+        assert_eq!(d.len(), 256);
+        ws.give(d);
+        assert_eq!(ws.allocations(), 2);
+        assert_eq!(ws.takes(), 4);
+    }
+
+    #[test]
+    fn steady_state_cycle_is_allocation_free() {
+        let ws = Workspace::new();
+        let sizes = [100usize, 30, 500, 100, 8];
+        // warm-up round populates the pool
+        let bufs: Vec<_> = sizes.iter().map(|&s| ws.take(s)).collect();
+        for b in bufs {
+            ws.give(b);
+        }
+        let warm = ws.allocations();
+        for _ in 0..10 {
+            let bufs: Vec<_> = sizes.iter().map(|&s| ws.take(s)).collect();
+            for b in bufs {
+                ws.give(b);
+            }
+        }
+        assert_eq!(ws.allocations(), warm, "steady-state cycles must not allocate");
+    }
+
+    #[test]
+    fn clone_starts_empty_and_pool_is_shared_across_threads() {
+        let ws = Workspace::new();
+        ws.give(vec![1.0; 32]);
+        assert_eq!(ws.clone().pooled(), 0);
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for _ in 0..50 {
+                        let b = ws.take(64);
+                        ws.give(b);
+                    }
+                });
+            }
+        });
+        assert!(ws.pooled() >= 1);
+        assert!(ws.takes() >= 200);
+    }
+}

@@ -19,7 +19,7 @@ mod engine;
 mod xla;
 
 pub use backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
-pub use kernels::{default_threads, KernelCtx, MatmulPlan};
+pub use kernels::{default_threads, KernelCtx, MatmulPlan, Workspace};
 pub use manifest::{EntrySpec, Manifest, ModelManifest};
 pub use native::{CnnCfg, NativeBackend, TransformerCfg};
 pub use session::ModelSession;

@@ -8,17 +8,27 @@
 //! reduction crosses samples and therefore stays serial in ascending
 //! sample order, keeping results bitwise independent of the thread count
 //! (see `runtime::kernels` for the determinism contract).
+//!
+//! The backward keeps the SampleA outcome as a [`SampledRows`] kept-sample
+//! set: when compaction is on and the draw dropped samples, each stage
+//! backward runs on a packed batch of only the kept samples (activations
+//! gathered, pool argmax indices remapped), with reductions accumulating
+//! the kept samples in ascending original order — bitwise identical to the
+//! zero-scan reference, wall-clock proportional to the kept set. Hot-loop
+//! buffers come from the backend [`Workspace`].
 
 use crate::error::{ensure, Result};
 use crate::formats::params::{ParamSet, Tensor};
 use crate::runtime::backend::{CnnGradOut, ModelInfo, ModelKind};
 use crate::runtime::kernels::{
-    add_bias, argmax_row, ce_loss_and_dlogits, col_sums, matmul, matmul_nt, par_row_chunks,
-    weighted_tn, workers_for, KernelCtx,
+    add_bias, argmax_row, ce_loss_and_dlogits_into, col_sums, gather_rows,
+    gather_rows_scaled, matmul_into, matmul_nt_into, par_row_chunks, weighted_tn,
+    workers_for, KernelCtx, Workspace,
 };
 use crate::util::rng::Pcg32;
 
-use super::sampling::sample_rows;
+use super::sampling::{row_norm, row_norms, SampledRows};
+use super::ExecCtx;
 
 /// Static architecture config of a native CNN.
 #[derive(Clone, Debug)]
@@ -117,7 +127,7 @@ impl CnnCfg {
 // ---------------------------------------------------------------------------
 
 #[allow(clippy::too_many_arguments)]
-fn conv3x3_fwd(
+fn conv3x3_fwd_into(
     kctx: KernelCtx,
     x: &[f32],
     n: usize,
@@ -126,11 +136,13 @@ fn conv3x3_fwd(
     w: &[f32],
     b: &[f32],
     cout: usize,
-) -> Vec<f32> {
+    y: &mut [f32],
+) {
     let sample_len = side * side * cout;
-    let mut y = vec![0.0f32; n * sample_len];
+    debug_assert_eq!(y.len(), n * sample_len);
+    y.fill(0.0);
     let threads = workers_for(kctx, 2 * n * side * side * 9 * cin * cout);
-    par_row_chunks(threads, &mut y, sample_len, |n0, chunk| {
+    par_row_chunks(threads, y, sample_len, |n0, chunk| {
         for li in 0..chunk.len() / sample_len {
             let ni = n0 + li;
             for oy in 0..side {
@@ -168,15 +180,15 @@ fn conv3x3_fwd(
             }
         }
     });
-    y
 }
 
-/// Backward of conv3x3 SAME: returns (dw, db, dx). `dx` is per-sample and
+/// Backward of conv3x3 SAME into a caller-provided `dx` buffer; returns
+/// `(dw, db)` (they escape into the grad set). `dx` is per-sample and
 /// threads over samples; `dw` sums over every sample, so it is computed by
 /// a serial ascending-sample sweep — the combined serial loop and the
 /// split threaded path produce identical bits (same per-element order).
 #[allow(clippy::too_many_arguments)]
-fn conv3x3_bwd(
+fn conv3x3_bwd_into(
     kctx: KernelCtx,
     x: &[f32],
     dy: &[f32],
@@ -185,9 +197,11 @@ fn conv3x3_bwd(
     cin: usize,
     w: &[f32],
     cout: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    dx: &mut [f32],
+) -> (Vec<f32>, Vec<f32>) {
     let mut dw = vec![0.0f32; 9 * cin * cout];
-    let mut dx = vec![0.0f32; n * side * side * cin];
+    debug_assert_eq!(dx.len(), n * side * side * cin);
+    dx.fill(0.0);
     let db = col_sums(dy, cout);
     let threads = workers_for(kctx, 4 * n * side * side * 9 * cin * cout);
 
@@ -226,12 +240,12 @@ fn conv3x3_bwd(
                 }
             }
         }
-        return (dw, db, dx);
+        return (dw, db);
     }
 
     // Threaded: dx per sample on workers...
     let sample_len = side * side * cin;
-    par_row_chunks(threads, &mut dx, sample_len, |n0, chunk| {
+    par_row_chunks(threads, dx, sample_len, |n0, chunk| {
         for li in 0..chunk.len() / sample_len {
             let ni = n0 + li;
             for oy in 0..side {
@@ -293,7 +307,7 @@ fn conv3x3_bwd(
             }
         }
     }
-    (dw, db, dx)
+    (dw, db)
 }
 
 fn relu_fwd(x: &mut [f32]) {
@@ -312,10 +326,11 @@ fn relu_bwd(post: &[f32], dy: &mut [f32]) {
     }
 }
 
-/// 2x2 max-pool, stride 2. Returns (pooled, argmax flat input indices).
-fn pool2_fwd(x: &[f32], n: usize, side: usize, c: usize) -> (Vec<f32>, Vec<u32>) {
+/// 2x2 max-pool, stride 2, into a caller-provided `y` buffer (fully
+/// overwritten). Returns the argmax flat input indices.
+fn pool2_fwd_into(x: &[f32], n: usize, side: usize, c: usize, y: &mut [f32]) -> Vec<u32> {
     let half = side / 2;
-    let mut y = vec![0.0f32; n * half * half * c];
+    debug_assert_eq!(y.len(), n * half * half * c);
     let mut idx = vec![0u32; n * half * half * c];
     for ni in 0..n {
         for oy in 0..half {
@@ -339,15 +354,14 @@ fn pool2_fwd(x: &[f32], n: usize, side: usize, c: usize) -> (Vec<f32>, Vec<u32>)
             }
         }
     }
-    (y, idx)
+    idx
 }
 
-fn pool2_bwd(dy: &[f32], idx: &[u32], in_len: usize) -> Vec<f32> {
-    let mut dx = vec![0.0f32; in_len];
+fn pool2_bwd_into(dy: &[f32], idx: &[u32], dx: &mut [f32]) {
+    dx.fill(0.0);
     for (&d, &i) in dy.iter().zip(idx) {
         dx[i as usize] += d;
     }
-    dx
 }
 
 struct StageSaved {
@@ -360,18 +374,29 @@ struct StageSaved {
     cout: usize,
 }
 
+impl StageSaved {
+    fn release(self, ws: &Workspace) {
+        ws.give(self.x_in);
+        ws.give(self.r1);
+        ws.give(self.r2);
+    }
+}
+
 /// Forward through the conv stages. With `save` the per-stage activations
-/// are retained for the backward; eval passes `false` so each stage's
-/// buffers drop as the next stage is computed.
+/// are retained (workspace buffers) for the backward; eval passes `false`
+/// so each stage's buffers return to the pool as the next stage is
+/// computed.
 fn stages_fwd(
     cfg: &CnnCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[f32],
     n: usize,
     save: bool,
 ) -> (Vec<StageSaved>, Vec<f32>) {
-    let mut h = x.to_vec();
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
+    let mut h = ws.take(x.len());
+    h.copy_from_slice(x);
     let mut side = cfg.img;
     let mut cin = cfg.in_ch;
     let mut saved = Vec::with_capacity(cfg.widths.len());
@@ -380,13 +405,20 @@ fn stages_fwd(
         let b1 = &params.tensors[4 * s + 1].data;
         let w2 = &params.tensors[4 * s + 2].data;
         let b2 = &params.tensors[4 * s + 3].data;
-        let mut r1 = conv3x3_fwd(kctx, &h, n, side, cin, w1, b1, wch);
+        let mut r1 = ws.take(n * side * side * wch);
+        conv3x3_fwd_into(kctx, &h, n, side, cin, w1, b1, wch, &mut r1);
         relu_fwd(&mut r1);
-        let mut r2 = conv3x3_fwd(kctx, &r1, n, side, wch, w2, b2, wch);
+        let mut r2 = ws.take(n * side * side * wch);
+        conv3x3_fwd_into(kctx, &r1, n, side, wch, w2, b2, wch, &mut r2);
         relu_fwd(&mut r2);
-        let (pooled, pool_idx) = pool2_fwd(&r2, n, side, wch);
+        let half = side / 2;
+        let mut pooled = ws.take(n * half * half * wch);
+        let pool_idx = pool2_fwd_into(&r2, n, side, wch, &mut pooled);
+        let stage = StageSaved { x_in: h, r1, r2, pool_idx, side, cin, cout: wch };
         if save {
-            saved.push(StageSaved { x_in: h, r1, r2, pool_idx, side, cin, cout: wch });
+            saved.push(stage);
+        } else {
+            stage.release(ws);
         }
         h = pooled;
         side /= 2;
@@ -400,13 +432,109 @@ fn rng_site(seed: i32, site: usize) -> Pcg32 {
 }
 
 // ---------------------------------------------------------------------------
+// Backward drivers.
+// ---------------------------------------------------------------------------
+
+/// Borrowed per-stage activations — saved full-batch buffers (`n` = batch
+/// size) or their kept-sample gathers (`n` = kept count, pool indices
+/// remapped to the compact layout).
+struct StageView<'a> {
+    n: usize,
+    x_in: &'a [f32],
+    r1: &'a [f32],
+    r2: &'a [f32],
+    pool_idx: &'a [u32],
+    side: usize,
+    cin: usize,
+    cout: usize,
+}
+
+/// One stage's backward: pool -> relu2 -> conv2 -> relu1 -> conv1. `g`
+/// holds the post-pool gradient on entry and the stage-input gradient on
+/// exit (buffers swapped through the workspace); weight/bias grads go
+/// straight into `grads`.
+fn stage_bwd(
+    ectx: ExecCtx,
+    params: &ParamSet,
+    s: usize,
+    v: &StageView,
+    g: &mut Vec<f32>,
+    grads: &mut [Vec<f32>],
+) {
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
+    let mut dr2 = ws.take(v.r2.len());
+    pool2_bwd_into(g, v.pool_idx, &mut dr2);
+    relu_bwd(v.r2, &mut dr2);
+    let w2 = &params.tensors[4 * s + 2].data;
+    let mut dr1 = ws.take(v.r1.len());
+    let (dw2, db2) = conv3x3_bwd_into(kctx, v.r1, &dr2, v.n, v.side, v.cout, w2, v.cout, &mut dr1);
+    ws.give(dr2);
+    relu_bwd(v.r1, &mut dr1);
+    let w1 = &params.tensors[4 * s].data;
+    let mut dx = ws.take(v.x_in.len());
+    let (dw1, db1) = conv3x3_bwd_into(kctx, v.x_in, &dr1, v.n, v.side, v.cin, w1, v.cout, &mut dx);
+    ws.give(dr1);
+    grads[4 * s] = dw1;
+    grads[4 * s + 1] = db1;
+    grads[4 * s + 2] = dw2;
+    grads[4 * s + 3] = db2;
+    ws.give(std::mem::replace(g, dx));
+}
+
+/// Draw SampleA site `site` over the full batch and fold it into the
+/// running (g, kept) state: dense in-place masking when compaction is off
+/// (or nothing was dropped yet and nothing drops now), otherwise pack the
+/// surviving samples' rows scaled by the new 1/p. One rng draw per
+/// original sample either way.
+#[allow(clippy::too_many_arguments)]
+fn sample_site(
+    ectx: ExecCtx,
+    site: usize,
+    rho: f32,
+    seed: i32,
+    n: usize,
+    cols: usize,
+    g: &mut Vec<f32>,
+    kept: &mut Option<Vec<u32>>,
+    act_norms: &mut [f32],
+) -> Result<()> {
+    let ws = ectx.ws;
+    let mut rng = rng_site(seed, site);
+    let norms: Vec<f32> = match kept {
+        None => row_norms(g, cols),
+        Some(k) => {
+            let mut full = vec![0.0f32; n];
+            for (j, &orig) in k.iter().enumerate() {
+                full[orig as usize] = row_norm(&g[j * cols..(j + 1) * cols]);
+            }
+            full
+        }
+    };
+    let sr = SampledRows::draw(norms, rho, &mut rng)?;
+    act_norms[site * n..(site + 1) * n].copy_from_slice(&sr.norms);
+    if !ectx.compact || (kept.is_none() && sr.all_kept()) {
+        debug_assert!(kept.is_none());
+        sr.apply(g, cols);
+    } else {
+        // intersect with the previous kept set and pack the survivors,
+        // scaled by the new 1/p
+        let (new_kept, src_slots, scales) = sr.intersect(kept.as_deref());
+        let mut gc = ws.take(new_kept.len() * cols);
+        gather_rows_scaled(g, cols, &src_slots, &scales, &mut gc);
+        ws.give(std::mem::replace(g, gc));
+        *kept = Some(new_kept);
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
 // Entry points.
 // ---------------------------------------------------------------------------
 
 #[allow(clippy::too_many_arguments)]
 pub fn fwd_bwd(
     cfg: &CnnCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[f32],
     y: &[i32],
@@ -419,15 +547,21 @@ pub fn fwd_bwd(
     ensure!(rho.len() == n_sites, "rho has {} entries, want {n_sites}", rho.len());
     ensure!(y.len() == n);
     let c = cfg.n_classes;
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
 
-    let (saved, feat) = stages_fwd(cfg, kctx, params, x, n, true);
+    let (saved, feat) = stages_fwd(cfg, ectx, params, x, n, true);
     let df = feat.len() / n;
     let fc_w = &params.tensors[4 * n_sites].data;
     let fc_b = &params.tensors[4 * n_sites + 1].data;
-    let mut logits = matmul(kctx, &feat, fc_w, n, df, c);
+    let mut logits = ws.take(n * c);
+    matmul_into(kctx, &feat, fc_w, n, df, c, &mut logits);
     add_bias(&mut logits, fc_b);
-    let (losses, dlogits) = ce_loss_and_dlogits(kctx, &logits, y, c);
+    let mut losses = ws.take(n);
+    let mut dlogits = ws.take(n * c);
+    ce_loss_and_dlogits_into(kctx, &logits, y, c, &mut losses, &mut dlogits);
+    ws.give(logits);
     let loss = losses.iter().map(|&l| l as f64).sum::<f64>() / n as f64;
+    ws.give(losses);
 
     let mut grads: Vec<Vec<f32>> = cfg
         .param_specs()
@@ -438,39 +572,87 @@ pub fn fwd_bwd(
 
     // fc grads exact, then SampleA at site n_sites-1 on the feature grad
     let inv_n = 1.0 / n as f32;
-    let g: Vec<f32> = dlogits.iter().map(|&v| v * inv_n).collect();
+    for v in dlogits.iter_mut() {
+        *v *= inv_n;
+    }
+    let g = dlogits;
     grads[4 * n_sites] = weighted_tn(kctx, &feat, &g, None, n, df, c);
     grads[4 * n_sites + 1] = col_sums(&g, c);
-    let mut gfeat = matmul_nt(kctx, &g, fc_w, n, c, df);
-    let mut site_rng = rng_site(seed, n_sites - 1);
-    let norms = sample_rows(&mut gfeat, df, rho[n_sites - 1], &mut site_rng);
-    act_norms[(n_sites - 1) * n..n_sites * n].copy_from_slice(&norms);
+    let mut gfeat = ws.take(n * df);
+    matmul_nt_into(kctx, &g, fc_w, n, c, df, &mut gfeat);
+    ws.give(g);
+    ws.give(feat);
 
-    let mut g = gfeat; // (n, side, side, c_last) flat
+    let mut g = gfeat;
+    let mut kept: Option<Vec<u32>> = None;
+    sample_site(
+        ectx, n_sites - 1, rho[n_sites - 1], seed, n, df, &mut g, &mut kept, &mut act_norms,
+    )?;
+
     for s in (0..cfg.widths.len()).rev() {
         let st = &saved[s];
-        // pool -> relu2 -> conv2 -> relu1 -> conv1
-        let mut dr2 = pool2_bwd(&g, &st.pool_idx, st.r2.len());
-        relu_bwd(&st.r2, &mut dr2);
-        let w2 = &params.tensors[4 * s + 2].data;
-        let (dw2, db2, mut dr1) =
-            conv3x3_bwd(kctx, &st.r1, &dr2, n, st.side, st.cout, w2, st.cout);
-        relu_bwd(&st.r1, &mut dr1);
-        let w1 = &params.tensors[4 * s].data;
-        let (dw1, db1, mut dx) =
-            conv3x3_bwd(kctx, &st.x_in, &dr1, n, st.side, st.cin, w1, st.cout);
-        grads[4 * s] = dw1;
-        grads[4 * s + 1] = db1;
-        grads[4 * s + 2] = dw2;
-        grads[4 * s + 3] = db2;
+        match &kept {
+            None => {
+                let view = StageView {
+                    n,
+                    x_in: &st.x_in,
+                    r1: &st.r1,
+                    r2: &st.r2,
+                    pool_idx: &st.pool_idx,
+                    side: st.side,
+                    cin: st.cin,
+                    cout: st.cout,
+                };
+                stage_bwd(ectx, params, s, &view, &mut g, &mut grads);
+            }
+            Some(k) => {
+                let kk = k.len();
+                let per_x = st.side * st.side * st.cin;
+                let per_r = st.side * st.side * st.cout;
+                let half = st.side / 2;
+                let per_pool = half * half * st.cout;
+                let mut x_c = ws.take(kk * per_x);
+                gather_rows(&st.x_in, per_x, k, &mut x_c);
+                let mut r1_c = ws.take(kk * per_r);
+                gather_rows(&st.r1, per_r, k, &mut r1_c);
+                let mut r2_c = ws.take(kk * per_r);
+                gather_rows(&st.r2, per_r, k, &mut r2_c);
+                // pool argmax indices are flat into the full r2 layout —
+                // rebase each kept sample's indices onto its compact slot
+                let mut idx_c = Vec::with_capacity(kk * per_pool);
+                for (j, &orig) in k.iter().enumerate() {
+                    let orig = orig as usize;
+                    for &iv in &st.pool_idx[orig * per_pool..(orig + 1) * per_pool] {
+                        idx_c.push((iv as usize - orig * per_r + j * per_r) as u32);
+                    }
+                }
+                let view = StageView {
+                    n: kk,
+                    x_in: &x_c,
+                    r1: &r1_c,
+                    r2: &r2_c,
+                    pool_idx: &idx_c,
+                    side: st.side,
+                    cin: st.cin,
+                    cout: st.cout,
+                };
+                stage_bwd(ectx, params, s, &view, &mut g, &mut grads);
+                ws.give(x_c);
+                ws.give(r1_c);
+                ws.give(r2_c);
+            }
+        }
         if s > 0 {
             // site s-1: sample before stage s-1's backward
-            let cols = dx.len() / n;
-            let mut rng = rng_site(seed, s - 1);
-            let norms = sample_rows(&mut dx, cols, rho[s - 1], &mut rng);
-            act_norms[(s - 1) * n..s * n].copy_from_slice(&norms);
+            let per_x = st.side * st.side * st.cin;
+            sample_site(
+                ectx, s - 1, rho[s - 1], seed, n, per_x, &mut g, &mut kept, &mut act_norms,
+            )?;
         }
-        g = dx;
+    }
+    ws.give(g);
+    for st in saved {
+        st.release(ws);
     }
 
     Ok(CnnGradOut { loss: loss as f32, grads, act_norms })
@@ -478,7 +660,7 @@ pub fn fwd_bwd(
 
 pub fn eval_step(
     cfg: &CnnCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[f32],
     y: &[i32],
@@ -488,19 +670,27 @@ pub fn eval_step(
     ensure!(y.len() == n);
     let n_sites = cfg.n_sites();
     let c = cfg.n_classes;
-    let (_saved, feat) = stages_fwd(cfg, kctx, params, x, n, false);
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
+    let (_saved, feat) = stages_fwd(cfg, ectx, params, x, n, false);
     let df = feat.len() / n;
     let fc_w = &params.tensors[4 * n_sites].data;
     let fc_b = &params.tensors[4 * n_sites + 1].data;
-    let mut logits = matmul(kctx, &feat, fc_w, n, df, c);
+    let mut logits = ws.take(n * c);
+    matmul_into(kctx, &feat, fc_w, n, df, c, &mut logits);
+    ws.give(feat);
     add_bias(&mut logits, fc_b);
-    let (losses, _) = ce_loss_and_dlogits(kctx, &logits, y, c);
+    let mut losses = ws.take(n);
+    let mut dlogits = ws.take(n * c);
+    ce_loss_and_dlogits_into(kctx, &logits, y, c, &mut losses, &mut dlogits);
+    ws.give(dlogits);
     let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
+    ws.give(losses);
     let mut correct = 0u32;
     for i in 0..n {
         if argmax_row(&logits[i * c..(i + 1) * c]) == y[i] as usize {
             correct += 1;
         }
     }
+    ws.give(logits);
     Ok((loss_sum as f32, correct as f32))
 }

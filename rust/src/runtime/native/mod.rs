@@ -20,6 +20,17 @@
 //! backend's thread count ([`NativeBackend::with_threads`]); results are
 //! bitwise identical at any thread count, so `threads` is purely a
 //! wall-clock knob.
+//!
+//! Sampled backwards execute **gather-compacted** by default: the SampleA
+//! draw yields a [`sampling::SampledRows`] kept-row set, the block/stage
+//! backward packs only the kept samples and computes dense on the compact
+//! shapes, and every reduction accumulates the kept rows in ascending
+//! original order — bitwise identical to the zero-scan reference at any
+//! thread count, while wall-clock tracks the kept set.
+//! [`NativeBackend::with_compaction`]`(false)` selects the zero-scan
+//! reference path (the ground truth the equivalence tests compare
+//! against). Hot-loop buffers come from the backend's shared
+//! [`Workspace`]; steady-state steps allocate nothing per matmul.
 
 pub mod sampling;
 
@@ -36,7 +47,18 @@ use crate::error::{anyhow, bail, ensure, Result};
 use crate::formats::params::ParamSet;
 
 use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
-use super::kernels::{default_threads, KernelCtx};
+use super::kernels::{default_threads, KernelCtx, Workspace};
+
+/// Per-call execution context handed to the native model code: the kernel
+/// thread budget, the backend's reusable buffer pool, and whether sampled
+/// backwards run gather-compacted (results are bitwise identical either
+/// way; only wall-clock moves).
+#[derive(Clone, Copy)]
+pub(crate) struct ExecCtx<'w> {
+    pub kctx: KernelCtx,
+    pub ws: &'w Workspace,
+    pub compact: bool,
+}
 
 #[derive(Clone, Debug)]
 enum NativeModel {
@@ -52,6 +74,8 @@ pub struct NativeBackend {
     sub_batch: usize,
     cnn_batch: usize,
     threads: usize,
+    compact: bool,
+    ws: Workspace,
 }
 
 /// FNV-1a, used to derive a stable per-model init seed from its name.
@@ -64,7 +88,15 @@ impl NativeBackend {
     /// An empty registry with the given batch sizes, single-threaded
     /// kernels (add threads with [`NativeBackend::with_threads`]).
     pub fn new(main_batch: usize, sub_batch: usize, cnn_batch: usize) -> NativeBackend {
-        NativeBackend { models: BTreeMap::new(), main_batch, sub_batch, cnn_batch, threads: 1 }
+        NativeBackend {
+            models: BTreeMap::new(),
+            main_batch,
+            sub_batch,
+            cnn_batch,
+            threads: 1,
+            compact: true,
+            ws: Workspace::new(),
+        }
     }
 
     /// Set the kernel-layer thread budget (clamped to >= 1). Results are
@@ -74,8 +106,22 @@ impl NativeBackend {
         self
     }
 
-    fn kctx(&self) -> KernelCtx {
-        KernelCtx::new(self.threads)
+    /// Toggle gather-compacted sampled execution (default on). `false`
+    /// selects the zero-scan reference path — bitwise-identical results,
+    /// O(full size) wall-clock; the equivalence tests diff the two.
+    pub fn with_compaction(mut self, compact: bool) -> NativeBackend {
+        self.compact = compact;
+        self
+    }
+
+    /// The backend's scratch-buffer pool (shared across threads). Exposed
+    /// so tests can assert steady-state allocation-freedom.
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    fn ectx(&self) -> ExecCtx<'_> {
+        ExecCtx { kctx: KernelCtx::new(self.threads), ws: &self.ws, compact: self.compact }
     }
 
     /// The default model zoo: miniature counterparts of the AOT models
@@ -200,6 +246,10 @@ impl Backend for NativeBackend {
         self.threads
     }
 
+    fn compaction(&self) -> bool {
+        self.compact
+    }
+
     fn models(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
@@ -232,7 +282,7 @@ impl Backend for NativeBackend {
     ) -> Result<GradOut> {
         let cfg = self.transformer(model)?;
         transformer::fwd_bwd_cls(
-            cfg, self.kctx(), params, &batch.x, &batch.y, sw, batch.n, batch.seq_len, seed,
+            cfg, self.ectx(), params, &batch.x, &batch.y, sw, batch.n, batch.seq_len, seed,
             rho, nu_apply, nu_probe,
         )
     }
@@ -249,7 +299,7 @@ impl Backend for NativeBackend {
     ) -> Result<GradOut> {
         let cfg = self.transformer(model)?;
         transformer::fwd_bwd_mlm(
-            cfg, self.kctx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
+            cfg, self.ectx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
             seed, rho, nu_apply, nu_probe,
         )
     }
@@ -262,14 +312,14 @@ impl Backend for NativeBackend {
     ) -> Result<(Vec<f32>, Vec<f32>)> {
         let cfg = self.transformer(model)?;
         transformer::fwd_loss_cls(
-            cfg, self.kctx(), params, &batch.x, &batch.y, batch.n, batch.seq_len,
+            cfg, self.ectx(), params, &batch.x, &batch.y, batch.n, batch.seq_len,
         )
     }
 
     fn eval_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)> {
         let cfg = self.transformer(model)?;
         transformer::eval_cls(
-            cfg, self.kctx(), params, &batch.x, &batch.y, batch.n, batch.seq_len,
+            cfg, self.ectx(), params, &batch.x, &batch.y, batch.n, batch.seq_len,
         )
     }
 
@@ -281,7 +331,7 @@ impl Backend for NativeBackend {
     ) -> Result<(f32, f32, f32)> {
         let cfg = self.transformer(model)?;
         transformer::eval_mlm(
-            cfg, self.kctx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
+            cfg, self.ectx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
         )
     }
 
@@ -294,12 +344,12 @@ impl Backend for NativeBackend {
         rho: &[f32],
     ) -> Result<CnnGradOut> {
         let cfg = self.cnn(model)?;
-        cnn::fwd_bwd(cfg, self.kctx(), params, &batch.x, &batch.y, batch.n, seed, rho)
+        cnn::fwd_bwd(cfg, self.ectx(), params, &batch.x, &batch.y, batch.n, seed, rho)
     }
 
     fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {
         let cfg = self.cnn(model)?;
-        cnn::eval_step(cfg, self.kctx(), params, &batch.x, &batch.y, batch.n)
+        cnn::eval_step(cfg, self.ectx(), params, &batch.x, &batch.y, batch.n)
     }
 }
 

@@ -1,64 +1,101 @@
 //! The VCAS samplers, pure Rust — exact ports of the kernel oracles in
 //! `python/compile/kernels/ref.py`.
 //!
-//! - [`keep_probs`]: paper Sec. 4.1 proportional-to-norm keep probabilities
-//!   with caps, solved exactly by water-filling over the sorted norms. At
-//!   ratio >= 1 every probability is exactly 1.0, so masks are exactly 1
-//!   and sampled passes are *bitwise* identical to exact passes.
+//! - [`ProbSolve`] / [`keep_probs`]: paper Sec. 4.1 proportional-to-norm
+//!   keep probabilities with caps, solved exactly by water-filling over
+//!   the sorted norms. At ratio >= 1 every probability is exactly 1.0, so
+//!   masks are exactly 1 and sampled passes are *bitwise* identical to
+//!   exact passes. Non-finite norms are a hard [`Error`](crate::error) —
+//!   a NaN would silently mis-sort the water-filling.
 //! - [`bern_mask`]: the unbiased Bern(p)/p mask.
 //! - [`sample_rows`]: SampleA (Sec. 4.1) over the data dimension — records
 //!   pre-mask row norms (the controller's Eq. 4 input), then zeroes/scales
-//!   rows in place.
+//!   rows in place, all in a single fused pass (no intermediate
+//!   probability/mask vectors).
+//! - [`SampledRows`]: the same draw as a first-class kept-row set —
+//!   indices + 1/p scales, no zero-filling — which is what the
+//!   gather-compacted backward executes on. `draw` consumes exactly one
+//!   rng value per row in row order, so the mask stream is bit-identical
+//!   to the in-place path.
 //! - [`eq3_variance`]: the analytic SampleW variance (paper Eq. 3) at probe
 //!   keep probabilities, emitted per sampled linear for the Eq. 7 update.
 
+use crate::error::{ensure, Result};
+use crate::runtime::kernels::{gather_rows_scaled, scatter_rows};
 use crate::util::rng::Pcg32;
+
+/// L2 norm of one row — the shared norm rule (f64 accumulate, f32 result).
+pub fn row_norm(row: &[f32]) -> f32 {
+    let s: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
+    s.sqrt() as f32
+}
 
 /// Per-row L2 norm of a `(rows, cols)` matrix.
 pub fn row_norms(g: &[f32], cols: usize) -> Vec<f32> {
-    g.chunks(cols)
-        .map(|row| {
-            let s: f64 = row.iter().map(|&v| (v as f64) * (v as f64)).sum();
-            s.sqrt() as f32
-        })
-        .collect()
+    g.chunks(cols).map(row_norm).collect()
+}
+
+/// The solved water-filling problem behind [`keep_probs`]: the cap level
+/// `c*` such that `p_i = min(1, c* n_i)` sums to the keep budget. Solving
+/// once and mapping norms through [`ProbSolve::prob`] lets callers fuse
+/// probability evaluation into their own row loops without materialising
+/// a probability vector.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbSolve {
+    c_star: f64,
+    all_one: bool,
+}
+
+impl ProbSolve {
+    /// Water-fill over the sorted norms so that `sum(p) = nnz * ratio`
+    /// (already-zero rows don't consume keep budget; see ref.py).
+    /// Errors on NaN/inf norms, which would silently mis-sort.
+    pub fn new(norms: &[f32], ratio: f32) -> Result<ProbSolve> {
+        ensure!(
+            norms.iter().all(|x| x.is_finite()),
+            "keep_probs: non-finite row norm (NaN/inf gradient) — cannot water-fill"
+        );
+        if norms.is_empty() {
+            return Ok(ProbSolve { c_star: 0.0, all_one: true });
+        }
+        let nnz = norms.iter().filter(|&&x| x > 0.0).count() as f64;
+        let budget = nnz * ratio as f64;
+        let mut ns: Vec<f64> = norms.iter().map(|&x| x as f64).collect();
+        ns.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
+        let total: f64 = ns.iter().sum();
+        // smallest k (number of capped rows) whose water level fits under
+        // the cap
+        let mut c_star = 0.0f64;
+        let mut found = false;
+        let mut tail = total; // sum of ns[k..]
+        for (k, &nk) in ns.iter().enumerate() {
+            let c = (budget - k as f64) / tail.max(1e-30);
+            if c * nk <= 1.0 + 1e-6 {
+                c_star = c;
+                found = true;
+                break;
+            }
+            tail -= nk;
+        }
+        // no fit -> everything capped at 1; degenerate ratio/total -> keep
+        // all
+        let all_one = !found || ratio >= 1.0 || total <= 0.0;
+        Ok(ProbSolve { c_star, all_one })
+    }
+
+    /// Keep probability of a row with norm `norm` under this solve.
+    #[inline]
+    pub fn prob(&self, norm: f32) -> f32 {
+        let p = if self.all_one { 1.0 } else { (norm as f64 * self.c_star).min(1.0) };
+        p.max(1e-12) as f32
+    }
 }
 
 /// Keep probabilities `p_i = min(1, c * n_i)` with `c` chosen so that
-/// `sum(p) = nnz * ratio` (water-filling with caps; see ref.py for the
-/// budget rationale — already-zero rows don't consume keep budget).
-pub fn keep_probs(norms: &[f32], ratio: f32) -> Vec<f32> {
-    let r = norms.len();
-    if r == 0 {
-        return Vec::new();
-    }
-    let nnz = norms.iter().filter(|&&x| x > 0.0).count() as f64;
-    let budget = nnz * ratio as f64;
-    let mut ns: Vec<f64> = norms.iter().map(|&x| x as f64).collect();
-    ns.sort_by(|a, b| b.partial_cmp(a).unwrap_or(std::cmp::Ordering::Equal));
-    let total: f64 = ns.iter().sum();
-    // smallest k (number of capped rows) whose water level fits under the cap
-    let mut c_star = 0.0f64;
-    let mut found = false;
-    let mut tail = total; // sum of ns[k..]
-    for (k, &nk) in ns.iter().enumerate() {
-        let c = (budget - k as f64) / tail.max(1e-30);
-        if c * nk <= 1.0 + 1e-6 {
-            c_star = c;
-            found = true;
-            break;
-        }
-        tail -= nk;
-    }
-    // no fit -> everything capped at 1; degenerate ratio/total -> keep all
-    let all_one = !found || ratio >= 1.0 || total <= 0.0;
-    norms
-        .iter()
-        .map(|&x| {
-            let p = if all_one { 1.0 } else { (x as f64 * c_star).min(1.0) };
-            p.max(1e-12) as f32
-        })
-        .collect()
+/// `sum(p) = nnz * ratio`. Errors on NaN/inf norms.
+pub fn keep_probs(norms: &[f32], ratio: f32) -> Result<Vec<f32>> {
+    let solve = ProbSolve::new(norms, ratio)?;
+    Ok(norms.iter().map(|&x| solve.prob(x)).collect())
 }
 
 /// Unbiased mask Bern(p)/p; dropped rows are exactly 0, p = 1 rows exactly 1.
@@ -70,12 +107,16 @@ pub fn bern_mask(rng: &mut Pcg32, p: &[f32]) -> Vec<f32> {
 
 /// SampleA over the leading dimension of `g (rows, cols)` at keep ratio
 /// `rho`: returns the pre-mask row norms and applies the Bern(p)/p mask in
-/// place.
-pub fn sample_rows(g: &mut [f32], cols: usize, rho: f32, rng: &mut Pcg32) -> Vec<f32> {
+/// place. One fused pass — probability evaluation, the rng draw and the
+/// row masking happen per row with no intermediate vectors; the rng
+/// stream and every output bit are identical to the historical
+/// three-pass (`row_norms` + `keep_probs` + `bern_mask`) form.
+pub fn sample_rows(g: &mut [f32], cols: usize, rho: f32, rng: &mut Pcg32) -> Result<Vec<f32>> {
     let norms = row_norms(g, cols);
-    let p = keep_probs(&norms, rho);
-    let m = bern_mask(rng, &p);
-    for (row, &mi) in g.chunks_mut(cols).zip(&m) {
+    let solve = ProbSolve::new(&norms, rho)?;
+    for (row, &ni) in g.chunks_mut(cols).zip(&norms) {
+        let p = solve.prob(ni);
+        let mi = if rng.f32() < p { 1.0 / p } else { 0.0 };
         if mi == 0.0 {
             row.fill(0.0);
         } else if mi != 1.0 {
@@ -84,14 +125,156 @@ pub fn sample_rows(g: &mut [f32], cols: usize, rho: f32, rng: &mut Pcg32) -> Vec
             }
         }
     }
-    norms
+    Ok(norms)
+}
+
+/// A drawn SampleA mask as a first-class kept-row set: ascending kept
+/// indices plus their 1/p inverse-probability scales, with the pre-mask
+/// norms retained for the controller. Nothing is zero-filled — the
+/// gather-compacted backward packs exactly these rows and never touches
+/// the dropped ones.
+#[derive(Clone, Debug)]
+pub struct SampledRows {
+    /// Total rows of the full matrix.
+    pub rows: usize,
+    /// Pre-mask row norms, len = `rows` (controller Eq. 4 input).
+    pub norms: Vec<f32>,
+    /// Ascending indices of the rows whose Bern(p) draw kept them.
+    pub kept: Vec<u32>,
+    /// 1/p scale per kept row, aligned with `kept` (exactly 1.0 at p = 1).
+    pub scales: Vec<f32>,
+}
+
+impl SampledRows {
+    /// Draw the mask for `norms` at keep ratio `rho`, consuming exactly
+    /// one rng value per row in row order — the same stream consumption
+    /// and the same kept/scale outcomes as [`sample_rows`].
+    pub fn draw(norms: Vec<f32>, rho: f32, rng: &mut Pcg32) -> Result<SampledRows> {
+        let solve = ProbSolve::new(&norms, rho)?;
+        let rows = norms.len();
+        let mut kept = Vec::with_capacity(rows);
+        let mut scales = Vec::with_capacity(rows);
+        for (i, &ni) in norms.iter().enumerate() {
+            let p = solve.prob(ni);
+            if rng.f32() < p {
+                kept.push(i as u32);
+                scales.push(1.0 / p);
+            }
+        }
+        Ok(SampledRows { rows, norms, kept, scales })
+    }
+
+    /// [`SampledRows::draw`] over the rows of `g (rows, cols)` — the
+    /// compact twin of [`sample_rows`]: `g` is read, never modified.
+    pub fn sample(g: &[f32], cols: usize, rho: f32, rng: &mut Pcg32) -> Result<SampledRows> {
+        SampledRows::draw(row_norms(g, cols), rho, rng)
+    }
+
+    pub fn n_kept(&self) -> usize {
+        self.kept.len()
+    }
+
+    /// True when every row survived the draw — the compacted path has
+    /// nothing to drop, so callers stay on the dense buffers (scales may
+    /// still differ from 1 and must be applied).
+    pub fn all_kept(&self) -> bool {
+        self.kept.len() == self.rows
+    }
+
+    /// Apply the drawn mask in place — byte-for-byte the [`sample_rows`]
+    /// masking: dropped rows become exact +0.0, kept rows scale by 1/p
+    /// (scale 1.0 leaves bits untouched).
+    pub fn apply(&self, g: &mut [f32], cols: usize) {
+        debug_assert_eq!(g.len(), self.rows * cols);
+        let mut next = 0usize; // cursor into kept/scales
+        for (i, row) in g.chunks_mut(cols).enumerate() {
+            if next < self.kept.len() && self.kept[next] as usize == i {
+                let s = self.scales[next];
+                next += 1;
+                if s != 1.0 {
+                    for v in row.iter_mut() {
+                        *v *= s;
+                    }
+                }
+            } else {
+                row.fill(0.0);
+            }
+        }
+    }
+
+    /// Fold this draw into a previous kept set: keep the samples this
+    /// draw kept AND that were already present (rows kept here but
+    /// already exactly zero drop out too — zero rows in, zero rows out,
+    /// no bits change). Returns `(kept_global, src_slots, scales)`: the
+    /// new ascending global indices, those survivors' row-block positions
+    /// in the *current* (possibly already compacted) buffer, and their
+    /// new 1/p scales — ready to feed
+    /// [`gather_rows_scaled`](crate::runtime::kernels::gather_rows_scaled).
+    /// `prev = None` means all rows are currently present.
+    #[allow(clippy::type_complexity)]
+    pub fn intersect(&self, prev: Option<&[u32]>) -> (Vec<u32>, Vec<u32>, Vec<f32>) {
+        match prev {
+            None => (self.kept.clone(), self.kept.clone(), self.scales.clone()),
+            Some(old) => {
+                let cap = self.n_kept().min(old.len());
+                let mut kept_global = Vec::with_capacity(cap);
+                let mut src_slots = Vec::with_capacity(cap);
+                let mut scales = Vec::with_capacity(cap);
+                let (mut a, mut b) = (0usize, 0usize);
+                while a < old.len() && b < self.kept.len() {
+                    match old[a].cmp(&self.kept[b]) {
+                        std::cmp::Ordering::Less => a += 1,
+                        std::cmp::Ordering::Greater => b += 1,
+                        std::cmp::Ordering::Equal => {
+                            kept_global.push(old[a]);
+                            src_slots.push(a as u32);
+                            scales.push(self.scales[b]);
+                            a += 1;
+                            b += 1;
+                        }
+                    }
+                }
+                (kept_global, src_slots, scales)
+            }
+        }
+    }
+
+    /// Pack the kept rows of `src (rows, cols)`, scaled by 1/p, into
+    /// `out (n_kept, cols)` — the rows the compacted backward computes on,
+    /// bitwise the non-zero rows [`SampledRows::apply`] would produce.
+    pub fn gather_scaled(&self, src: &[f32], cols: usize, out: &mut [f32]) {
+        debug_assert_eq!(src.len(), self.rows * cols);
+        gather_rows_scaled(src, cols, &self.kept, &self.scales, out);
+    }
+
+    /// Scatter compact rows back to full shape (dropped rows exactly
+    /// +0.0) — the inverse of the pack for row-independent outputs.
+    pub fn scatter(&self, compact: &[f32], cols: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.rows * cols);
+        scatter_rows(compact, cols, &self.kept, out);
+    }
 }
 
 /// Analytic SampleW variance (paper Eq. 3):
 /// `sum_i (1-q_i)/q_i * ||g_i||^2 * ||z_i||^2` over rows.
 pub fn eq3_variance(g: &[f32], z: &[f32], q: &[f32], cg: usize, cz: usize) -> f32 {
+    eq3_variance_with(g, z, |i| q[i], q.len(), cg, cz)
+}
+
+/// [`eq3_variance`] with the keep probability supplied per row — the one
+/// canonical Eq. 3 loop, which the sampled linears drive straight from a
+/// [`ProbSolve`] without materialising a probability vector.
+pub fn eq3_variance_with<F: Fn(usize) -> f32>(
+    g: &[f32],
+    z: &[f32],
+    q_of: F,
+    rows: usize,
+    cg: usize,
+    cz: usize,
+) -> f32 {
     let mut total = 0.0f64;
-    for (i, &qi) in q.iter().enumerate() {
+    for i in 0..rows {
+        let qi = q_of(i);
         let g2: f64 = g[i * cg..(i + 1) * cg]
             .iter()
             .map(|&v| (v as f64) * (v as f64))
@@ -116,7 +299,7 @@ mod tests {
             let r = g.usize_in(1, 64);
             let ratio = g.f32_in(0.05, 0.95);
             let norms = g.vec_pos(r, 1.0);
-            let p = keep_probs(&norms, ratio);
+            let p = keep_probs(&norms, ratio).unwrap();
             ensure(p.iter().all(|&x| x > 0.0 && x <= 1.0), format!("p out of range {p:?}"))?;
             let sum: f64 = p.iter().map(|&x| x as f64).sum();
             let budget = r as f64 * ratio as f64;
@@ -148,7 +331,7 @@ mod tests {
             if g.bool() {
                 norms[0] = 0.0; // zero-norm rows must also get p = 1
             }
-            let p = keep_probs(&norms, 1.0);
+            let p = keep_probs(&norms, 1.0).unwrap();
             ensure(p.iter().all(|&x| x == 1.0), format!("{p:?}"))
         });
     }
@@ -157,7 +340,7 @@ mod tests {
     fn bern_mask_is_unbiased_property() {
         check("E[mask] = 1 per row", 8, |g: &mut Gen| {
             let r = g.usize_in(1, 8);
-            let p = keep_probs(&g.vec_pos(r, 1.0), g.f32_in(0.2, 0.9));
+            let p = keep_probs(&g.vec_pos(r, 1.0), g.f32_in(0.2, 0.9)).unwrap();
             let mut rng = Pcg32::new(g.usize_in(0, 1 << 20) as u64, 0x3A5);
             let trials = 20_000;
             let mut acc = vec![0.0f64; r];
@@ -194,7 +377,7 @@ mod tests {
         let mut norms0 = Vec::new();
         for t in 0..trials {
             let mut g = base.clone();
-            let norms = sample_rows(&mut g, cols, 0.45, &mut rng);
+            let norms = sample_rows(&mut g, cols, 0.45, &mut rng).unwrap();
             if t == 0 {
                 norms0 = norms;
             }
@@ -216,6 +399,105 @@ mod tests {
                 base[i]
             );
         }
+    }
+
+    #[test]
+    fn keep_probs_rejects_non_finite_norms() {
+        // Satellite: NaN/inf norms must be a hard error, not a silent
+        // mis-sort through partial_cmp's Equal fallback.
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let norms = [1.0f32, bad, 0.5];
+            let err = keep_probs(&norms, 0.5).unwrap_err();
+            assert!(
+                err.to_string().contains("non-finite"),
+                "unexpected error text: {err}"
+            );
+            assert!(ProbSolve::new(&norms, 0.5).is_err());
+            let mut g = vec![0.0f32; 6];
+            g[2] = bad; // row 1 gets a non-finite norm
+            let mut rng = Pcg32::new(1, 1);
+            assert!(sample_rows(&mut g, 2, 0.5, &mut rng).is_err());
+            assert!(SampledRows::sample(&g, 2, 0.5, &mut rng).is_err());
+        }
+        // finite norms still succeed
+        assert!(keep_probs(&[1.0, 0.0, 2.5], 0.5).is_ok());
+    }
+
+    #[test]
+    fn compact_draw_matches_in_place_sampling_bitwise() {
+        // SampledRows::draw + apply must be byte-for-byte sample_rows:
+        // same rng stream consumption, same kept set, same scales, same
+        // zero-fill. gather_scaled + scatter must reproduce the applied
+        // matrix exactly.
+        check("SampledRows == sample_rows bitwise", 96, |g: &mut Gen| {
+            let rows = g.usize_in(1, 24);
+            let cols = g.usize_in(1, 12);
+            let rho = *g.pick(&[0.1f32, 0.5, 1.0]);
+            let base = g.vec_normal(rows * cols, 1.0);
+            let seed = g.usize_in(0, 1 << 20) as u64;
+
+            let mut zero_scan = base.clone();
+            let mut r1 = Pcg32::new(seed, 0xA11);
+            let norms1 = sample_rows(&mut zero_scan, cols, rho, &mut r1).unwrap();
+
+            let mut r2 = Pcg32::new(seed, 0xA11);
+            let sr = SampledRows::sample(&base, cols, rho, &mut r2).unwrap();
+            ensure(sr.norms == norms1, "pre-mask norms differ")?;
+            // identical residual stream state: both consumed `rows` draws
+            ensure(r1.f32().to_bits() == r2.f32().to_bits(), "rng stream diverged")?;
+
+            let mut applied = base.clone();
+            sr.apply(&mut applied, cols);
+            ensure(
+                applied.iter().zip(&zero_scan).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "apply != sample_rows",
+            )?;
+
+            let mut compact = vec![0.0f32; sr.n_kept() * cols];
+            sr.gather_scaled(&base, cols, &mut compact);
+            let mut scattered = vec![f32::NAN; rows * cols];
+            sr.scatter(&compact, cols, &mut scattered);
+            ensure(
+                scattered.iter().zip(&zero_scan).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "gather+scatter != sample_rows",
+            )?;
+            // kept set is ascending and consistent
+            ensure(sr.kept.windows(2).all(|w| w[0] < w[1]), "kept not ascending")?;
+            ensure(sr.kept.len() == sr.scales.len(), "kept/scales misaligned")?;
+            if rho >= 1.0 {
+                ensure(
+                    sr.all_kept() && sr.scales.iter().all(|&s| s == 1.0),
+                    "ratio 1 must keep all rows at scale exactly 1",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn intersect_folds_draws_into_prior_kept_sets() {
+        let sr = SampledRows {
+            rows: 8,
+            norms: vec![1.0; 8],
+            kept: vec![0, 2, 3, 5, 7],
+            scales: vec![2.0, 1.0, 4.0, 1.5, 3.0],
+        };
+        // no prior set: identity (slots == global indices)
+        let (kept, slots, scales) = sr.intersect(None);
+        assert_eq!(kept, vec![0, 2, 3, 5, 7]);
+        assert_eq!(slots, vec![0, 2, 3, 5, 7]);
+        assert_eq!(scales, vec![2.0, 1.0, 4.0, 1.5, 3.0]);
+        // prior kept {1, 2, 5, 6} at slots {0, 1, 2, 3}: survivors are the
+        // intersection {2, 5} with slots into the *current* compact buffer
+        // and the *new* draw's scales
+        let prev = [1u32, 2, 5, 6];
+        let (kept, slots, scales) = sr.intersect(Some(&prev));
+        assert_eq!(kept, vec![2, 5]);
+        assert_eq!(slots, vec![1, 2]);
+        assert_eq!(scales, vec![1.0, 1.5]);
+        // disjoint sets: empty result
+        let (kept, slots, scales) = sr.intersect(Some(&[1, 4, 6]));
+        assert!(kept.is_empty() && slots.is_empty() && scales.is_empty());
     }
 
     #[test]
@@ -251,7 +533,7 @@ mod tests {
             .zip(&row_norms(&b, n))
             .map(|(&x, &y)| x * y)
             .collect();
-        let q = keep_probs(&scores, 0.5);
+        let q = keep_probs(&scores, 0.5).unwrap();
         let kctx = KernelCtx::serial();
         let exact = weighted_tn(kctx, &a, &b, None, r, m, n);
         let mut rng = Pcg32::new(3, 3);

@@ -14,18 +14,41 @@
 //! count (see the kernels module docs for the determinism contract). The
 //! rng-consuming sampler calls stay serial so mask streams never depend on
 //! scheduling.
+//!
+//! # Compacted sampled execution
+//!
+//! The backward maintains the SampleA outcome as a [`SampledRows`]
+//! kept-sample set instead of zero-filling dropped rows. When compaction
+//! is on and the draw actually dropped samples, the block backward packs
+//! the surviving samples' gradient rows (scaled by their 1/p masks) and
+//! this block's saved activations, and runs the whole block — all four
+//! sampled linears, GELU, both layernorms and attention — on the compact
+//! batch. Reductions (weight/bias/layernorm-gain grads, the Eq. 3 probe,
+//! the embedding scatter) accumulate the kept rows in ascending original
+//! order; the skipped rows are exactly 0 in the zero-scan path and
+//! contribute nothing there either, so results are **bitwise identical**
+//! to the zero-scan reference at any thread count. SampleW masks are
+//! still drawn for every original token row (dropped samples consume rng
+//! draws without outcomes), keeping the mask streams bit-identical.
+//!
+//! Hot-loop buffers come from the backend [`Workspace`]; steady-state
+//! steps perform no per-step matmul output allocations.
 
 use crate::error::{ensure, Result};
 use crate::formats::params::{ParamSet, Tensor};
 use crate::runtime::backend::{GradOut, ModelInfo, ModelKind};
 use crate::runtime::kernels::{
-    add, add_bias, argmax_row, ce_loss_and_dlogits, col_sums, gelu_bwd, gelu_fwd,
-    layernorm_bwd, layernorm_fwd, matmul, matmul_nt, par_row_chunks, par_row_chunks2,
-    softmax_rows, weighted_tn, workers_for, KernelCtx, LnStats,
+    add_assign, add_bias, add_into, argmax_row, ce_loss_and_dlogits_into, col_sums,
+    gather_rows, gather_rows_scaled, gelu_bwd_into, gelu_fwd_into, layernorm_bwd_into,
+    layernorm_fwd_into,
+    matmul_into, matmul_nt_into, par_row_chunks, par_row_chunks2, softmax_rows,
+    weighted_gather_tn, weighted_tn, weighted_tn_into, workers_for, KernelCtx,
+    LnStats, Workspace,
 };
 use crate::util::rng::Pcg32;
 
-use super::sampling::{bern_mask, eq3_variance, keep_probs, row_norms, sample_rows};
+use super::sampling::{eq3_variance_with, row_norm, row_norms, ProbSolve, SampledRows};
+use super::ExecCtx;
 
 /// Number of sampled linears per transformer block: qkv, attn-out, ff1, ff2.
 pub const LINEARS_PER_BLOCK: usize = 4;
@@ -219,32 +242,62 @@ struct BlockSaved {
     f1: Vec<f32>,
 }
 
+impl BlockSaved {
+    fn release(self, ws: &Workspace) {
+        ws.give(self.h_in);
+        ws.give(self.ln1.mu);
+        ws.give(self.ln1.rstd);
+        ws.give(self.a);
+        ws.give(self.qkv);
+        ws.give(self.probs);
+        ws.give(self.attn);
+        ws.give(self.h2);
+        ws.give(self.ln2.mu);
+        ws.give(self.ln2.rstd);
+        ws.give(self.b2);
+        ws.give(self.u1);
+        ws.give(self.f1);
+    }
+}
+
 struct Saved {
     blocks: Vec<BlockSaved>,
     /// Output of the last block (N*T, D).
     h_final: Vec<f32>,
 }
 
+impl Saved {
+    /// Hand every retained activation buffer back to the workspace.
+    fn release(self, ws: &Workspace) {
+        for b in self.blocks {
+            b.release(ws);
+        }
+        ws.give(self.h_final);
+    }
+}
+
 fn tdata(params: &ParamSet, idx: usize) -> &[f32] {
     &params.tensors[idx].data
 }
 
-/// Bidirectional softmax attention forward; returns (ctx, probs). Threads
-/// over batch samples: each worker owns a contiguous slice of samples and
-/// their disjoint ctx/probs rows; the per-head matmuls inside run serial.
+/// Bidirectional softmax attention forward; returns (ctx, probs) as
+/// workspace buffers. Threads over batch samples: each worker owns a
+/// contiguous slice of samples and their disjoint ctx/probs rows; the
+/// per-head matmuls inside run serial on per-worker scratch buffers.
 fn attention_fwd(
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     qkv: &[f32],
     n: usize,
     t: usize,
     d: usize,
     heads: usize,
 ) -> (Vec<f32>, Vec<f32>) {
+    let ws = ectx.ws;
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut ctx = vec![0.0f32; n * t * d];
-    let mut probs = vec![0.0f32; n * heads * t * t];
-    let threads = workers_for(kctx, 4 * n * t * t * d);
+    let mut ctx = ws.take(n * t * d);
+    let mut probs = ws.take(n * heads * t * t);
+    let threads = workers_for(ectx.kctx, 4 * n * t * t * d);
     par_row_chunks2(
         threads,
         &mut ctx,
@@ -253,9 +306,11 @@ fn attention_fwd(
         heads * t * t,
         |n0, cc, pc| {
             let serial = KernelCtx::serial();
-            let mut q = vec![0.0f32; t * dh];
-            let mut k = vec![0.0f32; t * dh];
-            let mut v = vec![0.0f32; t * dh];
+            let mut q = ws.take(t * dh);
+            let mut k = ws.take(t * dh);
+            let mut v = ws.take(t * dh);
+            let mut scores = ws.take(t * t);
+            let mut c = ws.take(t * dh);
             for li in 0..cc.len() / (t * d) {
                 let ni = n0 + li;
                 for hi in 0..heads {
@@ -266,12 +321,12 @@ fn attention_fwd(
                         v[ti * dh..(ti + 1) * dh]
                             .copy_from_slice(&qkv[base + 2 * d..base + 2 * d + dh]);
                     }
-                    let mut scores = matmul_nt(serial, &q, &k, t, dh, t);
+                    matmul_nt_into(serial, &q, &k, t, dh, t, &mut scores);
                     for s in scores.iter_mut() {
                         *s *= scale;
                     }
                     softmax_rows(serial, &mut scores, t);
-                    let c = matmul(serial, &scores, &v, t, t, dh);
+                    matmul_into(serial, &scores, &v, t, t, dh, &mut c);
                     let pbase = (li * heads + hi) * t * t;
                     pc[pbase..pbase + t * t].copy_from_slice(&scores);
                     for ti in 0..t {
@@ -280,16 +335,22 @@ fn attention_fwd(
                     }
                 }
             }
+            ws.give(q);
+            ws.give(k);
+            ws.give(v);
+            ws.give(scores);
+            ws.give(c);
         },
     );
     (ctx, probs)
 }
 
-/// Attention backward: gradient wrt qkv given gradient wrt ctx. Threads
-/// over batch samples exactly like the forward.
+/// Attention backward into a caller-provided `dqkv (n*t, 3d)` buffer
+/// (fully overwritten). Threads over batch samples exactly like the
+/// forward, with per-worker workspace scratch.
 #[allow(clippy::too_many_arguments)]
 fn attention_bwd(
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     qkv: &[f32],
     probs: &[f32],
     dctx: &[f32],
@@ -297,17 +358,24 @@ fn attention_bwd(
     t: usize,
     d: usize,
     heads: usize,
-) -> Vec<f32> {
+    dqkv: &mut [f32],
+) {
+    let ws = ectx.ws;
     let dh = d / heads;
     let scale = 1.0 / (dh as f32).sqrt();
-    let mut dqkv = vec![0.0f32; n * t * 3 * d];
-    let threads = workers_for(kctx, 8 * n * t * t * d);
-    par_row_chunks(threads, &mut dqkv, t * 3 * d, |n0, chunk| {
+    debug_assert_eq!(dqkv.len(), n * t * 3 * d);
+    let threads = workers_for(ectx.kctx, 8 * n * t * t * d);
+    par_row_chunks(threads, dqkv, t * 3 * d, |n0, chunk| {
         let serial = KernelCtx::serial();
-        let mut q = vec![0.0f32; t * dh];
-        let mut k = vec![0.0f32; t * dh];
-        let mut v = vec![0.0f32; t * dh];
-        let mut dc = vec![0.0f32; t * dh];
+        let mut q = ws.take(t * dh);
+        let mut k = ws.take(t * dh);
+        let mut v = ws.take(t * dh);
+        let mut dc = ws.take(t * dh);
+        let mut dv = ws.take(t * dh);
+        let mut dprobs = ws.take(t * t);
+        let mut dscores = ws.take(t * t);
+        let mut dq = ws.take(t * dh);
+        let mut dk = ws.take(t * dh);
         for li in 0..chunk.len() / (t * 3 * d) {
             let ni = n0 + li;
             for hi in 0..heads {
@@ -322,10 +390,9 @@ fn attention_bwd(
                 }
                 let p = &probs[(ni * heads + hi) * t * t..(ni * heads + hi + 1) * t * t];
                 // dv = probs^T @ dc ; dprobs = dc @ v^T
-                let dv = weighted_tn(serial, p, &dc, None, t, t, dh);
-                let dprobs = matmul_nt(serial, &dc, &v, t, dh, t);
+                weighted_tn_into(serial, p, &dc, None, t, t, dh, &mut dv);
+                matmul_nt_into(serial, &dc, &v, t, dh, t, &mut dprobs);
                 // softmax backward per row
-                let mut dscores = vec![0.0f32; t * t];
                 for ti in 0..t {
                     let pr = &p[ti * t..(ti + 1) * t];
                     let dpr = &dprobs[ti * t..(ti + 1) * t];
@@ -336,8 +403,8 @@ fn attention_bwd(
                     }
                 }
                 // dq = dscores @ k ; dk = dscores^T @ q
-                let dq = matmul(serial, &dscores, &k, t, t, dh);
-                let dk = weighted_tn(serial, &dscores, &q, None, t, t, dh);
+                matmul_into(serial, &dscores, &k, t, t, dh, &mut dq);
+                weighted_tn_into(serial, &dscores, &q, None, t, t, dh, &mut dk);
                 for ti in 0..t {
                     let base = (li * t + ti) * 3 * d + hi * dh;
                     chunk[base..base + dh].copy_from_slice(&dq[ti * dh..(ti + 1) * dh]);
@@ -348,26 +415,36 @@ fn attention_bwd(
                 }
             }
         }
+        ws.give(q);
+        ws.give(k);
+        ws.give(v);
+        ws.give(dc);
+        ws.give(dv);
+        ws.give(dprobs);
+        ws.give(dscores);
+        ws.give(dq);
+        ws.give(dk);
     });
-    dqkv
 }
 
 /// Forward through embedding + blocks. With `save` the per-block
-/// activations are retained for the instrumented backward; eval/loss-only
-/// entries pass `false` so each block's buffers drop as soon as the next
-/// block is computed.
+/// activations are retained (as workspace buffers) for the instrumented
+/// backward; eval/loss-only entries pass `false` so each block's buffers
+/// return to the pool as soon as the next block is computed.
 fn encode_fwd(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     n: usize,
     save: bool,
 ) -> Saved {
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
     let (t, d) = (cfg.seq_len, cfg.d_model);
+    let rows = n * t;
     let embed = tdata(params, 0);
     let pos = tdata(params, 1);
-    let mut h = vec![0.0f32; n * t * d];
+    let mut h = ws.take(rows * d);
     for i in 0..n {
         for ti in 0..t {
             let tok = x[i * t + ti] as usize;
@@ -380,34 +457,56 @@ fn encode_fwd(
     let mut blocks = Vec::with_capacity(cfg.n_layers);
     for l in 0..cfg.n_layers {
         let h_in = h;
-        let (a, ln1) = layernorm_fwd(
+        let mut a = ws.take(rows * d);
+        let mut ln1 = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
+        layernorm_fwd_into(
             kctx,
             &h_in,
             tdata(params, cfg.blk(l, LN1_G)),
             tdata(params, cfg.blk(l, LN1_B)),
             d,
+            &mut a,
+            &mut ln1.mu,
+            &mut ln1.rstd,
         );
-        let mut qkv = matmul(kctx, &a, tdata(params, cfg.blk(l, W_QKV)), n * t, d, 3 * d);
+        let mut qkv = ws.take(rows * 3 * d);
+        matmul_into(kctx, &a, tdata(params, cfg.blk(l, W_QKV)), rows, d, 3 * d, &mut qkv);
         add_bias(&mut qkv, tdata(params, cfg.blk(l, B_QKV)));
-        let (attn, probs) = attention_fwd(kctx, &qkv, n, t, d, cfg.n_heads);
-        let mut o = matmul(kctx, &attn, tdata(params, cfg.blk(l, W_O)), n * t, d, d);
+        let (attn, probs) = attention_fwd(ectx, &qkv, n, t, d, cfg.n_heads);
+        let mut o = ws.take(rows * d);
+        matmul_into(kctx, &attn, tdata(params, cfg.blk(l, W_O)), rows, d, d, &mut o);
         add_bias(&mut o, tdata(params, cfg.blk(l, B_O)));
-        let h2 = add(&h_in, &o);
-        let (b2, ln2) = layernorm_fwd(
+        let mut h2 = ws.take(rows * d);
+        add_into(&h_in, &o, &mut h2);
+        ws.give(o);
+        let mut b2 = ws.take(rows * d);
+        let mut ln2 = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
+        layernorm_fwd_into(
             kctx,
             &h2,
             tdata(params, cfg.blk(l, LN2_G)),
             tdata(params, cfg.blk(l, LN2_B)),
             d,
+            &mut b2,
+            &mut ln2.mu,
+            &mut ln2.rstd,
         );
-        let mut u1 = matmul(kctx, &b2, tdata(params, cfg.blk(l, W_FF1)), n * t, d, cfg.d_ff);
+        let mut u1 = ws.take(rows * cfg.d_ff);
+        matmul_into(kctx, &b2, tdata(params, cfg.blk(l, W_FF1)), rows, d, cfg.d_ff, &mut u1);
         add_bias(&mut u1, tdata(params, cfg.blk(l, B_FF1)));
-        let f1 = gelu_fwd(kctx, &u1);
-        let mut f2 = matmul(kctx, &f1, tdata(params, cfg.blk(l, W_FF2)), n * t, cfg.d_ff, d);
+        let mut f1 = ws.take(rows * cfg.d_ff);
+        gelu_fwd_into(kctx, &u1, &mut f1);
+        let mut f2 = ws.take(rows * d);
+        matmul_into(kctx, &f1, tdata(params, cfg.blk(l, W_FF2)), rows, cfg.d_ff, d, &mut f2);
         add_bias(&mut f2, tdata(params, cfg.blk(l, B_FF2)));
-        h = add(&h2, &f2);
+        // h = h2 + f2 (f32 addition is commutative: same bits as add(&h2, &f2))
+        add_assign(&mut f2, &h2);
+        h = f2;
+        let block = BlockSaved { h_in, ln1, a, qkv, probs, attn, h2, ln2, b2, u1, f1 };
         if save {
-            blocks.push(BlockSaved { h_in, ln1, a, qkv, probs, attn, h2, ln2, b2, u1, f1 });
+            blocks.push(block);
+        } else {
+            block.release(ws);
         }
     }
     Saved { blocks, h_final: h }
@@ -417,33 +516,104 @@ fn encode_fwd(
 // Instrumented backward.
 // ---------------------------------------------------------------------------
 
-/// Backward of `y = z @ w + b` with SampleW on the weight gradient.
-/// Returns `(gw, gb, gz, vw_probe)` — see model.py's `linear_bwd_sampled`.
-/// The rng-consuming mask draw stays serial; only the contractions thread.
+/// Which token rows of the full batch are physically present in the
+/// gradient/activation buffers a sampled linear sees.
+enum RowSet<'a> {
+    /// All `rows` token rows.
+    Full,
+    /// Only the tokens of the `kept` samples (ascending sample indices),
+    /// `t` consecutive rows each, out of `full_samples` original samples.
+    /// The absent rows are exactly 0 in the zero-scan path.
+    Samples {
+        kept: &'a [u32],
+        t: usize,
+        full_samples: usize,
+    },
+}
+
+/// Backward of `y = z @ w + b` with SampleW on the weight gradient,
+/// writing `gz` into a caller-provided buffer. Returns `(gw, gb, vw)`.
+///
+/// Works identically on full and kept-row-compact operands: the leverage
+/// scores of absent rows are exactly 0 (zero gradient), which the
+/// water-filling ignores by construction, and the Bern(q)/q mask is drawn
+/// for every *original* row in row order — dropped samples consume rng
+/// draws without outcomes — so mask streams and results are bitwise the
+/// zero-scan path's. The rng-consuming draw stays serial; only the
+/// contractions thread.
 #[allow(clippy::too_many_arguments)]
 fn linear_bwd_sampled(
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     w: &[f32],
     din: usize,
     dout: usize,
     z2d: &[f32],
     g2d: &[f32],
-    rows: usize,
+    rows: &RowSet,
     nu_apply: f32,
     nu_probe: f32,
     rng: &mut Pcg32,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>, f32) {
-    let gn = row_norms(g2d, dout);
-    let zn = row_norms(z2d, din);
-    let scores: Vec<f32> = gn.iter().zip(&zn).map(|(&a, &b)| a * b).collect();
-    let q_apply = keep_probs(&scores, nu_apply);
-    let q_probe = keep_probs(&scores, nu_probe);
-    let wmask = bern_mask(rng, &q_apply);
-    let gw = weighted_tn(kctx, z2d, g2d, Some(&wmask), rows, din, dout);
+    gz: &mut [f32],
+) -> Result<(Vec<f32>, Vec<f32>, f32)> {
+    let ws = ectx.ws;
+    let present = g2d.len() / dout;
+    debug_assert_eq!(z2d.len(), present * din);
+    debug_assert_eq!(gz.len(), present * din);
+    // leverage scores ||g_i|| * ||z_i|| in one fused pass (no norm vectors)
+    let mut scores = ws.take(present);
+    for (i, sc) in scores.iter_mut().enumerate() {
+        *sc = row_norm(&g2d[i * dout..(i + 1) * dout])
+            * row_norm(&z2d[i * din..(i + 1) * din]);
+    }
+    let apply = ProbSolve::new(&scores, nu_apply)?;
+    let probe = ProbSolve::new(&scores, nu_probe)?;
+    // Bern(q)/q mask over the full batch rows, kept rows recorded as
+    // present-row indices with their 1/q scales.
+    let mut widx: Vec<u32> = Vec::with_capacity(present);
+    let mut wsc: Vec<f32> = Vec::with_capacity(present);
+    match rows {
+        RowSet::Full => {
+            for (i, &sc) in scores.iter().enumerate() {
+                let q = apply.prob(sc);
+                if rng.f32() < q {
+                    widx.push(i as u32);
+                    wsc.push(1.0 / q);
+                }
+            }
+        }
+        RowSet::Samples { kept, t, full_samples } => {
+            let t = *t;
+            let mut next = 0usize;
+            for s in 0..*full_samples {
+                if next < kept.len() && kept[next] as usize == s {
+                    for ti in 0..t {
+                        let j = next * t + ti;
+                        let q = apply.prob(scores[j]);
+                        if rng.f32() < q {
+                            widx.push(j as u32);
+                            wsc.push(1.0 / q);
+                        }
+                    }
+                    next += 1;
+                } else {
+                    // dropped sample: rows are exactly 0 — outcome is
+                    // irrelevant, but the draws must still happen so the
+                    // stream stays aligned with the zero-scan path
+                    for _ in 0..t {
+                        let _ = rng.f32();
+                    }
+                }
+            }
+        }
+    }
+    let gw = weighted_gather_tn(ectx.kctx, z2d, g2d, &widx, &wsc, din, dout);
     let gb = col_sums(g2d, dout);
-    let gz = matmul_nt(kctx, g2d, w, rows, dout, din);
-    let vw = eq3_variance(g2d, z2d, &q_probe, dout, din);
-    (gw, gb, gz, vw)
+    matmul_nt_into(ectx.kctx, g2d, w, present, dout, din, gz);
+    // analytic SampleW variance (paper Eq. 3) at the probe ratios; absent
+    // rows have zero gradient norm and contribute exactly 0
+    let vw = eq3_variance_with(g2d, z2d, |i| probe.prob(scores[i]), present, dout, din);
+    ws.give(scores);
+    Ok((gw, gb, vw))
 }
 
 fn rng_sample_a(seed: i32, layer: usize) -> Pcg32 {
@@ -454,141 +624,326 @@ fn rng_sample_w(seed: i32, layer: usize, linear: usize) -> Pcg32 {
     Pcg32::new(seed as u32 as u64, 0xB000 + (LINEARS_PER_BLOCK * layer + linear) as u64)
 }
 
+/// Borrowed per-block activations the backward consumes — either the
+/// saved full-batch buffers (`n` = batch size) or their kept-sample
+/// gathers (`n` = kept count).
+struct BlockView<'a> {
+    n: usize,
+    h_in: &'a [f32],
+    ln1: &'a LnStats,
+    a: &'a [f32],
+    qkv: &'a [f32],
+    probs: &'a [f32],
+    attn: &'a [f32],
+    h2: &'a [f32],
+    ln2: &'a LnStats,
+    b2: &'a [f32],
+    u1: &'a [f32],
+    f1: &'a [f32],
+}
+
+/// One block's backward over a (possibly compacted) batch view. `g` holds
+/// the gradient wrt the block output on entry and the gradient wrt the
+/// block input on exit (buffers are swapped through the workspace).
+#[allow(clippy::too_many_arguments)]
+fn block_bwd(
+    cfg: &TransformerCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    l: usize,
+    v: &BlockView,
+    rows: &RowSet,
+    g: &mut Vec<f32>,
+    seed: i32,
+    nu_apply: &[f32],
+    nu_probe: &[f32],
+    grads: &mut [Vec<f32>],
+    vw: &mut [f32],
+) -> Result<()> {
+    let (t, d, f) = (cfg.seq_len, cfg.d_model, cfg.d_ff);
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
+    let nrows = v.n * t;
+    debug_assert_eq!(g.len(), nrows * d);
+
+    // --- FFN ---
+    let mut k3 = rng_sample_w(seed, l, 3);
+    let mut gf1 = ws.take(nrows * f);
+    let (gw2, gb2, v3) = linear_bwd_sampled(
+        ectx,
+        tdata(params, cfg.blk(l, W_FF2)),
+        f,
+        d,
+        v.f1,
+        g,
+        rows,
+        nu_apply[LINEARS_PER_BLOCK * l + 3],
+        nu_probe[LINEARS_PER_BLOCK * l + 3],
+        &mut k3,
+        &mut gf1,
+    )?;
+    grads[cfg.blk(l, W_FF2)] = gw2;
+    grads[cfg.blk(l, B_FF2)] = gb2;
+    vw[LINEARS_PER_BLOCK * l + 3] = v3;
+
+    let mut gu1 = ws.take(nrows * f);
+    gelu_bwd_into(kctx, v.u1, &gf1, &mut gu1);
+    ws.give(gf1);
+
+    let mut k2 = rng_sample_w(seed, l, 2);
+    let mut gb2in = ws.take(nrows * d);
+    let (gw1, gb1, v2) = linear_bwd_sampled(
+        ectx,
+        tdata(params, cfg.blk(l, W_FF1)),
+        d,
+        f,
+        v.b2,
+        &gu1,
+        rows,
+        nu_apply[LINEARS_PER_BLOCK * l + 2],
+        nu_probe[LINEARS_PER_BLOCK * l + 2],
+        &mut k2,
+        &mut gb2in,
+    )?;
+    ws.give(gu1);
+    grads[cfg.blk(l, W_FF1)] = gw1;
+    grads[cfg.blk(l, B_FF1)] = gb1;
+    vw[LINEARS_PER_BLOCK * l + 2] = v2;
+
+    let mut gh2 = ws.take(nrows * d);
+    let (gln2g, gln2b) = layernorm_bwd_into(
+        kctx,
+        v.h2,
+        tdata(params, cfg.blk(l, LN2_G)),
+        v.ln2,
+        &gb2in,
+        d,
+        &mut gh2,
+    );
+    ws.give(gb2in);
+    grads[cfg.blk(l, LN2_G)] = gln2g;
+    grads[cfg.blk(l, LN2_B)] = gln2b;
+    // residual: gh2 = g + ln2-bwd dx (commutative — same bits as add)
+    add_assign(&mut gh2, g);
+
+    // --- attention ---
+    let mut k1 = rng_sample_w(seed, l, 1);
+    let mut gattn = ws.take(nrows * d);
+    let (gwo, gbo, v1) = linear_bwd_sampled(
+        ectx,
+        tdata(params, cfg.blk(l, W_O)),
+        d,
+        d,
+        v.attn,
+        &gh2,
+        rows,
+        nu_apply[LINEARS_PER_BLOCK * l + 1],
+        nu_probe[LINEARS_PER_BLOCK * l + 1],
+        &mut k1,
+        &mut gattn,
+    )?;
+    grads[cfg.blk(l, W_O)] = gwo;
+    grads[cfg.blk(l, B_O)] = gbo;
+    vw[LINEARS_PER_BLOCK * l + 1] = v1;
+
+    let mut gqkv = ws.take(nrows * 3 * d);
+    attention_bwd(ectx, v.qkv, v.probs, &gattn, v.n, t, d, cfg.n_heads, &mut gqkv);
+    ws.give(gattn);
+
+    let mut k0 = rng_sample_w(seed, l, 0);
+    let mut ga = ws.take(nrows * d);
+    let (gwqkv, gbqkv, v0) = linear_bwd_sampled(
+        ectx,
+        tdata(params, cfg.blk(l, W_QKV)),
+        d,
+        3 * d,
+        v.a,
+        &gqkv,
+        rows,
+        nu_apply[LINEARS_PER_BLOCK * l],
+        nu_probe[LINEARS_PER_BLOCK * l],
+        &mut k0,
+        &mut ga,
+    )?;
+    ws.give(gqkv);
+    grads[cfg.blk(l, W_QKV)] = gwqkv;
+    grads[cfg.blk(l, B_QKV)] = gbqkv;
+    vw[LINEARS_PER_BLOCK * l] = v0;
+
+    let mut gh_ln = ws.take(nrows * d);
+    let (gln1g, gln1b) = layernorm_bwd_into(
+        kctx,
+        v.h_in,
+        tdata(params, cfg.blk(l, LN1_G)),
+        v.ln1,
+        &ga,
+        d,
+        &mut gh_ln,
+    );
+    ws.give(ga);
+    grads[cfg.blk(l, LN1_G)] = gln1g;
+    grads[cfg.blk(l, LN1_B)] = gln1b;
+    // g_out = gh2 + ln1-bwd dx, into block l-1
+    add_assign(&mut gh_ln, &gh2);
+    ws.give(gh2);
+    ws.give(std::mem::replace(g, gh_ln));
+    Ok(())
+}
+
 /// Instrumented backward through the blocks. `g` is the gradient wrt the
-/// final hidden state (N*T, D). Fills block/embed/pos grads in `grads`;
-/// returns (act_norms (L, N) flat, vw (4L,)).
+/// final hidden state (N*T, D), as a workspace buffer the backward
+/// consumes. Fills block/embed/pos grads in `grads`; returns
+/// (act_norms (L, N) flat, vw (4L,)).
 #[allow(clippy::too_many_arguments)]
 fn encode_bwd(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     saved: &Saved,
-    mut g: Vec<f32>,
+    g: Vec<f32>,
     n: usize,
     seed: i32,
     rho: &[f32],
     nu_apply: &[f32],
     nu_probe: &[f32],
     grads: &mut [Vec<f32>],
-) -> (Vec<f32>, Vec<f32>) {
+) -> Result<(Vec<f32>, Vec<f32>)> {
     let (t, d, f) = (cfg.seq_len, cfg.d_model, cfg.d_ff);
+    let ws = ectx.ws;
     let mut act_norms = vec![0.0f32; cfg.n_layers * n];
     let mut vw = vec![0.0f32; cfg.n_sampled()];
+    let mut g = g;
+    // kept samples of the current (compacted) gradient; None = all of them
+    let mut kept: Option<Vec<u32>> = None;
 
     for l in (0..cfg.n_layers).rev() {
         let s = &saved.blocks[l];
         let mut ka = rng_sample_a(seed, l);
+        // pre-mask per-sample norms over the FULL batch; samples dropped at
+        // an earlier site have exactly-zero gradient, hence norm exactly 0
+        let norms: Vec<f32> = match &kept {
+            None => row_norms(&g, t * d),
+            Some(k) => {
+                let mut full = vec![0.0f32; n];
+                for (j, &orig) in k.iter().enumerate() {
+                    full[orig as usize] = row_norm(&g[j * t * d..(j + 1) * t * d]);
+                }
+                full
+            }
+        };
+        let sr = SampledRows::draw(norms, rho[l], &mut ka)?;
+        act_norms[l * n..(l + 1) * n].copy_from_slice(&sr.norms);
 
-        let norms = sample_rows(&mut g, t * d, rho[l], &mut ka);
-        act_norms[l * n..(l + 1) * n].copy_from_slice(&norms);
+        if !ectx.compact || (kept.is_none() && sr.all_kept()) {
+            // zero-scan / dense path — also taken when nothing was dropped
+            // (compacting would only copy). `kept` is None on both arms:
+            // the !compact mode never compacts, and the all_kept arm
+            // requires it.
+            debug_assert!(kept.is_none());
+            sr.apply(&mut g, t * d);
+            let view = BlockView {
+                n,
+                h_in: &s.h_in,
+                ln1: &s.ln1,
+                a: &s.a,
+                qkv: &s.qkv,
+                probs: &s.probs,
+                attn: &s.attn,
+                h2: &s.h2,
+                ln2: &s.ln2,
+                b2: &s.b2,
+                u1: &s.u1,
+                f1: &s.f1,
+            };
+            block_bwd(
+                cfg, ectx, params, l, &view, &RowSet::Full, &mut g, seed, nu_apply,
+                nu_probe, grads, &mut vw,
+            )?;
+        } else {
+            // gather-compacted path: intersect the previous kept set with
+            // this draw, pack the survivors' gradient rows (scaled by the
+            // new 1/p) plus this block's saved activations, and run the
+            // block backward on the compact batch.
+            let (new_kept, src_slots, scales) = sr.intersect(kept.as_deref());
+            let kk = new_kept.len();
+            let mut gc = ws.take(kk * t * d);
+            gather_rows_scaled(&g, t * d, &src_slots, &scales, &mut gc);
+            ws.give(std::mem::replace(&mut g, gc));
 
-        // --- FFN ---
-        let mut k3 = rng_sample_w(seed, l, 3);
-        let (gw2, gb2, gf1, v3) = linear_bwd_sampled(
-            kctx,
-            tdata(params, cfg.blk(l, W_FF2)),
-            f,
-            d,
-            &s.f1,
-            &g,
-            n * t,
-            nu_apply[LINEARS_PER_BLOCK * l + 3],
-            nu_probe[LINEARS_PER_BLOCK * l + 3],
-            &mut k3,
-        );
-        grads[cfg.blk(l, W_FF2)] = gw2;
-        grads[cfg.blk(l, B_FF2)] = gb2;
-        vw[LINEARS_PER_BLOCK * l + 3] = v3;
+            // gather this block's saved activations to the kept samples
+            let gat = |src: &[f32], per: usize| -> Vec<f32> {
+                let mut out = ws.take(kk * per);
+                gather_rows(src, per, &new_kept, &mut out);
+                out
+            };
+            let h_in_c = gat(&s.h_in, t * d);
+            let a_c = gat(&s.a, t * d);
+            let qkv_c = gat(&s.qkv, t * 3 * d);
+            let probs_c = gat(&s.probs, cfg.n_heads * t * t);
+            let attn_c = gat(&s.attn, t * d);
+            let h2_c = gat(&s.h2, t * d);
+            let b2_c = gat(&s.b2, t * d);
+            let u1_c = gat(&s.u1, t * f);
+            let f1_c = gat(&s.f1, t * f);
+            let ln1_c = LnStats { mu: gat(&s.ln1.mu, t), rstd: gat(&s.ln1.rstd, t) };
+            let ln2_c = LnStats { mu: gat(&s.ln2.mu, t), rstd: gat(&s.ln2.rstd, t) };
 
-        let gu1 = gelu_bwd(kctx, &s.u1, &gf1);
-
-        let mut k2 = rng_sample_w(seed, l, 2);
-        let (gw1, gb1, gb2in, v2) = linear_bwd_sampled(
-            kctx,
-            tdata(params, cfg.blk(l, W_FF1)),
-            d,
-            f,
-            &s.b2,
-            &gu1,
-            n * t,
-            nu_apply[LINEARS_PER_BLOCK * l + 2],
-            nu_probe[LINEARS_PER_BLOCK * l + 2],
-            &mut k2,
-        );
-        grads[cfg.blk(l, W_FF1)] = gw1;
-        grads[cfg.blk(l, B_FF1)] = gb1;
-        vw[LINEARS_PER_BLOCK * l + 2] = v2;
-
-        let (gh2_ln, gln2g, gln2b) = layernorm_bwd(
-            kctx,
-            &s.h2,
-            tdata(params, cfg.blk(l, LN2_G)),
-            &s.ln2,
-            &gb2in,
-            d,
-        );
-        grads[cfg.blk(l, LN2_G)] = gln2g;
-        grads[cfg.blk(l, LN2_B)] = gln2b;
-        let gh2 = add(&g, &gh2_ln); // residual
-
-        // --- attention ---
-        let mut k1 = rng_sample_w(seed, l, 1);
-        let (gwo, gbo, gattn, v1) = linear_bwd_sampled(
-            kctx,
-            tdata(params, cfg.blk(l, W_O)),
-            d,
-            d,
-            &s.attn,
-            &gh2,
-            n * t,
-            nu_apply[LINEARS_PER_BLOCK * l + 1],
-            nu_probe[LINEARS_PER_BLOCK * l + 1],
-            &mut k1,
-        );
-        grads[cfg.blk(l, W_O)] = gwo;
-        grads[cfg.blk(l, B_O)] = gbo;
-        vw[LINEARS_PER_BLOCK * l + 1] = v1;
-
-        let gqkv = attention_bwd(kctx, &s.qkv, &s.probs, &gattn, n, t, d, cfg.n_heads);
-
-        let mut k0 = rng_sample_w(seed, l, 0);
-        let (gwqkv, gbqkv, ga, v0) = linear_bwd_sampled(
-            kctx,
-            tdata(params, cfg.blk(l, W_QKV)),
-            d,
-            3 * d,
-            &s.a,
-            &gqkv,
-            n * t,
-            nu_apply[LINEARS_PER_BLOCK * l],
-            nu_probe[LINEARS_PER_BLOCK * l],
-            &mut k0,
-        );
-        grads[cfg.blk(l, W_QKV)] = gwqkv;
-        grads[cfg.blk(l, B_QKV)] = gbqkv;
-        vw[LINEARS_PER_BLOCK * l] = v0;
-
-        let (gh_ln, gln1g, gln1b) = layernorm_bwd(
-            kctx,
-            &s.h_in,
-            tdata(params, cfg.blk(l, LN1_G)),
-            &s.ln1,
-            &ga,
-            d,
-        );
-        grads[cfg.blk(l, LN1_G)] = gln1g;
-        grads[cfg.blk(l, LN1_B)] = gln1b;
-        g = add(&gh2, &gh_ln); // residual into block l-1
+            {
+                let view = BlockView {
+                    n: kk,
+                    h_in: &h_in_c,
+                    ln1: &ln1_c,
+                    a: &a_c,
+                    qkv: &qkv_c,
+                    probs: &probs_c,
+                    attn: &attn_c,
+                    h2: &h2_c,
+                    ln2: &ln2_c,
+                    b2: &b2_c,
+                    u1: &u1_c,
+                    f1: &f1_c,
+                };
+                let rowset = RowSet::Samples { kept: &new_kept, t, full_samples: n };
+                block_bwd(
+                    cfg, ectx, params, l, &view, &rowset, &mut g, seed, nu_apply,
+                    nu_probe, grads, &mut vw,
+                )?;
+            }
+            ws.give(h_in_c);
+            ws.give(a_c);
+            ws.give(qkv_c);
+            ws.give(probs_c);
+            ws.give(attn_c);
+            ws.give(h2_c);
+            ws.give(b2_c);
+            ws.give(u1_c);
+            ws.give(f1_c);
+            ws.give(ln1_c.mu);
+            ws.give(ln1_c.rstd);
+            ws.give(ln2_c.mu);
+            ws.give(ln2_c.rstd);
+            kept = Some(new_kept);
+        }
     }
 
     // --- embedding + positions (serial: scatters collide across rows) ---
+    // Only the kept samples are visited: a dropped sample's final gradient
+    // rows are exactly +0.0 on the zero-scan path, so skipping them adds
+    // nothing and changes no bits.
+    let all_samples: Vec<u32>;
+    let kept_slice: &[u32] = match &kept {
+        None => {
+            all_samples = (0..n as u32).collect();
+            &all_samples
+        }
+        Some(k) => k,
+    };
     {
         let gembed = &mut grads[0];
-        for i in 0..n {
+        for (j, &orig) in kept_slice.iter().enumerate() {
             for ti in 0..t {
-                let tok = x[i * t + ti] as usize;
-                let src = &g[(i * t + ti) * d..(i * t + ti + 1) * d];
+                let tok = x[orig as usize * t + ti] as usize;
+                let src = &g[(j * t + ti) * d..(j * t + ti + 1) * d];
                 let dst = &mut gembed[tok * d..(tok + 1) * d];
                 for (o, &v) in dst.iter_mut().zip(src) {
                     *o += v;
@@ -598,9 +953,9 @@ fn encode_bwd(
     }
     {
         let gpos = &mut grads[1];
-        for i in 0..n {
+        for j in 0..kept_slice.len() {
             for ti in 0..t {
-                let src = &g[(i * t + ti) * d..(i * t + ti + 1) * d];
+                let src = &g[(j * t + ti) * d..(j * t + ti + 1) * d];
                 let dst = &mut gpos[ti * d..(ti + 1) * d];
                 for (o, &v) in dst.iter_mut().zip(src) {
                     *o += v;
@@ -608,7 +963,8 @@ fn encode_bwd(
             }
         }
     }
-    (act_norms, vw)
+    ws.give(g);
+    Ok((act_norms, vw))
 }
 
 fn zero_grads(cfg: &TransformerCfg) -> Vec<Vec<f32>> {
@@ -619,23 +975,32 @@ fn zero_grads(cfg: &TransformerCfg) -> Vec<Vec<f32>> {
 }
 
 /// Classification head forward: final LN + mean-pool + linear.
-/// Returns (hf, ln stats, pooled (N,D), logits (N,C)).
+/// Returns (hf, ln stats, pooled (N,D), logits (N,C)) — all workspace
+/// buffers the caller must give back.
 fn cls_head_fwd(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     hl: &[f32],
     n: usize,
 ) -> (Vec<f32>, LnStats, Vec<f32>, Vec<f32>) {
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
     let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
-    let (hf, stats) = layernorm_fwd(
+    let rows = n * t;
+    let mut hf = ws.take(rows * d);
+    let mut stats = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
+    layernorm_fwd_into(
         kctx,
         hl,
         tdata(params, cfg.idx_ln_f_g()),
         tdata(params, cfg.idx_ln_f_b()),
         d,
+        &mut hf,
+        &mut stats.mu,
+        &mut stats.rstd,
     );
-    let mut pooled = vec![0.0f32; n * d];
+    let mut pooled = ws.take(n * d);
+    pooled.fill(0.0); // mean-pool accumulates below
     let inv_t = 1.0 / t as f32;
     for i in 0..n {
         let dst = &mut pooled[i * d..(i + 1) * d];
@@ -649,9 +1014,18 @@ fn cls_head_fwd(
             *o *= inv_t;
         }
     }
-    let mut logits = matmul(kctx, &pooled, tdata(params, cfg.idx_head_w()), n, d, c);
+    let mut logits = ws.take(n * c);
+    matmul_into(kctx, &pooled, tdata(params, cfg.idx_head_w()), n, d, c, &mut logits);
     add_bias(&mut logits, tdata(params, cfg.idx_head_b()));
     (hf, stats, pooled, logits)
+}
+
+fn release_head(ws: &Workspace, hf: Vec<f32>, stats: LnStats, pooled: Vec<f32>, logits: Vec<f32>) {
+    ws.give(hf);
+    ws.give(stats.mu);
+    ws.give(stats.rstd);
+    ws.give(pooled);
+    ws.give(logits);
 }
 
 // ---------------------------------------------------------------------------
@@ -661,7 +1035,7 @@ fn cls_head_fwd(
 #[allow(clippy::too_many_arguments)]
 pub fn fwd_bwd_cls(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -677,11 +1051,15 @@ pub fn fwd_bwd_cls(
     ensure!(rho.len() == cfg.n_layers && nu_apply.len() == cfg.n_sampled());
     ensure!(nu_probe.len() == cfg.n_sampled() && sw.len() == n && y.len() == n);
     let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
 
-    let saved = encode_fwd(cfg, kctx, params, x, n, true);
-    let (_hf, lnf, pooled, logits) = cls_head_fwd(cfg, kctx, params, &saved.h_final, n);
-    let (losses, mut dlogits) = ce_loss_and_dlogits(kctx, &logits, y, c);
+    let saved = encode_fwd(cfg, ectx, params, x, n, true);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let mut losses = ws.take(n);
+    let mut dlogits = ws.take(n * c);
+    ce_loss_and_dlogits_into(kctx, &logits, y, c, &mut losses, &mut dlogits);
     let loss: f64 = losses.iter().zip(sw).map(|(&l, &w)| (l as f64) * (w as f64)).sum();
+    ws.give(losses);
     for i in 0..n {
         for j in 0..c {
             dlogits[i * c + j] *= sw[i];
@@ -691,8 +1069,10 @@ pub fn fwd_bwd_cls(
     let mut grads = zero_grads(cfg);
     grads[cfg.idx_head_b()] = col_sums(&dlogits, c);
     grads[cfg.idx_head_w()] = weighted_tn(kctx, &pooled, &dlogits, None, n, d, c);
-    let gpooled = matmul_nt(kctx, &dlogits, tdata(params, cfg.idx_head_w()), n, c, d);
-    let mut dhf = vec![0.0f32; n * t * d];
+    let mut gpooled = ws.take(n * d);
+    matmul_nt_into(kctx, &dlogits, tdata(params, cfg.idx_head_w()), n, c, d, &mut gpooled);
+    ws.give(dlogits);
+    let mut dhf = ws.take(n * t * d);
     let inv_t = 1.0 / t as f32;
     for i in 0..n {
         let src = &gpooled[i * d..(i + 1) * d];
@@ -703,27 +1083,33 @@ pub fn fwd_bwd_cls(
             }
         }
     }
-    let (g, glnf_g, glnf_b) = layernorm_bwd(
+    ws.give(gpooled);
+    let mut g = ws.take(n * t * d);
+    let (glnf_g, glnf_b) = layernorm_bwd_into(
         kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         &lnf,
         &dhf,
         d,
+        &mut g,
     );
+    ws.give(dhf);
     grads[cfg.idx_ln_f_g()] = glnf_g;
     grads[cfg.idx_ln_f_b()] = glnf_b;
+    release_head(ws, hf, lnf, pooled, logits);
 
     let (act_norms, vw) = encode_bwd(
-        cfg, kctx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
-    );
+        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
+    )?;
+    saved.release(ws);
     Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
 }
 
 #[allow(clippy::too_many_arguments)]
 pub fn fwd_bwd_mlm(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -740,24 +1126,35 @@ pub fn fwd_bwd_mlm(
     ensure!(nu_probe.len() == cfg.n_sampled());
     ensure!(w.len() == n * cfg.seq_len && y.len() == n * cfg.seq_len);
     let (t, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
     let rows = n * t;
 
-    let saved = encode_fwd(cfg, kctx, params, x, n, true);
-    let (hf, lnf) = layernorm_fwd(
+    let saved = encode_fwd(cfg, ectx, params, x, n, true);
+    let mut hf = ws.take(rows * d);
+    let mut lnf = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
+    layernorm_fwd_into(
         kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         tdata(params, cfg.idx_ln_f_b()),
         d,
+        &mut hf,
+        &mut lnf.mu,
+        &mut lnf.rstd,
     );
     // logits = hf @ embed^T + mlm_b, (N*T, V)
-    let mut logits = matmul_nt(kctx, &hf, tdata(params, 0), rows, d, v);
+    let mut logits = ws.take(rows * v);
+    matmul_nt_into(kctx, &hf, tdata(params, 0), rows, d, v, &mut logits);
     add_bias(&mut logits, tdata(params, cfg.idx_mlm_b()));
-    let (losses, mut dlogits) = ce_loss_and_dlogits(kctx, &logits, y, v);
+    let mut losses = ws.take(rows);
+    let mut dlogits = ws.take(rows * v);
+    ce_loss_and_dlogits_into(kctx, &logits, y, v, &mut losses, &mut dlogits);
+    ws.give(logits);
     let wsum: f64 = w.iter().map(|&x| x as f64).sum();
     let denom = wsum.max(1.0);
     let loss: f64 =
         losses.iter().zip(w).map(|(&l, &wi)| (l as f64) * (wi as f64)).sum::<f64>() / denom;
+    ws.give(losses);
     let inv = (1.0 / denom) as f32;
     for r in 0..rows {
         let scale = w[r] * inv;
@@ -769,32 +1166,43 @@ pub fn fwd_bwd_mlm(
     let mut grads = zero_grads(cfg);
     grads[cfg.idx_mlm_b()] = col_sums(&dlogits, v);
     // tied-embedding head gradient: dlogits^T @ hf -> (V, D)
-    let gemb_head = weighted_tn(kctx, &dlogits, &hf, None, rows, v, d);
-    let dhf = matmul(kctx, &dlogits, tdata(params, 0), rows, v, d);
-    let (g, glnf_g, glnf_b) = layernorm_bwd(
+    let mut gemb_head = ws.take(v * d);
+    weighted_tn_into(kctx, &dlogits, &hf, None, rows, v, d, &mut gemb_head);
+    let mut dhf = ws.take(rows * d);
+    matmul_into(kctx, &dlogits, tdata(params, 0), rows, v, d, &mut dhf);
+    ws.give(dlogits);
+    ws.give(hf);
+    let mut g = ws.take(rows * d);
+    let (glnf_g, glnf_b) = layernorm_bwd_into(
         kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         &lnf,
         &dhf,
         d,
+        &mut g,
     );
+    ws.give(dhf);
+    ws.give(lnf.mu);
+    ws.give(lnf.rstd);
     grads[cfg.idx_ln_f_g()] = glnf_g;
     grads[cfg.idx_ln_f_b()] = glnf_b;
 
     let (act_norms, vw) = encode_bwd(
-        cfg, kctx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
-    );
+        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
+    )?;
+    saved.release(ws);
     // tied embedding: encoder scatter + head contribution
     for (o, &hv) in grads[0].iter_mut().zip(&gemb_head) {
         *o += hv;
     }
+    ws.give(gemb_head);
     Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
 }
 
 pub fn fwd_loss_cls(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -804,16 +1212,23 @@ pub fn fwd_loss_cls(
     cfg.validate(params, n, seq_len, x.len())?;
     ensure!(y.len() == n);
     let c = cfg.n_classes;
-    let saved = encode_fwd(cfg, kctx, params, x, n, false);
-    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, kctx, params, &saved.h_final, n);
-    let (losses, dlogits) = ce_loss_and_dlogits(kctx, &logits, y, c);
+    let ws = ectx.ws;
+    let saved = encode_fwd(cfg, ectx, params, x, n, false);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    // losses escape to the caller; dlogits only feeds the UB scores
+    let mut losses = vec![0.0f32; n];
+    let mut dlogits = ws.take(n * c);
+    ce_loss_and_dlogits_into(ectx.kctx, &logits, y, c, &mut losses, &mut dlogits);
     let ub = row_norms(&dlogits, c);
+    ws.give(dlogits);
+    release_head(ws, hf, lnf, pooled, logits);
+    saved.release(ws);
     Ok((losses, ub))
 }
 
 pub fn eval_cls(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -823,23 +1238,30 @@ pub fn eval_cls(
     cfg.validate(params, n, seq_len, x.len())?;
     ensure!(y.len() == n);
     let c = cfg.n_classes;
-    let saved = encode_fwd(cfg, kctx, params, x, n, false);
-    let (_hf, _lnf, _pooled, logits) = cls_head_fwd(cfg, kctx, params, &saved.h_final, n);
-    let (losses, _) = ce_loss_and_dlogits(kctx, &logits, y, c);
+    let ws = ectx.ws;
+    let saved = encode_fwd(cfg, ectx, params, x, n, false);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let mut losses = ws.take(n);
+    let mut dlogits = ws.take(n * c);
+    ce_loss_and_dlogits_into(ectx.kctx, &logits, y, c, &mut losses, &mut dlogits);
+    ws.give(dlogits);
     let loss_sum: f64 = losses.iter().map(|&l| l as f64).sum();
+    ws.give(losses);
     let mut correct = 0u32;
     for i in 0..n {
         if argmax_row(&logits[i * c..(i + 1) * c]) == y[i] as usize {
             correct += 1;
         }
     }
+    release_head(ws, hf, lnf, pooled, logits);
+    saved.release(ws);
     Ok((loss_sum as f32, correct as f32))
 }
 
 #[allow(clippy::too_many_arguments)]
 pub fn eval_mlm(
     cfg: &TransformerCfg,
-    kctx: KernelCtx,
+    ectx: ExecCtx,
     params: &ParamSet,
     x: &[i32],
     y: &[i32],
@@ -851,17 +1273,30 @@ pub fn eval_mlm(
     let (t, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
     let rows = n * t;
     ensure!(w.len() == rows && y.len() == rows);
-    let saved = encode_fwd(cfg, kctx, params, x, n, false);
-    let (hf, _lnf) = layernorm_fwd(
+    let (kctx, ws) = (ectx.kctx, ectx.ws);
+    let saved = encode_fwd(cfg, ectx, params, x, n, false);
+    let mut hf = ws.take(rows * d);
+    let mut lnf = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
+    layernorm_fwd_into(
         kctx,
         &saved.h_final,
         tdata(params, cfg.idx_ln_f_g()),
         tdata(params, cfg.idx_ln_f_b()),
         d,
+        &mut hf,
+        &mut lnf.mu,
+        &mut lnf.rstd,
     );
-    let mut logits = matmul_nt(kctx, &hf, tdata(params, 0), rows, d, v);
+    ws.give(lnf.mu);
+    ws.give(lnf.rstd);
+    let mut logits = ws.take(rows * v);
+    matmul_nt_into(kctx, &hf, tdata(params, 0), rows, d, v, &mut logits);
+    ws.give(hf);
     add_bias(&mut logits, tdata(params, cfg.idx_mlm_b()));
-    let (losses, _) = ce_loss_and_dlogits(kctx, &logits, y, v);
+    let mut losses = ws.take(rows);
+    let mut dlogits = ws.take(rows * v);
+    ce_loss_and_dlogits_into(kctx, &logits, y, v, &mut losses, &mut dlogits);
+    ws.give(dlogits);
     let mut loss_sum = 0.0f64;
     let mut correct = 0.0f64;
     let mut weight = 0.0f64;
@@ -873,5 +1308,8 @@ pub fn eval_mlm(
             correct += wi;
         }
     }
+    ws.give(losses);
+    ws.give(logits);
+    saved.release(ws);
     Ok((loss_sum as f32, correct as f32, weight as f32))
 }

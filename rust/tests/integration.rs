@@ -570,6 +570,141 @@ fn trainer_loss_curve_thread_invariant() {
 }
 
 // ---------------------------------------------------------------------------
+// Compacted sampled execution: the gather/scatter backward must be bitwise
+// identical to the zero-scan reference at every keep ratio and thread
+// count, and steady-state steps must stop allocating through the
+// workspace.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn compacted_transformer_bitwise_matches_zero_scan_ratio_sweep() {
+    let params = {
+        let b = NativeBackend::with_default_models();
+        ModelSession::open(&b, "small").unwrap().load_params().unwrap()
+    };
+    for threads in [1usize, 2, 4] {
+        let zs = NativeBackend::with_default_models()
+            .with_threads(threads)
+            .with_compaction(false);
+        let co = NativeBackend::with_default_models()
+            .with_threads(threads)
+            .with_compaction(true);
+        assert!(!zs.compaction() && co.compaction());
+        let sess_z = ModelSession::open(&zs, "small").unwrap();
+        let sess_c = ModelSession::open(&co, "small").unwrap();
+        let batch = cls_batch_for(&zs, "small", 40 + threads as u64);
+        let sw = vec![1.0 / batch.n as f32; batch.n];
+        for ratio in [0.1f32, 0.25, 0.5, 0.75, 1.0] {
+            let rho = vec![ratio; sess_z.n_layers];
+            let nu = vec![ratio; sess_z.n_sampled];
+            let a = sess_z.fwd_bwd_cls(&params, &batch, &sw, 9, &rho, &nu, &nu).unwrap();
+            let b = sess_c.fwd_bwd_cls(&params, &batch, &sw, 9, &rho, &nu, &nu).unwrap();
+            assert_gradout_bits_eq(
+                &a,
+                &b,
+                &format!("compacted vs zero-scan @ ratio {ratio}, {threads} threads"),
+            );
+        }
+    }
+}
+
+#[test]
+fn compacted_mlm_bitwise_matches_zero_scan() {
+    let zs = NativeBackend::with_default_models().with_compaction(false);
+    let co = NativeBackend::with_default_models().with_compaction(true);
+    let sess_z = ModelSession::open(&zs, "tiny").unwrap();
+    let sess_c = ModelSession::open(&co, "tiny").unwrap();
+    let params = sess_z.load_params().unwrap();
+    let n = zs.main_batch();
+    let seq_len = sess_z.seq_len;
+    let mut rng = Pcg32::new(61, 0x61);
+    let x: Vec<i32> = (0..n * seq_len).map(|_| rng.below(sess_z.vocab as u64) as i32).collect();
+    let y: Vec<i32> = (0..n * seq_len).map(|_| rng.below(sess_z.vocab as u64) as i32).collect();
+    let w: Vec<f32> =
+        (0..n * seq_len).map(|_| if rng.bernoulli(0.3) { 1.0 } else { 0.0 }).collect();
+    let batch = vcas::data::batch::MlmBatch { n, seq_len, x, y, w };
+    for ratio in [0.2f32, 0.6, 1.0] {
+        let rho = vec![ratio; sess_z.n_layers];
+        let nu = vec![ratio; sess_z.n_sampled];
+        let a = sess_z.fwd_bwd_mlm(&params, &batch, 4, &rho, &nu, &nu).unwrap();
+        let b = sess_c.fwd_bwd_mlm(&params, &batch, 4, &rho, &nu, &nu).unwrap();
+        assert_gradout_bits_eq(&a, &b, &format!("mlm compacted vs zero-scan @ {ratio}"));
+    }
+}
+
+#[test]
+fn compacted_cnn_bitwise_matches_zero_scan_ratio_sweep() {
+    let zs = NativeBackend::with_default_models().with_compaction(false);
+    let sess_z = ModelSession::open(&zs, "cnn").unwrap();
+    let params = sess_z.load_params().unwrap();
+    let info = zs.info("cnn").unwrap();
+    let n = zs.cnn_batch();
+    let mut rng = Pcg32::new(51, 0x51);
+    let px = info.img * info.img * info.in_ch;
+    let x: Vec<f32> = (0..n * px).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(info.n_classes as u64) as i32).collect();
+    let batch = vcas::data::batch::ImgBatch { n, x, y, idx: vec![] };
+    for threads in [1usize, 2, 4] {
+        let zs_t = NativeBackend::with_default_models()
+            .with_threads(threads)
+            .with_compaction(false);
+        let co_t = NativeBackend::with_default_models()
+            .with_threads(threads)
+            .with_compaction(true);
+        let sz = ModelSession::open(&zs_t, "cnn").unwrap();
+        let sc = ModelSession::open(&co_t, "cnn").unwrap();
+        for ratio in [0.1f32, 0.5, 1.0] {
+            let rho = vec![ratio; sess_z.n_layers];
+            let a = sz.cnn_fwd_bwd(&params, &batch, 8, &rho).unwrap();
+            let b = sc.cnn_fwd_bwd(&params, &batch, 8, &rho).unwrap();
+            assert_eq!(
+                a.loss.to_bits(),
+                b.loss.to_bits(),
+                "cnn loss differs @ ratio {ratio}, {threads} threads"
+            );
+            for (ga, gb) in a.grads.iter().zip(&b.grads) {
+                assert_eq!(ga, gb, "cnn grads differ @ ratio {ratio}, {threads} threads");
+            }
+            assert_eq!(a.act_norms, b.act_norms, "cnn act_norms differ @ ratio {ratio}");
+        }
+    }
+}
+
+#[test]
+fn workspace_reuse_steady_state_no_allocations() {
+    // Steady-state training steps must perform no per-step matmul output
+    // allocations: after a warm-up step populates the pool, further
+    // identical steps reuse every buffer.
+    let b = NativeBackend::with_default_models(); // private instance: counters undisturbed
+    let sess = ModelSession::open(&b, "small").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = cls_batch_for(&b, "small", 77);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let rho = vec![0.5f32; sess.n_layers];
+    let nu = vec![0.5f32; sess.n_sampled];
+    // Fixed seed: identical steps issue an identical buffer-request
+    // sequence, so after one warm-up step the pool must cover every
+    // subsequent step deterministically. (Across seeds the kept-set sizes
+    // move, and a step keeping more rows than any prior one may grow a
+    // buffer once — that is warm-up, not steady state.)
+    for _ in 0..2 {
+        sess.fwd_bwd_cls(&params, &batch, &sw, 7, &rho, &nu, &nu).unwrap();
+    }
+    let warm_allocs = b.workspace().allocations();
+    let warm_takes = b.workspace().takes();
+    assert!(warm_takes > 0, "fwd_bwd must route buffers through the workspace");
+    for _ in 0..4 {
+        sess.fwd_bwd_cls(&params, &batch, &sw, 7, &rho, &nu, &nu).unwrap();
+    }
+    assert_eq!(
+        b.workspace().allocations(),
+        warm_allocs,
+        "steady-state steps must not allocate fresh buffers"
+    );
+    assert!(b.workspace().takes() > warm_takes);
+}
+
+// ---------------------------------------------------------------------------
 // XLA checks: feature- and artifact-gated, with graceful skips.
 // ---------------------------------------------------------------------------
 
