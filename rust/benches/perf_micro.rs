@@ -125,9 +125,11 @@ fn main() {
         ]);
     }
 
-    // kernel layer: naive loop vs blocked+threaded MatmulPlan, plus the
-    // end-to-end fwd_bwd scaling — the acceptance target is >= 2x matmul
-    // speedup at 4 threads on 512^3 over the naive reference.
+    // kernel layer: naive loop vs the PR 2 blocked tiles vs the PR 4 SIMD
+    // microkernels (bitwise-identical results across all three), plus the
+    // end-to-end fwd_bwd scaling. Acceptance targets: >= 2x matmul speedup
+    // at 4 threads over the naive reference, and the SIMD tier beating the
+    // blocked tiles wall-clock on every large-shape row.
     let mut kernels_json: BTreeMap<String, Json> = BTreeMap::new();
     {
         let (m, k, n) = (512usize, 512, 512);
@@ -144,33 +146,88 @@ fn main() {
         ]);
         let mut mm: BTreeMap<String, Json> = BTreeMap::new();
         mm.insert("naive_ms".into(), Json::Num(naive_ms));
-        let mut ms4 = naive_ms;
+        let (mut blocked1, mut blocked4, mut simd1, mut simd4) =
+            (naive_ms, naive_ms, naive_ms, naive_ms);
         for threads in [1usize, 2, 4] {
-            let plan = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads);
-            let ms = common::time_median_ms(5, || {
-                std::hint::black_box(plan.run(&a, &b));
+            let blocked = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads)
+                .with_simd(false);
+            let bms = common::time_median_ms(5, || {
+                std::hint::black_box(blocked.run(&a, &b));
             });
             table.row(vec![
                 format!("matmul {m}x{k}x{n} blocked, {threads} thr"),
-                format!("{ms:.1}"),
-                format!("{:.2}x vs naive", naive_ms / ms),
+                format!("{bms:.1}"),
+                format!("{:.2}x vs naive", naive_ms / bms),
             ]);
-            mm.insert(format!("threads_{threads}_ms"), Json::Num(ms));
+            mm.insert(format!("blocked_threads_{threads}_ms"), Json::Num(bms));
+            let vect = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads).with_simd(true);
+            let sms = common::time_median_ms(5, || {
+                std::hint::black_box(vect.run(&a, &b));
+            });
+            table.row(vec![
+                format!("matmul {m}x{k}x{n} SIMD, {threads} thr"),
+                format!("{sms:.1}"),
+                format!("{:.2}x vs blocked", bms / sms),
+            ]);
+            mm.insert(format!("simd_threads_{threads}_ms"), Json::Num(sms));
+            if threads == 1 {
+                blocked1 = bms;
+                simd1 = sms;
+            }
             if threads == 4 {
-                ms4 = ms;
+                blocked4 = bms;
+                simd4 = sms;
             }
         }
-        mm.insert("speedup_4t_vs_naive".into(), Json::Num(naive_ms / ms4));
+        // tier-qualified keys: the PR 2 "speedup_4t_vs_naive" series ends
+        // here; longitudinal readers get each tier under its own name
+        mm.insert("blocked_speedup_4t_vs_naive".into(), Json::Num(naive_ms / blocked4));
+        mm.insert("simd_speedup_4t_vs_naive".into(), Json::Num(naive_ms / simd4));
+        mm.insert("simd_speedup_vs_blocked_1t".into(), Json::Num(blocked1 / simd1));
         kernels_json.insert("matmul_512".into(), Json::Obj(mm));
+
+        // NT and TN at the same large shape, 1 thread: the layouts the
+        // sampled backward actually runs (gz = g @ W^T, gw = z^T diag(m) g)
+        let bt: Vec<f32> = (0..n * k).map(|_| rng.normal() as f32).collect();
+        for (label, layout) in [("nt", Layout::Nt), ("tn", Layout::Tn)] {
+            let (lhs, rhs): (&[f32], &[f32]) = match layout {
+                Layout::Nt => (&a, &bt),
+                _ => (&a, &b),
+            };
+            let run = |plan: MatmulPlan| match layout {
+                Layout::Tn => plan.run_weighted(lhs, rhs, None),
+                _ => plan.run(lhs, rhs),
+            };
+            let blocked = MatmulPlan::with_threads(layout, m, k, n, 1).with_simd(false);
+            let bms = common::time_median_ms(5, || {
+                std::hint::black_box(run(blocked));
+            });
+            let vect = blocked.with_simd(true);
+            let sms = common::time_median_ms(5, || {
+                std::hint::black_box(run(vect));
+            });
+            table.row(vec![
+                format!("matmul {m}^3 {} SIMD, 1 thr", label.to_uppercase()),
+                format!("{sms:.1}"),
+                format!("blocked {bms:.1} ms, {:.2}x", bms / sms),
+            ]);
+            let mut o: BTreeMap<String, Json> = BTreeMap::new();
+            o.insert("blocked_ms".into(), Json::Num(bms));
+            o.insert("simd_ms".into(), Json::Num(sms));
+            o.insert("simd_speedup_vs_blocked".into(), Json::Num(bms / sms));
+            kernels_json.insert(format!("matmul_512_{label}"), Json::Obj(o));
+        }
     }
     {
-        // fwd_bwd on "small" at 1 vs 4 kernel threads (bitwise-identical
-        // results; only wall-clock moves)
+        // fwd_bwd on "small": kernel-thread scaling and scalar-vs-SIMD tier
+        // (bitwise-identical results; only wall-clock moves)
         let spec = find("sst2-sim").unwrap();
         let mut fb: BTreeMap<String, Json> = BTreeMap::new();
-        let mut ms_by_threads = [0.0f64; 2];
-        for (slot, threads) in [1usize, 4].into_iter().enumerate() {
-            let nb = NativeBackend::with_default_models().with_threads(threads);
+        let mut ms_of = BTreeMap::new();
+        for (threads, simd) in [(1usize, false), (1, true), (4, false), (4, true)] {
+            let nb = NativeBackend::with_default_models()
+                .with_threads(threads)
+                .with_simd(simd);
             let sess = ModelSession::open(&nb, "small").unwrap();
             let params = sess.load_params().unwrap();
             let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 256, 1);
@@ -183,15 +240,32 @@ fn main() {
                 sess.fwd_bwd_cls(&params, &batch, &sw, 1, &ones_l, &ones_w, &ones_w)
                     .unwrap();
             });
+            let tier = if simd { "simd" } else { "scalar" };
             table.row(vec![
-                format!("small: fwd_bwd exact, {threads} thr"),
+                format!("small: fwd_bwd exact, {threads} thr, {tier}"),
                 format!("{ms:.1}"),
                 "kernel scaling".into(),
             ]);
-            fb.insert(format!("threads_{threads}_ms"), Json::Num(ms));
-            ms_by_threads[slot] = ms;
+            fb.insert(format!("threads_{threads}_{tier}_ms"), Json::Num(ms));
+            ms_of.insert((threads, simd), ms);
         }
-        fb.insert("speedup_4t".into(), Json::Num(ms_by_threads[0] / ms_by_threads[1]));
+        // tier-qualified: PR 2's "speedup_4t" measured the scalar tier
+        fb.insert(
+            "scalar_speedup_4t".into(),
+            Json::Num(ms_of[&(1, false)] / ms_of[&(4, false)]),
+        );
+        fb.insert(
+            "simd_tier_speedup_4t".into(),
+            Json::Num(ms_of[&(1, true)] / ms_of[&(4, true)]),
+        );
+        fb.insert(
+            "simd_speedup_1t".into(),
+            Json::Num(ms_of[&(1, false)] / ms_of[&(1, true)]),
+        );
+        fb.insert(
+            "simd_speedup_4t".into(),
+            Json::Num(ms_of[&(4, false)] / ms_of[&(4, true)]),
+        );
         kernels_json.insert("fwd_bwd_small".into(), Json::Obj(fb));
     }
     let json_path = common::results_dir().join("BENCH_kernels.json");

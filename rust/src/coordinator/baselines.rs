@@ -16,6 +16,7 @@
 
 use std::collections::VecDeque;
 
+use crate::error::{ensure, Result};
 use crate::util::rng::{sample_with_replacement, sample_without_replacement, Pcg32};
 
 /// A selected sub-batch: dataset-row positions within the candidate batch,
@@ -52,7 +53,18 @@ impl SbSelector {
 
     /// Record losses and pick k rows by percentile-weighted sampling
     /// without replacement; kept rows train with plain 1/k weights.
-    pub fn select(&mut self, losses: &[f32], k: usize, rng: &mut Pcg32) -> Selection {
+    ///
+    /// Non-finite losses are a hard error *before* they enter the rolling
+    /// history: the Gumbel-top-k sort compares keys with
+    /// `partial_cmp(..).unwrap_or(Equal)`, so a NaN loss would silently
+    /// mis-sort the selection (and an inf would pin it) — the same bug
+    /// class the `keep_probs`/`ProbSolve` water-filling guard closed.
+    pub fn select(&mut self, losses: &[f32], k: usize, rng: &mut Pcg32) -> Result<Selection> {
+        ensure!(
+            losses.iter().all(|l| l.is_finite()),
+            "sb select: non-finite per-sample loss (NaN/inf) — \
+             percentile CDF and Gumbel keys would silently mis-sort"
+        );
         let probs: Vec<f64> = losses
             .iter()
             .map(|&l| self.cdf(l).powf(self.power).max(1e-6))
@@ -65,13 +77,23 @@ impl SbSelector {
         }
         let rows = sample_without_replacement(rng, &probs, k);
         let w = 1.0 / k as f32;
-        Selection { rows: rows.clone(), weights: vec![w; rows.len()] }
+        Ok(Selection { rows: rows.clone(), weights: vec![w; rows.len()] })
     }
 }
 
 /// UB importance sampling: with-replacement draws proportional to the
 /// upper-bound score, unbiased 1/(N k p) reweighting.
-pub fn ub_select(scores: &[f32], k: usize, rng: &mut Pcg32) -> Selection {
+///
+/// Non-finite scores are a hard error: a NaN poisons the normalizing
+/// total (every probability becomes NaN and `weighted_index` walks off
+/// the distribution) and an inf collapses it onto one row with zero-
+/// probability siblings whose 1/(Nkp) weights explode.
+pub fn ub_select(scores: &[f32], k: usize, rng: &mut Pcg32) -> Result<Selection> {
+    ensure!(
+        scores.iter().all(|s| s.is_finite()),
+        "ub select: non-finite gradient-norm score (NaN/inf) — \
+         importance probabilities would be poisoned"
+    );
     let n = scores.len();
     let total: f64 = scores.iter().map(|&s| s.max(1e-9) as f64).sum();
     let probs: Vec<f64> = scores.iter().map(|&s| s.max(1e-9) as f64 / total).collect();
@@ -80,7 +102,7 @@ pub fn ub_select(scores: &[f32], k: usize, rng: &mut Pcg32) -> Selection {
         .iter()
         .map(|&i| (1.0 / (n as f64 * k as f64 * probs[i])) as f32)
         .collect();
-    Selection { rows, weights }
+    Ok(Selection { rows, weights })
 }
 
 /// Uniform subset, unbiased: E[(1/k) sum_subset] = (1/N) sum_full.
@@ -101,13 +123,13 @@ mod tests {
         let mut rng = Pcg32::new(1, 1);
         // warm history with uniform losses
         let warm: Vec<f32> = (0..500).map(|i| i as f32 / 500.0).collect();
-        sb.select(&warm, 10, &mut rng);
+        sb.select(&warm, 10, &mut rng).unwrap();
         // batch: half tiny losses, half huge
         let mut losses = vec![0.01f32; 16];
         losses.extend(vec![0.99f32; 16]);
         let mut big = 0usize;
         for _ in 0..200 {
-            let sel = sb.select(&losses, 8, &mut rng);
+            let sel = sb.select(&losses, 8, &mut rng).unwrap();
             big += sel.rows.iter().filter(|&&r| r >= 16).count();
         }
         let frac = big as f64 / (200.0 * 8.0);
@@ -120,7 +142,7 @@ mod tests {
     fn sb_empty_history_is_uniformish() {
         let mut sb = SbSelector::new(100, 1.0);
         let mut rng = Pcg32::new(2, 2);
-        let sel = sb.select(&[1.0, 2.0, 3.0, 4.0], 2, &mut rng);
+        let sel = sb.select(&[1.0, 2.0, 3.0, 4.0], 2, &mut rng).unwrap();
         assert_eq!(sel.rows.len(), 2);
         assert!((sel.weights[0] - 0.5).abs() < 1e-7);
     }
@@ -139,7 +161,7 @@ mod tests {
             let trials = 4000;
             let mut acc = 0.0f64;
             for _ in 0..trials {
-                let sel = ub_select(&scores, k, &mut rng);
+                let sel = ub_select(&scores, k, &mut rng).unwrap();
                 for (&r, &w) in sel.rows.iter().zip(&sel.weights) {
                     acc += (w as f64) * (losses[r] as f64);
                 }
@@ -152,10 +174,36 @@ mod tests {
         });
     }
 
+    /// Satellite: NaN/inf losses and scores must be typed errors, not a
+    /// silent mis-sort through `partial_cmp`'s Equal fallback — and a
+    /// rejected SB batch must leave the rolling history untouched.
+    #[test]
+    fn selectors_reject_non_finite_scores() {
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut sb = SbSelector::new(100, 1.0);
+            let mut rng = Pcg32::new(4, 4);
+            // warm with clean losses so the history is non-trivial
+            sb.select(&[0.2, 0.4, 0.6, 0.8], 2, &mut rng).unwrap();
+            let warm_len = sb.history.len();
+            let err = sb.select(&[0.5, bad, 0.1], 2, &mut rng).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "sb error text: {err}");
+            assert_eq!(
+                sb.history.len(),
+                warm_len,
+                "rejected batch must not contaminate the loss history"
+            );
+            let err = ub_select(&[1.0, bad, 2.0], 2, &mut rng).unwrap_err();
+            assert!(err.to_string().contains("non-finite"), "ub error text: {err}");
+        }
+        // clean inputs still select
+        let mut rng = Pcg32::new(5, 5);
+        assert!(ub_select(&[1.0, 2.0, 3.0], 2, &mut rng).is_ok());
+    }
+
     #[test]
     fn ub_selects_exactly_k_with_replacement() {
         let mut rng = Pcg32::new(3, 3);
-        let sel = ub_select(&[1.0, 100.0, 1.0], 8, &mut rng);
+        let sel = ub_select(&[1.0, 100.0, 1.0], 8, &mut rng).unwrap();
         assert_eq!(sel.rows.len(), 8);
         // heavy item should dominate (with replacement -> duplicates)
         let heavy = sel.rows.iter().filter(|&&r| r == 1).count();

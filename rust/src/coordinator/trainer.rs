@@ -20,7 +20,7 @@ use crate::data::batch::{
 };
 use crate::data::images::{generate_images, ImageDataset, ImageSpec};
 use crate::data::tasks::{find, generate_cls, ClsDataset, MarkovCorpus};
-use crate::error::{bail, Result};
+use crate::error::{anyhow, bail, Result};
 use crate::formats::params::ParamSet;
 use crate::optim::{AdamW, LrSchedule, Optimizer, Sgdm};
 use crate::runtime::{Backend, GradOut, ModelKind, ModelSession};
@@ -35,6 +35,12 @@ use super::vcas::{GradSample, VcasController};
 const TRAIN_SET: usize = 4096;
 const EVAL_SET: usize = 512;
 const MLM_MASK_RATE: f64 = 0.15;
+
+/// The one diagnosis both controller accessors report, so the `&self` and
+/// `&mut self` paths cannot drift apart.
+fn no_controller_err(method: &str) -> crate::error::Error {
+    anyhow!("method {method:?} has no VCAS controller (probes/ratios need method = \"vcas\")")
+}
 
 /// Task payload bound to a trainer.
 enum TaskData {
@@ -212,6 +218,31 @@ impl<'a> Trainer<'a> {
         matches!(self.data, TaskData::Img { .. })
     }
 
+    // ---- checked access to method/task-dependent state --------------------
+    //
+    // These were `as_ref().unwrap()` calls that turned a malformed config
+    // (probe on a non-VCAS method, CNN FLOPs queried for a transformer
+    // task) into a panic; they now surface as typed `VcasError`s.
+
+    fn controller(&self) -> Result<&VcasController> {
+        let method = self.cfg.method.name();
+        self.controller.as_ref().ok_or_else(|| no_controller_err(method))
+    }
+
+    fn controller_mut(&mut self) -> Result<&mut VcasController> {
+        let method = self.cfg.method.name();
+        self.controller.as_mut().ok_or_else(|| no_controller_err(method))
+    }
+
+    fn cnn_flops_model(&self) -> Result<&CnnFlops> {
+        self.cnn_flops.as_ref().ok_or_else(|| {
+            anyhow!(
+                "no CNN FLOPs model for task {:?} (transformer tasks account via TransformerFlops)",
+                self.cfg.task
+            )
+        })
+    }
+
     // ---- grad entries ----------------------------------------------------
 
     fn grad_cls(
@@ -256,27 +287,27 @@ impl<'a> Trainer<'a> {
 
     // ---- FLOPs helpers ----------------------------------------------------
 
-    fn fwd_flops(&self, n: usize) -> f64 {
+    fn fwd_flops(&self, n: usize) -> Result<f64> {
         if let Some(tf) = &self.tf_flops {
-            tf.fwd(n, self.is_mlm())
+            Ok(tf.fwd(n, self.is_mlm()))
         } else {
-            self.cnn_flops.as_ref().unwrap().fwd(n)
+            Ok(self.cnn_flops_model()?.fwd(n))
         }
     }
 
-    fn bwd_exact_flops(&self, n: usize) -> f64 {
+    fn bwd_exact_flops(&self, n: usize) -> Result<f64> {
         if let Some(tf) = &self.tf_flops {
-            tf.bwd_exact(n, self.is_mlm())
+            Ok(tf.bwd_exact(n, self.is_mlm()))
         } else {
-            self.cnn_flops.as_ref().unwrap().bwd_exact(n)
+            Ok(self.cnn_flops_model()?.bwd_exact(n))
         }
     }
 
-    fn bwd_vcas_flops(&self, n: usize, rho: &[f32], nu: &[f32]) -> f64 {
+    fn bwd_vcas_flops(&self, n: usize, rho: &[f32], nu: &[f32]) -> Result<f64> {
         if let Some(tf) = &self.tf_flops {
-            tf.bwd_vcas(n, self.is_mlm(), rho, nu)
+            Ok(tf.bwd_vcas(n, self.is_mlm(), rho, nu))
         } else {
-            self.cnn_flops.as_ref().unwrap().bwd_vcas(n, rho)
+            Ok(self.cnn_flops_model()?.bwd_vcas(n, rho))
         }
     }
 
@@ -289,8 +320,8 @@ impl<'a> Trainer<'a> {
     fn run_probe(&mut self) -> Result<()> {
         let m = self.cfg.vcas.m_repeats;
         let (ones_rho, ones_nu) = self.ones();
-        let (rho, _) = self.controller.as_ref().unwrap().train_ratios();
-        let nu_probe = self.controller.as_ref().unwrap().nu.clone();
+        let (rho, _) = self.controller()?.train_ratios();
+        let nu_probe = self.controller()?.nu.clone();
 
         let mut exact = Vec::with_capacity(m);
         let mut sampled: Vec<Vec<GradSample>> = Vec::with_capacity(m);
@@ -334,13 +365,13 @@ impl<'a> Trainer<'a> {
 
         // charge probe FLOPs: M exact + M*M SampleA-only passes
         let n = self.main_batch;
-        let probe_flops = m as f64 * (self.fwd_flops(n) + self.bwd_exact_flops(n))
+        let probe_flops = m as f64 * (self.fwd_flops(n)? + self.bwd_exact_flops(n)?)
             + (m * m) as f64
-                * (self.fwd_flops(n) + self.bwd_vcas_flops(n, &rho, &self.ones().1));
+                * (self.fwd_flops(n)? + self.bwd_vcas_flops(n, &rho, &self.ones().1)?);
         self.ledger.probe(probe_flops);
 
         let step = self.step;
-        self.controller.as_mut().unwrap().update(step, &exact, &sampled);
+        self.controller_mut()?.update(step, &exact, &sampled);
         Ok(())
     }
 
@@ -354,8 +385,8 @@ impl<'a> Trainer<'a> {
     /// Execute one step; returns the logged train loss.
     fn train_step(&mut self) -> Result<f32> {
         let n = self.main_batch;
-        let fwd = self.fwd_flops(n);
-        let bwd = self.bwd_exact_flops(n);
+        let fwd = self.fwd_flops(n)?;
+        let bwd = self.bwd_exact_flops(n)?;
         match self.cfg.method {
             Method::Exact => {
                 let (rho1, nu1) = self.ones();
@@ -380,10 +411,10 @@ impl<'a> Trainer<'a> {
                 Ok(loss)
             }
             Method::Vcas => {
-                if self.controller.as_ref().unwrap().due(self.step) {
+                if self.controller()?.due(self.step) {
                     self.run_probe()?;
                 }
-                let (rho, nu) = self.controller.as_ref().unwrap().train_ratios();
+                let (rho, nu) = self.controller()?.train_ratios();
                 let loss = if self.is_img() {
                     let batch = self.next_img_batch();
                     let out = self.grad_img(&batch, &rho)?;
@@ -400,7 +431,7 @@ impl<'a> Trainer<'a> {
                     self.apply(&out.grads);
                     out.loss
                 };
-                self.ledger.step(fwd, bwd, fwd, self.bwd_vcas_flops(n, &rho, &nu));
+                self.ledger.step(fwd, bwd, fwd, self.bwd_vcas_flops(n, &rho, &nu)?);
                 Ok(loss)
             }
             Method::Sb | Method::Ub | Method::Uniform => {
@@ -411,8 +442,8 @@ impl<'a> Trainer<'a> {
                 let (losses, ub_scores) = self.session.fwd_loss_cls(&self.params, &batch)?;
                 let k = self.sub_batch;
                 let sel: Selection = match self.cfg.method {
-                    Method::Sb => self.sb.select(&losses, k, &mut self.rng),
-                    Method::Ub => ub_select(&ub_scores, k, &mut self.rng),
+                    Method::Sb => self.sb.select(&losses, k, &mut self.rng)?,
+                    Method::Ub => ub_select(&ub_scores, k, &mut self.rng)?,
                     _ => uniform_select(batch.n, k, &mut self.rng),
                 };
                 // gather the kept rows into the static sub-batch shape
@@ -432,7 +463,7 @@ impl<'a> Trainer<'a> {
                 // (activations assumed reused; our runtime re-does the
                 // subset fwd — wall-clock reflects that, FLOPs follow the
                 // paper so reductions are comparable to Tab. 1).
-                let bwd_k = self.bwd_exact_flops(k);
+                let bwd_k = self.bwd_exact_flops(k)?;
                 self.ledger.step(fwd, bwd, fwd, bwd_k);
                 // log the full-batch mean loss for comparability
                 let mean_loss =
@@ -549,7 +580,7 @@ impl<'a> Trainer<'a> {
             let est = match self.cfg.method {
                 Method::Exact => self.grad_cls(&batch, &rho1, &nu1, &nu1, None)?.grads,
                 Method::Vcas => {
-                    let (rho, nu) = self.controller.as_ref().unwrap().train_ratios();
+                    let (rho, nu) = self.controller()?.train_ratios();
                     self.grad_cls(&batch, &rho, &nu, &nu, None)?.grads
                 }
                 Method::Sb | Method::Ub | Method::Uniform => {
@@ -557,8 +588,8 @@ impl<'a> Trainer<'a> {
                         self.session.fwd_loss_cls(&self.params, &batch)?;
                     let k = self.sub_batch;
                     let sel = match self.cfg.method {
-                        Method::Sb => self.sb.select(&losses, k, &mut self.rng),
-                        Method::Ub => ub_select(&scores, k, &mut self.rng),
+                        Method::Sb => self.sb.select(&losses, k, &mut self.rng)?,
+                        Method::Ub => ub_select(&scores, k, &mut self.rng)?,
                         _ => uniform_select(batch.n, k, &mut self.rng),
                     };
                     let t = batch.seq_len;
@@ -682,5 +713,42 @@ impl<'a> Trainer<'a> {
     /// ParamSet::load_bin with the same param specs).
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         self.params.save_bin(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    /// Satellite: malformed method/task combinations must surface typed
+    /// errors from the trainer's internal accessors, not `unwrap` panics.
+    #[test]
+    fn misconfigured_queries_error_instead_of_panicking() {
+        let backend = NativeBackend::with_default_models();
+        let cfg = TrainConfig {
+            model: "tiny".into(),
+            task: "sst2-sim".into(),
+            method: Method::Exact,
+            steps: 1,
+            ..TrainConfig::default()
+        };
+        let mut tr = Trainer::new(&backend, &cfg).unwrap();
+        // exact method: the probe needs the VCAS controller — typed error
+        let err = tr.run_probe().unwrap_err();
+        assert!(err.to_string().contains("controller"), "probe error: {err}");
+        assert!(tr.controller().is_err());
+        assert!(tr.controller_mut().is_err());
+        // transformer task: the CNN FLOPs model is absent — typed error
+        // once the transformer accountant is (artificially) gone too
+        assert!(tr.cnn_flops_model().is_err());
+        tr.tf_flops = None;
+        let err = tr.fwd_flops(8).unwrap_err();
+        assert!(err.to_string().contains("FLOPs"), "flops error: {err}");
+        assert!(tr.bwd_exact_flops(8).is_err());
+        assert!(tr.bwd_vcas_flops(8, &[1.0], &[1.0]).is_err());
+        // and a train step on the broken accountant propagates the error
+        // instead of panicking
+        assert!(tr.advance(1).is_err());
     }
 }

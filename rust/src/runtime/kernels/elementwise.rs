@@ -9,7 +9,7 @@
 //! addition and break the determinism contract for the O(elements) part
 //! of the work.
 
-use super::{par_row_chunks, par_row_chunks2, par_row_chunks3, workers_for, KernelCtx};
+use super::{par_row_chunks, par_row_chunks2, par_row_chunks3, simd, workers_for, KernelCtx};
 
 /// Add a bias row to every row of `x (rows, n)`.
 pub fn add_bias(x: &mut [f32], bias: &[f32]) {
@@ -107,6 +107,7 @@ pub fn layernorm_fwd_into(
     debug_assert_eq!(mu.len(), rows);
     debug_assert_eq!(rstd.len(), rows);
     let threads = workers_for(ctx, x.len());
+    let use_simd = ctx.simd();
     par_row_chunks3(threads, y, d, mu, 1, rstd, 1, |row0, yc, muc, rsc| {
         for i in 0..muc.len() {
             let xr = &x[(row0 + i) * d..(row0 + i + 1) * d];
@@ -116,13 +117,44 @@ pub fn layernorm_fwd_into(
             let rs = 1.0 / (var + LN_EPS as f64).sqrt();
             let (m32, rs32) = (m as f32, rs as f32);
             let yr = &mut yc[i * d..(i + 1) * d];
-            for j in 0..d {
-                yr[j] = (xr[j] - m32) * rs32 * g[j] + b[j];
+            if use_simd {
+                simd::ln_affine(xr, m32, rs32, g, b, yr);
+            } else {
+                for j in 0..d {
+                    yr[j] = (xr[j] - m32) * rs32 * g[j] + b[j];
+                }
             }
             muc[i] = m32;
             rsc[i] = rs32;
         }
     });
+}
+
+/// One row of the layernorm-backward dx computation on the tier the
+/// caller's context selected — shared by the fused serial and threaded
+/// paths of [`layernorm_bwd_into`] so the two cannot drift apart.
+#[allow(clippy::too_many_arguments)]
+fn ln_dx_row(
+    use_simd: bool,
+    xr: &[f32],
+    m: f32,
+    rs: f32,
+    g: &[f32],
+    dyr: &[f32],
+    c1: f32,
+    c2: f32,
+    dxr: &mut [f32],
+) {
+    if use_simd {
+        simd::ln_dx(xr, m, rs, g, dyr, c1, c2, dxr);
+    } else {
+        let d = dxr.len();
+        for j in 0..d {
+            let xhat = (xr[j] - m) * rs;
+            let dxhat = dyr[j] * g[j];
+            dxr[j] = rs * (dxhat - c1 - xhat * c2);
+        }
+    }
 }
 
 /// Layernorm backward. Returns `(dx, dgamma, dbeta)`. `dx` rows thread;
@@ -158,6 +190,7 @@ pub fn layernorm_bwd_into(
     let mut dg = vec![0.0f32; d];
     let mut db = vec![0.0f32; d];
     let threads = workers_for(ctx, x.len());
+    let use_simd = ctx.simd();
 
     if threads <= 1 {
         // Fused single pass: the c1/c2 sweep doubles as the dg/db
@@ -178,12 +211,7 @@ pub fn layernorm_bwd_into(
             }
             let c1 = (c1 / d as f64) as f32;
             let c2 = (c2 / d as f64) as f32;
-            let dxr = &mut dx[r * d..(r + 1) * d];
-            for j in 0..d {
-                let xhat = (xr[j] - m) * rs;
-                let dxhat = dyr[j] * g[j];
-                dxr[j] = rs * (dxhat - c1 - xhat * c2);
-            }
+            ln_dx_row(use_simd, xr, m, rs, g, dyr, c1, c2, &mut dx[r * d..(r + 1) * d]);
         }
         return (dg, db);
     }
@@ -207,11 +235,7 @@ pub fn layernorm_bwd_into(
             }
             let c1 = (c1 / d as f64) as f32;
             let c2 = (c2 / d as f64) as f32;
-            for j in 0..d {
-                let xhat = (xr[j] - m) * rs;
-                let dxhat = dyr[j] * g[j];
-                dxr[j] = rs * (dxhat - c1 - xhat * c2);
-            }
+            ln_dx_row(use_simd, xr, m, rs, g, dyr, c1, c2, dxr);
         }
     });
     for r in 0..rows {
@@ -230,9 +254,19 @@ pub fn layernorm_bwd_into(
 const GELU_C: f32 = 0.797_884_56; // sqrt(2/pi)
 const GELU_K: f32 = 0.044_715;
 
-fn gelu_one(x: f32) -> f32 {
+/// One scalar GELU evaluation — shared by the scalar loop and the SIMD
+/// lane kernel so the two tiers cannot drift by a bit.
+pub(super) fn gelu_one(x: f32) -> f32 {
     let t = (GELU_C * (x + GELU_K * x * x * x)).tanh();
     0.5 * x * (1.0 + t)
+}
+
+/// One scalar GELU derivative evaluation (shared by both tiers).
+pub(super) fn gelu_deriv_one(x: f32) -> f32 {
+    let inner = GELU_C * (x + GELU_K * x * x * x);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_K * x * x)
 }
 
 /// Tanh-approximation GELU (matches the JAX graphs).
@@ -246,9 +280,14 @@ pub fn gelu_fwd(ctx: KernelCtx, u: &[f32]) -> Vec<f32> {
 pub fn gelu_fwd_into(ctx: KernelCtx, u: &[f32], out: &mut [f32]) {
     debug_assert_eq!(u.len(), out.len());
     let threads = workers_for(ctx, u.len());
+    let use_simd = ctx.simd();
     par_row_chunks(threads, out, 1, |i0, chunk| {
-        for (o, &x) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
-            *o = gelu_one(x);
+        if use_simd {
+            simd::gelu_fwd(&u[i0..i0 + chunk.len()], chunk);
+        } else {
+            for (o, &x) in chunk.iter_mut().zip(&u[i0..i0 + chunk.len()]) {
+                *o = gelu_one(x);
+            }
         }
     });
 }
@@ -265,24 +304,24 @@ pub fn gelu_bwd_into(ctx: KernelCtx, u: &[f32], df: &[f32], out: &mut [f32]) {
     debug_assert_eq!(u.len(), df.len());
     debug_assert_eq!(u.len(), out.len());
     let threads = workers_for(ctx, u.len());
+    let use_simd = ctx.simd();
     par_row_chunks(threads, out, 1, |i0, chunk| {
-        for (i, o) in chunk.iter_mut().enumerate() {
-            let x = u[i0 + i];
-            let dy = df[i0 + i];
-            let inner = GELU_C * (x + GELU_K * x * x * x);
-            let t = inner.tanh();
-            let sech2 = 1.0 - t * t;
-            let deriv =
-                0.5 * (1.0 + t) + 0.5 * x * sech2 * GELU_C * (1.0 + 3.0 * GELU_K * x * x);
-            *o = dy * deriv;
+        if use_simd {
+            simd::gelu_bwd(&u[i0..i0 + chunk.len()], &df[i0..i0 + chunk.len()], chunk);
+        } else {
+            for (i, o) in chunk.iter_mut().enumerate() {
+                *o = df[i0 + i] * gelu_deriv_one(u[i0 + i]);
+            }
         }
     });
-    out
 }
 
-/// In-place row softmax of `x (rows, n)`.
+/// In-place row softmax of `x (rows, n)`. The max/sum reductions stay
+/// serial (re-association would move bits); the normalize scale is an
+/// independent per-element multiply and lane-chunks under SIMD.
 pub fn softmax_rows(ctx: KernelCtx, x: &mut [f32], n: usize) {
     let threads = workers_for(ctx, x.len());
+    let use_simd = ctx.simd();
     par_row_chunks(threads, x, n, |_, chunk| {
         for row in chunk.chunks_mut(n) {
             let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
@@ -292,8 +331,12 @@ pub fn softmax_rows(ctx: KernelCtx, x: &mut [f32], n: usize) {
                 sum += *v as f64;
             }
             let inv = (1.0 / sum) as f32;
-            for v in row.iter_mut() {
-                *v *= inv;
+            if use_simd {
+                simd::scale(row, inv);
+            } else {
+                for v in row.iter_mut() {
+                    *v *= inv;
+                }
             }
         }
     });
@@ -339,6 +382,7 @@ pub fn ce_loss_and_dlogits_into(
     debug_assert_eq!(losses.len(), rows);
     debug_assert_eq!(dlogits.len(), rows * c);
     let threads = workers_for(ctx, logits.len());
+    let use_simd = ctx.simd();
     par_row_chunks2(threads, dlogits, c, losses, 1, |row0, dc, lc| {
         for i in 0..lc.len() {
             let r = row0 + i;
@@ -352,8 +396,12 @@ pub fn ce_loss_and_dlogits_into(
             let yi = y[r] as usize;
             lc[i] = (lse - lr[yi] as f64) as f32;
             let dr = &mut dc[i * c..(i + 1) * c];
-            for (j, &v) in lr.iter().enumerate() {
-                dr[j] = ((v as f64 - lse).exp()) as f32;
+            if use_simd {
+                simd::ce_probs(lr, lse, dr);
+            } else {
+                for (j, &v) in lr.iter().enumerate() {
+                    dr[j] = ((v as f64 - lse).exp()) as f32;
+                }
             }
             dr[yi] -= 1.0;
         }
@@ -512,6 +560,47 @@ mod tests {
         let mut acc = x.clone();
         add_assign(&mut acc, &dy);
         assert_eq!(acc, sum, "add_assign must match add bitwise (commutativity)");
+    }
+
+    /// The SIMD lane kernels must be bitwise the scalar loops for every
+    /// elementwise pass, including ragged row widths around the lane
+    /// boundary (d = 1, 7, 8, 9, 17).
+    #[test]
+    fn simd_elementwise_bitwise_matches_scalar() {
+        let mut rng = Pcg32::new(0x51D2, 0x51D2);
+        for d in [1usize, 7, 8, 9, 17] {
+            let rows = 9;
+            let x: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+            let dy: Vec<f32> = (0..rows * d).map(|_| rng.normal() as f32).collect();
+            let g: Vec<f32> = (0..d).map(|_| 1.0 + 0.1 * rng.normal() as f32).collect();
+            let b: Vec<f32> = (0..d).map(|_| 0.1 * rng.normal() as f32).collect();
+            let y: Vec<i32> = (0..rows).map(|_| rng.below(d as u64) as i32).collect();
+            let scalar = KernelCtx::serial().with_simd(false);
+            let vect = KernelCtx::serial().with_simd(true);
+
+            let (y0, st0) = layernorm_fwd(scalar, &x, &g, &b, d);
+            let (y1, st1) = layernorm_fwd(vect, &x, &g, &b, d);
+            assert_eq!(y0, y1, "ln fwd d={d}");
+            assert_eq!(st0.mu, st1.mu);
+            assert_eq!(st0.rstd, st1.rstd);
+            assert_eq!(
+                layernorm_bwd(scalar, &x, &g, &st0, &dy, d),
+                layernorm_bwd(vect, &x, &g, &st0, &dy, d),
+                "ln bwd d={d}"
+            );
+            assert_eq!(gelu_fwd(scalar, &x), gelu_fwd(vect, &x), "gelu fwd d={d}");
+            assert_eq!(gelu_bwd(scalar, &x, &dy), gelu_bwd(vect, &x, &dy), "gelu bwd d={d}");
+            assert_eq!(
+                ce_loss_and_dlogits(scalar, &x, &y, d),
+                ce_loss_and_dlogits(vect, &x, &y, d),
+                "ce d={d}"
+            );
+            let mut s0 = x.clone();
+            let mut s1 = x.clone();
+            softmax_rows(scalar, &mut s0, d);
+            softmax_rows(vect, &mut s1, d);
+            assert_eq!(s0, s1, "softmax d={d}");
+        }
     }
 
     /// All threaded per-row passes must be bitwise invariant to the thread

@@ -30,8 +30,21 @@
 //! Every entry point also has a `*_into(&mut out)` form so steady-state
 //! callers can run matmuls with zero allocations through a
 //! [`Workspace`](super::Workspace) buffer.
+//!
+//! # SIMD tier
+//!
+//! Each tile body has a fixed-lane-width twin in [`super::simd`]
+//! (8 x f32 register blocks, portable auto-vectorized code). Dispatch is
+//! per-plan ([`MatmulPlan::with_simd`], defaulting to the `VCAS_SIMD` env
+//! knob via [`default_simd`]); because the microkernels vectorize across
+//! independent output columns and keep every element's contraction in
+//! serial ascending order, the SIMD tier is bitwise identical to these
+//! scalar tiles — and to [`reference`] — at any lane/thread count.
 
-use super::{gather_rows_scaled, par_row_chunks, scatter_rows, workers_for, KernelCtx, Workspace};
+use super::{
+    default_simd, gather_rows_scaled, par_row_chunks, scatter_rows, simd, workers_for,
+    KernelCtx, Workspace,
+};
 
 /// Contraction-dimension tile: rows of the `b` panel processed per pass.
 const KC: usize = 64;
@@ -66,6 +79,9 @@ pub struct MatmulPlan {
     pub n: usize,
     /// Workers this plan fans out to (1 = inline serial).
     pub threads: usize,
+    /// Whether the tile bodies dispatch the SIMD microkernel tier
+    /// ([`super::simd`]) — same bits either way, wall-clock only.
+    simd: bool,
 }
 
 impl MatmulPlan {
@@ -74,11 +90,14 @@ impl MatmulPlan {
     /// fork/join cost never dominates. Same bits either way.
     pub fn new(layout: Layout, m: usize, k: usize, n: usize, ctx: KernelCtx) -> MatmulPlan {
         MatmulPlan::with_threads(layout, m, k, n, workers_for(ctx, m * k * n))
+            .with_simd(ctx.simd())
     }
 
     /// Plan with an explicit worker count (clamped to the output row
     /// count), bypassing the work-size gate — the property tests use this
-    /// to drive the parallel path on small inputs.
+    /// to drive the parallel path on small inputs. SIMD dispatch follows
+    /// the process default ([`default_simd`]); override with
+    /// [`MatmulPlan::with_simd`].
     pub fn with_threads(
         layout: Layout,
         m: usize,
@@ -86,7 +105,21 @@ impl MatmulPlan {
         n: usize,
         threads: usize,
     ) -> MatmulPlan {
-        MatmulPlan { layout, m, k, n, threads: threads.clamp(1, m.max(1)) }
+        MatmulPlan {
+            layout,
+            m,
+            k,
+            n,
+            threads: threads.clamp(1, m.max(1)),
+            simd: default_simd(),
+        }
+    }
+
+    /// Override SIMD dispatch for this plan (bitwise-identical results;
+    /// the property tests drive both tiers explicitly).
+    pub fn with_simd(mut self, simd: bool) -> MatmulPlan {
+        self.simd = simd;
+        self
     }
 
     /// Execute the plan. For [`Layout::Tn`] this is the unweighted
@@ -113,8 +146,13 @@ impl MatmulPlan {
         debug_assert_eq!(b.len(), k * n);
         debug_assert_eq!(out.len(), m * n);
         out.fill(0.0);
+        let simd = self.simd;
         par_row_chunks(self.threads, out, n.max(1), |row0, chunk| {
-            nn_tile(a, b, k, n, row0, chunk);
+            if simd {
+                simd::nn_tile(a, b, k, n, row0, chunk);
+            } else {
+                nn_tile(a, b, k, n, row0, chunk);
+            }
         });
     }
 
@@ -124,8 +162,13 @@ impl MatmulPlan {
         debug_assert_eq!(b.len(), n * k);
         debug_assert_eq!(out.len(), m * n);
         // NT writes every output element directly — no zero fill needed.
+        let simd = self.simd;
         par_row_chunks(self.threads, out, n.max(1), |row0, chunk| {
-            nt_tile(a, b, k, n, row0, chunk);
+            if simd {
+                simd::nt_tile(a, b, k, n, row0, chunk);
+            } else {
+                nt_tile(a, b, k, n, row0, chunk);
+            }
         });
     }
 
@@ -152,8 +195,13 @@ impl MatmulPlan {
         debug_assert_eq!(b.len(), r * n);
         debug_assert_eq!(out.len(), m * n);
         out.fill(0.0);
+        let simd = self.simd;
         par_row_chunks(self.threads, out, n.max(1), |c0, chunk| {
-            tn_tile(a, b, w, r, m, n, c0, chunk);
+            if simd {
+                simd::tn_tile(a, b, w, r, m, n, c0, chunk);
+            } else {
+                tn_tile(a, b, w, r, m, n, c0, chunk);
+            }
         });
     }
 
@@ -213,7 +261,9 @@ impl MatmulPlan {
         let mut pa = ws.take(kk * k);
         gather_rows_scaled(a, k, kept, scales, &mut pa);
         let mut po = ws.take(kk * n);
-        MatmulPlan::with_threads(layout, kk, k, n, self.threads).run_into(&pa, b, &mut po);
+        MatmulPlan::with_threads(layout, kk, k, n, self.threads)
+            .with_simd(self.simd)
+            .run_into(&pa, b, &mut po);
         scatter_rows(&po, n, kept, out);
         ws.give(pa);
         ws.give(po);
@@ -560,8 +610,13 @@ fn gather_tn_dispatch(
     debug_assert!(idx.windows(2).all(|p| p[0] < p[1]), "gather idx must be strictly ascending");
     out.fill(0.0);
     let threads = workers_for(ctx, idx.len() * m * n).clamp(1, m.max(1));
+    let simd = ctx.simd();
     par_row_chunks(threads, out, n.max(1), |c0, chunk| {
-        gather_tn_tile(a, b, idx, w, m, n, c0, chunk);
+        if simd {
+            simd::gather_tn_tile(a, b, idx, w, m, n, c0, chunk);
+        } else {
+            gather_tn_tile(a, b, idx, w, m, n, c0, chunk);
+        }
     });
 }
 
@@ -713,11 +768,15 @@ mod tests {
             let b = g.vec_normal(k * n, 1.0);
             let want = reference::matmul(&a, &b, m, k, n);
             for threads in [1usize, 2, 4] {
-                let got = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads).run(&a, &b);
-                ensure(
-                    bitwise_eq(&got, &want),
-                    format!("NN {m}x{k}x{n} diverges at {threads} threads"),
-                )?;
+                for simd in [false, true] {
+                    let got = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads)
+                        .with_simd(simd)
+                        .run(&a, &b);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!("NN {m}x{k}x{n} diverges at {threads} threads simd={simd}"),
+                    )?;
+                }
             }
             Ok(())
         });
@@ -733,11 +792,15 @@ mod tests {
             let b = g.vec_normal(n * k, 1.0);
             let want = reference::matmul_nt(&a, &b, m, k, n);
             for threads in [1usize, 2, 4] {
-                let got = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads).run(&a, &b);
-                ensure(
-                    bitwise_eq(&got, &want),
-                    format!("NT {m}x{k}x{n} diverges at {threads} threads"),
-                )?;
+                for simd in [false, true] {
+                    let got = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads)
+                        .with_simd(simd)
+                        .run(&a, &b);
+                    ensure(
+                        bitwise_eq(&got, &want),
+                        format!("NT {m}x{k}x{n} diverges at {threads} threads simd={simd}"),
+                    )?;
+                }
             }
             Ok(())
         });
@@ -762,15 +825,18 @@ mod tests {
             for wopt in [None, Some(&w[..])] {
                 let want = reference::weighted_tn(&a, &b, wopt, r, m, n);
                 for threads in [1usize, 2, 4] {
-                    let got = MatmulPlan::with_threads(Layout::Tn, m, r, n, threads)
-                        .run_weighted(&a, &b, wopt);
-                    ensure(
-                        bitwise_eq(&got, &want),
-                        format!(
-                            "TN {r}x{m}x{n} (w={}) diverges at {threads} threads",
-                            wopt.is_some()
-                        ),
-                    )?;
+                    for simd in [false, true] {
+                        let got = MatmulPlan::with_threads(Layout::Tn, m, r, n, threads)
+                            .with_simd(simd)
+                            .run_weighted(&a, &b, wopt);
+                        ensure(
+                            bitwise_eq(&got, &want),
+                            format!(
+                                "TN {r}x{m}x{n} (w={}) diverges at {threads} thr simd={simd}",
+                                wopt.is_some()
+                            ),
+                        )?;
+                    }
                 }
             }
             Ok(())
@@ -866,22 +932,30 @@ mod tests {
                 let bn = g.vec_normal(k * n, 1.0);
                 let bt = g.vec_normal(n * k, 1.0);
                 for threads in [1usize, 2, 4] {
-                    let nn = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads);
-                    let want = nn.run(&zeroed, &bn);
-                    let mut got = vec![f32::NAN; m * n]; // scatter must overwrite
-                    nn.run_gather_nn(&ws, &dense, &bn, &kept, &scales, &mut got);
-                    ensure(
-                        bitwise_eq(&got, &want),
-                        format!("gather NN {m}x{k}x{n} keep {keep} diverges at {threads} thr"),
-                    )?;
-                    let nt = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads);
-                    let want = nt.run(&zeroed, &bt);
-                    let mut got = vec![f32::NAN; m * n];
-                    nt.run_gather_nt(&ws, &dense, &bt, &kept, &scales, &mut got);
-                    ensure(
-                        bitwise_eq(&got, &want),
-                        format!("gather NT {m}x{k}x{n} keep {keep} diverges at {threads} thr"),
-                    )?;
+                    for simd in [false, true] {
+                        let nn = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads)
+                            .with_simd(simd);
+                        let want = nn.run(&zeroed, &bn);
+                        let mut got = vec![f32::NAN; m * n]; // scatter must overwrite
+                        nn.run_gather_nn(&ws, &dense, &bn, &kept, &scales, &mut got);
+                        ensure(
+                            bitwise_eq(&got, &want),
+                            format!(
+                                "gather NN {m}x{k}x{n} keep {keep}: {threads} thr simd={simd}"
+                            ),
+                        )?;
+                        let nt = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads)
+                            .with_simd(simd);
+                        let want = nt.run(&zeroed, &bt);
+                        let mut got = vec![f32::NAN; m * n];
+                        nt.run_gather_nt(&ws, &dense, &bt, &kept, &scales, &mut got);
+                        ensure(
+                            bitwise_eq(&got, &want),
+                            format!(
+                                "gather NT {m}x{k}x{n} keep {keep}: {threads} thr simd={simd}"
+                            ),
+                        )?;
+                    }
                 }
                 Ok(())
             });
@@ -908,22 +982,29 @@ mod tests {
                 }
                 let dense_a = g.vec_normal(r * m, 1.0);
                 for threads in [1usize, 2, 4] {
-                    let ctx = KernelCtx::new(threads);
-                    let plan = MatmulPlan::with_threads(Layout::Tn, m, r, n, threads);
-                    // dense: absent rows of `a` are exactly zero
-                    let want = plan.run_weighted(&zeroed, &b, None);
-                    let got = gather_tn(ctx, &zeroed, &b, &kept, m, n);
-                    ensure(
-                        bitwise_eq(&got, &want),
-                        format!("gather TN {r}x{m}x{n} keep {keep} diverges at {threads} thr"),
-                    )?;
-                    // weighted: absent rows have weight exactly zero
-                    let want = plan.run_weighted(&dense_a, &b, Some(&wfull));
-                    let got = weighted_gather_tn(ctx, &dense_a, &b, &kept, &scales, m, n);
-                    ensure(
-                        bitwise_eq(&got, &want),
-                        format!("wgather TN {r}x{m}x{n} keep {keep} diverges at {threads} thr"),
-                    )?;
+                    for simd in [false, true] {
+                        let ctx = KernelCtx::new(threads).with_simd(simd);
+                        let plan = MatmulPlan::with_threads(Layout::Tn, m, r, n, threads)
+                            .with_simd(simd);
+                        // dense: absent rows of `a` are exactly zero
+                        let want = plan.run_weighted(&zeroed, &b, None);
+                        let got = gather_tn(ctx, &zeroed, &b, &kept, m, n);
+                        ensure(
+                            bitwise_eq(&got, &want),
+                            format!(
+                                "gather TN {r}x{m}x{n} keep {keep}: {threads} thr simd={simd}"
+                            ),
+                        )?;
+                        // weighted: absent rows have weight exactly zero
+                        let want = plan.run_weighted(&dense_a, &b, Some(&wfull));
+                        let got = weighted_gather_tn(ctx, &dense_a, &b, &kept, &scales, m, n);
+                        ensure(
+                            bitwise_eq(&got, &want),
+                            format!(
+                                "wgather TN {r}x{m}x{n} keep {keep}: {threads} thr simd={simd}"
+                            ),
+                        )?;
+                    }
                 }
                 Ok(())
             });
@@ -990,6 +1071,57 @@ mod tests {
         assert_eq!(big.threads, 8);
         // explicit thread counts clamp to the row count
         assert_eq!(MatmulPlan::with_threads(Layout::Nn, 3, 64, 64, 8).threads, 3);
+    }
+
+    /// Satellite: the SIMD tier must be bitwise the reference at every
+    /// ragged shape — dims straddling the lane width (LANES = 8) and the
+    /// register-block height (MR = 4), including 1x1 and zero-row inputs —
+    /// at 1/2/4 threads, for all three layouts and both TN weight modes.
+    #[test]
+    fn simd_tier_bitwise_matches_reference_on_ragged_shapes() {
+        use super::super::simd::LANES;
+        let mut g = Gen::new(0x51D);
+        // deliberate boundary shapes: lane-1, lane, lane+1, block edges
+        let dims = [1usize, 2, 3, 4, 5, 7, 8, 9, 15, 16, 17, 23];
+        let mut cases: Vec<(usize, usize, usize)> = Vec::new();
+        for _ in 0..24 {
+            cases.push((
+                dims[g.usize_in(0, dims.len() - 1)],
+                dims[g.usize_in(0, dims.len() - 1)],
+                dims[g.usize_in(0, dims.len() - 1)],
+            ));
+        }
+        cases.push((1, 1, 1));
+        cases.push((0, 5, LANES + 3)); // zero-row input
+        cases.push((3, 0, LANES)); // empty contraction
+        for &(m, k, n) in &cases {
+            let a = sparse_normal(&mut g, m * k);
+            let bn = g.vec_normal(k * n, 1.0);
+            let bt = g.vec_normal(n * k, 1.0);
+            let ta = sparse_normal(&mut g, k * m);
+            let tb = g.vec_normal(k * n, 1.0);
+            let w: Vec<f32> =
+                (0..k).map(|i| if i % 3 == 0 { 0.0 } else { 0.5 + i as f32 }).collect();
+            let want_nn = reference::matmul(&a, &bn, m, k, n);
+            let want_nt = reference::matmul_nt(&a, &bt, m, k, n);
+            let want_tn = reference::weighted_tn(&ta, &tb, None, k, m, n);
+            let want_wtn = reference::weighted_tn(&ta, &tb, Some(&w), k, m, n);
+            for threads in [1usize, 2, 4] {
+                let nn = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads).with_simd(true);
+                assert!(bitwise_eq(&nn.run(&a, &bn), &want_nn), "NN {m}x{k}x{n} t{threads}");
+                let nt = MatmulPlan::with_threads(Layout::Nt, m, k, n, threads).with_simd(true);
+                assert!(bitwise_eq(&nt.run(&a, &bt), &want_nt), "NT {m}x{k}x{n} t{threads}");
+                let tn = MatmulPlan::with_threads(Layout::Tn, m, k, n, threads).with_simd(true);
+                assert!(
+                    bitwise_eq(&tn.run_weighted(&ta, &tb, None), &want_tn),
+                    "TN {m}x{k}x{n} t{threads}"
+                );
+                assert!(
+                    bitwise_eq(&tn.run_weighted(&ta, &tb, Some(&w)), &want_wtn),
+                    "wTN {m}x{k}x{n} t{threads}"
+                );
+            }
+        }
     }
 
     #[test]

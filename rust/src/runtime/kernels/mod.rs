@@ -18,6 +18,12 @@
 //! dropped rows still cost nothing, so sampling reduces wall-clock on the
 //! threaded path exactly as it reduces counted FLOPs.
 //!
+//! The innermost loops additionally dispatch to the fixed-lane-width
+//! [`simd`] microkernel tier (default on; `VCAS_SIMD=off` pins the scalar
+//! tiles). The SIMD tier vectorizes across independent output columns
+//! only, so it is bitwise identical to the scalar tiles — see the [`simd`]
+//! module docs for the column-lane determinism argument.
+//!
 //! # Work gating
 //!
 //! A scoped fork/join costs tens of microseconds; [`workers_for`] keeps
@@ -28,6 +34,7 @@
 
 mod elementwise;
 mod matmul;
+pub mod simd;
 mod workspace;
 
 pub use elementwise::{
@@ -44,16 +51,20 @@ pub use matmul::{
 pub use workspace::Workspace;
 
 /// Immutable execution context handed down to every kernel: how many
-/// scoped worker threads a call may fan out to (1 = fully serial).
+/// scoped worker threads a call may fan out to (1 = fully serial), and
+/// whether the SIMD-width microkernel tier is dispatched. Both knobs move
+/// wall-clock only — results are bitwise identical either way.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KernelCtx {
     threads: usize,
+    simd: bool,
 }
 
 impl KernelCtx {
-    /// Context with the given worker budget (clamped to >= 1).
+    /// Context with the given worker budget (clamped to >= 1); SIMD
+    /// dispatch follows [`default_simd`] (the `VCAS_SIMD` env knob).
     pub fn new(threads: usize) -> KernelCtx {
-        KernelCtx { threads: threads.max(1) }
+        KernelCtx { threads: threads.max(1), simd: default_simd() }
     }
 
     /// Single-threaded context — the bitwise reference execution.
@@ -61,8 +72,25 @@ impl KernelCtx {
         KernelCtx::new(1)
     }
 
+    /// This context restricted to one worker thread, keeping its SIMD
+    /// policy — what per-sample inner loops (attention) run on.
+    pub fn to_serial(self) -> KernelCtx {
+        KernelCtx { threads: 1, simd: self.simd }
+    }
+
+    /// Override SIMD dispatch (tests drive both tiers explicitly).
+    pub fn with_simd(mut self, simd: bool) -> KernelCtx {
+        self.simd = simd;
+        self
+    }
+
     pub fn threads(self) -> usize {
         self.threads
+    }
+
+    /// Whether kernels under this context dispatch the SIMD tier.
+    pub fn simd(self) -> bool {
+        self.simd
     }
 }
 
@@ -85,6 +113,22 @@ pub fn workers_for(ctx: KernelCtx, work: usize) -> usize {
     } else {
         ctx.threads()
     }
+}
+
+/// Default SIMD dispatch: on unless `VCAS_SIMD` is set to `off` / `0` /
+/// `false` (case-insensitive) — the escape hatch that pins every kernel to
+/// the scalar tiles. Read once per process; results are bitwise identical
+/// either way, so the knob is purely a wall-clock / triage switch.
+pub fn default_simd() -> bool {
+    static SIMD: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+    *SIMD.get_or_init(|| {
+        !matches!(
+            std::env::var("VCAS_SIMD").ok().as_deref().map(str::trim),
+            Some(v) if v.eq_ignore_ascii_case("off")
+                || v.eq_ignore_ascii_case("false")
+                || v == "0"
+        )
+    })
 }
 
 /// Default kernel thread count: `VCAS_THREADS` when set (clamped to >= 1),
@@ -252,6 +296,17 @@ mod tests {
         assert_eq!(KernelCtx::new(8).threads(), 8);
         assert_eq!(KernelCtx::default(), KernelCtx::serial());
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn simd_knob_carries_through_ctx() {
+        let ctx = KernelCtx::new(4).with_simd(false);
+        assert!(!ctx.simd());
+        assert_eq!(ctx.to_serial().threads(), 1);
+        assert!(!ctx.to_serial().simd(), "to_serial must keep the SIMD policy");
+        assert!(KernelCtx::new(4).with_simd(true).to_serial().simd());
+        // default_simd is process-cached; whatever it returns, new() follows it
+        assert_eq!(KernelCtx::new(1).simd(), default_simd());
     }
 
     #[test]

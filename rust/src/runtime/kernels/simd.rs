@@ -1,0 +1,411 @@
+//! SIMD-width microkernels: fixed-lane-width (8 x f32) inner loops for the
+//! matmul tiles, the gather-compacted TN contraction and the elementwise
+//! passes. Portable chunked code only — no `std::arch` intrinsics — so the
+//! tier stays zero-dependency and cross-platform; the fixed `[f32; LANES]`
+//! blocks give the compiler loops it reliably auto-vectorizes (no tail
+//! checks, no variable trip counts in the hot body).
+//!
+//! # The column-lane determinism argument
+//!
+//! Every kernel here vectorizes across **independent output columns**:
+//! each lane owns exactly one output element, and the reduction over the
+//! contraction dimension keeps its serial ascending order — lanes never
+//! share an accumulator, so f32 addition is never re-associated. Register
+//! blocking ([`MR`] output rows x [`LANES`] columns held in accumulators
+//! across the whole contraction) changes *when* an element is computed,
+//! never the order of the adds *within* it. The zero-skip branches mirror
+//! the scalar tiles' exactly (`av == 0.0` left-element skip, `w == 0.0`
+//! row skip), so results are **bitwise identical** to
+//! [`reference`](super::matmul::reference) — and to the PR 2 blocked
+//! tiles — at any lane count, thread count and keep ratio. Ragged M/N/K
+//! tails (dims not divisible by the lane width) fall back to the scalar
+//! loops, which satisfy the same per-element contract trivially.
+//!
+//! Dispatch is wired through [`MatmulPlan`](super::MatmulPlan) /
+//! [`KernelCtx`](super::KernelCtx); `VCAS_SIMD=off` (or `0` / `false`)
+//! selects the scalar tiles everywhere — same bits, different wall-clock.
+
+use super::elementwise::{gelu_deriv_one, gelu_one};
+
+/// Lane width: one `[f32; LANES]` accumulator row is a 256-bit vector.
+pub const LANES: usize = 8;
+
+/// Output rows per register block in the NN/TN microkernels — [`MR`] x
+/// [`LANES`] accumulators stay in registers across the whole contraction.
+const MR: usize = 4;
+
+#[inline(always)]
+fn load(src: &[f32]) -> [f32; LANES] {
+    src[..LANES].try_into().unwrap()
+}
+
+#[inline(always)]
+fn axpy_lane(acc: &mut [f32; LANES], a: f32, b: &[f32; LANES]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += a * bv;
+    }
+}
+
+/// `acc[j] += a * b[j]` over arbitrary-length slices, lane-chunked with a
+/// scalar tail. Per-element arithmetic is exactly the plain zip loop's
+/// (each element sees one `+= a * b[j]`), so chunking changes no bits —
+/// the CNN conv tiles use this for their channel-axis updates.
+pub fn axpy(acc: &mut [f32], a: f32, b: &[f32]) {
+    debug_assert_eq!(acc.len(), b.len());
+    let main = acc.len() - acc.len() % LANES;
+    let (am, at) = acc.split_at_mut(main);
+    let (bm, bt) = b.split_at(main);
+    for (ac, bc) in am.chunks_exact_mut(LANES).zip(bm.chunks_exact(LANES)) {
+        let ac: &mut [f32; LANES] = ac.try_into().unwrap();
+        let bc: &[f32; LANES] = bc.try_into().unwrap();
+        axpy_lane(ac, a, bc);
+    }
+    for (o, &bv) in at.iter_mut().zip(bt) {
+        *o += a * bv;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Matmul tiles (drop-in bodies for the `par_row_chunks` worker closures).
+// ---------------------------------------------------------------------------
+
+/// NN worker body, SIMD tier: out rows `row0..` of `a (m,k) @ b (k,n)`.
+/// An [`MR`] x [`LANES`] register block accumulates over the full `k`
+/// ascending — per output element exactly the reference loop's adds — and
+/// the `b` panel load is amortised over the [`MR`] rows. `out` arrives
+/// zero-filled; full blocks overwrite, ragged tails accumulate scalar.
+pub fn nn_tile(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    let n_main = n - n % LANES;
+    let mut j = 0;
+    while j < n_main {
+        let mut i = 0;
+        while i + MR <= rows {
+            let mut acc = [[0.0f32; LANES]; MR];
+            for p in 0..k {
+                let bvec = load(&b[p * n + j..]);
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = a[(row0 + i + r) * k + p];
+                    if av != 0.0 {
+                        axpy_lane(accr, av, &bvec);
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                out[(i + r) * n + j..][..LANES].copy_from_slice(accr);
+            }
+            i += MR;
+        }
+        while i < rows {
+            let mut acc = [0.0f32; LANES];
+            let arow = &a[(row0 + i) * k..][..k];
+            for (p, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    axpy_lane(&mut acc, av, &load(&b[p * n + j..]));
+                }
+            }
+            out[i * n + j..][..LANES].copy_from_slice(&acc);
+            i += 1;
+        }
+        j += LANES;
+    }
+    if n_main < n {
+        // ragged column tail: the scalar reference loop over j in n_main..n
+        for i in 0..rows {
+            let arow = &a[(row0 + i) * k..][..k];
+            let orow = &mut out[i * n + n_main..(i + 1) * n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n + n_main..(p + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+}
+
+/// NT worker body, SIMD tier: [`LANES`] output columns (= `b` rows) run as
+/// independent dot-product accumulators, breaking the serial FMA latency
+/// chain the one-at-a-time reference dot is bound by. Each lane's
+/// reduction over `k` stays strictly ascending — bitwise the reference
+/// dot. Ragged column tails fall back to the scalar dot.
+pub fn nt_tile(a: &[f32], b: &[f32], k: usize, n: usize, row0: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    let n_main = n - n % LANES;
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..][..k];
+        let mut j = 0;
+        while j < n_main {
+            let brows: [&[f32]; LANES] =
+                std::array::from_fn(|l| &b[(j + l) * k..(j + l + 1) * k]);
+            let mut acc = [0.0f32; LANES];
+            for (p, &av) in arow.iter().enumerate() {
+                for (o, brow) in acc.iter_mut().zip(&brows) {
+                    *o += av * brow[p];
+                }
+            }
+            out[i * n + j..][..LANES].copy_from_slice(&acc);
+            j += LANES;
+        }
+        for jj in n_main..n {
+            let brow = &b[jj * k..(jj + 1) * k];
+            let mut acc = 0.0f32;
+            for (&av, &bv) in arow.iter().zip(brow) {
+                acc += av * bv;
+            }
+            out[i * n + jj] = acc;
+        }
+    }
+}
+
+/// TN worker body, SIMD tier: output rows `c0..c0+cols` (columns of `a`).
+/// An [`MR`]-row x [`LANES`]-column register block accumulates the `r`
+/// contraction rows strictly ascending; zero-weight rows and zero left
+/// elements skip exactly as in the scalar tile, and the dense (`w =
+/// None`) path never multiplies by a weight. `out` arrives zero-filled.
+#[allow(clippy::too_many_arguments)]
+pub fn tn_tile(
+    a: &[f32],
+    b: &[f32],
+    w: Option<&[f32]>,
+    r: usize,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    tn_tile_body(a, b, w, r, m, n, c0, out, |row| row);
+}
+
+/// Gather-compacted TN worker body, SIMD tier: the contraction runs over
+/// the rows listed in `idx` (ascending original indices); `w`, when
+/// present, is aligned with `idx`. Same register blocking and skip
+/// semantics as [`tn_tile`], so bitwise the scalar gather tile.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_tn_tile(
+    a: &[f32],
+    b: &[f32],
+    idx: &[u32],
+    w: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    tn_tile_body(a, b, w, idx.len(), m, n, c0, out, |j| idx[j] as usize);
+}
+
+/// Shared TN body: `row_of(j)` maps contraction step `j` to the physical
+/// row of `a`/`b` (identity for the dense scan, `idx[j]` for the gather
+/// path); `w[j]`, when present, belongs to step `j`.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn tn_tile_body<F: Fn(usize) -> usize>(
+    a: &[f32],
+    b: &[f32],
+    w: Option<&[f32]>,
+    steps: usize,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+    row_of: F,
+) {
+    if n == 0 {
+        return;
+    }
+    let cols = out.len() / n;
+    let n_main = n - n % LANES;
+    let mut j = 0;
+    while j < n_main {
+        let mut p0 = 0;
+        while p0 < cols {
+            let pb = MR.min(cols - p0);
+            let mut acc = [[0.0f32; LANES]; MR];
+            for s in 0..steps {
+                let wv = match w {
+                    Some(w) => {
+                        if w[s] == 0.0 {
+                            continue;
+                        }
+                        w[s]
+                    }
+                    None => 1.0,
+                };
+                let row = row_of(s);
+                let bvec = load(&b[row * n + j..]);
+                let abase = row * m + c0 + p0;
+                for (pp, accp) in acc[..pb].iter_mut().enumerate() {
+                    let av = a[abase + pp];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avw = if w.is_some() { av * wv } else { av };
+                    axpy_lane(accp, avw, &bvec);
+                }
+            }
+            for (pp, accp) in acc[..pb].iter().enumerate() {
+                out[(p0 + pp) * n + j..][..LANES].copy_from_slice(accp);
+            }
+            p0 += pb;
+        }
+        j += LANES;
+    }
+    if n_main < n {
+        // ragged column tail: the scalar tile restricted to n_main..n
+        for s in 0..steps {
+            let wv = match w {
+                Some(w) => {
+                    if w[s] == 0.0 {
+                        continue;
+                    }
+                    w[s]
+                }
+                None => 1.0,
+            };
+            let row = row_of(s);
+            let arow = &a[row * m + c0..row * m + c0 + cols];
+            let brow = &b[row * n + n_main..row * n + n];
+            for (p, &av) in arow.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let avw = if w.is_some() { av * wv } else { av };
+                let orow = &mut out[p * n + n_main..p * n + n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += avw * bv;
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Elementwise lane kernels (per-row inner loops of the threaded passes).
+// ---------------------------------------------------------------------------
+
+/// Lane-chunked map `out[j] = f(a[j])` with a scalar tail — per element
+/// the same single evaluation of `f`, so bits cannot move.
+#[inline(always)]
+fn map_lanes<F: Fn(f32) -> f32>(a: &[f32], out: &mut [f32], f: F) {
+    let main = out.len() - out.len() % LANES;
+    let (om, ot) = out.split_at_mut(main);
+    let (am, at) = a.split_at(main);
+    for (oc, ac) in om.chunks_exact_mut(LANES).zip(am.chunks_exact(LANES)) {
+        for (o, &x) in oc.iter_mut().zip(ac) {
+            *o = f(x);
+        }
+    }
+    for (o, &x) in ot.iter_mut().zip(at) {
+        *o = f(x);
+    }
+}
+
+/// Layernorm affine normalize: `y[j] = (x[j] - mu) * rstd * g[j] + b[j]`,
+/// lane-chunked. No reductions — every lane owns one output element.
+pub fn ln_affine(x: &[f32], mu: f32, rstd: f32, g: &[f32], b: &[f32], y: &mut [f32]) {
+    let d = y.len();
+    let main = d - d % LANES;
+    for j0 in (0..main).step_by(LANES) {
+        let xv = load(&x[j0..]);
+        let gv = load(&g[j0..]);
+        let bv = load(&b[j0..]);
+        let yv = &mut y[j0..j0 + LANES];
+        for (l, yo) in yv.iter_mut().enumerate() {
+            *yo = (xv[l] - mu) * rstd * gv[l] + bv[l];
+        }
+    }
+    for (((yo, &xv), &gv), &bv) in
+        y[main..].iter_mut().zip(&x[main..]).zip(&g[main..]).zip(&b[main..])
+    {
+        *yo = (xv - mu) * rstd * gv + bv;
+    }
+}
+
+/// Layernorm backward dx row: `dx[j] = rstd * (dy[j]*g[j] - c1 -
+/// (x[j]-mu)*rstd * c2)`, lane-chunked; `c1`/`c2` are the row's serial
+/// reductions computed by the caller.
+#[allow(clippy::too_many_arguments)]
+pub fn ln_dx(
+    x: &[f32],
+    mu: f32,
+    rstd: f32,
+    g: &[f32],
+    dy: &[f32],
+    c1: f32,
+    c2: f32,
+    dx: &mut [f32],
+) {
+    let d = dx.len();
+    let main = d - d % LANES;
+    for j0 in (0..main).step_by(LANES) {
+        let xv = load(&x[j0..]);
+        let gv = load(&g[j0..]);
+        let dyv = load(&dy[j0..]);
+        let dxv = &mut dx[j0..j0 + LANES];
+        for (l, dxo) in dxv.iter_mut().enumerate() {
+            let xhat = (xv[l] - mu) * rstd;
+            let dxhat = dyv[l] * gv[l];
+            *dxo = rstd * (dxhat - c1 - xhat * c2);
+        }
+    }
+    for (((dxo, &xv), &gv), &dyv) in
+        dx[main..].iter_mut().zip(&x[main..]).zip(&g[main..]).zip(&dy[main..])
+    {
+        let xhat = (xv - mu) * rstd;
+        let dxhat = dyv * gv;
+        *dxo = rstd * (dxhat - c1 - xhat * c2);
+    }
+}
+
+/// GELU forward, lane-chunked. `tanh` stays a scalar call per lane
+/// (vectorizing it would change bits); chunking exposes the polynomial
+/// part and independent lanes to the optimizer.
+pub fn gelu_fwd(u: &[f32], out: &mut [f32]) {
+    map_lanes(u, out, gelu_one);
+}
+
+/// GELU backward `du[j] = df[j] * gelu'(u[j])`, lane-chunked.
+pub fn gelu_bwd(u: &[f32], df: &[f32], out: &mut [f32]) {
+    let main = out.len() - out.len() % LANES;
+    let (om, ot) = out.split_at_mut(main);
+    for (c, oc) in om.chunks_exact_mut(LANES).enumerate() {
+        let uv = load(&u[c * LANES..]);
+        let dv = load(&df[c * LANES..]);
+        for (l, o) in oc.iter_mut().enumerate() {
+            *o = dv[l] * gelu_deriv_one(uv[l]);
+        }
+    }
+    for (j, o) in ot.iter_mut().enumerate() {
+        *o = df[main + j] * gelu_deriv_one(u[main + j]);
+    }
+}
+
+/// Softmax-CE probability row: `dr[j] = exp(lr[j] - lse)` in f64,
+/// lane-chunked (each lane one independent exp).
+pub fn ce_probs(lr: &[f32], lse: f64, dr: &mut [f32]) {
+    map_lanes(lr, dr, |v| ((v as f64 - lse).exp()) as f32);
+}
+
+/// In-place scale `x[j] *= s`, lane-chunked (the softmax normalize loop).
+pub fn scale(x: &mut [f32], s: f32) {
+    let main = x.len() - x.len() % LANES;
+    let (xm, xt) = x.split_at_mut(main);
+    for c in xm.chunks_exact_mut(LANES) {
+        for v in c.iter_mut() {
+            *v *= s;
+        }
+    }
+    for v in xt.iter_mut() {
+        *v *= s;
+    }
+}

@@ -5,7 +5,11 @@
 //! `Vec<f32>` of exactly the requested length with unspecified contents
 //! (reusing the pooled buffer with the smallest sufficient capacity,
 //! growing one only when none fits) and
-//! [`Workspace::give`] returns it. Ownership moves in and out, so callers
+//! [`Workspace::give`] returns it. The free list is kept **sorted by
+//! capacity**, so best-fit is a `partition_point` binary search — the
+//! mutex is held for an O(log n) probe plus one `Vec` element shift of at
+//! most [`MAX_POOLED`] pointers, instead of the previous O(n) capacity
+//! scan per take. Ownership moves in and out, so callers
 //! can stash buffers in structs (saved activations live from forward to
 //! backward) without fighting lifetimes; a buffer that is never given back
 //! simply drops — the pool degrades to plain allocation, never leaks or
@@ -27,7 +31,9 @@ use std::sync::Mutex;
 /// are churning and pooling has stopped paying; excess buffers just drop.
 const MAX_POOLED: usize = 128;
 
-/// A shared pool of reusable `Vec<f32>` scratch buffers.
+/// A shared pool of reusable `Vec<f32>` scratch buffers. The free list is
+/// sorted ascending by capacity (ties in any order — contents are
+/// unspecified anyway), which is what makes best-fit a binary search.
 pub struct Workspace {
     pool: Mutex<Vec<Vec<f32>>>,
     takes: AtomicUsize,
@@ -47,25 +53,21 @@ impl Workspace {
     /// A buffer of exactly `len` elements with **unspecified contents**
     /// (every consumer either writes all elements or zero-fills
     /// explicitly, so a steady-state same-size reuse costs no memset).
-    /// Reuses the pooled buffer with the *smallest sufficient* capacity
-    /// (best-fit, so large buffers are never wasted on small requests and
-    /// identical request sequences reach an allocation-free steady
-    /// state); only when none fits does the take count as a heap
-    /// allocation.
+    /// Reuses the pooled buffer with the *smallest sufficient* capacity —
+    /// the free list is sorted by capacity, so best-fit is the
+    /// `partition_point` binary search for the first capacity >= `len`
+    /// (an O(log n) probe plus a bounded `Vec::remove` header shift under
+    /// the lock, same selection the old full linear scan made); only when
+    /// none fits does the take count as a heap allocation.
     pub fn take(&self, len: usize) -> Vec<f32> {
         self.takes.fetch_add(1, Ordering::Relaxed);
         let mut buf = {
             let mut pool = self.pool.lock().unwrap();
-            let mut best: Option<(usize, usize)> = None; // (index, capacity)
-            for (i, b) in pool.iter().enumerate() {
-                let cap = b.capacity();
-                if cap >= len && best.map_or(true, |(_, bc)| cap < bc) {
-                    best = Some((i, cap));
-                }
-            }
-            match best {
-                Some((i, _)) => pool.swap_remove(i),
-                None => Vec::new(),
+            let i = pool.partition_point(|b| b.capacity() < len);
+            if i < pool.len() {
+                pool.remove(i)
+            } else {
+                Vec::new()
             }
         };
         if buf.capacity() < len {
@@ -78,15 +80,17 @@ impl Workspace {
     }
 
     /// Return a buffer to the pool (capacity is what gets reused; length
-    /// is irrelevant). Zero-capacity buffers and overflow beyond
-    /// [`MAX_POOLED`] are silently dropped.
+    /// is irrelevant), inserted at its capacity-sorted position (binary
+    /// search + one bounded element shift). Zero-capacity buffers and
+    /// overflow beyond [`MAX_POOLED`] are silently dropped.
     pub fn give(&self, buf: Vec<f32>) {
         if buf.capacity() == 0 {
             return;
         }
         let mut pool = self.pool.lock().unwrap();
         if pool.len() < MAX_POOLED {
-            pool.push(buf);
+            let i = pool.partition_point(|b| b.capacity() <= buf.capacity());
+            pool.insert(i, buf);
         }
     }
 
@@ -180,6 +184,40 @@ mod tests {
             }
         }
         assert_eq!(ws.allocations(), warm, "steady-state cycles must not allocate");
+    }
+
+    /// The sorted free list must make the same best-fit choice the old
+    /// linear scan made (smallest sufficient capacity), and the take/alloc
+    /// counters must reach the same steady state for a mixed-size cycle.
+    #[test]
+    fn sorted_free_list_is_best_fit_with_same_counters() {
+        let ws = Workspace::new();
+        // park capacities out of order: give sorts them
+        ws.give(Vec::with_capacity(256));
+        ws.give(Vec::with_capacity(16));
+        ws.give(Vec::with_capacity(64));
+        assert_eq!(ws.pooled(), 3);
+        // best fit for 20 elements is the 64-cap buffer, not the 256 one
+        let b = ws.take(20);
+        assert_eq!(b.capacity(), 64);
+        assert_eq!(ws.allocations(), 0, "a fitting pooled buffer must not allocate");
+        ws.give(b);
+        // too big for anything pooled: allocates
+        let big = ws.take(1000);
+        assert!(big.capacity() >= 1000);
+        assert_eq!(ws.allocations(), 1);
+        ws.give(big);
+        // mixed-size steady-state cycle: counters flat after warm-up,
+        // exactly like the pre-sort pool
+        let sizes = [1000usize, 16, 64, 256];
+        for _ in 0..8 {
+            let bufs: Vec<_> = sizes.iter().map(|&s| ws.take(s)).collect();
+            for b in bufs {
+                ws.give(b);
+            }
+        }
+        assert_eq!(ws.allocations(), 1, "steady state must stay allocation-free");
+        assert_eq!(ws.takes(), 2 + 8 * sizes.len());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::formats::params::{ParamSet, Tensor};
 use crate::runtime::backend::{CnnGradOut, ModelInfo, ModelKind};
 use crate::runtime::kernels::{
     add_bias, argmax_row, ce_loss_and_dlogits_into, col_sums, gather_rows,
-    gather_rows_scaled, matmul_into, matmul_nt_into, par_row_chunks, weighted_tn,
+    gather_rows_scaled, matmul_into, matmul_nt_into, par_row_chunks, simd, weighted_tn,
     workers_for, KernelCtx, Workspace,
 };
 use crate::util::rng::Pcg32;
@@ -142,6 +142,7 @@ fn conv3x3_fwd_into(
     debug_assert_eq!(y.len(), n * sample_len);
     y.fill(0.0);
     let threads = workers_for(kctx, 2 * n * side * side * 9 * cin * cout);
+    let use_simd = kctx.simd();
     par_row_chunks(threads, y, sample_len, |n0, chunk| {
         for li in 0..chunk.len() / sample_len {
             let ni = n0 + li;
@@ -166,8 +167,14 @@ fn conv3x3_fwd_into(
                                 }
                                 let wrow = &w[wbase + ci * cout..][..cout];
                                 let yrow = &mut chunk[yrow_base..yrow_base + cout];
-                                for (o, &wv) in yrow.iter_mut().zip(wrow) {
-                                    *o += xv * wv;
+                                if use_simd {
+                                    // lane-chunked channel update — same
+                                    // per-element ops, same bits
+                                    simd::axpy(yrow, xv, wrow);
+                                } else {
+                                    for (o, &wv) in yrow.iter_mut().zip(wrow) {
+                                        *o += xv * wv;
+                                    }
                                 }
                             }
                         }
@@ -279,6 +286,7 @@ fn conv3x3_bwd_into(
     });
     // ...dw on the caller thread, ascending samples (same order as the
     // combined pass, so the same bits).
+    let use_simd = kctx.simd();
     for ni in 0..n {
         for oy in 0..side {
             for ox in 0..side {
@@ -298,8 +306,12 @@ fn conv3x3_bwd_into(
                         for ci in 0..cin {
                             let xv = x[xbase + ci];
                             let dwrow = &mut dw[wbase + ci * cout..][..cout];
-                            for (o, &dyv) in dwrow.iter_mut().zip(dyrow) {
-                                *o += xv * dyv;
+                            if use_simd {
+                                simd::axpy(dwrow, xv, dyrow);
+                            } else {
+                                for (o, &dyv) in dwrow.iter_mut().zip(dyrow) {
+                                    *o += xv * dyv;
+                                }
                             }
                         }
                     }

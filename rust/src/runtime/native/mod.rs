@@ -17,9 +17,10 @@
 //! wrapper types are not `Send`).
 //!
 //! All dense math routes through the `runtime::kernels` layer with this
-//! backend's thread count ([`NativeBackend::with_threads`]); results are
-//! bitwise identical at any thread count, so `threads` is purely a
-//! wall-clock knob.
+//! backend's thread count ([`NativeBackend::with_threads`]) and SIMD
+//! policy ([`NativeBackend::with_simd`], defaulting to the `VCAS_SIMD`
+//! env knob); results are bitwise identical at any thread count and on
+//! either kernel tier, so both are purely wall-clock knobs.
 //!
 //! Sampled backwards execute **gather-compacted** by default: the SampleA
 //! draw yields a [`sampling::SampledRows`] kept-row set, the block/stage
@@ -47,7 +48,7 @@ use crate::error::{anyhow, bail, ensure, Result};
 use crate::formats::params::ParamSet;
 
 use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
-use super::kernels::{default_threads, KernelCtx, Workspace};
+use super::kernels::{default_simd, default_threads, KernelCtx, Workspace};
 
 /// Per-call execution context handed to the native model code: the kernel
 /// thread budget, the backend's reusable buffer pool, and whether sampled
@@ -75,6 +76,7 @@ pub struct NativeBackend {
     cnn_batch: usize,
     threads: usize,
     compact: bool,
+    simd: bool,
     ws: Workspace,
 }
 
@@ -95,6 +97,7 @@ impl NativeBackend {
             cnn_batch,
             threads: 1,
             compact: true,
+            simd: default_simd(),
             ws: Workspace::new(),
         }
     }
@@ -114,6 +117,15 @@ impl NativeBackend {
         self
     }
 
+    /// Toggle the SIMD microkernel tier (default: the `VCAS_SIMD` env
+    /// knob, on unless set to `off`). Results are bitwise identical either
+    /// way; the equivalence tests diff the two tiers through whole
+    /// forward/backward passes.
+    pub fn with_simd(mut self, simd: bool) -> NativeBackend {
+        self.simd = simd;
+        self
+    }
+
     /// The backend's scratch-buffer pool (shared across threads). Exposed
     /// so tests can assert steady-state allocation-freedom.
     pub fn workspace(&self) -> &Workspace {
@@ -121,7 +133,11 @@ impl NativeBackend {
     }
 
     fn ectx(&self) -> ExecCtx<'_> {
-        ExecCtx { kctx: KernelCtx::new(self.threads), ws: &self.ws, compact: self.compact }
+        ExecCtx {
+            kctx: KernelCtx::new(self.threads).with_simd(self.simd),
+            ws: &self.ws,
+            compact: self.compact,
+        }
     }
 
     /// The default model zoo: miniature counterparts of the AOT models

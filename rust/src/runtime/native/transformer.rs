@@ -8,7 +8,8 @@
 //! backends apart.
 //!
 //! All dense math routes through `runtime::kernels` with the backend's
-//! [`KernelCtx`]: matmuls and layernorm/GELU/softmax-CE passes thread over
+//! [`KernelCtx`](crate::runtime::kernels::KernelCtx): matmuls and
+//! layernorm/GELU/softmax-CE passes thread over
 //! disjoint output tiles, attention threads over batch samples, and every
 //! result is bitwise identical to the single-threaded path at any thread
 //! count (see the kernels module docs for the determinism contract). The
@@ -42,7 +43,7 @@ use crate::runtime::kernels::{
     gather_rows, gather_rows_scaled, gelu_bwd_into, gelu_fwd_into, layernorm_bwd_into,
     layernorm_fwd_into,
     matmul_into, matmul_nt_into, par_row_chunks, par_row_chunks2, softmax_rows,
-    weighted_gather_tn, weighted_tn, weighted_tn_into, workers_for, KernelCtx,
+    weighted_gather_tn, weighted_tn, weighted_tn_into, workers_for,
     LnStats, Workspace,
 };
 use crate::util::rng::Pcg32;
@@ -305,7 +306,9 @@ fn attention_fwd(
         &mut probs,
         heads * t * t,
         |n0, cc, pc| {
-            let serial = KernelCtx::serial();
+            // per-sample inner matmuls: one worker thread, but the SIMD
+            // policy carries through so attention rides the microkernels
+            let serial = ectx.kctx.to_serial();
             let mut q = ws.take(t * dh);
             let mut k = ws.take(t * dh);
             let mut v = ws.take(t * dh);
@@ -366,7 +369,7 @@ fn attention_bwd(
     debug_assert_eq!(dqkv.len(), n * t * 3 * d);
     let threads = workers_for(ectx.kctx, 8 * n * t * t * d);
     par_row_chunks(threads, dqkv, t * 3 * d, |n0, chunk| {
-        let serial = KernelCtx::serial();
+        let serial = ectx.kctx.to_serial();
         let mut q = ws.take(t * dh);
         let mut k = ws.take(t * dh);
         let mut v = ws.take(t * dh);

@@ -670,6 +670,91 @@ fn compacted_cnn_bitwise_matches_zero_scan_ratio_sweep() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// SIMD microkernel tier: the lane-width kernels must be bitwise identical
+// to the scalar tiles through whole forward/backward passes — at any
+// thread count, any keep ratio, with and without compaction (the PR 4
+// determinism contract; `VCAS_SIMD=off` pins the scalar tier process-wide
+// and CI runs the full suite both ways).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn simd_fwd_bwd_bitwise_matches_scalar_tier() {
+    let params = {
+        let b = NativeBackend::with_default_models();
+        ModelSession::open(&b, "small").unwrap().load_params().unwrap()
+    };
+    for threads in [1usize, 4] {
+        for compact in [false, true] {
+            let scalar = NativeBackend::with_default_models()
+                .with_threads(threads)
+                .with_compaction(compact)
+                .with_simd(false);
+            let vect = NativeBackend::with_default_models()
+                .with_threads(threads)
+                .with_compaction(compact)
+                .with_simd(true);
+            let sess_s = ModelSession::open(&scalar, "small").unwrap();
+            let sess_v = ModelSession::open(&vect, "small").unwrap();
+            let batch = cls_batch_for(&scalar, "small", 80 + threads as u64);
+            let sw = vec![1.0 / batch.n as f32; batch.n];
+            for ratio in [0.25f32, 1.0] {
+                let rho = vec![ratio; sess_s.n_layers];
+                let nu = vec![ratio; sess_s.n_sampled];
+                let a = sess_s.fwd_bwd_cls(&params, &batch, &sw, 11, &rho, &nu, &nu).unwrap();
+                let b = sess_v.fwd_bwd_cls(&params, &batch, &sw, 11, &rho, &nu, &nu).unwrap();
+                assert_gradout_bits_eq(
+                    &a,
+                    &b,
+                    &format!(
+                        "simd vs scalar @ ratio {ratio}, {threads} threads, compact {compact}"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_cnn_bitwise_matches_scalar_tier() {
+    let b0 = NativeBackend::with_default_models();
+    let info = b0.info("cnn").unwrap();
+    let params = ModelSession::open(&b0, "cnn").unwrap().load_params().unwrap();
+    let n = b0.cnn_batch();
+    let mut rng = Pcg32::new(71, 0x71);
+    let px = info.img * info.img * info.in_ch;
+    let x: Vec<f32> = (0..n * px).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(info.n_classes as u64) as i32).collect();
+    let batch = vcas::data::batch::ImgBatch { n, x, y, idx: vec![] };
+    for threads in [1usize, 2] {
+        for compact in [false, true] {
+            let scalar = NativeBackend::with_default_models()
+                .with_threads(threads)
+                .with_compaction(compact)
+                .with_simd(false);
+            let vect = NativeBackend::with_default_models()
+                .with_threads(threads)
+                .with_compaction(compact)
+                .with_simd(true);
+            let ss = ModelSession::open(&scalar, "cnn").unwrap();
+            let sv = ModelSession::open(&vect, "cnn").unwrap();
+            for ratio in [0.3f32, 1.0] {
+                let rho = vec![ratio; ss.n_layers];
+                let a = ss.cnn_fwd_bwd(&params, &batch, 6, &rho).unwrap();
+                let b = sv.cnn_fwd_bwd(&params, &batch, 6, &rho).unwrap();
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "cnn loss @ ratio {ratio}");
+                for (ga, gb) in a.grads.iter().zip(&b.grads) {
+                    assert_eq!(
+                        ga, gb,
+                        "cnn simd grads differ @ ratio {ratio}, {threads} thr, compact {compact}"
+                    );
+                }
+                assert_eq!(a.act_norms, b.act_norms);
+            }
+        }
+    }
+}
+
 #[test]
 fn workspace_reuse_steady_state_no_allocations() {
     // Steady-state training steps must perform no per-step matmul output
