@@ -49,6 +49,10 @@ fn main() -> Result<()> {
     };
     println!("\n== phase 1: MLM pretraining ({pretrain_steps} steps, VCAS) ==");
     let mut pre = Trainer::new(backend.as_ref(), &pre_cfg)?;
+    // MLM masking consumes the trainer's live RNG stream, so the async
+    // pipeline forces the synchronous path here (prefetch depth 0); the
+    // phase-2 classification trainers below stream double-buffered.
+    println!("  prefetch depth: {} (mlm forces sync)", pre.prefetch_depth());
     let pre_result = pre.run()?;
     for ev in &pre_result.evals {
         println!(

@@ -27,12 +27,17 @@ fn main() -> Result<()> {
         eval_every: 100,
         vcas: VcasConfig { freq: 40, ..Default::default() },
         out_dir: "results/quickstart".into(),
+        // Async batch pipeline: batch t+1 is gathered by a producer thread
+        // while step t runs. The trajectory is bitwise identical at any
+        // depth (0 = synchronous), so this knob only moves wall-clock.
+        prefetch: Some(2),
         ..Default::default()
     };
 
     for method in [Method::Exact, Method::Vcas] {
         let cfg = TrainConfig { method: method.clone(), ..base.clone() };
         let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
+        println!("  prefetch depth: {}", trainer.prefetch_depth());
         let r = trainer.run()?;
         println!(
             "{:>6}: final train loss {:.4}, eval acc {:.2}%, FLOPs reduction {:>6.2}%, wall {:.1}s",

@@ -1,9 +1,11 @@
 //! §Perf micro-benchmarks: per-entry execute latency, marshalling cost,
 //! controller update cost, allreduce cost, the kernel layer's single- vs
-//! multi-thread scaling, and the zero-scan vs gather-compacted sampled
-//! backward across keep ratios — the L3 hot-path profile. The kernel
-//! section writes `results/BENCH_kernels.json` and the sampling section
-//! `results/BENCH_sampling.json` so the repo's perf trajectory has
+//! multi-thread scaling, the zero-scan vs gather-compacted sampled
+//! backward across keep ratios, and the sync-vs-prefetch step time of the
+//! async batch pipeline — the L3 hot-path profile. The kernel section
+//! writes `results/BENCH_kernels.json`, the sampling section
+//! `results/BENCH_sampling.json` and the pipeline section
+//! `results/BENCH_pipeline.json` so the repo's perf trajectory has
 //! machine-readable data points.
 //!
 //! Run: cargo bench --bench perf_micro
@@ -11,13 +13,16 @@
 mod common;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use vcas::coordinator::parallel::tree_allreduce_mean;
+use vcas::coordinator::pipeline::{MlmSource, Prefetcher};
 use vcas::coordinator::vcas::{GradSample, VcasController};
-use vcas::config::VcasConfig;
+use vcas::coordinator::Trainer;
+use vcas::config::{Method, TrainConfig, VcasConfig};
 use vcas::data::batch::{gather_cls, EpochSampler};
-use vcas::data::tasks::{find, generate_cls};
+use vcas::data::tasks::{find, generate_cls, MarkovCorpus};
 use vcas::formats::json::Json;
 use vcas::runtime::kernels::{reference, weighted_gather_tn, Layout, MatmulPlan, Workspace};
 use vcas::runtime::native::sampling::SampledRows;
@@ -369,6 +374,92 @@ fn main() {
     let json_path = common::results_dir().join("BENCH_sampling.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(sampling_json))).unwrap();
     println!("(compacted sampling json: {})", json_path.display());
+
+    // async training pipeline: synchronous (depth 0) vs double-buffered
+    // prefetch (depth 2) on identical batch sequences — trajectories are
+    // bitwise equal, so wall-clock is the only thing that can move. Two
+    // consumers: the trainer's steady-state step (epoch shuffle + gather
+    // on the producer thread) and an MLM session loop, where per-batch
+    // mask generation is real host-side work worth overlapping. The
+    // acceptance target is prefetch >= break-even on steady-state step
+    // time. Rows land in results/BENCH_pipeline.json, which CI uploads
+    // with the other BENCH_*.json artifacts.
+    let mut pipeline_json: BTreeMap<String, Json> = BTreeMap::new();
+    {
+        let steps = 6usize;
+        let mut step_ms = [0.0f64; 2];
+        for (slot, depth) in [0usize, 2].into_iter().enumerate() {
+            let cfg = TrainConfig {
+                model: "small".into(),
+                task: "sst2-sim".into(),
+                method: Method::Vcas,
+                steps: 64,
+                seed: 5,
+                prefetch: Some(depth),
+                vcas: VcasConfig { freq: 50, ..Default::default() },
+                ..Default::default()
+            };
+            let nb = NativeBackend::with_default_models();
+            let mut tr = Trainer::new(&nb, &cfg).unwrap();
+            // warm-up: fill the workspace pool and the prefetch queue
+            tr.advance(2).unwrap();
+            let ms = common::time_median_ms(5, || {
+                tr.advance(steps).unwrap();
+            }) / steps as f64;
+            let mode = if depth == 0 { "sync" } else { "prefetch" };
+            table.row(vec![
+                format!("small: trainer step, {mode} (depth {depth})"),
+                format!("{ms:.2}"),
+                "pipeline".into(),
+            ]);
+            step_ms[slot] = ms;
+        }
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("sync_ms".into(), Json::Num(step_ms[0]));
+        o.insert("prefetch_ms".into(), Json::Num(step_ms[1]));
+        o.insert("depth".into(), Json::Num(2.0));
+        o.insert("speedup".into(), Json::Num(step_ms[0] / step_ms[1]));
+        pipeline_json.insert("trainer_step_small_sst2".into(), Json::Obj(o));
+    }
+    {
+        let nb = NativeBackend::with_default_models();
+        let sess = ModelSession::open(&nb, "small").unwrap();
+        let params = sess.load_params().unwrap();
+        let corpus = Arc::new(MarkovCorpus::new(sess.vocab, 0.4, 3));
+        let n = nb.main_batch();
+        let ones_l = vec![1.0f32; sess.n_layers];
+        let ones_w = vec![1.0f32; sess.n_sampled];
+        let mut step_ms = [0.0f64; 2];
+        for (slot, depth) in [0usize, 2].into_iter().enumerate() {
+            let mut pf = Prefetcher::new(
+                MlmSource::new(corpus.clone(), n, sess.seq_len, sess.vocab, 0.15, 11),
+                depth,
+            );
+            // warm-up step (also lets the producer fill its queue)
+            let b = pf.next().unwrap().into_mlm().unwrap();
+            sess.fwd_bwd_mlm(&params, &b, 0, &ones_l, &ones_w, &ones_w).unwrap();
+            let ms = common::time_median_ms(7, || {
+                let b = pf.next().unwrap().into_mlm().unwrap();
+                sess.fwd_bwd_mlm(&params, &b, 1, &ones_l, &ones_w, &ones_w).unwrap();
+            });
+            let mode = if depth == 0 { "sync" } else { "prefetch" };
+            table.row(vec![
+                format!("small: mlm masked step, {mode} (depth {depth})"),
+                format!("{ms:.2}"),
+                "pipeline".into(),
+            ]);
+            step_ms[slot] = ms;
+        }
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("sync_ms".into(), Json::Num(step_ms[0]));
+        o.insert("prefetch_ms".into(), Json::Num(step_ms[1]));
+        o.insert("depth".into(), Json::Num(2.0));
+        o.insert("speedup".into(), Json::Num(step_ms[0] / step_ms[1]));
+        pipeline_json.insert("mlm_session_step_small".into(), Json::Obj(o));
+    }
+    let json_path = common::results_dir().join("BENCH_pipeline.json");
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(pipeline_json))).unwrap();
+    println!("(async pipeline json: {})", json_path.display());
 
     table.print("perf_micro — L3 hot-path profile");
 }

@@ -8,8 +8,13 @@
 
 mod common;
 
+use std::sync::Arc;
+
 use vcas::config::Method;
-use vcas::coordinator::parallel::{data_parallel_grads, tree_allreduce_mean, tree_depth};
+use vcas::coordinator::parallel::{
+    data_parallel_grads, data_parallel_grads_streamed, tree_allreduce_mean, tree_depth,
+};
+use vcas::coordinator::pipeline::{sharded_streams, BatchSource, ImgSource};
 use vcas::data::batch::gather_img;
 use vcas::data::images::{generate_images, ImageSpec};
 use vcas::runtime::{Backend, NativeBackend};
@@ -99,4 +104,36 @@ fn main() {
         ]);
     }
     ddp.print("Table 8 (cont.) — real-thread DDP round, fixed total batch");
+
+    // Streamed DDP round: each worker pulls its shard from its own
+    // prefetch queue (depth 2) instead of waiting on a leader gather —
+    // same tree combine, bitwise-identical round, host-side batch work
+    // overlapped with the previous round's compute.
+    let ds = Arc::new(ds);
+    let mut ddp_s = common::Table::new(&["workers", "round ms", "notes"]);
+    for w in [1usize, 2, 4, 8] {
+        let mut shards = sharded_streams(w, ds.n, 2, |range| {
+            Box::new(ImgSource::new(ds.clone(), ds.n, 29).with_shard(range))
+                as Box<dyn BatchSource>
+        });
+        // one warm round lets the producers fill their queues
+        let _ = data_parallel_grads_streamed(&mut shards, |wk, b| {
+            let batch = b.into_img()?;
+            native.cnn_fwd_bwd("cnn", &params, &batch, wk as i32, &rho).map(|o| o.grads)
+        })
+        .unwrap();
+        let ms = common::time_median_ms(5, || {
+            let _ = data_parallel_grads_streamed(&mut shards, |wk, b| {
+                let batch = b.into_img()?;
+                native.cnn_fwd_bwd("cnn", &params, &batch, wk as i32, &rho).map(|o| o.grads)
+            })
+            .unwrap();
+        });
+        ddp_s.row(vec![
+            w.to_string(),
+            format!("{ms:.1}"),
+            "sharded prefetch streams, depth 2".into(),
+        ]);
+    }
+    ddp_s.print("Table 8 (cont.) — streamed DDP round (prefetch queues, no leader gather)");
 }

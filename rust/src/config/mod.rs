@@ -143,6 +143,11 @@ pub struct TrainConfig {
     /// Native kernel threads (0 = auto: `VCAS_THREADS` env when set, else
     /// `available_parallelism()`). Bitwise-identical results at any value.
     pub threads: usize,
+    /// Async pipeline prefetch depth: batches materialized ahead of the
+    /// trainer by a producer thread (0 = fully synchronous; `None` = auto:
+    /// `VCAS_PREFETCH` env when set, else double buffering). Bitwise-
+    /// identical trajectories at any depth; MLM tasks force 0.
+    pub prefetch: Option<usize>,
     /// Where to write metrics CSVs (empty = no CSV).
     pub out_dir: String,
 }
@@ -162,6 +167,7 @@ impl Default for TrainConfig {
             optim: OptimConfig::default(),
             workers: 1,
             threads: 0,
+            prefetch: None,
             out_dir: String::new(),
         }
     }
@@ -200,6 +206,9 @@ impl TrainConfig {
         }
         if let Some(v) = t.get_int("train", "threads") {
             c.threads = v as usize;
+        }
+        if let Some(v) = t.get_int("train", "prefetch") {
+            c.prefetch = Some(v as usize);
         }
         if let Some(v) = t.get_str("train", "out_dir") {
             c.out_dir = v;
@@ -281,6 +290,7 @@ mod tests {
             steps = 123
             keep_ratio = 0.25
             threads = 3
+            prefetch = 4
             [vcas]
             tau_act = 0.1
             m_repeats = 4
@@ -299,9 +309,11 @@ mod tests {
         assert_eq!(c.optim.lr, 1e-3);
         assert_eq!(c.optim.schedule, "const");
         assert_eq!(c.threads, 3);
+        assert_eq!(c.prefetch, Some(4));
         // untouched keys keep defaults
         assert_eq!(c.vcas.beta, 0.95);
         assert_eq!(TrainConfig::default().threads, 0, "default threads = auto");
+        assert_eq!(TrainConfig::default().prefetch, None, "default prefetch = auto");
     }
 
     #[test]

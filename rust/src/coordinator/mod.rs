@@ -1,14 +1,18 @@
 //! The L3 coordinator: the paper's variance-controlled adaptation (Alg. 1),
-//! the comparison baselines, FLOPs accounting, the training loop and the
-//! real-thread data-parallel substrate (`parallel`).
+//! the comparison baselines, FLOPs accounting, the training loop, the
+//! real-thread data-parallel substrate (`parallel`) and the async batch
+//! pipeline (`pipeline`: sharded prefetch streams with deterministic
+//! double buffering).
 
 pub mod baselines;
 pub mod flops;
 pub mod metrics;
 pub mod parallel;
+pub mod pipeline;
 pub mod trainer;
 pub mod vcas;
 
 pub use metrics::{EvalPoint, RunResult, VarianceSnapshot};
+pub use pipeline::{BatchSource, BatchStream, PreparedBatch, Prefetcher};
 pub use trainer::Trainer;
 pub use vcas::{GradSample, ProbeRecord, VcasController};

@@ -1,0 +1,601 @@
+//! Async training pipeline: sharded prefetch streams with deterministic
+//! double buffering.
+//!
+//! VCAS shortens the backward pass, which makes *host-side* batch work —
+//! epoch shuffling, gathers, MLM masking, DDP shard materialization — a
+//! visible slice of the step. This module moves that work off the critical
+//! path without giving up one bit of reproducibility:
+//!
+//! - [`BatchSource`] is a deterministic batch generator: each call returns
+//!   the next [`PreparedBatch`] of its fixed sequence (cls / mlm / img,
+//!   MLM masks pre-applied). Sources own their RNG state, so the sequence
+//!   depends only on the construction seed — never on *when* batches are
+//!   consumed.
+//! - [`BatchStream`] runs a source on a background OS thread, pushing into
+//!   a bounded `std::sync::mpsc` channel. FIFO channels preserve the
+//!   source order exactly, producer errors travel the channel as typed
+//!   `Err` values, and dropping the stream wakes a blocked producer and
+//!   joins it — no detached threads, no deadlock.
+//! - [`Prefetcher`] is the consumer-facing handle: depth `N >= 1` keeps up
+//!   to `N` batches materialized ahead of the consumer (depth 1 is classic
+//!   double buffering: batch `t+1` builds while step `t` runs); depth `0`
+//!   *is* the synchronous path — the source runs inline on the caller
+//!   thread with zero channel or thread machinery.
+//! - [`sharded_streams`] builds one prefetcher per DDP worker. Every
+//!   producer replays the same full-batch sequence from its own sampler /
+//!   RNG replica (a deterministic per-shard split — no shared state, no
+//!   locks) and keeps only its shard's rows, so the shard queues jointly
+//!   reproduce the old leader gather bitwise while each worker pulls from
+//!   its own queue.
+//!
+//! **Determinism contract:** for a fixed source seed, the sequence of
+//! batches observed by the consumer is bitwise identical at every prefetch
+//! depth and worker count. The trainer's cls/img streams are driven by an
+//! [`EpochSampler`](crate::data::batch::EpochSampler) whose RNG lives
+//! inside the source, so prefetching changes wall-clock only. MLM batches
+//! drawn through the *trainer* consume its live RNG stream (interleaved
+//! with per-step sampler seeds), so the trainer forces depth 0 for MLM;
+//! [`MlmSource`] carries its own dedicated RNG and streams at any depth.
+
+use std::sync::mpsc::{sync_channel, Receiver};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::data::batch::{
+    gather_cls, gather_img, sample_mlm_batch, ClsBatch, EpochSampler, ImgBatch, MlmBatch,
+};
+use crate::data::images::ImageDataset;
+use crate::data::tasks::{ClsDataset, MarkovCorpus};
+use crate::error::{bail, Result};
+use crate::util::rng::Pcg32;
+
+use super::parallel::shard_ranges;
+
+/// Prefetch depth used when neither the config nor `VCAS_PREFETCH` says
+/// otherwise: one batch buffered plus one in flight.
+pub const DEFAULT_PREFETCH: usize = 2;
+
+/// Default prefetch depth: `VCAS_PREFETCH` when set to a parseable value,
+/// else [`DEFAULT_PREFETCH`]. Results are bitwise identical at any depth;
+/// the knob only moves wall-clock (and `0` pins the synchronous path).
+pub fn default_prefetch() -> usize {
+    std::env::var("VCAS_PREFETCH")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .unwrap_or(DEFAULT_PREFETCH)
+}
+
+/// A fully materialized batch, ready for literal marshalling into a
+/// backend entry (MLM masks already applied by the producer).
+#[derive(Clone, Debug)]
+pub enum PreparedBatch {
+    Cls(ClsBatch),
+    Mlm(MlmBatch),
+    Img(ImgBatch),
+}
+
+impl PreparedBatch {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PreparedBatch::Cls(_) => "cls",
+            PreparedBatch::Mlm(_) => "mlm",
+            PreparedBatch::Img(_) => "img",
+        }
+    }
+
+    pub fn into_cls(self) -> Result<ClsBatch> {
+        match self {
+            PreparedBatch::Cls(b) => Ok(b),
+            other => bail!("batch stream yielded a {} batch where cls was expected", other.kind()),
+        }
+    }
+
+    pub fn into_mlm(self) -> Result<MlmBatch> {
+        match self {
+            PreparedBatch::Mlm(b) => Ok(b),
+            other => bail!("batch stream yielded a {} batch where mlm was expected", other.kind()),
+        }
+    }
+
+    pub fn into_img(self) -> Result<ImgBatch> {
+        match self {
+            PreparedBatch::Img(b) => Ok(b),
+            other => bail!("batch stream yielded a {} batch where img was expected", other.kind()),
+        }
+    }
+}
+
+/// A deterministic batch generator. Implementations own every bit of state
+/// the sequence depends on (datasets behind `Arc`, samplers, RNGs), so the
+/// same constructor arguments always yield the same batch sequence —
+/// whether pulled inline or from a producer thread.
+pub trait BatchSource: Send {
+    fn next_batch(&mut self) -> Result<PreparedBatch>;
+}
+
+impl BatchSource for Box<dyn BatchSource> {
+    fn next_batch(&mut self) -> Result<PreparedBatch> {
+        (**self).next_batch()
+    }
+}
+
+/// Classification batches: epoch-shuffled gathers over a shared dataset.
+/// With a shard range, the source still replays the *full* batch index
+/// sequence and keeps rows `[start, end)` of each batch — the slice the
+/// leader gather would have handed this worker.
+pub struct ClsSource {
+    ds: Arc<ClsDataset>,
+    sampler: EpochSampler,
+    batch: usize,
+    shard: Option<(usize, usize)>,
+}
+
+impl ClsSource {
+    pub fn new(ds: Arc<ClsDataset>, batch: usize, seed: u64) -> ClsSource {
+        let sampler = EpochSampler::new(ds.n, seed);
+        ClsSource { ds, sampler, batch, shard: None }
+    }
+
+    /// Keep only rows `[start, end)` of each full batch (a DDP shard).
+    pub fn with_shard(mut self, range: (usize, usize)) -> ClsSource {
+        assert!(range.0 <= range.1 && range.1 <= self.batch, "shard {range:?} out of batch");
+        self.shard = Some(range);
+        self
+    }
+}
+
+impl BatchSource for ClsSource {
+    fn next_batch(&mut self) -> Result<PreparedBatch> {
+        let idx = self.sampler.take(self.batch);
+        let rows = match self.shard {
+            Some((s, e)) => &idx[s..e],
+            None => &idx[..],
+        };
+        Ok(PreparedBatch::Cls(gather_cls(&self.ds, rows)))
+    }
+}
+
+/// Image batches for the CNN path; sharding as in [`ClsSource`].
+pub struct ImgSource {
+    ds: Arc<ImageDataset>,
+    sampler: EpochSampler,
+    batch: usize,
+    shard: Option<(usize, usize)>,
+}
+
+impl ImgSource {
+    pub fn new(ds: Arc<ImageDataset>, batch: usize, seed: u64) -> ImgSource {
+        let sampler = EpochSampler::new(ds.n, seed);
+        ImgSource { ds, sampler, batch, shard: None }
+    }
+
+    pub fn with_shard(mut self, range: (usize, usize)) -> ImgSource {
+        assert!(range.0 <= range.1 && range.1 <= self.batch, "shard {range:?} out of batch");
+        self.shard = Some(range);
+        self
+    }
+}
+
+impl BatchSource for ImgSource {
+    fn next_batch(&mut self) -> Result<PreparedBatch> {
+        let idx = self.sampler.take(self.batch);
+        let rows = match self.shard {
+            Some((s, e)) => &idx[s..e],
+            None => &idx[..],
+        };
+        Ok(PreparedBatch::Img(gather_img(&self.ds, rows)))
+    }
+}
+
+/// MLM batches with masking pre-applied by the producer, drawn from a
+/// dedicated RNG stream (`seed` fully determines the sequence). Sharded
+/// sources generate the full batch and slice their rows, so every worker's
+/// view matches the leader gather bitwise.
+pub struct MlmSource {
+    corpus: Arc<MarkovCorpus>,
+    rng: Pcg32,
+    batch: usize,
+    seq_len: usize,
+    vocab: usize,
+    mask_rate: f64,
+    shard: Option<(usize, usize)>,
+}
+
+impl MlmSource {
+    pub fn new(
+        corpus: Arc<MarkovCorpus>,
+        batch: usize,
+        seq_len: usize,
+        vocab: usize,
+        mask_rate: f64,
+        seed: u64,
+    ) -> MlmSource {
+        MlmSource {
+            corpus,
+            rng: Pcg32::new(seed, 0x9E1F),
+            batch,
+            seq_len,
+            vocab,
+            mask_rate,
+            shard: None,
+        }
+    }
+
+    pub fn with_shard(mut self, range: (usize, usize)) -> MlmSource {
+        assert!(range.0 <= range.1 && range.1 <= self.batch, "shard {range:?} out of batch");
+        self.shard = Some(range);
+        self
+    }
+}
+
+impl BatchSource for MlmSource {
+    fn next_batch(&mut self) -> Result<PreparedBatch> {
+        let full = sample_mlm_batch(
+            &self.corpus,
+            self.batch,
+            self.seq_len,
+            self.vocab,
+            self.mask_rate,
+            &mut self.rng,
+        );
+        Ok(PreparedBatch::Mlm(match self.shard {
+            Some((s, e)) => full.slice_rows(s, e),
+            None => full,
+        }))
+    }
+}
+
+/// A producer thread feeding a bounded channel: the runtime behind every
+/// `depth >= 1` [`Prefetcher`]. The channel capacity is the prefetch
+/// depth; once it fills, the producer blocks until the consumer drains a
+/// slot, so at most `depth + 1` unconsumed batches exist at a time —
+/// `depth` queued plus the one the blocked producer already built.
+pub struct BatchStream {
+    rx: Option<Receiver<Result<PreparedBatch>>>,
+    producer: Option<JoinHandle<()>>,
+}
+
+impl BatchStream {
+    /// Spawn the producer. `depth` must be >= 1 (depth 0 is the synchronous
+    /// path and never constructs a stream — see [`Prefetcher::new`]).
+    pub fn spawn(mut source: impl BatchSource + 'static, depth: usize) -> BatchStream {
+        assert!(depth >= 1, "BatchStream needs depth >= 1 (depth 0 is the sync path)");
+        let (tx, rx) = sync_channel::<Result<PreparedBatch>>(depth);
+        let producer = std::thread::Builder::new()
+            .name("vcas-prefetch".into())
+            .spawn(move || loop {
+                let item = source.next_batch();
+                let stop = item.is_err();
+                // A send error means the consumer dropped its receiver —
+                // the clean-shutdown signal. After delivering an Err the
+                // producer also stops: the source's sequence is broken and
+                // replaying past an error would desynchronize it.
+                if tx.send(item).is_err() || stop {
+                    return;
+                }
+            })
+            .expect("spawn prefetch producer thread");
+        BatchStream { rx: Some(rx), producer: Some(producer) }
+    }
+
+    /// Next batch in source order. A producer-side error arrives here as a
+    /// typed `Err`; pulling again after that (or after a producer panic)
+    /// reports the stream as closed.
+    pub fn next(&mut self) -> Result<PreparedBatch> {
+        let rx = self.rx.as_ref().expect("receiver lives until drop");
+        match rx.recv() {
+            Ok(item) => item,
+            Err(_) => bail!("batch stream closed: producer terminated (after an error or panic)"),
+        }
+    }
+}
+
+impl Drop for BatchStream {
+    fn drop(&mut self) {
+        // Disconnect the channel first so a producer blocked on a full
+        // queue wakes with a SendError, then join — dropping a stream
+        // mid-epoch must leak no thread and cannot deadlock.
+        drop(self.rx.take());
+        if let Some(h) = self.producer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+enum Inner {
+    Sync(Box<dyn BatchSource>),
+    Stream(BatchStream),
+}
+
+/// Consumer handle over a batch sequence: synchronous at depth 0, an
+/// N-deep double-buffered [`BatchStream`] otherwise. The observed sequence
+/// is identical either way.
+pub struct Prefetcher {
+    inner: Inner,
+    depth: usize,
+}
+
+impl Prefetcher {
+    pub fn new(source: impl BatchSource + 'static, depth: usize) -> Prefetcher {
+        let inner = if depth == 0 {
+            Inner::Sync(Box::new(source))
+        } else {
+            Inner::Stream(BatchStream::spawn(source, depth))
+        };
+        Prefetcher { inner, depth }
+    }
+
+    /// Configured depth (0 = synchronous inline source).
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    pub fn next(&mut self) -> Result<PreparedBatch> {
+        match &mut self.inner {
+            Inner::Sync(source) => source.next_batch(),
+            Inner::Stream(stream) => stream.next(),
+        }
+    }
+}
+
+/// One prefetcher per DDP worker over a common full-batch sequence:
+/// `make(range)` builds worker w's source for rows `range` of each
+/// `batch`-row batch (use the sources' `with_shard`). Shard w's stream
+/// yields exactly the rows the leader gather would have sliced for it, so
+/// `workers` queues jointly cover every batch row exactly once and DDP
+/// rounds stay bitwise identical to the leader-loop shape.
+pub fn sharded_streams<F>(workers: usize, batch: usize, depth: usize, make: F) -> Vec<Prefetcher>
+where
+    F: Fn((usize, usize)) -> Box<dyn BatchSource>,
+{
+    shard_ranges(batch, workers)
+        .into_iter()
+        .map(|range| Prefetcher::new(make(range), depth))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::images::{generate_images, ImageSpec};
+    use crate::data::tasks::{find, generate_cls};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    fn cls_ds() -> Arc<ClsDataset> {
+        let spec = find("sst2-sim").unwrap();
+        Arc::new(generate_cls(&spec, 64, 8, 64, 7))
+    }
+
+    fn img_ds() -> Arc<ImageDataset> {
+        let spec = ImageSpec { img: 4, channels: 2, ..ImageSpec::default() };
+        Arc::new(generate_images(&spec, 32, 9))
+    }
+
+    fn corpus() -> Arc<MarkovCorpus> {
+        Arc::new(MarkovCorpus::new(64, 0.3, 5))
+    }
+
+    fn le_i32(v: &[i32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    fn le_usize(v: &[usize]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_le_bytes()).collect()
+    }
+
+    fn le_f32(v: &[f32]) -> Vec<u8> {
+        v.iter().flat_map(|x| x.to_bits().to_le_bytes()).collect()
+    }
+
+    /// Per-field byte images of a batch, so "bitwise equal" is literal and
+    /// a round of contiguous shard batches concatenates field-by-field to
+    /// exactly the full batch's images.
+    fn field_bits(b: &PreparedBatch) -> [Vec<u8>; 3] {
+        match b {
+            PreparedBatch::Cls(c) => [le_i32(&c.x), le_i32(&c.y), le_usize(&c.idx)],
+            PreparedBatch::Mlm(m) => [le_i32(&m.x), le_i32(&m.y), le_f32(&m.w)],
+            PreparedBatch::Img(i) => [le_f32(&i.x), le_i32(&i.y), le_usize(&i.idx)],
+        }
+    }
+
+    /// Reference sequence = the bare source pulled inline; every depth and
+    /// worker split must reproduce it bitwise, with the workers' shard
+    /// batches concatenating (field-wise, in worker order) to the full
+    /// batch.
+    fn assert_stream_matches_reference<Mk>(batch: usize, rounds: usize, make: Mk)
+    where
+        Mk: Fn(Option<(usize, usize)>) -> Box<dyn BatchSource>,
+    {
+        let mut reference = make(None);
+        let ref_batches: Vec<PreparedBatch> =
+            (0..rounds).map(|_| reference.next_batch().unwrap()).collect();
+
+        for workers in [1usize, 2, 4] {
+            for depth in [0usize, 1, 4] {
+                let mut shards = sharded_streams(workers, batch, depth, |r| make(Some(r)));
+                for want in &ref_batches {
+                    let mut got: [Vec<u8>; 3] = Default::default();
+                    for shard in shards.iter_mut() {
+                        let fields = field_bits(&shard.next().unwrap());
+                        for (acc, field) in got.iter_mut().zip(fields) {
+                            acc.extend(field);
+                        }
+                    }
+                    assert_eq!(
+                        got,
+                        field_bits(want),
+                        "sequence diverged at workers={workers} depth={depth}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cls_stream_bitwise_equal_across_depths_and_workers() {
+        let ds = cls_ds();
+        assert_stream_matches_reference(8, 12, |shard| {
+            let src = ClsSource::new(ds.clone(), 8, 41);
+            Box::new(match shard {
+                Some(r) => src.with_shard(r),
+                None => src,
+            })
+        });
+    }
+
+    #[test]
+    fn img_stream_bitwise_equal_across_depths_and_workers() {
+        let ds = img_ds();
+        assert_stream_matches_reference(8, 10, |shard| {
+            let src = ImgSource::new(ds.clone(), 8, 43);
+            Box::new(match shard {
+                Some(r) => src.with_shard(r),
+                None => src,
+            })
+        });
+    }
+
+    #[test]
+    fn mlm_stream_bitwise_equal_across_depths_and_workers() {
+        let corpus = corpus();
+        assert_stream_matches_reference(8, 10, |shard| {
+            let src = MlmSource::new(corpus.clone(), 8, 8, 64, 0.15, 45);
+            Box::new(match shard {
+                Some(r) => src.with_shard(r),
+                None => src,
+            })
+        });
+    }
+
+    #[test]
+    fn shard_splits_cover_each_index_exactly_once_per_epoch() {
+        // n=64, batch=16 -> 4 batches per epoch; uneven 3-way shard split.
+        let ds = cls_ds();
+        for workers in [1usize, 2, 3, 4] {
+            let mut shards = sharded_streams(workers, 16, 1, |r| {
+                Box::new(ClsSource::new(ds.clone(), 16, 77).with_shard(r))
+            });
+            let mut seen = vec![0u32; ds.n];
+            for _ in 0..4 {
+                for shard in shards.iter_mut() {
+                    let b = shard.next().unwrap().into_cls().unwrap();
+                    for &i in &b.idx {
+                        seen[i] += 1;
+                    }
+                }
+            }
+            assert!(
+                seen.iter().all(|&c| c == 1),
+                "workers={workers}: epoch coverage {seen:?}"
+            );
+        }
+    }
+
+    /// Source that yields `left` tiny batches, then a typed error.
+    struct FailingSource {
+        left: usize,
+    }
+
+    impl BatchSource for FailingSource {
+        fn next_batch(&mut self) -> Result<PreparedBatch> {
+            if self.left == 0 {
+                bail!("disk shard unreadable mid-epoch");
+            }
+            self.left -= 1;
+            Ok(PreparedBatch::Cls(ClsBatch {
+                n: 1,
+                seq_len: 1,
+                x: vec![0],
+                y: vec![0],
+                idx: vec![0],
+            }))
+        }
+    }
+
+    #[test]
+    fn producer_error_surfaces_typed_at_consumer() {
+        for depth in [0usize, 2] {
+            let mut pf = Prefetcher::new(FailingSource { left: 3 }, depth);
+            for _ in 0..3 {
+                assert!(pf.next().is_ok(), "depth {depth}: good batches consumed first");
+            }
+            let err = pf.next().unwrap_err();
+            assert!(
+                err.to_string().contains("unreadable mid-epoch"),
+                "depth {depth}: wrong error {err}"
+            );
+            if depth > 0 {
+                // the producer stopped after delivering the error; the
+                // stream now reports itself closed instead of hanging
+                let err = pf.next().unwrap_err();
+                assert!(err.to_string().contains("closed"), "{err}");
+            }
+        }
+    }
+
+    /// Infinite source that counts how many batches it produced and holds
+    /// an Arc so tests can observe the producer thread releasing it.
+    struct CountingSource {
+        produced: Arc<AtomicUsize>,
+    }
+
+    impl BatchSource for CountingSource {
+        fn next_batch(&mut self) -> Result<PreparedBatch> {
+            let k = self.produced.fetch_add(1, Ordering::SeqCst);
+            Ok(PreparedBatch::Cls(ClsBatch {
+                n: 1,
+                seq_len: 1,
+                x: vec![k as i32],
+                y: vec![0],
+                idx: vec![k],
+            }))
+        }
+    }
+
+    #[test]
+    fn dropping_prefetcher_mid_stream_joins_producer_without_deadlock() {
+        let produced = Arc::new(AtomicUsize::new(0));
+        let mut pf = Prefetcher::new(CountingSource { produced: produced.clone() }, 2);
+        // pull one batch, leave the producer blocked on a full channel
+        let first = pf.next().unwrap().into_cls().unwrap();
+        assert_eq!(first.x, vec![0]);
+        drop(pf);
+        // Drop joined the producer thread, so its source (and Arc clone)
+        // is gone: only the test's handle remains, and the count is frozen.
+        assert_eq!(Arc::strong_count(&produced), 1, "producer thread not joined");
+        let frozen = produced.load(Ordering::SeqCst);
+        assert!(frozen <= 4, "bounded channel overran its depth: {frozen}");
+    }
+
+    #[test]
+    fn depth_zero_runs_inline_without_a_thread() {
+        let produced = Arc::new(AtomicUsize::new(0));
+        let mut pf = Prefetcher::new(CountingSource { produced: produced.clone() }, 0);
+        assert_eq!(pf.depth(), 0);
+        assert_eq!(produced.load(Ordering::SeqCst), 0, "sync source must be lazy");
+        let _ = pf.next().unwrap();
+        assert_eq!(produced.load(Ordering::SeqCst), 1, "exactly the pulled batch");
+    }
+
+    #[test]
+    fn prepared_batch_variant_mismatch_is_typed_error() {
+        let b = PreparedBatch::Mlm(MlmBatch {
+            n: 1,
+            seq_len: 1,
+            x: vec![0],
+            y: vec![0],
+            w: vec![0.0],
+        });
+        let err = b.into_cls().unwrap_err();
+        assert!(err.to_string().contains("mlm"), "{err}");
+    }
+
+    #[test]
+    fn default_prefetch_is_double_buffered() {
+        // env-independent assertion: the constant the env knob falls back to
+        assert_eq!(DEFAULT_PREFETCH, 2);
+        if std::env::var("VCAS_PREFETCH").is_err() {
+            assert_eq!(default_prefetch(), DEFAULT_PREFETCH);
+        }
+    }
+}

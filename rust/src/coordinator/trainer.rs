@@ -14,10 +14,10 @@
 //! two-ledger accountant per the paper's accounting (see flops.rs);
 //! evaluation runs on held-out data.
 
+use std::sync::Arc;
+
 use crate::config::{Method, TrainConfig};
-use crate::data::batch::{
-    gather_cls, gather_img, sample_mlm_batch, ClsBatch, EpochSampler, ImgBatch, MlmBatch,
-};
+use crate::data::batch::{gather_cls, gather_img, sample_mlm_batch, ClsBatch, ImgBatch, MlmBatch};
 use crate::data::images::{generate_images, ImageDataset, ImageSpec};
 use crate::data::tasks::{find, generate_cls, ClsDataset, MarkovCorpus};
 use crate::error::{anyhow, bail, Result};
@@ -30,6 +30,7 @@ use crate::util::Stopwatch;
 use super::baselines::{ub_select, uniform_select, SbSelector, Selection};
 use super::flops::{CnnFlops, FlopsLedger, TransformerFlops};
 use super::metrics::{EvalPoint, RunResult, VarianceSnapshot};
+use super::pipeline::{default_prefetch, ClsSource, ImgSource, Prefetcher};
 use super::vcas::{GradSample, VcasController};
 
 const TRAIN_SET: usize = 4096;
@@ -42,11 +43,14 @@ fn no_controller_err(method: &str) -> crate::error::Error {
     anyhow!("method {method:?} has no VCAS controller (probes/ratios need method = \"vcas\")")
 }
 
-/// Task payload bound to a trainer.
+/// Task payload bound to a trainer. Training batches arrive through the
+/// async pipeline's [`Prefetcher`] (depth 0 = the old synchronous gather,
+/// run inline; depth N = producer thread, bitwise-identical sequence);
+/// eval stays a direct gather over fixed index ranges.
 enum TaskData {
-    Cls { train: ClsDataset, eval: ClsDataset, sampler: EpochSampler },
+    Cls { eval: ClsDataset, stream: Prefetcher },
     Mlm { corpus: MarkovCorpus },
-    Img { train: ImageDataset, eval: ImageDataset, sampler: EpochSampler },
+    Img { eval: ImageDataset, stream: Prefetcher },
 }
 
 pub struct Trainer<'a> {
@@ -64,6 +68,7 @@ pub struct Trainer<'a> {
     rng: Pcg32,
     main_batch: usize,
     sub_batch: usize,
+    prefetch: usize,
     step: usize,
 }
 
@@ -74,42 +79,59 @@ impl<'a> Trainer<'a> {
         let info = session.info().clone();
         let mut rng = Pcg32::new(cfg.seed, 0x7EA1);
 
-        let (data, tf_flops, cnn_flops, main_batch) = if info.kind == ModelKind::Cnn {
+        // Prefetch depth: config override, else VCAS_PREFETCH / double
+        // buffering. The epoch sampler's RNG lives inside the stream's
+        // producer (seeded by the same `rng.next_u64()` draw the old
+        // synchronous sampler used), so the batch sequence — and with it
+        // the whole trajectory — is bitwise identical at any depth.
+        let depth = cfg.prefetch.unwrap_or_else(default_prefetch);
+
+        let (data, tf_flops, cnn_flops, main_batch, prefetch) = if info.kind == ModelKind::Cnn {
             let spec = ImageSpec {
                 img: info.img,
                 channels: info.in_ch,
                 n_classes: info.n_classes,
                 ..ImageSpec::default()
             };
-            let train = generate_images(&spec, TRAIN_SET, cfg.seed ^ 0x11);
+            let train = Arc::new(generate_images(&spec, TRAIN_SET, cfg.seed ^ 0x11));
             let eval = generate_images(&spec, EVAL_SET, cfg.seed ^ 0x22);
-            let sampler = EpochSampler::new(TRAIN_SET, rng.next_u64());
+            let batch = backend.cnn_batch();
+            let stream = Prefetcher::new(ImgSource::new(train, batch, rng.next_u64()), depth);
             (
-                TaskData::Img { train, eval, sampler },
+                TaskData::Img { eval, stream },
                 None,
                 Some(CnnFlops::from_info(&info)),
-                backend.cnn_batch(),
+                batch,
+                depth,
             )
         } else if cfg.task == "mlm" {
+            // MLM masking consumes the trainer's live RNG stream
+            // (interleaved with per-step sampler seeds), so the sequence
+            // cannot be produced ahead of time: depth is forced to 0.
             let corpus = MarkovCorpus::new(session.vocab, 0.4, cfg.seed ^ 0x33);
             (
                 TaskData::Mlm { corpus },
                 Some(TransformerFlops::from_info(&info)),
                 None,
                 backend.main_batch(),
+                0,
             )
         } else {
             let Some(spec) = find(&cfg.task) else {
                 bail!("unknown task {:?}", cfg.task);
             };
-            let train = generate_cls(&spec, session.vocab, session.seq_len, TRAIN_SET, cfg.seed ^ 0x11);
+            let train = Arc::new(generate_cls(
+                &spec, session.vocab, session.seq_len, TRAIN_SET, cfg.seed ^ 0x11,
+            ));
             let eval = generate_cls(&spec, session.vocab, session.seq_len, EVAL_SET, cfg.seed ^ 0x22);
-            let sampler = EpochSampler::new(TRAIN_SET, rng.next_u64());
+            let batch = backend.main_batch();
+            let stream = Prefetcher::new(ClsSource::new(train, batch, rng.next_u64()), depth);
             (
-                TaskData::Cls { train, eval, sampler },
+                TaskData::Cls { eval, stream },
                 Some(TransformerFlops::from_info(&info)),
                 None,
-                backend.main_batch(),
+                batch,
+                depth,
             )
         };
 
@@ -161,6 +183,7 @@ impl<'a> Trainer<'a> {
             rng,
             main_batch,
             sub_batch,
+            prefetch,
             step: 0,
         })
     }
@@ -176,37 +199,31 @@ impl<'a> Trainer<'a> {
 
     // ---- batch plumbing --------------------------------------------------
 
-    fn next_cls_batch(&mut self) -> ClsBatch {
+    fn next_cls_batch(&mut self) -> Result<ClsBatch> {
         match &mut self.data {
-            TaskData::Cls { train, sampler, .. } => {
-                let idx = sampler.take(self.main_batch);
-                gather_cls(train, &idx)
-            }
-            _ => unreachable!("cls batch on non-cls task"),
+            TaskData::Cls { stream, .. } => stream.next()?.into_cls(),
+            _ => bail!("cls batch requested on a non-cls task"),
         }
     }
 
-    fn next_mlm_batch(&mut self) -> MlmBatch {
+    fn next_mlm_batch(&mut self) -> Result<MlmBatch> {
         match &self.data {
-            TaskData::Mlm { corpus } => sample_mlm_batch(
+            TaskData::Mlm { corpus } => Ok(sample_mlm_batch(
                 corpus,
                 self.main_batch,
                 self.session.seq_len,
                 self.session.vocab,
                 MLM_MASK_RATE,
                 &mut self.rng,
-            ),
-            _ => unreachable!("mlm batch on non-mlm task"),
+            )),
+            _ => bail!("mlm batch requested on a non-mlm task"),
         }
     }
 
-    fn next_img_batch(&mut self) -> ImgBatch {
+    fn next_img_batch(&mut self) -> Result<ImgBatch> {
         match &mut self.data {
-            TaskData::Img { train, sampler, .. } => {
-                let idx = sampler.take(self.main_batch);
-                gather_img(train, &idx)
-            }
-            _ => unreachable!("img batch on non-img task"),
+            TaskData::Img { stream, .. } => stream.next()?.into_img(),
+            _ => bail!("img batch requested on a non-img task"),
         }
     }
 
@@ -328,7 +345,7 @@ impl<'a> Trainer<'a> {
 
         for _ in 0..m {
             if self.is_img() {
-                let batch = self.next_img_batch();
+                let batch = self.next_img_batch()?;
                 let ones_sites = vec![1.0f32; self.session.n_layers];
                 exact.push(Self::to_sample(self.grad_img(&batch, &ones_sites)?));
                 let mut reps = Vec::with_capacity(m);
@@ -337,7 +354,7 @@ impl<'a> Trainer<'a> {
                 }
                 sampled.push(reps);
             } else if self.is_mlm() {
-                let batch = self.next_mlm_batch();
+                let batch = self.next_mlm_batch()?;
                 exact.push(Self::to_sample(self.grad_mlm(
                     &batch, &ones_rho, &ones_nu, &nu_probe,
                 )?));
@@ -349,7 +366,7 @@ impl<'a> Trainer<'a> {
                 }
                 sampled.push(reps);
             } else {
-                let batch = self.next_cls_batch();
+                let batch = self.next_cls_batch()?;
                 exact.push(Self::to_sample(self.grad_cls(
                     &batch, &ones_rho, &ones_nu, &nu_probe, None,
                 )?));
@@ -391,18 +408,18 @@ impl<'a> Trainer<'a> {
             Method::Exact => {
                 let (rho1, nu1) = self.ones();
                 let loss = if self.is_img() {
-                    let batch = self.next_img_batch();
+                    let batch = self.next_img_batch()?;
                     let ones_sites = vec![1.0f32; self.session.n_layers];
                     let out = self.grad_img(&batch, &ones_sites)?;
                     self.apply(&out.grads);
                     out.loss
                 } else if self.is_mlm() {
-                    let batch = self.next_mlm_batch();
+                    let batch = self.next_mlm_batch()?;
                     let out = self.grad_mlm(&batch, &rho1, &nu1, &nu1)?;
                     self.apply(&out.grads);
                     out.loss
                 } else {
-                    let batch = self.next_cls_batch();
+                    let batch = self.next_cls_batch()?;
                     let out = self.grad_cls(&batch, &rho1, &nu1, &nu1, None)?;
                     self.apply(&out.grads);
                     out.loss
@@ -416,17 +433,17 @@ impl<'a> Trainer<'a> {
                 }
                 let (rho, nu) = self.controller()?.train_ratios();
                 let loss = if self.is_img() {
-                    let batch = self.next_img_batch();
+                    let batch = self.next_img_batch()?;
                     let out = self.grad_img(&batch, &rho)?;
                     self.apply(&out.grads);
                     out.loss
                 } else if self.is_mlm() {
-                    let batch = self.next_mlm_batch();
+                    let batch = self.next_mlm_batch()?;
                     let out = self.grad_mlm(&batch, &rho, &nu, &nu)?;
                     self.apply(&out.grads);
                     out.loss
                 } else {
-                    let batch = self.next_cls_batch();
+                    let batch = self.next_cls_batch()?;
                     let out = self.grad_cls(&batch, &rho, &nu, &nu, None)?;
                     self.apply(&out.grads);
                     out.loss
@@ -438,7 +455,7 @@ impl<'a> Trainer<'a> {
                 if self.is_img() || self.is_mlm() {
                     bail!("SB/UB/uniform baselines are wired for classification tasks");
                 }
-                let batch = self.next_cls_batch();
+                let batch = self.next_cls_batch()?;
                 let (losses, ub_scores) = self.session.fwd_loss_cls(&self.params, &batch)?;
                 let k = self.sub_batch;
                 let sel: Selection = match self.cfg.method {
@@ -545,7 +562,7 @@ impl<'a> Trainer<'a> {
         let mut exact_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(reps);
         let mut batches = Vec::with_capacity(reps);
         for _ in 0..reps {
-            let batch = self.next_cls_batch();
+            let batch = self.next_cls_batch()?;
             let g = self.grad_cls(&batch, &rho1, &nu1, &nu1, None)?;
             exact_grads.push(g.grads);
             batches.push(batch);
@@ -635,14 +652,14 @@ impl<'a> Trainer<'a> {
     pub fn measure_sparsity(&mut self) -> Result<Vec<f32>> {
         let (rho1, nu1) = self.ones();
         let out = if self.is_img() {
-            let batch = self.next_img_batch();
+            let batch = self.next_img_batch()?;
             let sites = vec![1.0f32; self.session.n_layers];
             self.grad_img(&batch, &sites)?
         } else if self.is_mlm() {
-            let batch = self.next_mlm_batch();
+            let batch = self.next_mlm_batch()?;
             self.grad_mlm(&batch, &rho1, &nu1, &nu1)?
         } else {
-            let batch = self.next_cls_batch();
+            let batch = self.next_cls_batch()?;
             self.grad_cls(&batch, &rho1, &nu1, &nu1, None)?
         };
         Ok(out.act_norms)
@@ -696,6 +713,13 @@ impl<'a> Trainer<'a> {
             }
         }
         Ok(result)
+    }
+
+    /// Effective prefetch depth of the training batch stream (0 = fully
+    /// synchronous; MLM tasks force 0 because masking consumes the live
+    /// trainer RNG stream — see the pipeline module docs).
+    pub fn prefetch_depth(&self) -> usize {
+        self.prefetch
     }
 
     /// Current live ratios (diagnostics; exact/baselines report all-ones).

@@ -26,6 +26,23 @@ pub struct MlmBatch {
     pub w: Vec<f32>,
 }
 
+impl MlmBatch {
+    /// Rows `[start, end)` as their own batch — the slice a sharded MLM
+    /// producer keeps after generating the full batch (masking included),
+    /// so DDP shard streams match the leader gather bitwise.
+    pub fn slice_rows(&self, start: usize, end: usize) -> MlmBatch {
+        assert!(start <= end && end <= self.n, "slice [{start}, {end}) out of {} rows", self.n);
+        let t = self.seq_len;
+        MlmBatch {
+            n: end - start,
+            seq_len: t,
+            x: self.x[start * t..end * t].to_vec(),
+            y: self.y[start * t..end * t].to_vec(),
+            w: self.w[start * t..end * t].to_vec(),
+        }
+    }
+}
+
 /// An image batch for the CNN path.
 #[derive(Clone, Debug)]
 pub struct ImgBatch {
@@ -184,6 +201,21 @@ mod tests {
         assert_eq!(&b.x[8..16], &ds.x[24..32]);
         assert_eq!(&b.x[16..24], &ds.x[0..8]);
         assert_eq!(b.y, vec![ds.y[3], ds.y[3], ds.y[0]]);
+    }
+
+    #[test]
+    fn mlm_slice_rows_matches_full_batch() {
+        let corpus = MarkovCorpus::new(128, 0.3, 2);
+        let mut rng = Pcg32::new(4, 4);
+        let b = sample_mlm_batch(&corpus, 8, 6, 128, 0.2, &mut rng);
+        let s = b.slice_rows(2, 5);
+        assert_eq!(s.n, 3);
+        assert_eq!(s.seq_len, 6);
+        assert_eq!(s.x, &b.x[12..30]);
+        assert_eq!(s.y, &b.y[12..30]);
+        assert_eq!(s.w, &b.w[12..30]);
+        assert_eq!(b.slice_rows(0, 8).x, b.x);
+        assert_eq!(b.slice_rows(4, 4).n, 0);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! easy/hard mixture — the same difficulty structure the token tasks use,
 //! so activation-gradient sparsity emerges as training fits the easy mass.
 
+use crate::error::{bail, ensure, Result};
 use crate::util::rng::Pcg32;
 
 #[derive(Clone, Debug)]
@@ -87,6 +88,41 @@ pub fn generate_images(spec: &ImageSpec, n: usize, seed: u64) -> ImageDataset {
     ImageDataset { spec: spec.clone(), n, x, y, hard }
 }
 
+/// Index of the prototype with the smallest squared pixel distance to
+/// `img`. Comparison runs on plain `<` over finite distances; a non-finite
+/// distance (NaN or inf pixels) is a typed error instead of the old
+/// `partial_cmp(..).unwrap()` panic — NaN would otherwise either crash or
+/// silently mis-sort the candidate order.
+pub fn nearest_prototype(img: &[f32], prototypes: &[Vec<f64>]) -> Result<usize> {
+    ensure!(!prototypes.is_empty(), "nearest_prototype: empty prototype set");
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (c, proto) in prototypes.iter().enumerate() {
+        ensure!(
+            proto.len() == img.len(),
+            "nearest_prototype: prototype {c} has {} pixels, image has {}",
+            proto.len(),
+            img.len()
+        );
+        let d: f64 = img
+            .iter()
+            .zip(proto)
+            .map(|(&x, &p)| {
+                let e = x as f64 - p;
+                e * e
+            })
+            .sum();
+        if !d.is_finite() {
+            bail!("nearest_prototype: non-finite distance to prototype {c} (NaN/inf pixels)");
+        }
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    Ok(best)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -131,22 +167,32 @@ mod tests {
                 continue;
             }
             easy_total += 1;
-            let best = (0..spec.n_classes)
-                .min_by(|&a, &b| {
-                    let da: f64 = (0..px)
-                        .map(|j| (ds.x[i * px + j] as f64 - proto[a][j]).powi(2))
-                        .sum();
-                    let db: f64 = (0..px)
-                        .map(|j| (ds.x[i * px + j] as f64 - proto[b][j]).powi(2))
-                        .sum();
-                    da.partial_cmp(&db).unwrap()
-                })
-                .unwrap();
+            let best = nearest_prototype(&ds.x[i * px..(i + 1) * px], &proto).unwrap();
             if best == ds.y[i] as usize {
                 correct += 1;
             }
         }
         let acc = correct as f64 / easy_total as f64;
         assert!(acc > 0.9, "easy nearest-prototype acc {acc}");
+    }
+
+    #[test]
+    fn nearest_prototype_picks_smallest_distance() {
+        let protos = vec![vec![0.0, 0.0], vec![1.0, 1.0], vec![5.0, 5.0]];
+        assert_eq!(nearest_prototype(&[0.9, 1.1], &protos).unwrap(), 1);
+        assert_eq!(nearest_prototype(&[-0.1, 0.2], &protos).unwrap(), 0);
+        assert_eq!(nearest_prototype(&[9.0, 9.0], &protos).unwrap(), 2);
+    }
+
+    #[test]
+    fn nearest_prototype_rejects_non_finite_instead_of_panicking() {
+        let protos = vec![vec![0.0, 0.0], vec![1.0, 1.0]];
+        let err = nearest_prototype(&[f32::NAN, 0.0], &protos).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        let err = nearest_prototype(&[f32::INFINITY, 0.0], &protos).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        // malformed shapes and empty sets are typed errors too
+        assert!(nearest_prototype(&[0.0], &protos).is_err());
+        assert!(nearest_prototype(&[0.0, 0.0], &[]).is_err());
     }
 }

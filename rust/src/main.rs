@@ -35,6 +35,7 @@ fn parse_args() -> Result<Args> {
         .flag("seed", "run seed")
         .flag("eval-every", "evaluate every N steps (0 = end only)")
         .flag("threads", "native kernel threads (0 = auto; results identical at any value)")
+        .flag("prefetch", "batch prefetch depth (0 = sync; default VCAS_PREFETCH or 2)")
         .flag("out-dir", "write metric CSVs here")
         .flag("tau", "vcas variance thresholds tau_act = tau_w")
         .flag("freq", "vcas adaptation frequency F")
@@ -108,6 +109,9 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     cfg.seed = args.flag_u64("seed", cfg.seed)?;
     cfg.eval_every = args.flag_usize("eval-every", cfg.eval_every)?;
     cfg.threads = args.flag_usize("threads", cfg.threads)?;
+    if args.flag("prefetch").is_some() {
+        cfg.prefetch = Some(args.flag_usize("prefetch", 0)?);
+    }
     if let Some(v) = args.flag("out-dir") {
         cfg.out_dir = v.to_string();
     }
@@ -131,6 +135,11 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
         backend.threads()
     );
     let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
+    println!(
+        "async pipeline: prefetch depth {} ({})",
+        trainer.prefetch_depth(),
+        if trainer.prefetch_depth() == 0 { "synchronous" } else { "double-buffered" }
+    );
     let result = trainer.run()?;
 
     if !args.switch("quiet") {

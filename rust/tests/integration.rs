@@ -570,6 +570,79 @@ fn trainer_loss_curve_thread_invariant() {
 }
 
 // ---------------------------------------------------------------------------
+// Async training pipeline: the prefetch stream must be bitwise invisible —
+// the trajectory at any depth equals the synchronous (depth 0) path, for
+// every task kind and training method that pulls batches (the PR 5
+// determinism contract; `VCAS_PREFETCH=0` pins the sync path suite-wide
+// and CI runs the full suite both ways).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trainer_loss_curve_prefetch_invariant_cls_and_cnn() {
+    for (model, task, method) in [
+        ("tiny", "sst2-sim", Method::Vcas),
+        ("tiny", "sst2-sim", Method::Sb),
+        ("cnn", "images", Method::Vcas),
+    ] {
+        let base = TrainConfig {
+            model: model.into(),
+            task: task.into(),
+            method: method.clone(),
+            steps: 6,
+            seed: 17,
+            eval_batches: 2,
+            vcas: VcasConfig { freq: 3, ..Default::default() },
+            ..Default::default()
+        };
+        let sync_cfg = TrainConfig { prefetch: Some(0), ..base.clone() };
+        let mut t0 = Trainer::new(backend(), &sync_cfg).unwrap();
+        assert_eq!(t0.prefetch_depth(), 0);
+        let r0 = t0.run().unwrap();
+        for depth in [1usize, 4] {
+            let cfg = TrainConfig { prefetch: Some(depth), ..base.clone() };
+            let mut td = Trainer::new(backend(), &cfg).unwrap();
+            assert_eq!(td.prefetch_depth(), depth);
+            let rd = td.run().unwrap();
+            assert_eq!(
+                r0.losses, rd.losses,
+                "{model}/{task}/{}: depth {depth} changed the trajectory",
+                method.name()
+            );
+            assert_eq!(r0.final_eval_acc, rd.final_eval_acc);
+            assert_eq!(r0.flops_actual, rd.flops_actual);
+        }
+    }
+}
+
+#[test]
+fn trainer_mlm_forces_sync_prefetch() {
+    // MLM masking consumes the trainer's live RNG stream, so any requested
+    // depth is forced to 0 — and the trajectory matches an explicit 0.
+    let base = TrainConfig {
+        model: "tiny".into(),
+        task: "mlm".into(),
+        method: Method::Vcas,
+        steps: 4,
+        seed: 9,
+        eval_batches: 2,
+        vcas: VcasConfig { freq: 2, ..Default::default() },
+        ..Default::default()
+    };
+    let mut forced = Trainer::new(
+        backend(),
+        &TrainConfig { prefetch: Some(4), ..base.clone() },
+    )
+    .unwrap();
+    assert_eq!(forced.prefetch_depth(), 0, "mlm must force the sync path");
+    let rf = forced.run().unwrap();
+    let r0 = Trainer::new(backend(), &TrainConfig { prefetch: Some(0), ..base })
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(rf.losses, r0.losses);
+}
+
+// ---------------------------------------------------------------------------
 // Compacted sampled execution: the gather/scatter backward must be bitwise
 // identical to the zero-scan reference at every keep ratio and thread
 // count, and steady-state steps must stop allocating through the
