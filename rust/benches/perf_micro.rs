@@ -4,8 +4,10 @@
 //! backward across keep ratios, and the sync-vs-prefetch step time of the
 //! async batch pipeline — the L3 hot-path profile. The kernel section
 //! writes `results/BENCH_kernels.json`, the sampling section
-//! `results/BENCH_sampling.json` and the pipeline section
-//! `results/BENCH_pipeline.json` so the repo's perf trajectory has
+//! `results/BENCH_sampling.json`, the pipeline section
+//! `results/BENCH_pipeline.json` and the serving section (p50/p99 latency
+//! vs offered load vs max batch size under the open-loop generator)
+//! `results/BENCH_serving.json` so the repo's perf trajectory has
 //! machine-readable data points.
 //!
 //! Run: cargo bench --bench perf_micro
@@ -460,6 +462,64 @@ fn main() {
     let json_path = common::results_dir().join("BENCH_pipeline.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(pipeline_json))).unwrap();
     println!("(async pipeline json: {})", json_path.display());
+
+    // serving: p50/p99 latency under the open-loop generator, swept over
+    // offered load x max batch size on the tiny model. The open-loop
+    // schedule does not self-throttle, so queueing delay and the
+    // continuous-batching tradeoff (bigger coalescing windows amortize the
+    // forward but add wait) show up honestly in the tail.
+    let mut serving_json: BTreeMap<String, Json> = BTreeMap::new();
+    {
+        use std::time::Duration;
+        use vcas::serving::{run_open_loop, LoadSpec, ServeConfig, SessionPool};
+        let requests = 48usize;
+        for max_batch in [1usize, 4, 16] {
+            for rate_hz in [200.0f64, 800.0, 3200.0] {
+                let backend =
+                    Arc::new(NativeBackend::with_default_models().with_threads(2));
+                let cfg = ServeConfig {
+                    max_batch,
+                    max_wait: Duration::from_micros(200),
+                    queue_capacity: 64,
+                    workers: 2,
+                };
+                let pool = SessionPool::builder(backend)
+                    .model("tiny")
+                    .build(cfg)
+                    .unwrap();
+                let spec = LoadSpec { requests, rate_hz, seed: 0x10AD };
+                let report = run_open_loop(&pool, "tiny", &spec).unwrap();
+                table.row(vec![
+                    format!("serve tiny: {rate_hz} req/s, max_batch {max_batch}"),
+                    format!("{:.2}", report.p50_us() / 1000.0),
+                    format!(
+                        "p99 {:.2} ms, {}/{} done, {} rejected, batch<= {}",
+                        report.p99_us() / 1000.0,
+                        report.completed,
+                        report.offered,
+                        report.rejected,
+                        report.max_batched
+                    ),
+                ]);
+                let mut o: BTreeMap<String, Json> = BTreeMap::new();
+                o.insert("offered_rps".into(), Json::Num(rate_hz));
+                o.insert("max_batch".into(), Json::Num(max_batch as f64));
+                o.insert("p50_us".into(), Json::Num(report.p50_us()));
+                o.insert("p99_us".into(), Json::Num(report.p99_us()));
+                o.insert("throughput_rps".into(), Json::Num(report.throughput_rps()));
+                o.insert("completed".into(), Json::Num(report.completed as f64));
+                o.insert("rejected".into(), Json::Num(report.rejected as f64));
+                o.insert("max_batched".into(), Json::Num(report.max_batched as f64));
+                serving_json.insert(
+                    format!("tiny_rate_{rate_hz}_max_batch_{max_batch}"),
+                    Json::Obj(o),
+                );
+            }
+        }
+    }
+    let json_path = common::results_dir().join("BENCH_serving.json");
+    std::fs::write(&json_path, format!("{}\n", Json::Obj(serving_json))).unwrap();
+    println!("(serving latency json: {})", json_path.display());
 
     table.print("perf_micro — L3 hot-path profile");
 }

@@ -1,0 +1,367 @@
+//! Bounded MPMC channel primitives — the machinery PR 5's prefetch
+//! streams were built on, extracted so the serving layer can run it in
+//! reverse.
+//!
+//! `std::sync::mpsc::sync_channel` gave the training pipeline exactly the
+//! shape it needed (one producer, one consumer, bounded depth, wake on
+//! disconnect) but nothing more: the serving layer needs *many* producers
+//! (request submitters) and *several* consumers (pool workers) over one
+//! bounded queue, plus two things mpsc cannot express:
+//!
+//! - **admission control**: a non-blocking [`BoundedQueue::try_push`] that
+//!   reports "full" as a value instead of blocking the caller — the
+//!   overload signal a server turns into a typed rejection;
+//! - **coalescing**: [`BoundedQueue::drain_batch`] pops the first item and
+//!   then keeps the consumer parked up to `max_wait` for more, returning
+//!   up to `max_batch` items in FIFO order — continuous batching's
+//!   max-batch/max-wait policy as a queue operation.
+//!
+//! Every successful push is assigned a **ticket**: a monotonically
+//! increasing admission sequence number issued under the queue lock, so
+//! ticket order *is* FIFO pop order. The fairness tests assert completion
+//! order against tickets; the pipeline ignores them.
+//!
+//! [`BatchStream`](super::pipeline::BatchStream) (the PR 5 producer
+//! thread) now runs on this queue: push blocks while full and wakes with
+//! a typed `Closed` error when the consumer hangs up, which is bitwise
+//! the old `sync_channel` behavior (same depth bound, same FIFO order,
+//! same join-on-drop wake).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a push could not be accepted. The rejected item rides back to the
+/// caller so nothing is silently dropped.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue is at capacity (admission-control signal; only
+    /// [`BoundedQueue::try_push`] returns this).
+    Full(T),
+    /// The queue was closed; no further items will ever be accepted.
+    Closed(T),
+}
+
+impl<T> PushError<T> {
+    /// The item that was not accepted.
+    pub fn into_inner(self) -> T {
+        match self {
+            PushError::Full(item) | PushError::Closed(item) => item,
+        }
+    }
+
+    pub fn is_full(&self) -> bool {
+        matches!(self, PushError::Full(_))
+    }
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    /// Next admission ticket; incremented under the lock on every
+    /// successful push, so tickets are dense and FIFO-ordered.
+    next_ticket: u64,
+}
+
+/// A bounded multi-producer / multi-consumer FIFO queue with close
+/// semantics: `close()` wakes every blocked producer and consumer,
+/// producers then fail with [`PushError::Closed`], and consumers drain the
+/// remaining items before seeing `None`.
+pub struct BoundedQueue<T> {
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<T> BoundedQueue<T> {
+    /// A queue holding at most `capacity` items (clamped to >= 1).
+    pub fn new(capacity: usize) -> BoundedQueue<T> {
+        BoundedQueue {
+            state: Mutex::new(State {
+                items: VecDeque::with_capacity(capacity.max(1)),
+                closed: false,
+                next_ticket: 0,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Items currently queued (racy the instant the lock drops; useful
+    /// for telemetry and tests only).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Non-blocking push: `Full` when at capacity (the admission-control
+    /// rejection), `Closed` after [`BoundedQueue::close`]. On success
+    /// returns the admission ticket.
+    pub fn try_push(&self, item: T) -> Result<u64, PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(PushError::Closed(item));
+        }
+        if st.items.len() >= self.capacity {
+            return Err(PushError::Full(item));
+        }
+        let ticket = st.next_ticket;
+        st.next_ticket += 1;
+        st.items.push_back(item);
+        drop(st);
+        self.not_empty.notify_all();
+        Ok(ticket)
+    }
+
+    /// Blocking push: waits while the queue is at capacity, fails with
+    /// `Closed` (returning the item) if the queue closes first. On
+    /// success returns the admission ticket.
+    pub fn push(&self, item: T) -> Result<u64, PushError<T>> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(PushError::Closed(item));
+            }
+            if st.items.len() < self.capacity {
+                let ticket = st.next_ticket;
+                st.next_ticket += 1;
+                st.items.push_back(item);
+                drop(st);
+                self.not_empty.notify_all();
+                return Ok(ticket);
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking pop in FIFO order. `None` means the queue is closed *and*
+    /// fully drained — buffered items are always delivered first.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.not_full.notify_all();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Continuous-batching pop: block until at least one item is
+    /// available (or the queue closes), then keep collecting arrivals for
+    /// up to `max_wait` — returning as soon as `max_batch` items are
+    /// queued — and drain up to `max_batch` items in FIFO order.
+    ///
+    /// `max_wait` of zero grabs whatever is queued the moment the first
+    /// item is seen (pure batch-on-backlog). `None` means closed and
+    /// fully drained; a close during the coalescing window cuts the wait
+    /// short and returns the partial batch.
+    pub fn drain_batch(&self, max_batch: usize, max_wait: Duration) -> Option<Vec<T>> {
+        let max_batch = max_batch.max(1);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // wait for the first item
+            while st.items.is_empty() {
+                if st.closed {
+                    return None;
+                }
+                st = self.not_empty.wait(st).unwrap();
+            }
+            // coalescing window: park for stragglers up to the deadline
+            if !max_wait.is_zero() {
+                let deadline = Instant::now() + max_wait;
+                while st.items.len() < max_batch && !st.closed {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (guard, timeout) =
+                        self.not_empty.wait_timeout(st, deadline - now).unwrap();
+                    st = guard;
+                    if timeout.timed_out() {
+                        break;
+                    }
+                }
+            }
+            let take = st.items.len().min(max_batch);
+            if take == 0 {
+                // another consumer drained the queue while this one was
+                // coalescing; go back to waiting
+                continue;
+            }
+            let batch: Vec<T> = st.items.drain(..take).collect();
+            drop(st);
+            self.not_full.notify_all();
+            return Some(batch);
+        }
+    }
+
+    /// Close the queue: every blocked producer wakes with `Closed`, every
+    /// blocked consumer wakes and drains the remaining items before
+    /// seeing `None`. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order_and_dense_tickets() {
+        let q = BoundedQueue::new(8);
+        for i in 0..5 {
+            let ticket = q.try_push(i).unwrap();
+            assert_eq!(ticket, i as u64, "tickets are dense admission order");
+        }
+        for want in 0..5 {
+            assert_eq!(q.pop(), Some(want));
+        }
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn try_push_full_is_admission_rejection_not_loss() {
+        let q = BoundedQueue::new(2);
+        q.try_push("a").unwrap();
+        q.try_push("b").unwrap();
+        let err = q.try_push("c").unwrap_err();
+        assert!(err.is_full());
+        assert_eq!(err.into_inner(), "c", "rejected item rides back");
+        // draining one slot re-admits
+        assert_eq!(q.pop(), Some("a"));
+        q.try_push("c").unwrap();
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn close_wakes_blocked_producer_with_typed_error() {
+        let q = Arc::new(BoundedQueue::new(1));
+        q.push(0u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(1u32));
+        // let the producer reach the full-queue wait, then close
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        let res = h.join().unwrap();
+        assert!(matches!(res, Err(PushError::Closed(1))));
+        // buffered item still drains, then None
+        assert_eq!(q.pop(), Some(0));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn push_after_close_is_closed() {
+        let q = BoundedQueue::new(4);
+        q.close();
+        assert!(matches!(q.try_push(1), Err(PushError::Closed(1))));
+        assert!(matches!(q.push(2), Err(PushError::Closed(2))));
+    }
+
+    #[test]
+    fn drain_batch_coalesces_backlog_in_fifo_order() {
+        let q = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.try_push(i).unwrap();
+        }
+        // max_wait 0: batch-on-backlog, capped at max_batch
+        let b1 = q.drain_batch(4, Duration::ZERO).unwrap();
+        assert_eq!(b1, vec![0, 1, 2, 3]);
+        let b2 = q.drain_batch(16, Duration::ZERO).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn drain_batch_waits_for_stragglers_up_to_max_batch() {
+        let q = Arc::new(BoundedQueue::new(16));
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            for i in 0..3 {
+                std::thread::sleep(Duration::from_millis(5));
+                q2.try_push(i).unwrap();
+            }
+        });
+        // generous window: all three stragglers coalesce into one batch
+        let b = q.drain_batch(3, Duration::from_secs(5)).unwrap();
+        assert_eq!(b, vec![0, 1, 2], "window must collect up to max_batch then return");
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn drain_batch_returns_partial_batch_on_close() {
+        let q = Arc::new(BoundedQueue::new(16));
+        q.try_push(7u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            q2.close();
+        });
+        // window far longer than the close: close must cut it short
+        let b = q.drain_batch(64, Duration::from_secs(30)).unwrap();
+        assert_eq!(b, vec![7]);
+        assert_eq!(q.drain_batch(64, Duration::from_secs(30)), None);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn mpmc_delivers_every_item_exactly_once() {
+        let q = Arc::new(BoundedQueue::new(4));
+        let seen = Arc::new(AtomicUsize::new(0));
+        let total = 200usize;
+        std::thread::scope(|s| {
+            for p in 0..4 {
+                let q = q.clone();
+                s.spawn(move || {
+                    for i in 0..total / 4 {
+                        q.push(p * 1000 + i).unwrap();
+                    }
+                });
+            }
+            for _ in 0..3 {
+                let q = q.clone();
+                let seen = seen.clone();
+                s.spawn(move || {
+                    while let Some(batch) = q.drain_batch(8, Duration::from_millis(1)) {
+                        seen.fetch_add(batch.len(), Ordering::SeqCst);
+                    }
+                });
+            }
+            // producers finish, then close to release the consumers
+            s.spawn({
+                let q = q.clone();
+                let seen = seen.clone();
+                move || {
+                    while seen.load(Ordering::SeqCst) < total {
+                        std::thread::sleep(Duration::from_millis(1));
+                    }
+                    q.close();
+                }
+            });
+        });
+        assert_eq!(seen.load(Ordering::SeqCst), total);
+    }
+}

@@ -5,6 +5,7 @@
 //! double buffering).
 
 pub mod baselines;
+pub mod channel;
 pub mod flops;
 pub mod metrics;
 pub mod parallel;

@@ -12,10 +12,10 @@
 //!   depends only on the construction seed — never on *when* batches are
 //!   consumed.
 //! - [`BatchStream`] runs a source on a background OS thread, pushing into
-//!   a bounded `std::sync::mpsc` channel. FIFO channels preserve the
-//!   source order exactly, producer errors travel the channel as typed
-//!   `Err` values, and dropping the stream wakes a blocked producer and
-//!   joins it — no detached threads, no deadlock.
+//!   a [`BoundedQueue`](super::channel::BoundedQueue). The FIFO queue
+//!   preserves the source order exactly, producer errors travel the queue
+//!   as typed `Err` values, and dropping the stream wakes a blocked
+//!   producer and joins it — no detached threads, no deadlock.
 //! - [`Prefetcher`] is the consumer-facing handle: depth `N >= 1` keeps up
 //!   to `N` batches materialized ahead of the consumer (depth 1 is classic
 //!   double buffering: batch `t+1` builds while step `t` runs); depth `0`
@@ -37,7 +37,6 @@
 //! with per-step sampler seeds), so the trainer forces depth 0 for MLM;
 //! [`MlmSource`] carries its own dedicated RNG and streams at any depth.
 
-use std::sync::mpsc::{sync_channel, Receiver};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -49,6 +48,7 @@ use crate::data::tasks::{ClsDataset, MarkovCorpus};
 use crate::error::{bail, Result};
 use crate::util::rng::Pcg32;
 
+use super::channel::BoundedQueue;
 use super::parallel::shard_ranges;
 
 /// Prefetch depth used when neither the config nor `VCAS_PREFETCH` says
@@ -245,13 +245,16 @@ impl BatchSource for MlmSource {
     }
 }
 
-/// A producer thread feeding a bounded channel: the runtime behind every
-/// `depth >= 1` [`Prefetcher`]. The channel capacity is the prefetch
-/// depth; once it fills, the producer blocks until the consumer drains a
-/// slot, so at most `depth + 1` unconsumed batches exist at a time —
-/// `depth` queued plus the one the blocked producer already built.
+/// A producer thread feeding a bounded queue
+/// ([`BoundedQueue`](super::channel::BoundedQueue) — the shared channel
+/// primitive the serving layer also runs, there with many producers and
+/// pooled consumers): the runtime behind every `depth >= 1`
+/// [`Prefetcher`]. The queue capacity is the prefetch depth; once it
+/// fills, the producer blocks until the consumer drains a slot, so at
+/// most `depth + 1` unconsumed batches exist at a time — `depth` queued
+/// plus the one the blocked producer already built.
 pub struct BatchStream {
-    rx: Option<Receiver<Result<PreparedBatch>>>,
+    queue: Arc<BoundedQueue<Result<PreparedBatch>>>,
     producer: Option<JoinHandle<()>>,
 }
 
@@ -260,42 +263,57 @@ impl BatchStream {
     /// path and never constructs a stream — see [`Prefetcher::new`]).
     pub fn spawn(mut source: impl BatchSource + 'static, depth: usize) -> BatchStream {
         assert!(depth >= 1, "BatchStream needs depth >= 1 (depth 0 is the sync path)");
-        let (tx, rx) = sync_channel::<Result<PreparedBatch>>(depth);
+        let queue = Arc::new(BoundedQueue::new(depth));
+        let q = queue.clone();
         let producer = std::thread::Builder::new()
             .name("vcas-prefetch".into())
-            .spawn(move || loop {
-                let item = source.next_batch();
-                let stop = item.is_err();
-                // A send error means the consumer dropped its receiver —
-                // the clean-shutdown signal. After delivering an Err the
-                // producer also stops: the source's sequence is broken and
-                // replaying past an error would desynchronize it.
-                if tx.send(item).is_err() || stop {
-                    return;
+            .spawn(move || {
+                // Close the queue however this thread exits — normal
+                // stop, consumer hang-up, or a source panic — so the
+                // consumer always sees end-of-stream instead of blocking
+                // (mpsc got this via receiver disconnect; here it is
+                // explicit).
+                struct CloseOnExit(Arc<BoundedQueue<Result<PreparedBatch>>>);
+                impl Drop for CloseOnExit {
+                    fn drop(&mut self) {
+                        self.0.close();
+                    }
+                }
+                let _close = CloseOnExit(q.clone());
+                loop {
+                    let item = source.next_batch();
+                    let stop = item.is_err();
+                    // A push error means the consumer closed the queue —
+                    // the clean-shutdown signal. After delivering an Err
+                    // the producer also stops: the source's sequence is
+                    // broken and replaying past an error would
+                    // desynchronize it.
+                    if q.push(item).is_err() || stop {
+                        return;
+                    }
                 }
             })
             .expect("spawn prefetch producer thread");
-        BatchStream { rx: Some(rx), producer: Some(producer) }
+        BatchStream { queue, producer: Some(producer) }
     }
 
     /// Next batch in source order. A producer-side error arrives here as a
     /// typed `Err`; pulling again after that (or after a producer panic)
     /// reports the stream as closed.
     pub fn next(&mut self) -> Result<PreparedBatch> {
-        let rx = self.rx.as_ref().expect("receiver lives until drop");
-        match rx.recv() {
-            Ok(item) => item,
-            Err(_) => bail!("batch stream closed: producer terminated (after an error or panic)"),
+        match self.queue.pop() {
+            Some(item) => item,
+            None => bail!("batch stream closed: producer terminated (after an error or panic)"),
         }
     }
 }
 
 impl Drop for BatchStream {
     fn drop(&mut self) {
-        // Disconnect the channel first so a producer blocked on a full
-        // queue wakes with a SendError, then join — dropping a stream
+        // Close the queue first so a producer blocked on a full queue
+        // wakes with a typed Closed error, then join — dropping a stream
         // mid-epoch must leak no thread and cannot deadlock.
-        drop(self.rx.take());
+        self.queue.close();
         if let Some(h) = self.producer.take() {
             let _ = h.join();
         }

@@ -47,4 +47,5 @@ pub mod error;
 pub mod formats;
 pub mod optim;
 pub mod runtime;
+pub mod serving;
 pub mod util;

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   train [config.toml] [--model M --task T --method ... --steps N ...]
+//!   serve [--model M --requests N --rate HZ --max-batch B ...]
+//!                             run the serving pool under synthetic load
 //!   info                      print backend + model registry
 //!   tasks                     list the synthetic task registry
 //!
@@ -40,6 +42,13 @@ fn parse_args() -> Result<Args> {
         .flag("tau", "vcas variance thresholds tau_act = tau_w")
         .flag("freq", "vcas adaptation frequency F")
         .flag("lr", "peak learning rate")
+        .flag("requests", "serve: open-loop requests to fire (default 64)")
+        .flag("rate", "serve: offered load in requests/sec (0 = back-to-back)")
+        .flag("max-batch", "serve: most requests one coalesced forward carries")
+        .flag("max-wait-us", "serve: coalescing window in microseconds")
+        .flag("queue", "serve: bounded queue depth (admission control)")
+        .flag("workers", "serve: worker threads for the model")
+        .flag("checkpoint", "serve: .params.bin checkpoint to load (default: init params)")
         .switch("quiet", "suppress per-step logging")
         .parse_env()
 }
@@ -50,6 +59,7 @@ fn run() -> Result<()> {
 
     match args.subcommand.as_str() {
         "train" | "" => cmd_train(&args, &artifacts),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&artifacts),
         "tasks" => {
             for t in tasks::registry() {
@@ -62,7 +72,7 @@ fn run() -> Result<()> {
         }
         other => {
             eprintln!("unknown subcommand {other:?}\n");
-            eprintln!("usage: vcas <train|info|tasks> [flags]\n{}", args.usage());
+            eprintln!("usage: vcas <train|serve|info|tasks> [flags]\n{}", args.usage());
             std::process::exit(2);
         }
     }
@@ -87,6 +97,65 @@ fn cmd_info(artifacts: &Path) -> Result<()> {
             info.n_sampled()
         );
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use std::sync::Arc;
+    use std::time::Duration;
+    use vcas::runtime::NativeBackend;
+    use vcas::serving::{run_open_loop, LoadSpec, ServeConfig, SessionPool};
+
+    let model = args.flag_or("model", "tiny");
+    let threads = match args.flag_usize("threads", 0)? {
+        0 => default_threads(),
+        t => t,
+    };
+    let cfg = ServeConfig {
+        max_batch: args.flag_usize("max-batch", 8)?,
+        max_wait: Duration::from_micros(args.flag_u64("max-wait-us", 200)?),
+        queue_capacity: args.flag_usize("queue", 64)?,
+        workers: args.flag_usize("workers", 1)?.max(1),
+    };
+    let spec = LoadSpec {
+        requests: args.flag_usize("requests", 64)?,
+        rate_hz: args.flag_f64("rate", 200.0)?,
+        seed: args.flag_u64("seed", 0x10AD)?,
+    };
+
+    // Serving runs on the native backend: it is Send + Sync (pool workers
+    // share it) and carries the logits inference entry.
+    let backend = Arc::new(NativeBackend::with_default_models().with_threads(threads));
+    let mut builder = SessionPool::builder(backend);
+    builder = match args.flag("checkpoint") {
+        Some(path) => builder.model_from_checkpoint(&model, path),
+        None => builder.model(&model),
+    };
+    let pool = builder.build(cfg)?;
+    println!(
+        "serving {model}: {} worker(s), max_batch {}, max_wait {}us, queue {} ({} kernel threads)",
+        cfg.workers,
+        cfg.max_batch,
+        cfg.max_wait.as_micros(),
+        cfg.queue_capacity,
+        threads
+    );
+    println!(
+        "open-loop load: {} requests at {} req/s (seed {})",
+        spec.requests, spec.rate_hz, spec.seed
+    );
+    let report = run_open_loop(&pool, &model, &spec)?;
+    println!(
+        "offered {} -> completed {}, rejected {} (admission), errors {}",
+        report.offered, report.completed, report.rejected, report.errors
+    );
+    println!(
+        "latency p50 {:.2}ms p99 {:.2}ms, throughput {:.1} req/s, max coalesced batch {}",
+        report.p50_us() / 1000.0,
+        report.p99_us() / 1000.0,
+        report.throughput_rps(),
+        report.max_batched
+    );
     Ok(())
 }
 

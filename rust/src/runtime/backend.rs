@@ -16,7 +16,7 @@
 //!   linear, evaluated at `nu_probe`.
 
 use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
-use crate::error::Result;
+use crate::error::{bail, Result};
 use crate::formats::params::ParamSet;
 
 /// Output of a transformer grad entry.
@@ -181,6 +181,18 @@ pub trait Backend {
 
     /// Eval: returns (loss_sum, correct_count).
     fn eval_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<(f32, f32)>;
+
+    /// Inference: per-sample classification logits, row-major
+    /// `(batch.n, n_classes)` flat. The serving hot path. Per-sample rows
+    /// are batch-composition independent: a sample's logits are bitwise
+    /// identical whether it ran alone or inside any batch (forward kernels
+    /// reduce in serial order within each row and rows never mix).
+    ///
+    /// Default errors so backends without a logits entry (the AOT path
+    /// only ships grad/eval executables) fail typed instead of silently.
+    fn infer_cls(&self, model: &str, _params: &ParamSet, _batch: &ClsBatch) -> Result<Vec<f32>> {
+        bail!("backend {} has no logits inference entry for model {model:?}", self.name())
+    }
 
     /// MLM eval: returns (weighted_loss_sum, weighted_correct, weight_sum).
     fn eval_mlm(

@@ -31,23 +31,46 @@ use std::sync::Mutex;
 /// are churning and pooling has stopped paying; excess buffers just drop.
 const MAX_POOLED: usize = 128;
 
+/// Default cap on total bytes parked in the free list (64 MiB). Before
+/// this cap, concurrent serving sessions could each park their largest
+/// activation buffers and the pool's resident set grew with tenant count;
+/// now overflow buffers drop back to the allocator instead.
+const MAX_POOLED_BYTES: usize = 64 << 20;
+
+/// The capacity-sorted free list plus its resident byte count (tracked
+/// under the same lock so the byte cap is race-free).
+struct FreeList {
+    bufs: Vec<Vec<f32>>,
+    bytes: usize,
+}
+
 /// A shared pool of reusable `Vec<f32>` scratch buffers. The free list is
 /// sorted ascending by capacity (ties in any order — contents are
 /// unspecified anyway), which is what makes best-fit a binary search.
 pub struct Workspace {
-    pool: Mutex<Vec<Vec<f32>>>,
+    pool: Mutex<FreeList>,
     takes: AtomicUsize,
     allocs: AtomicUsize,
+    byte_cap: usize,
 }
 
 impl Workspace {
-    /// An empty pool.
+    /// An empty pool with the default byte cap.
     pub fn new() -> Workspace {
         Workspace {
-            pool: Mutex::new(Vec::new()),
+            pool: Mutex::new(FreeList { bufs: Vec::new(), bytes: 0 }),
             takes: AtomicUsize::new(0),
             allocs: AtomicUsize::new(0),
+            byte_cap: MAX_POOLED_BYTES,
         }
+    }
+
+    /// Cap the total bytes the free list may park (buffers beyond it drop
+    /// on `give`). Taken buffers are never affected — the cap bounds idle
+    /// memory, not working memory.
+    pub fn with_byte_capacity(mut self, bytes: usize) -> Workspace {
+        self.byte_cap = bytes;
+        self
     }
 
     /// A buffer of exactly `len` elements with **unspecified contents**
@@ -63,9 +86,11 @@ impl Workspace {
         self.takes.fetch_add(1, Ordering::Relaxed);
         let mut buf = {
             let mut pool = self.pool.lock().unwrap();
-            let i = pool.partition_point(|b| b.capacity() < len);
-            if i < pool.len() {
-                pool.remove(i)
+            let i = pool.bufs.partition_point(|b| b.capacity() < len);
+            if i < pool.bufs.len() {
+                let buf = pool.bufs.remove(i);
+                pool.bytes -= buf.capacity() * 4;
+                buf
             } else {
                 Vec::new()
             }
@@ -81,16 +106,19 @@ impl Workspace {
 
     /// Return a buffer to the pool (capacity is what gets reused; length
     /// is irrelevant), inserted at its capacity-sorted position (binary
-    /// search + one bounded element shift). Zero-capacity buffers and
-    /// overflow beyond [`MAX_POOLED`] are silently dropped.
+    /// search + one bounded element shift). Zero-capacity buffers,
+    /// overflow beyond [`MAX_POOLED`] buffers, and anything that would
+    /// push the parked byte total past the byte cap are silently dropped.
     pub fn give(&self, buf: Vec<f32>) {
         if buf.capacity() == 0 {
             return;
         }
+        let cap_bytes = buf.capacity() * 4;
         let mut pool = self.pool.lock().unwrap();
-        if pool.len() < MAX_POOLED {
-            let i = pool.partition_point(|b| b.capacity() <= buf.capacity());
-            pool.insert(i, buf);
+        if pool.bufs.len() < MAX_POOLED && pool.bytes + cap_bytes <= self.byte_cap {
+            let i = pool.bufs.partition_point(|b| b.capacity() <= buf.capacity());
+            pool.bufs.insert(i, buf);
+            pool.bytes += cap_bytes;
         }
     }
 
@@ -107,7 +135,13 @@ impl Workspace {
 
     /// Buffers currently parked in the free list.
     pub fn pooled(&self) -> usize {
-        self.pool.lock().unwrap().len()
+        self.pool.lock().unwrap().bufs.len()
+    }
+
+    /// Total bytes currently parked in the free list (always <= the byte
+    /// cap).
+    pub fn pooled_bytes(&self) -> usize {
+        self.pool.lock().unwrap().bytes
     }
 }
 
@@ -117,11 +151,11 @@ impl Default for Workspace {
     }
 }
 
-/// Clones start with an empty pool: scratch buffers are per-instance
-/// caches, not state.
+/// Clones start with an empty pool (same byte cap): scratch buffers are
+/// per-instance caches, not state.
 impl Clone for Workspace {
     fn clone(&self) -> Self {
-        Workspace::new()
+        Workspace::new().with_byte_capacity(self.byte_cap)
     }
 }
 
@@ -237,5 +271,83 @@ mod tests {
         });
         assert!(ws.pooled() >= 1);
         assert!(ws.takes() >= 200);
+    }
+
+    #[test]
+    fn byte_cap_bounds_parked_memory() {
+        let ws = Workspace::new().with_byte_capacity(4096); // room for 1024 f32
+        ws.give(Vec::with_capacity(512)); // 2048 bytes parked
+        ws.give(Vec::with_capacity(512)); // 4096 bytes parked — at cap
+        assert_eq!(ws.pooled(), 2);
+        assert_eq!(ws.pooled_bytes(), 4096);
+        // would exceed the cap: dropped, not parked
+        ws.give(Vec::with_capacity(1));
+        assert_eq!(ws.pooled(), 2);
+        assert_eq!(ws.pooled_bytes(), 4096);
+        // taking frees budget; giving back re-parks
+        let b = ws.take(512);
+        assert_eq!(ws.pooled_bytes(), 2048);
+        ws.give(b);
+        assert_eq!(ws.pooled_bytes(), 4096);
+        // clones keep the configured cap
+        assert_eq!(ws.clone().byte_cap, 4096);
+    }
+
+    /// Simultaneous forward passes from serving pool workers share one
+    /// pool: no buffer may ever be handed to two threads at once (each
+    /// thread tags every element of its buffers and re-checks after a
+    /// yield), the free list stays under both caps, and — after a
+    /// single-threaded warm-up parks enough max-size buffers for every
+    /// concurrent taker — the contended phase allocates nothing.
+    #[test]
+    fn concurrent_take_give_no_double_handout_and_bounded_growth() {
+        let cap_bytes = 1 << 20;
+        let ws = Workspace::new().with_byte_capacity(cap_bytes);
+        let n_threads = 4usize;
+        let rounds = 200usize;
+        // warm-up: park 2 max-size buffers per thread, so every concurrent
+        // take (at most 2 live per thread) finds a fitting pooled buffer
+        let warm: Vec<_> = (0..2 * n_threads).map(|_| ws.take(384)).collect();
+        for b in warm {
+            ws.give(b);
+        }
+        let warm_allocs = ws.allocations();
+        assert_eq!(warm_allocs, 2 * n_threads);
+
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let ws = &ws;
+                s.spawn(move || {
+                    let tag = (t + 1) as f32;
+                    for r in 0..rounds {
+                        let len = 64 + 32 * ((t + r) % 5); // 64..=192
+                        let mut a = ws.take(len);
+                        let mut b = ws.take(len * 2); // 128..=384
+                        a.iter_mut().for_each(|v| *v = tag);
+                        b.iter_mut().for_each(|v| *v = -tag);
+                        std::thread::yield_now();
+                        assert!(
+                            a.iter().all(|&v| v == tag),
+                            "buffer handed to two threads at once"
+                        );
+                        assert!(
+                            b.iter().all(|&v| v == -tag),
+                            "buffer handed to two threads at once"
+                        );
+                        ws.give(a);
+                        ws.give(b);
+                    }
+                });
+            }
+        });
+
+        assert_eq!(ws.takes(), 2 * n_threads + 2 * n_threads * rounds);
+        assert_eq!(
+            ws.allocations(),
+            warm_allocs,
+            "contended steady state must reuse the warmed pool, not grow it"
+        );
+        assert!(ws.pooled() <= MAX_POOLED);
+        assert!(ws.pooled_bytes() <= cap_bytes);
     }
 }

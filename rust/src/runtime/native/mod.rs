@@ -339,6 +339,11 @@ impl Backend for NativeBackend {
         )
     }
 
+    fn infer_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<Vec<f32>> {
+        let cfg = self.transformer(model)?;
+        transformer::infer_cls(cfg, self.ectx(), params, &batch.x, batch.n, batch.seq_len)
+    }
+
     fn eval_mlm(
         &self,
         model: &str,

@@ -291,7 +291,7 @@ pub fn eq3_variance_with<F: Fn(usize) -> f32>(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::proptest::{check, ensure, Gen};
+    use crate::util::proptest::{check, ensure, stat_seed, EstimatorTest, Gen};
 
     #[test]
     fn keep_probs_budget_and_caps_property() {
@@ -366,14 +366,17 @@ mod tests {
 
     #[test]
     fn sample_rows_unbiased_and_norms_premask() {
-        // mean over many seeds of the masked matrix converges to the input
+        // SampleA (Eq. 4 Bern(p)/p row masks): the mean of the masked
+        // matrix over many draws must converge to the input, coordinate by
+        // coordinate, under the EstimatorTest z-score + chi-square bound.
         let rows = 12;
         let cols = 5;
-        let mut gen = Gen::new(0xD00D);
+        let mut gen = Gen::new(stat_seed(0));
         let base = gen.vec_normal(rows * cols, 1.0);
-        let mut rng = Pcg32::new(9, 9);
+        let exact: Vec<f64> = base.iter().map(|&x| x as f64).collect();
+        let mut est = EstimatorTest::new("SampleA masked activation", &exact);
+        let mut rng = Pcg32::new(stat_seed(1), 9);
         let trials = 6000;
-        let mut acc = vec![0.0f64; rows * cols];
         let mut norms0 = Vec::new();
         for t in 0..trials {
             let mut g = base.clone();
@@ -381,24 +384,42 @@ mod tests {
             if t == 0 {
                 norms0 = norms;
             }
-            for (a, &x) in acc.iter_mut().zip(&g) {
-                *a += x as f64;
-            }
+            est.push_f32(&g);
         }
         // norms reported are pre-mask (match the clean matrix)
         let clean = row_norms(&base, cols);
         for (a, b) in clean.iter().zip(&norms0) {
             assert!((a - b).abs() < 1e-6);
         }
-        let scale: f64 = base.iter().map(|&x| (x as f64).abs()).sum::<f64>() / base.len() as f64;
-        for (i, a) in acc.iter().enumerate() {
-            let mean = a / trials as f64;
-            assert!(
-                (mean - base[i] as f64).abs() < 0.15 * scale.max(1.0),
-                "elem {i}: mean {mean} vs {}",
-                base[i]
-            );
+        est.assert_unbiased(6.0);
+    }
+
+    #[test]
+    fn sample_w_masked_contraction_unbiased() {
+        // SampleW (Eq. 3/7): the masked weight-gradient contraction
+        // a^T diag(m) b is an unbiased estimator of a^T b — the companion
+        // to eq3_matches_empirical_weight_grad_variance, which checks its
+        // second moment.
+        use crate::runtime::kernels::{weighted_tn, KernelCtx};
+        let mut gen = Gen::new(stat_seed(2));
+        let (r, m, n) = (10, 3, 4);
+        let a = gen.vec_normal(r * m, 1.0);
+        let b = gen.vec_normal(r * n, 1.0);
+        let scores: Vec<f32> = row_norms(&a, m)
+            .iter()
+            .zip(&row_norms(&b, n))
+            .map(|(&x, &y)| x * y)
+            .collect();
+        let q = keep_probs(&scores, 0.5).unwrap();
+        let kctx = KernelCtx::serial();
+        let exact = weighted_tn(kctx, &a, &b, None, r, m, n);
+        let mut est = EstimatorTest::new_f32("SampleW masked a^T b", &exact);
+        let mut rng = Pcg32::new(stat_seed(3), 3);
+        for _ in 0..4000 {
+            let mask = bern_mask(&mut rng, &q);
+            est.push_f32(&weighted_tn(kctx, &a, &b, Some(&mask), r, m, n));
         }
+        est.assert_unbiased(6.0);
     }
 
     #[test]

@@ -1261,6 +1261,33 @@ pub fn eval_cls(
     Ok((loss_sum as f32, correct as f32))
 }
 
+/// Inference logits, row-major `(n, n_classes)` flat — the serving entry.
+/// No loss, no labels, no gradients; every intermediate goes back to the
+/// workspace. Tokens are range-checked here because serving feeds this
+/// path caller-supplied inputs (training batches are generated in-range).
+pub fn infer_cls(
+    cfg: &TransformerCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[i32],
+    n: usize,
+    seq_len: usize,
+) -> Result<Vec<f32>> {
+    cfg.validate(params, n, seq_len, x.len())?;
+    ensure!(
+        x.iter().all(|&t| t >= 0 && (t as usize) < cfg.vocab),
+        "token id outside vocab range [0, {})", cfg.vocab
+    );
+    let c = cfg.n_classes;
+    let ws = ectx.ws;
+    let saved = encode_fwd(cfg, ectx, params, x, n, false);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let out = logits[..n * c].to_vec();
+    release_head(ws, hf, lnf, pooled, logits);
+    saved.release(ws);
+    Ok(out)
+}
+
 #[allow(clippy::too_many_arguments)]
 pub fn eval_mlm(
     cfg: &TransformerCfg,

@@ -23,16 +23,25 @@ pub struct ModelSession<'a> {
 impl<'a> ModelSession<'a> {
     pub fn open(backend: &'a dyn Backend, model: &str) -> Result<ModelSession<'a>> {
         let info = backend.info(model)?;
-        Ok(ModelSession {
+        Ok(ModelSession::with_info(backend, info))
+    }
+
+    /// Open from an already-fetched [`ModelInfo`], skipping the name-keyed
+    /// `backend.info` lookup. The serving pool caches one `ModelInfo` per
+    /// tenant and builds its per-request sessions through this, so the
+    /// request hot path does no registry lookups. Equivalent to
+    /// [`ModelSession::open`] for any `info` the backend itself reported.
+    pub fn with_info(backend: &'a dyn Backend, info: ModelInfo) -> ModelSession<'a> {
+        ModelSession {
             backend,
-            name: model.to_string(),
+            name: info.name.clone(),
             n_layers: info.n_layers,
             n_sampled: info.n_sampled(),
             seq_len: info.seq_len,
             n_classes: info.n_classes,
             vocab: info.vocab,
             info,
-        })
+        }
     }
 
     pub fn backend(&self) -> &'a dyn Backend {
@@ -91,6 +100,12 @@ impl<'a> ModelSession<'a> {
         self.backend.eval_cls(&self.name, params, batch)
     }
 
+    /// Inference: per-sample logits, row-major `(batch.n, n_classes)` flat
+    /// (see [`Backend::infer_cls`]). The serving hot path.
+    pub fn infer_cls(&self, params: &ParamSet, batch: &ClsBatch) -> Result<Vec<f32>> {
+        self.backend.infer_cls(&self.name, params, batch)
+    }
+
     /// MLM eval: returns (weighted_loss_sum, weighted_correct, weight_sum).
     pub fn eval_mlm(&self, params: &ParamSet, batch: &MlmBatch) -> Result<(f32, f32, f32)> {
         self.backend.eval_mlm(&self.name, params, batch)
@@ -110,5 +125,43 @@ impl<'a> ModelSession<'a> {
     /// CNN eval: (loss_sum, correct).
     pub fn cnn_eval(&self, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {
         self.backend.cnn_eval(&self.name, params, batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    #[test]
+    fn cached_info_session_agrees_with_fresh_open() {
+        let backend = NativeBackend::with_default_models();
+        let fresh = ModelSession::open(&backend, "tiny").unwrap();
+        // the pool path: info fetched once, sessions built from the cache
+        let cached_info = backend.info("tiny").unwrap();
+        let cached = ModelSession::with_info(&backend, cached_info);
+
+        assert_eq!(cached.name, fresh.name);
+        assert_eq!(cached.n_layers, fresh.n_layers);
+        assert_eq!(cached.n_sampled, fresh.n_sampled);
+        assert_eq!(cached.seq_len, fresh.seq_len);
+        assert_eq!(cached.n_classes, fresh.n_classes);
+        assert_eq!(cached.vocab, fresh.vocab);
+        assert_eq!(format!("{:?}", cached.info()), format!("{:?}", fresh.info()));
+
+        // and both sessions compute bitwise-identical logits
+        let params = fresh.load_params().unwrap();
+        let n = 3;
+        let batch = ClsBatch {
+            n,
+            seq_len: fresh.seq_len,
+            x: (0..n * fresh.seq_len).map(|i| (i % fresh.vocab) as i32).collect(),
+            y: vec![0; n],
+            idx: (0..n).collect(),
+        };
+        let a = fresh.infer_cls(&params, &batch).unwrap();
+        let b = cached.infer_cls(&params, &batch).unwrap();
+        assert_eq!(a.len(), n * fresh.n_classes);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 }

@@ -1,0 +1,171 @@
+//! Synthetic open-loop load generator for the serving pool.
+//!
+//! Open-loop means requests fire on a fixed schedule (`rate_hz`) no matter
+//! how the server is doing — the arrival process does not slow down when
+//! latency grows, which is what exposes queueing behavior and admission
+//! control honestly (a closed loop self-throttles and hides both).
+//! Submission is non-blocking ([`SessionPool::submit`]); rejections are
+//! counted, tickets are collected, and all replies are awaited after the
+//! firing schedule completes.
+
+use std::time::{Duration, Instant};
+
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+
+use super::{ServingError, SessionPool};
+
+/// One open-loop run: how many requests, how fast, which token stream.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// Total requests to fire.
+    pub requests: usize,
+    /// Offered load: target arrival rate in requests/second. Zero or
+    /// negative fires everything back-to-back.
+    pub rate_hz: f64,
+    /// Seed for the synthetic token streams (deterministic per seed).
+    pub seed: u64,
+}
+
+impl Default for LoadSpec {
+    fn default() -> LoadSpec {
+        LoadSpec { requests: 64, rate_hz: 200.0, seed: 0x10AD }
+    }
+}
+
+/// What one open-loop run observed.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Requests fired (admitted + rejected).
+    pub offered: usize,
+    /// Requests that came back with logits.
+    pub completed: usize,
+    /// Admission-control rejections ([`ServingError::Overloaded`]).
+    pub rejected: usize,
+    /// Admitted requests that failed (backend error or shutdown).
+    pub errors: usize,
+    /// Per-completed-request submit-to-reply latency, µs.
+    pub latencies_us: Vec<f32>,
+    /// Largest batch any completed request shared a forward with.
+    pub max_batched: usize,
+    /// Wall-clock of the whole run (fire + await).
+    pub elapsed: Duration,
+}
+
+impl LoadReport {
+    pub fn p50_us(&self) -> f64 {
+        if self.latencies_us.is_empty() { 0.0 } else { percentile(&self.latencies_us, 0.5) }
+    }
+
+    pub fn p99_us(&self) -> f64 {
+        if self.latencies_us.is_empty() { 0.0 } else { percentile(&self.latencies_us, 0.99) }
+    }
+
+    /// Completed requests per second over the whole run.
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.elapsed.as_secs_f64();
+        if secs > 0.0 {
+            self.completed as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Fire `spec.requests` synthetic single-sample requests at `model` on the
+/// open-loop schedule, then await every admitted reply.
+///
+/// Fails fast on [`ServingError::UnknownModel`] / `BadRequest` /
+/// `Shutdown` at submit time (misconfiguration, not load); `Overloaded`
+/// is the signal under test and is counted, never returned.
+pub fn run_open_loop(
+    pool: &SessionPool,
+    model: &str,
+    spec: &LoadSpec,
+) -> Result<LoadReport, ServingError> {
+    let info = pool
+        .info(model)
+        .ok_or_else(|| ServingError::UnknownModel(model.to_string()))?;
+    let (seq_len, vocab) = (info.seq_len, info.vocab);
+    let mut rng = Pcg32::new(spec.seed, 0x5E4E);
+    let period = if spec.rate_hz > 0.0 {
+        Duration::from_secs_f64(1.0 / spec.rate_hz)
+    } else {
+        Duration::ZERO
+    };
+    let start = Instant::now();
+    let mut tickets = Vec::with_capacity(spec.requests);
+    let mut rejected = 0usize;
+    for i in 0..spec.requests {
+        let due = start + period.mul_f64(i as f64);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let tokens: Vec<i32> = (0..seq_len).map(|_| rng.below(vocab as u64) as i32).collect();
+        match pool.submit(model, tokens) {
+            Ok(t) => tickets.push(t),
+            Err(ServingError::Overloaded { .. }) => rejected += 1,
+            Err(e) => return Err(e),
+        }
+    }
+    let mut latencies = Vec::with_capacity(tickets.len());
+    let mut errors = 0usize;
+    let mut max_batched = 0usize;
+    for t in tickets {
+        match t.wait() {
+            Ok(r) => {
+                latencies.push(r.service_us as f32);
+                max_batched = max_batched.max(r.batched);
+            }
+            Err(_) => errors += 1,
+        }
+    }
+    Ok(LoadReport {
+        offered: spec.requests,
+        completed: latencies.len(),
+        rejected,
+        errors,
+        latencies_us: latencies,
+        max_batched,
+        elapsed: start.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+    use crate::serving::ServeConfig;
+    use std::sync::Arc;
+
+    #[test]
+    fn open_loop_completes_everything_under_light_load() {
+        let backend = Arc::new(NativeBackend::with_default_models().with_threads(1));
+        let pool = SessionPool::builder(backend)
+            .model("tiny")
+            .build(ServeConfig::default())
+            .unwrap();
+        let spec = LoadSpec { requests: 12, rate_hz: 0.0, seed: 1 };
+        let report = run_open_loop(&pool, "tiny", &spec).unwrap();
+        assert_eq!(report.offered, 12);
+        assert_eq!(report.completed + report.rejected + report.errors, 12);
+        assert_eq!(report.errors, 0, "no backend errors expected");
+        // queue capacity (64) far exceeds 12 back-to-back submits
+        assert_eq!(report.rejected, 0);
+        assert_eq!(report.latencies_us.len(), report.completed);
+        assert!(report.p99_us() >= report.p50_us());
+        assert!(report.throughput_rps() > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_fails_fast() {
+        let backend = Arc::new(NativeBackend::with_default_models());
+        let pool = SessionPool::builder(backend)
+            .model("tiny")
+            .build(ServeConfig { workers: 0, ..ServeConfig::default() })
+            .unwrap();
+        let err = run_open_loop(&pool, "nope", &LoadSpec::default()).unwrap_err();
+        assert!(matches!(err, ServingError::UnknownModel(_)));
+    }
+}

@@ -1,0 +1,490 @@
+//! Multi-tenant inference serving with continuous batching.
+//!
+//! The bridge between a trained checkpoint and a caller (ROADMAP open
+//! item 1): a [`SessionPool`] loads one [`ParamSet`] per registered model
+//! — from the backend's deterministic init or a `.params.bin` checkpoint
+//! via the `formats::params` roundtrip — and runs a team of worker threads
+//! per model over a bounded request queue. The queue is the PR 5 prefetch
+//! machinery run in reverse: training had one producer feeding one
+//! consumer through a [`BoundedQueue`]; serving has many producers
+//! (request submitters) feeding pooled consumers through the same
+//! primitive.
+//!
+//! **Continuous batching.** Callers submit single samples;
+//! [`BoundedQueue::drain_batch`] coalesces whatever is queued — waiting up
+//! to [`ServeConfig::max_wait`] for stragglers, capped at
+//! [`ServeConfig::max_batch`] — into one batched forward pass. Latency
+//! trades against throughput on exactly those two knobs: `max_wait = 0`
+//! batches only the backlog; a generous window amortizes the forward over
+//! more rows.
+//!
+//! **Admission control.** The queue is bounded at
+//! [`ServeConfig::queue_capacity`]; when it is full, [`SessionPool::submit`]
+//! fails *immediately* with [`ServingError::Overloaded`] instead of
+//! blocking the caller — overload produces typed rejections, not
+//! unbounded latency.
+//!
+//! **Determinism contract.** A request's logits are bitwise identical
+//! whether it ran alone or coalesced into any batch, at any worker count
+//! and any kernel thread count: the forward kernels reduce every output
+//! element in serial ascending order within its own row, and no kernel
+//! mixes rows. Batch composition, arrival order and scheduling jitter move
+//! *wall-clock only* — the integration suite sweeps pool sizes ×
+//! max-batch and diffs the bits.
+//!
+//! **Shutdown.** Dropping the pool closes every queue and joins every
+//! worker (the PR 5 join-on-drop idiom): workers drain the requests
+//! already admitted — each still gets its reply — then exit; tickets
+//! whose request was never drained resolve to [`ServingError::Shutdown`].
+//!
+//! ```
+//! use std::sync::Arc;
+//! use vcas::runtime::NativeBackend;
+//! use vcas::serving::{ServeConfig, SessionPool};
+//!
+//! let backend = Arc::new(NativeBackend::with_default_models());
+//! let pool = SessionPool::builder(backend)
+//!     .model("tiny")
+//!     .build(ServeConfig::default())
+//!     .unwrap();
+//! let seq_len = pool.info("tiny").unwrap().seq_len;
+//! let ticket = pool.submit("tiny", vec![1i32; seq_len]).unwrap();
+//! let reply = ticket.wait().unwrap();
+//! assert_eq!(reply.logits.len(), pool.info("tiny").unwrap().n_classes);
+//! ```
+
+pub mod loadgen;
+
+pub use loadgen::{run_open_loop, LoadReport, LoadSpec};
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::channel::BoundedQueue;
+use crate::data::batch::ClsBatch;
+use crate::error::{bail, ensure, Result};
+use crate::formats::params::ParamSet;
+use crate::runtime::{Backend, ModelInfo, ModelKind, ModelSession};
+
+/// The backend handle serving shares across pool workers.
+pub type SharedBackend = Arc<dyn Backend + Send + Sync>;
+
+/// Typed request-path failures. Setup failures (bad checkpoint, unknown
+/// model at build) use the crate [`Result`]; everything on the hot path is
+/// one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServingError {
+    /// No tenant with this model name in the pool.
+    UnknownModel(String),
+    /// Request shape/content invalid (wrong token count, token out of
+    /// vocab range).
+    BadRequest(String),
+    /// Admission control: the model's request queue is at capacity.
+    Overloaded { model: String, capacity: usize },
+    /// The pool shut down before this request could be served.
+    Shutdown,
+    /// The backend failed while computing the batch.
+    Backend(String),
+}
+
+impl std::fmt::Display for ServingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServingError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+            ServingError::BadRequest(msg) => write!(f, "bad request: {msg}"),
+            ServingError::Overloaded { model, capacity } => {
+                write!(f, "model {model:?} overloaded: queue at capacity {capacity}")
+            }
+            ServingError::Shutdown => write!(f, "serving pool shut down"),
+            ServingError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ServingError {}
+
+/// Coalescing and admission knobs, per pool.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Most rows one batched forward carries (clamped to >= 1).
+    pub max_batch: usize,
+    /// How long a worker parks waiting for stragglers after the first
+    /// request of a batch arrives. Zero batches only the backlog.
+    pub max_wait: Duration,
+    /// Bounded queue depth per model; beyond it, submits are rejected
+    /// with [`ServingError::Overloaded`].
+    pub queue_capacity: usize,
+    /// Worker threads per model. Zero is allowed (requests queue but
+    /// nothing drains — the admission-control tests use this).
+    pub workers: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_capacity: 64,
+            workers: 1,
+        }
+    }
+}
+
+/// A served request's answer.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    /// This sample's logits, `n_classes` long.
+    pub logits: Vec<f32>,
+    /// How many requests shared the forward pass that computed this reply
+    /// (1 = ran alone; >1 = coalesced).
+    pub batched: usize,
+    /// Per-model completion sequence number (dense, starts at 0). With one
+    /// worker, completion order equals admission-ticket order — the FIFO
+    /// fairness tests assert exactly that.
+    pub done_seq: u64,
+    /// Wall-clock from submit to reply, µs (queue wait + coalescing window
+    /// + compute).
+    pub service_us: u64,
+}
+
+/// Handle to one in-flight request: the admission ticket plus the reply
+/// channel.
+pub struct Ticket {
+    ticket: u64,
+    rx: mpsc::Receiver<std::result::Result<InferReply, ServingError>>,
+}
+
+impl Ticket {
+    /// Admission sequence number (dense per model, FIFO order).
+    pub fn ticket(&self) -> u64 {
+        self.ticket
+    }
+
+    /// Block until the reply arrives. [`ServingError::Shutdown`] if the
+    /// pool dropped this request before a worker could serve it.
+    pub fn wait(self) -> std::result::Result<InferReply, ServingError> {
+        match self.rx.recv() {
+            Ok(res) => res,
+            Err(_) => Err(ServingError::Shutdown),
+        }
+    }
+}
+
+/// A queued request: the tokens, the reply channel, and the submit stamp
+/// the worker turns into `service_us`.
+struct Pending {
+    tokens: Vec<i32>,
+    tx: mpsc::Sender<std::result::Result<InferReply, ServingError>>,
+    t_submit: Instant,
+}
+
+/// One served model: cached structural info (fetched exactly once at
+/// build — the request hot path does no name-keyed backend lookups),
+/// resident parameters, and the bounded request queue.
+struct Tenant {
+    info: ModelInfo,
+    params: Arc<ParamSet>,
+    queue: BoundedQueue<Pending>,
+    completed: AtomicU64,
+}
+
+/// Declarative pool construction: registered models + where their
+/// parameters come from.
+pub struct PoolBuilder {
+    backend: SharedBackend,
+    models: Vec<(String, Option<PathBuf>)>,
+}
+
+impl PoolBuilder {
+    /// Serve `name` with the backend's deterministic init parameters.
+    pub fn model(mut self, name: &str) -> PoolBuilder {
+        self.models.push((name.to_string(), None));
+        self
+    }
+
+    /// Serve `name` with parameters loaded from a `.params.bin` checkpoint
+    /// (the trainer's save format — the `formats::params` roundtrip).
+    pub fn model_from_checkpoint(mut self, name: &str, path: impl Into<PathBuf>) -> PoolBuilder {
+        self.models.push((name.to_string(), Some(path.into())));
+        self
+    }
+
+    /// Load every tenant's info + parameters and spawn the worker teams.
+    pub fn build(self, cfg: ServeConfig) -> Result<SessionPool> {
+        ensure!(!self.models.is_empty(), "session pool needs at least one model");
+        let mut tenants: BTreeMap<String, Arc<Tenant>> = BTreeMap::new();
+        for (name, ckpt) in &self.models {
+            let info = self.backend.info(name)?;
+            if info.kind != ModelKind::Transformer {
+                bail!("serving supports transformer classification models; {name:?} is not one");
+            }
+            let params = match ckpt {
+                Some(path) => ParamSet::load_bin(path, &info.param_specs)?,
+                None => self.backend.init_params(name)?,
+            };
+            tenants.insert(
+                name.clone(),
+                Arc::new(Tenant {
+                    info,
+                    params: Arc::new(params),
+                    queue: BoundedQueue::new(cfg.queue_capacity),
+                    completed: AtomicU64::new(0),
+                }),
+            );
+        }
+        let mut workers = Vec::with_capacity(tenants.len() * cfg.workers);
+        for (name, tenant) in &tenants {
+            for w in 0..cfg.workers {
+                let tenant = tenant.clone();
+                let backend = self.backend.clone();
+                let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("vcas-serve-{name}-{w}"))
+                        .spawn(move || worker_loop(backend, tenant, max_batch, max_wait))?,
+                );
+            }
+        }
+        Ok(SessionPool { tenants, workers, cfg })
+    }
+}
+
+/// One pool worker: drain a coalesced batch, run one batched forward
+/// through a cached-info [`ModelSession`], split the logits back into
+/// per-request replies. Exits when the queue is closed and drained, so
+/// every admitted request is answered even during shutdown.
+fn worker_loop(backend: SharedBackend, tenant: Arc<Tenant>, max_batch: usize, max_wait: Duration) {
+    let b: &dyn Backend = backend.as_ref();
+    let session = ModelSession::with_info(b, tenant.info.clone());
+    let (seq_len, n_classes) = (tenant.info.seq_len, tenant.info.n_classes);
+    while let Some(batch) = tenant.queue.drain_batch(max_batch, max_wait) {
+        let n = batch.len();
+        let mut x = Vec::with_capacity(n * seq_len);
+        for p in &batch {
+            x.extend_from_slice(&p.tokens);
+        }
+        let cls = ClsBatch { n, seq_len, x, y: vec![0; n], idx: (0..n).collect() };
+        match session.infer_cls(&tenant.params, &cls) {
+            Ok(logits) => {
+                for (r, p) in batch.into_iter().enumerate() {
+                    let done_seq = tenant.completed.fetch_add(1, Ordering::SeqCst);
+                    let reply = InferReply {
+                        logits: logits[r * n_classes..(r + 1) * n_classes].to_vec(),
+                        batched: n,
+                        done_seq,
+                        service_us: p.t_submit.elapsed().as_micros() as u64,
+                    };
+                    // a caller that dropped its ticket just declines the
+                    // answer; that is not a worker error
+                    let _ = p.tx.send(Ok(reply));
+                }
+            }
+            Err(e) => {
+                let err = ServingError::Backend(e.to_string());
+                for p in batch {
+                    tenant.completed.fetch_add(1, Ordering::SeqCst);
+                    let _ = p.tx.send(Err(err.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// A multi-tenant serving pool: per-model request queues with continuous
+/// batching, admission control, and join-on-drop shutdown. See the module
+/// docs for the full contract.
+pub struct SessionPool {
+    tenants: BTreeMap<String, Arc<Tenant>>,
+    workers: Vec<JoinHandle<()>>,
+    cfg: ServeConfig,
+}
+
+impl SessionPool {
+    pub fn builder(backend: SharedBackend) -> PoolBuilder {
+        PoolBuilder { backend, models: Vec::new() }
+    }
+
+    /// Served model names.
+    pub fn models(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    /// The cached structural info of a served model (fetched once at
+    /// build).
+    pub fn info(&self, model: &str) -> Option<&ModelInfo> {
+        self.tenants.get(model).map(|t| &t.info)
+    }
+
+    /// The resident parameters of a served model (tests run reference
+    /// forwards against exactly these).
+    pub fn params(&self, model: &str) -> Option<Arc<ParamSet>> {
+        self.tenants.get(model).map(|t| t.params.clone())
+    }
+
+    /// Requests completed so far for a model.
+    pub fn completed(&self, model: &str) -> u64 {
+        self.tenants.get(model).map_or(0, |t| t.completed.load(Ordering::SeqCst))
+    }
+
+    /// Requests currently queued (racy; telemetry only).
+    pub fn queue_len(&self, model: &str) -> usize {
+        self.tenants.get(model).map_or(0, |t| t.queue.len())
+    }
+
+    pub fn config(&self) -> &ServeConfig {
+        &self.cfg
+    }
+
+    /// Submit one single-sample classification request. Non-blocking:
+    /// either the request is admitted (you get a [`Ticket`]) or it is
+    /// rejected typed — [`ServingError::Overloaded`] is the admission
+    /// control firing, not a failure of the pool.
+    pub fn submit(
+        &self,
+        model: &str,
+        tokens: Vec<i32>,
+    ) -> std::result::Result<Ticket, ServingError> {
+        let tenant = self
+            .tenants
+            .get(model)
+            .ok_or_else(|| ServingError::UnknownModel(model.to_string()))?;
+        if tokens.len() != tenant.info.seq_len {
+            return Err(ServingError::BadRequest(format!(
+                "request has {} tokens, model {model:?} wants {}",
+                tokens.len(),
+                tenant.info.seq_len
+            )));
+        }
+        if let Some(&t) = tokens.iter().find(|&&t| t < 0 || t as usize >= tenant.info.vocab) {
+            return Err(ServingError::BadRequest(format!(
+                "token {t} outside vocab range [0, {})",
+                tenant.info.vocab
+            )));
+        }
+        let (tx, rx) = mpsc::channel();
+        let pending = Pending { tokens, tx, t_submit: Instant::now() };
+        match tenant.queue.try_push(pending) {
+            Ok(ticket) => Ok(Ticket { ticket, rx }),
+            Err(e) if e.is_full() => Err(ServingError::Overloaded {
+                model: model.to_string(),
+                capacity: tenant.queue.capacity(),
+            }),
+            Err(_) => Err(ServingError::Shutdown),
+        }
+    }
+}
+
+impl Drop for SessionPool {
+    fn drop(&mut self) {
+        // Close every queue first (wakes parked workers), then join:
+        // workers drain what was already admitted — those requests still
+        // get replies — and exit on the closed+empty queue. No detached
+        // threads, no deadlock.
+        for t in self.tenants.values() {
+            t.queue.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::NativeBackend;
+
+    fn pool(cfg: ServeConfig) -> SessionPool {
+        let backend = Arc::new(NativeBackend::with_default_models().with_threads(1));
+        SessionPool::builder(backend).model("tiny").build(cfg).unwrap()
+    }
+
+    #[test]
+    fn submit_validates_model_and_request_shape() {
+        let p = pool(ServeConfig { workers: 0, ..ServeConfig::default() });
+        let seq_len = p.info("tiny").unwrap().seq_len;
+        assert!(matches!(
+            p.submit("nope", vec![0; seq_len]),
+            Err(ServingError::UnknownModel(_))
+        ));
+        assert!(matches!(
+            p.submit("tiny", vec![0; seq_len + 1]),
+            Err(ServingError::BadRequest(_))
+        ));
+        assert!(matches!(
+            p.submit("tiny", vec![-1; seq_len]),
+            Err(ServingError::BadRequest(_))
+        ));
+        let vocab = p.info("tiny").unwrap().vocab as i32;
+        assert!(matches!(
+            p.submit("tiny", vec![vocab; seq_len]),
+            Err(ServingError::BadRequest(_))
+        ));
+        p.submit("tiny", vec![0; seq_len]).unwrap();
+    }
+
+    #[test]
+    fn builder_rejects_non_transformer_tenants() {
+        let backend = Arc::new(NativeBackend::with_default_models());
+        let err = SessionPool::builder(backend)
+            .model("cnn")
+            .build(ServeConfig::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("cnn"), "{err}");
+    }
+
+    #[test]
+    fn builder_rejects_empty_pool_and_unknown_model() {
+        let backend: SharedBackend = Arc::new(NativeBackend::with_default_models());
+        assert!(SessionPool::builder(backend.clone())
+            .build(ServeConfig::default())
+            .is_err());
+        assert!(SessionPool::builder(backend)
+            .model("not-a-model")
+            .build(ServeConfig::default())
+            .is_err());
+    }
+
+    #[test]
+    fn serves_one_request_end_to_end() {
+        let p = pool(ServeConfig::default());
+        let info = p.info("tiny").unwrap();
+        let (seq_len, n_classes) = (info.seq_len, info.n_classes);
+        let reply = p.submit("tiny", vec![3; seq_len]).unwrap().wait().unwrap();
+        assert_eq!(reply.logits.len(), n_classes);
+        assert!(reply.logits.iter().all(|x| x.is_finite()));
+        assert!(reply.batched >= 1);
+        assert_eq!(p.completed("tiny"), 1);
+    }
+
+    #[test]
+    fn checkpoint_tenant_serves_saved_params() {
+        let backend = Arc::new(NativeBackend::with_default_models());
+        let info = backend.info("tiny").unwrap();
+        let params = backend.init_params("tiny").unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("vcas_serve_ckpt_{}.params.bin", std::process::id()));
+        params.save_bin(&path).unwrap();
+        let p = SessionPool::builder(backend)
+            .model_from_checkpoint("tiny", &path)
+            .build(ServeConfig::default())
+            .unwrap();
+        let loaded = p.params("tiny").unwrap();
+        assert_eq!(loaded.tensors[0].data, params.tensors[0].data);
+        let reply = p.submit("tiny", vec![7; info.seq_len]).unwrap().wait().unwrap();
+        assert_eq!(reply.logits.len(), info.n_classes);
+        drop(p);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn serving_error_display_is_informative() {
+        let e = ServingError::Overloaded { model: "tiny".into(), capacity: 4 };
+        assert!(e.to_string().contains("tiny") && e.to_string().contains('4'));
+        assert!(ServingError::Shutdown.to_string().contains("shut down"));
+    }
+}

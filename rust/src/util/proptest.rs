@@ -1,5 +1,7 @@
 //! proptest-lite: a tiny property-based testing harness (the real proptest
-//! crate is not in the offline vendor set).
+//! crate is not in the offline vendor set), plus the statistical
+//! estimator harness ([`EstimatorTest`], [`chi_square_stat`],
+//! [`chi2_bound`], [`stat_seed`]) the sampler unbiasedness tests run on.
 //!
 //! Usage:
 //! ```ignore
@@ -13,6 +15,7 @@
 //! iteration seed so the case can be replayed with `check_seeded`.
 
 use super::rng::Pcg32;
+use super::stats::Welford;
 
 /// Random input generator handed to properties.
 pub struct Gen {
@@ -111,6 +114,154 @@ where
     }
 }
 
+// ---------------------------------------------------------------------------
+// Statistical estimator harness.
+// ---------------------------------------------------------------------------
+
+/// Base of the fixed seed schedule every statistical test draws from:
+/// case `i` uses [`stat_seed`]`(i)`. One shared schedule means a bound
+/// that passes once passes forever — these tests are deterministic
+/// regression tripwires, not fresh Monte-Carlo experiments per run.
+pub const STAT_SEED_BASE: u64 = 0x57A7_0000;
+
+/// The fixed seed for statistical test case `case`.
+pub fn stat_seed(case: u64) -> u64 {
+    STAT_SEED_BASE + case
+}
+
+/// Pearson chi-square statistic `sum (o - e)^2 / e` over cells with
+/// positive expectation (goodness-of-fit of observed counts against
+/// expected counts; compare against [`chi2_bound`]).
+pub fn chi_square_stat(observed: &[u64], expected: &[f64]) -> f64 {
+    assert_eq!(observed.len(), expected.len(), "cell count mismatch");
+    observed
+        .iter()
+        .zip(expected)
+        .filter(|(_, &e)| e > 0.0)
+        .map(|(&o, &e)| {
+            let d = o as f64 - e;
+            d * d / e
+        })
+        .sum()
+}
+
+/// Approximate upper chi-square quantile at `z` normal sigmas for `dof`
+/// degrees of freedom, via the Wilson–Hilferty cube-root normalization:
+/// `chi2 ~ k (1 - 2/(9k) + z sqrt(2/(9k)))^3`. Accurate to a few percent
+/// for k >= 1 — plenty for a 5-sigma regression tripwire.
+pub fn chi2_bound(dof: usize, z: f64) -> f64 {
+    let k = dof.max(1) as f64;
+    let t = 2.0 / (9.0 * k);
+    k * (1.0 - t + z * t.sqrt()).powi(3)
+}
+
+/// Mean-of-draws vs exact-value estimator test: feed it every Monte-Carlo
+/// draw of a vector-valued estimator, then [`EstimatorTest::assert_unbiased`]
+/// checks each coordinate's sample mean against the exact value with a
+/// z-score bound (standard error from the draws' own Welford variance) and
+/// the coordinates jointly with an aggregate chi-square bound — so a small
+/// bias smeared across many coordinates fails as loudly as a large bias in
+/// one. Coordinates the estimator reproduces *deterministically* (zero
+/// sample variance — e.g. ratio-1 sampling) must match the exact value to
+/// fp tolerance instead.
+///
+/// Draw with a [`stat_seed`] so the outcome is deterministic; the z bound
+/// then never flakes — it either passes forever or an estimator regressed.
+/// (Coordinates of one draw are generally correlated, so the aggregate
+/// bound is approximate; pair a generous `z_max` like 5-6 with the fixed
+/// schedule.)
+pub struct EstimatorTest {
+    name: String,
+    exact: Vec<f64>,
+    stats: Vec<Welford>,
+}
+
+impl EstimatorTest {
+    /// A test against the exact per-coordinate expectations.
+    pub fn new(name: impl Into<String>, exact: &[f64]) -> EstimatorTest {
+        EstimatorTest {
+            name: name.into(),
+            exact: exact.to_vec(),
+            stats: vec![Welford::new(); exact.len()],
+        }
+    }
+
+    pub fn new_f32(name: impl Into<String>, exact: &[f32]) -> EstimatorTest {
+        let exact: Vec<f64> = exact.iter().map(|&x| x as f64).collect();
+        EstimatorTest::new(name, &exact)
+    }
+
+    /// Record one draw of the estimator (same length as `exact`).
+    pub fn push(&mut self, draw: &[f64]) {
+        assert_eq!(draw.len(), self.stats.len(), "'{}': draw dim mismatch", self.name);
+        for (w, &x) in self.stats.iter_mut().zip(draw) {
+            w.push(x);
+        }
+    }
+
+    pub fn push_f32(&mut self, draw: &[f32]) {
+        assert_eq!(draw.len(), self.stats.len(), "'{}': draw dim mismatch", self.name);
+        for (w, &x) in self.stats.iter_mut().zip(draw) {
+            w.push(x as f64);
+        }
+    }
+
+    /// Draws recorded so far.
+    pub fn draws(&self) -> u64 {
+        self.stats.first().map_or(0, |w| w.count())
+    }
+
+    /// Panic unless every coordinate mean is within `z_max` standard
+    /// errors of its exact value AND the aggregate squared z-scores stay
+    /// under the chi-square bound at `z_max` sigmas.
+    pub fn assert_unbiased(&self, z_max: f64) {
+        let n = self.draws();
+        assert!(n >= 30, "estimator test '{}' needs >= 30 draws, got {n}", self.name);
+        let mut chi = 0.0f64;
+        let mut dof = 0usize;
+        for (i, (w, &ex)) in self.stats.iter().zip(&self.exact).enumerate() {
+            let (mean, var) = (w.mean(), w.var());
+            let scale = ex.abs().max(1.0);
+            if var <= 1e-18 * scale * scale {
+                // deterministic coordinate (e.g. keep probability exactly
+                // 1): the estimator must reproduce the value, not merely
+                // approach it
+                assert!(
+                    (mean - ex).abs() <= 1e-6 * scale,
+                    "'{}' coord {i}: deterministic mean {mean} != exact {ex}",
+                    self.name
+                );
+                continue;
+            }
+            let z = (mean - ex) / (var / n as f64).sqrt();
+            assert!(
+                z.abs() <= z_max,
+                "'{}' coord {i}: |z| = {:.2} > {z_max} (mean {mean} vs exact {ex}, \
+                 var {var:.3e}, n {n}) — estimator biased",
+                self.name,
+                z.abs()
+            );
+            chi += z * z;
+            dof += 1;
+        }
+        if dof > 0 {
+            // Correlated coordinates (e.g. one Bernoulli mask shared by a
+            // whole row) inflate the sum of squared z-scores beyond the
+            // independent chi-square quantile, so allow the looser of the
+            // Wilson–Hilferty bound and a dof * z_max allowance. A real
+            // bias still trips this: its chi grows linearly in the draw
+            // count, orders of magnitude past either bound.
+            let bound = chi2_bound(dof, z_max).max(dof as f64 * z_max);
+            assert!(
+                chi <= bound,
+                "'{}': aggregate chi-square {chi:.2} > bound {bound:.2} ({dof} dof) — \
+                 coordinate drifts are individually small but jointly biased",
+                self.name
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -138,6 +289,73 @@ mod tests {
             let x = g.usize_in(lo, hi);
             ensure(x >= lo && x <= hi, format!("{x} outside [{lo},{hi}]"))
         });
+    }
+
+    #[test]
+    fn estimator_test_accepts_unbiased_draws() {
+        // Bern(p)/p is the exact estimator shape the samplers use.
+        let exact = [1.0f64, -2.0, 0.0];
+        let mut est = EstimatorTest::new("bern over p", &exact);
+        let mut rng = Pcg32::new(stat_seed(900), 1);
+        let p = 0.4f64;
+        for _ in 0..5000 {
+            let m = if rng.bernoulli(p) { 1.0 / p } else { 0.0 };
+            // coord 2 is deterministic (exact zero either way)
+            est.push(&[exact[0] * m, exact[1] * m, 0.0]);
+        }
+        assert_eq!(est.draws(), 5000);
+        est.assert_unbiased(5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "estimator biased")]
+    fn estimator_test_rejects_biased_draws() {
+        // Bern(p) *without* the 1/p correction: mean converges to p * exact.
+        let exact = [1.0f64];
+        let mut est = EstimatorTest::new("bern missing 1/p", &exact);
+        let mut rng = Pcg32::new(stat_seed(901), 1);
+        for _ in 0..5000 {
+            let m = if rng.bernoulli(0.4) { 1.0 } else { 0.0 };
+            est.push(&[m]);
+        }
+        est.assert_unbiased(5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "deterministic mean")]
+    fn estimator_test_rejects_deterministic_mismatch() {
+        let mut est = EstimatorTest::new("constant off by 0.5", &[1.0]);
+        for _ in 0..100 {
+            est.push(&[1.5]);
+        }
+        est.assert_unbiased(5.0);
+    }
+
+    #[test]
+    fn chi_square_stat_matches_hand_computation() {
+        // (10-8)^2/8 + (6-8)^2/8 = 1.0; zero-expectation cell is skipped
+        let chi = chi_square_stat(&[10, 6, 3], &[8.0, 8.0, 0.0]);
+        assert!((chi - 1.0).abs() < 1e-12, "chi {chi}");
+    }
+
+    #[test]
+    fn chi2_bound_tracks_known_quantiles() {
+        // Wilson–Hilferty at z = 0 approximates the median: chi2(1) median
+        // ~0.455, chi2(4) median ~3.36, chi2(60) median ~59.3
+        assert!((chi2_bound(1, 0.0) - 0.455).abs() < 0.05);
+        assert!((chi2_bound(4, 0.0) - 3.36).abs() < 0.15);
+        assert!((chi2_bound(60, 0.0) - 59.3).abs() < 0.5);
+        // monotone in both arguments, and comfortably above the mean (k)
+        // at the 5-sigma tripwire level
+        assert!(chi2_bound(4, 5.0) > chi2_bound(4, 3.0));
+        assert!(chi2_bound(8, 3.0) > chi2_bound(4, 3.0));
+        assert!(chi2_bound(10, 5.0) > 10.0);
+    }
+
+    #[test]
+    fn stat_seed_schedule_is_fixed_and_distinct() {
+        assert_eq!(stat_seed(0), STAT_SEED_BASE);
+        assert_ne!(stat_seed(1), stat_seed(2));
     }
 
     #[test]

@@ -1,0 +1,238 @@
+//! Concurrency suite for the serving layer.
+//!
+//! Everything here runs hermetically on the native backend. The four
+//! contracts under test:
+//!
+//! 1. **Batching equivalence** — a request's logits are bitwise identical
+//!    whether it ran alone, coalesced into any batch, on any worker count,
+//!    at any kernel thread count (swept below).
+//! 2. **FIFO fairness** — with one worker, completion order equals
+//!    admission-ticket order exactly, even under concurrent submitters.
+//! 3. **Admission control** — a full queue rejects with a typed
+//!    `Overloaded`, never by blocking; undrained requests resolve to
+//!    `Shutdown` at pool drop.
+//! 4. **Shutdown** — dropping the pool joins every worker (no detached
+//!    threads: the backend `Arc` strong count returns to 1) and admitted
+//!    in-flight requests are still answered.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use vcas::data::batch::ClsBatch;
+use vcas::runtime::{ModelSession, NativeBackend};
+use vcas::serving::{ServeConfig, ServingError, SessionPool};
+
+/// Deterministic per-request token stream (distinct per request index).
+fn tokens_for(i: usize, seq_len: usize, vocab: usize) -> Vec<i32> {
+    (0..seq_len).map(|t| ((i * 31 + t * 7 + 3) % vocab) as i32).collect()
+}
+
+/// Reference logits for requests 0..n: one batched forward through a
+/// plain `ModelSession` on a fresh single-threaded backend.
+fn reference_logits(n: usize) -> Vec<Vec<f32>> {
+    let backend = NativeBackend::with_default_models().with_threads(1);
+    let sess = ModelSession::open(&backend, "tiny").unwrap();
+    let params = sess.load_params().unwrap();
+    let (seq_len, vocab, n_classes) = (sess.seq_len, sess.vocab, sess.n_classes);
+    let mut x = Vec::with_capacity(n * seq_len);
+    for i in 0..n {
+        x.extend_from_slice(&tokens_for(i, seq_len, vocab));
+    }
+    let batch = ClsBatch { n, seq_len, x, y: vec![0; n], idx: (0..n).collect() };
+    let logits = sess.infer_cls(&params, &batch).unwrap();
+    (0..n).map(|i| logits[i * n_classes..(i + 1) * n_classes].to_vec()).collect()
+}
+
+/// Serve requests 0..n through a pool with the given config and kernel
+/// thread count; logits returned in request order.
+fn serve_all(n: usize, cfg: ServeConfig, threads: usize) -> Vec<Vec<f32>> {
+    let backend = Arc::new(NativeBackend::with_default_models().with_threads(threads));
+    let pool = SessionPool::builder(backend).model("tiny").build(cfg).unwrap();
+    let info = pool.info("tiny").unwrap();
+    let (seq_len, vocab) = (info.seq_len, info.vocab);
+    let tickets: Vec<_> = (0..n)
+        .map(|i| pool.submit("tiny", tokens_for(i, seq_len, vocab)).unwrap())
+        .collect();
+    tickets.into_iter().map(|t| t.wait().unwrap().logits).collect()
+}
+
+#[test]
+fn batching_equivalence_sweep_pool_sizes_and_max_batch() {
+    // The determinism contract, swept: every (workers, max_batch) cell —
+    // from strictly-serial singles to a 4-worker pool coalescing up to 16
+    // rows — must reproduce the reference batched forward bit for bit.
+    let n = 12;
+    let reference = reference_logits(n);
+    for workers in [1usize, 2, 4] {
+        for max_batch in [1usize, 4, 16] {
+            let cfg = ServeConfig {
+                max_batch,
+                max_wait: Duration::from_micros(500),
+                queue_capacity: 64,
+                workers,
+            };
+            let served = serve_all(n, cfg, 1);
+            for (i, (got, want)) in served.iter().zip(&reference).enumerate() {
+                assert_eq!(got.len(), want.len());
+                let bitwise = got
+                    .iter()
+                    .zip(want)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(
+                    bitwise,
+                    "request {i} diverged at workers={workers} max_batch={max_batch}: \
+                     {got:?} vs {want:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn serving_is_bitwise_identical_across_kernel_thread_counts() {
+    let n = 8;
+    let cfg = ServeConfig { max_batch: 8, workers: 2, ..ServeConfig::default() };
+    let one = serve_all(n, cfg, 1);
+    let two = serve_all(n, cfg, 2);
+    for (i, (a, b)) in one.iter().zip(&two).enumerate() {
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "request {i} differs between 1 and 2 kernel threads"
+        );
+    }
+}
+
+#[test]
+fn concurrent_singles_coalesce_into_batched_forwards() {
+    // With one worker, a generous straggler window and a burst of
+    // back-to-back submits, continuous batching must actually batch —
+    // otherwise the sweep above proves equivalence of nothing.
+    let backend = Arc::new(NativeBackend::with_default_models().with_threads(1));
+    let cfg = ServeConfig {
+        max_batch: 16,
+        max_wait: Duration::from_millis(200),
+        queue_capacity: 64,
+        workers: 1,
+    };
+    let pool = SessionPool::builder(backend).model("tiny").build(cfg).unwrap();
+    let info = pool.info("tiny").unwrap();
+    let (seq_len, vocab) = (info.seq_len, info.vocab);
+    let tickets: Vec<_> = (0..8)
+        .map(|i| pool.submit("tiny", tokens_for(i, seq_len, vocab)).unwrap())
+        .collect();
+    let mut max_batched = 0usize;
+    for t in tickets {
+        let reply = t.wait().unwrap();
+        max_batched = max_batched.max(reply.batched);
+    }
+    assert!(
+        max_batched >= 2,
+        "8 back-to-back submits inside a 200ms window never shared a forward \
+         (max batched {max_batched})"
+    );
+    assert_eq!(pool.completed("tiny"), 8);
+}
+
+#[test]
+fn fifo_fairness_under_concurrent_submitters() {
+    // One worker: pop order == push order == dense ticket order, and the
+    // worker stamps completion sequence numbers in pop order — so
+    // done_seq == ticket for EVERY request, no matter how many threads
+    // race to submit.
+    let backend = Arc::new(NativeBackend::with_default_models().with_threads(1));
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_micros(100),
+        queue_capacity: 64,
+        workers: 1,
+    };
+    let pool = SessionPool::builder(backend).model("tiny").build(cfg).unwrap();
+    let info = pool.info("tiny").unwrap();
+    let (seq_len, vocab) = (info.seq_len, info.vocab);
+    let per_thread = 8usize;
+    let pairs: Vec<(u64, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|sub| {
+                let pool = &pool;
+                s.spawn(move || {
+                    let mut out = Vec::with_capacity(per_thread);
+                    for i in 0..per_thread {
+                        let ticket = pool
+                            .submit("tiny", tokens_for(sub * per_thread + i, seq_len, vocab))
+                            .unwrap();
+                        let seq = ticket.ticket();
+                        let reply = ticket.wait().unwrap();
+                        out.push((seq, reply.done_seq));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(pairs.len(), 4 * per_thread);
+    let mut tickets: Vec<u64> = pairs.iter().map(|&(t, _)| t).collect();
+    tickets.sort_unstable();
+    assert_eq!(tickets, (0..4 * per_thread as u64).collect::<Vec<_>>(), "tickets not dense");
+    for &(ticket, done) in &pairs {
+        assert_eq!(done, ticket, "request admitted as #{ticket} completed as #{done}");
+    }
+}
+
+#[test]
+fn admission_control_rejects_overload_and_shuts_down_typed() {
+    // No workers: nothing drains, so the queue fills deterministically.
+    let backend = Arc::new(NativeBackend::with_default_models());
+    let cfg = ServeConfig {
+        queue_capacity: 4,
+        workers: 0,
+        ..ServeConfig::default()
+    };
+    let pool = SessionPool::builder(backend).model("tiny").build(cfg).unwrap();
+    let seq_len = pool.info("tiny").unwrap().seq_len;
+    let admitted: Vec<_> =
+        (0..4).map(|_| pool.submit("tiny", vec![1; seq_len]).unwrap()).collect();
+    assert_eq!(pool.queue_len("tiny"), 4);
+    // 5th submit: typed rejection, immediately, with the capacity attached
+    match pool.submit("tiny", vec![1; seq_len]) {
+        Err(ServingError::Overloaded { model, capacity }) => {
+            assert_eq!(model, "tiny");
+            assert_eq!(capacity, 4);
+        }
+        Err(other) => panic!("expected Overloaded, got {other:?}"),
+        Ok(_) => panic!("expected Overloaded, got admission"),
+    }
+    // drop with no workers: the admitted-but-never-drained requests
+    // resolve to Shutdown, not a hang
+    drop(pool);
+    for t in admitted {
+        assert_eq!(t.wait().unwrap_err(), ServingError::Shutdown);
+    }
+}
+
+#[test]
+fn drop_mid_flight_joins_workers_and_answers_admitted_requests() {
+    let backend = Arc::new(NativeBackend::with_default_models().with_threads(1));
+    let cfg = ServeConfig {
+        max_batch: 4,
+        max_wait: Duration::from_millis(50),
+        queue_capacity: 64,
+        workers: 2,
+    };
+    let pool = SessionPool::builder(backend.clone()).model("tiny").build(cfg).unwrap();
+    let info = pool.info("tiny").unwrap();
+    let (seq_len, vocab, n_classes) = (info.seq_len, info.vocab, info.n_classes);
+    let tickets: Vec<_> = (0..6)
+        .map(|i| pool.submit("tiny", tokens_for(i, seq_len, vocab)).unwrap())
+        .collect();
+    // drop while requests are still queued/in flight: close + join must
+    // drain them, not abandon them
+    drop(pool);
+    for t in tickets {
+        let reply = t.wait().expect("admitted request must be answered through shutdown");
+        assert_eq!(reply.logits.len(), n_classes);
+    }
+    // join-on-drop actually joined: no detached worker still holds the
+    // backend
+    assert_eq!(Arc::strong_count(&backend), 1, "worker thread leaked past drop");
+}
