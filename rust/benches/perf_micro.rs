@@ -1,8 +1,9 @@
 //! §Perf micro-benchmarks: per-entry execute latency, marshalling cost,
 //! controller update cost, allreduce cost, the kernel layer's single- vs
 //! multi-thread scaling, the zero-scan vs gather-compacted sampled
-//! backward across keep ratios, and the sync-vs-prefetch step time of the
-//! async batch pipeline — the L3 hot-path profile. The kernel section
+//! backward across keep ratios, the sync-vs-prefetch step time of the
+//! async batch pipeline, and sequential vs overlapped DDP reduction at
+//! 2/4/8 workers — the L3 hot-path profile. The kernel section
 //! writes `results/BENCH_kernels.json`, the sampling section
 //! `results/BENCH_sampling.json`, the pipeline section
 //! `results/BENCH_pipeline.json` and the serving section (p50/p99 latency
@@ -458,6 +459,70 @@ fn main() {
         o.insert("depth".into(), Json::Num(2.0));
         o.insert("speedup".into(), Json::Num(step_ms[0] / step_ms[1]));
         pipeline_json.insert("mlm_session_step_small".into(), Json::Obj(o));
+    }
+    // overlapped DDP reduction: sequential (full backward, then serial
+    // tree allreduce) vs the comm scheduler reducing buckets while later
+    // layers still compute, on a synthetic layered backward at 2/4/8
+    // workers. Results are bitwise identical; the acceptance target is
+    // overlap reducing per-round wall-clock at >= 4 workers.
+    {
+        use vcas::coordinator::comm::{BucketPlan, ReduceOptions, DEFAULT_BUCKET_BYTES};
+        use vcas::coordinator::parallel::{data_parallel_grads, data_parallel_grads_overlapped};
+
+        let n_tensors = 12usize;
+        let len = 96 * 1024usize; // ~4.5 MB of gradients per worker
+        let lens = vec![len; n_tensors];
+        let order: Vec<usize> = (0..n_tensors).rev().collect();
+        // simulated layer backward: deterministic per-element work, so the
+        // reducer has real compute to hide behind (as in a real backward)
+        let make_grad = |w: usize, t: usize| -> Vec<f32> {
+            let mut v = Vec::with_capacity(len);
+            let mut x = (w * 31 + t * 7 + 1) as f32;
+            for _ in 0..len {
+                x = x * 0.999_9 + 0.017;
+                v.push(x);
+            }
+            v
+        };
+        for workers in [2usize, 4, 8] {
+            let plan = BucketPlan::new(&lens, &order, DEFAULT_BUCKET_BYTES).unwrap();
+            let seq_ms = common::time_median_ms(5, || {
+                let out = data_parallel_grads(workers, workers, |w, _| {
+                    let mut grads = vec![Vec::new(); n_tensors];
+                    for &t in &order {
+                        grads[t] = make_grad(w, t);
+                    }
+                    Ok(grads)
+                })
+                .unwrap();
+                std::hint::black_box(&out);
+            });
+            let overlap_ms = common::time_median_ms(5, || {
+                let opts = ReduceOptions::default();
+                let out =
+                    data_parallel_grads_overlapped(workers, workers, &plan, &opts, |w, _, p| {
+                        for &t in &order {
+                            p.publish(t, &make_grad(w, t))?;
+                        }
+                        Ok(())
+                    })
+                    .unwrap();
+                std::hint::black_box(&out);
+            });
+            table.row(vec![
+                format!("ddp round, {workers} workers, overlapped"),
+                format!("{overlap_ms:.2}"),
+                format!("sequential {seq_ms:.2} ms, {:.2}x", seq_ms / overlap_ms),
+            ]);
+            let mut o: BTreeMap<String, Json> = BTreeMap::new();
+            o.insert("workers".into(), Json::Num(workers as f64));
+            o.insert("grad_elems".into(), Json::Num((n_tensors * len) as f64));
+            o.insert("bucket_bytes".into(), Json::Num(DEFAULT_BUCKET_BYTES as f64));
+            o.insert("seq_ms".into(), Json::Num(seq_ms));
+            o.insert("overlap_ms".into(), Json::Num(overlap_ms));
+            o.insert("speedup".into(), Json::Num(seq_ms / overlap_ms));
+            pipeline_json.insert(format!("ddp_round_workers_{workers}"), Json::Obj(o));
+        }
     }
     let json_path = common::results_dir().join("BENCH_pipeline.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(pipeline_json))).unwrap();

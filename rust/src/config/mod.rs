@@ -148,6 +148,15 @@ pub struct TrainConfig {
     /// `VCAS_PREFETCH` env when set, else double buffering). Bitwise-
     /// identical trajectories at any depth; MLM tasks force 0.
     pub prefetch: Option<usize>,
+    /// Overlap DDP bucket reduction with the backward (`None` = auto:
+    /// `VCAS_OVERLAP` env when set, else on). Bitwise-identical results
+    /// either way; off pins the sequential reference.
+    pub overlap: Option<bool>,
+    /// DDP reduction bucket size cap in KiB (0 = unbounded, one bucket).
+    pub bucket_kb: usize,
+    /// 8-bit quantized allreduce with error feedback. Changes numeric
+    /// trajectories — strictly opt-in, tolerance-tested.
+    pub compress: bool,
     /// Where to write metrics CSVs (empty = no CSV).
     pub out_dir: String,
 }
@@ -168,6 +177,9 @@ impl Default for TrainConfig {
             workers: 1,
             threads: 0,
             prefetch: None,
+            overlap: None,
+            bucket_kb: 256,
+            compress: false,
             out_dir: String::new(),
         }
     }
@@ -209,6 +221,15 @@ impl TrainConfig {
         }
         if let Some(v) = t.get_int("train", "prefetch") {
             c.prefetch = Some(v as usize);
+        }
+        if let Some(v) = t.get_bool("train", "overlap") {
+            c.overlap = Some(v);
+        }
+        if let Some(v) = t.get_int("train", "bucket_kb") {
+            c.bucket_kb = v as usize;
+        }
+        if let Some(v) = t.get_bool("train", "compress") {
+            c.compress = v;
         }
         if let Some(v) = t.get_str("train", "out_dir") {
             c.out_dir = v;
@@ -291,6 +312,9 @@ mod tests {
             keep_ratio = 0.25
             threads = 3
             prefetch = 4
+            overlap = false
+            bucket_kb = 64
+            compress = true
             [vcas]
             tau_act = 0.1
             m_repeats = 4
@@ -310,10 +334,16 @@ mod tests {
         assert_eq!(c.optim.schedule, "const");
         assert_eq!(c.threads, 3);
         assert_eq!(c.prefetch, Some(4));
+        assert_eq!(c.overlap, Some(false));
+        assert_eq!(c.bucket_kb, 64);
+        assert!(c.compress);
         // untouched keys keep defaults
         assert_eq!(c.vcas.beta, 0.95);
         assert_eq!(TrainConfig::default().threads, 0, "default threads = auto");
         assert_eq!(TrainConfig::default().prefetch, None, "default prefetch = auto");
+        assert_eq!(TrainConfig::default().overlap, None, "default overlap = auto");
+        assert_eq!(TrainConfig::default().bucket_kb, 256, "default bucket cap 256 KiB");
+        assert!(!TrainConfig::default().compress, "compression is opt-in");
     }
 
     #[test]

@@ -1,0 +1,948 @@
+//! Overlapped, bucketed DDP gradient reduction (PR 7's tentpole).
+//!
+//! The plain DDP round (`parallel::data_parallel_grads`) is strictly
+//! phased: every worker finishes its whole backward, *then* one
+//! `tree_allreduce_mean` combines everything. Real data-parallel stacks
+//! overlap the two — gradients for the last layers are final long before
+//! the first layers finish backpropagating, so their reduction can run
+//! concurrently with the rest of the backward. This module is that
+//! overlap, kept on the repo's determinism contract:
+//!
+//! - [`BucketPlan`] groups parameter tensors into size-capped buckets in
+//!   reverse-layer readiness order ([`grad_ready_order`]) — the order the
+//!   native backward actually finalizes them;
+//! - a scheduler (driven through [`overlapped_allreduce`]) stages each
+//!   worker's published tensors into per-bucket flat buffers and hands a
+//!   bucket to the reduction loop the moment **every** worker has
+//!   published all of its members, while earlier layers are still
+//!   computing;
+//! - the per-bucket combine replays the exact stride-doubling tree of
+//!   `tree_allreduce_mean` element-for-element, so the overlapped result
+//!   is **bitwise identical** to the sequential reference at any worker
+//!   count, bucket cap, or thread interleaving. Overlap-off
+//!   ([`ReduceOptions::overlap`] = false, the `VCAS_OVERLAP=0` pin) runs
+//!   the same staging and the same combine with zero concurrency — the
+//!   reference the equality tests sweep against.
+//!
+//! Workers publish through [`GradPublisher`], which implements the
+//! runtime's [`GradHook`] so it plugs straight into the `*_hooked`
+//! backend entries. A worker error (or panic) mid-round aborts the
+//! scheduler: the ready queue closes, the reducer drains and bails, and
+//! every other worker fails at its next publish — no deadlocks, and the
+//! originating worker error wins over the secondary abort errors it
+//! caused.
+//!
+//! [`CompressionState`] adds the config-gated 8-bit path: per-bucket
+//! affine quantization with per-worker error feedback (the residual each
+//! round's rounding left behind is added back the next round). It
+//! *changes trajectories* — it is off by default and tolerance-tested,
+//! never part of the bitwise contract.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::config::TrainConfig;
+use crate::error::{bail, ensure, Result};
+use crate::runtime::{GradHook, ModelInfo, ModelKind, Workspace};
+
+use super::channel::BoundedQueue;
+
+/// Bucket size cap used when neither the config nor the CLI says
+/// otherwise: 256 KiB of f32 gradients per bucket.
+pub const DEFAULT_BUCKET_BYTES: usize = 256 * 1024;
+
+/// Default overlap switch: on unless `VCAS_OVERLAP` is set to `0`, `off`
+/// or `false`. Results are bitwise identical either way; the env pin
+/// exists so CI can run the whole suite against the sequential reference.
+pub fn default_overlap() -> bool {
+    match std::env::var("VCAS_OVERLAP") {
+        Ok(v) => !matches!(v.trim(), "0" | "off" | "false"),
+        Err(_) => true,
+    }
+}
+
+/// Resolved DDP communication knobs (config / CLI / env, in the usual
+/// precedence: CLI overrides config overrides env default).
+#[derive(Clone, Debug)]
+pub struct CommConfig {
+    /// Overlap bucket reduction with the backward (bitwise-neutral).
+    pub overlap: bool,
+    /// Bucket size cap in bytes; 0 = unbounded (one bucket).
+    pub bucket_bytes: usize,
+    /// 8-bit quantized allreduce with error feedback. Changes
+    /// trajectories — strictly opt-in.
+    pub compress: bool,
+}
+
+impl Default for CommConfig {
+    fn default() -> Self {
+        CommConfig {
+            overlap: default_overlap(),
+            bucket_bytes: DEFAULT_BUCKET_BYTES,
+            compress: false,
+        }
+    }
+}
+
+impl CommConfig {
+    /// Resolve from a run config (`[train] overlap / bucket_kb /
+    /// compress`; unset overlap falls back to [`default_overlap`]).
+    pub fn resolve(cfg: &TrainConfig) -> CommConfig {
+        CommConfig {
+            overlap: cfg.overlap.unwrap_or_else(default_overlap),
+            bucket_bytes: cfg.bucket_kb.saturating_mul(1024),
+            compress: cfg.compress,
+        }
+    }
+}
+
+/// The order the native backward finalizes gradient tensors, as param
+/// indices: classifier/projection head first, encoder blocks in reverse,
+/// embeddings last. Used only to group tensors into buckets so buckets
+/// complete as early as possible — correctness never depends on it (the
+/// scheduler accepts publishes in any order).
+pub fn grad_ready_order(info: &ModelInfo) -> Result<Vec<usize>> {
+    let n = info.n_params();
+    let mut order = Vec::with_capacity(n);
+    match info.kind {
+        ModelKind::Transformer => {
+            // layout: embed, pos, 12 per block, then ln_f g/b, head w/b, mlm_b
+            ensure!(
+                n >= 7 && (n - 7) % 12 == 0,
+                "transformer {:?} has {n} param tensors, expected 12L+7",
+                info.name
+            );
+            let blocks = (n - 7) / 12;
+            let tail = 2 + 12 * blocks;
+            // heads + final layernorm finalize first
+            order.extend([tail + 3, tail + 2, tail + 4, tail, tail + 1]);
+            for l in (0..blocks).rev() {
+                let base = 2 + 12 * l;
+                order.extend([
+                    base + 10, // W_FF2
+                    base + 11, // B_FF2
+                    base + 8,  // W_FF1
+                    base + 9,  // B_FF1
+                    base + 6,  // LN2_G
+                    base + 7,  // LN2_B
+                    base + 4,  // W_O
+                    base + 5,  // B_O
+                    base + 2,  // W_QKV
+                    base + 3,  // B_QKV
+                    base,      // LN1_G
+                    base + 1,  // LN1_B
+                ]);
+            }
+            // token + positional embeddings close the backward
+            order.extend([0, 1]);
+        }
+        ModelKind::Cnn => {
+            // layout: 4 per conv stage (w, b, ln_g, ln_b), then fc w/b
+            ensure!(
+                n >= 2 && (n - 2) % 4 == 0,
+                "cnn {:?} has {n} param tensors, expected 4S+2",
+                info.name
+            );
+            let sites = (n - 2) / 4;
+            order.extend([4 * sites, 4 * sites + 1]);
+            for s in (0..sites).rev() {
+                order.extend([4 * s, 4 * s + 1, 4 * s + 2, 4 * s + 3]);
+            }
+        }
+    }
+    Ok(order)
+}
+
+/// One reduction bucket: member tensors in readiness order, staged as one
+/// flat buffer of `elems` f32.
+#[derive(Clone, Debug)]
+pub struct Bucket {
+    pub tensors: Vec<usize>,
+    pub elems: usize,
+}
+
+/// Greedy size-capped grouping of gradient tensors into reduction
+/// buckets, in readiness order. The plan fixes where every tensor stages
+/// (bucket + flat offset), so publishes from any thread at any time land
+/// in the same place and the combine order is frozen.
+#[derive(Clone, Debug)]
+pub struct BucketPlan {
+    /// Flat element count per tensor, param order.
+    lens: Vec<usize>,
+    buckets: Vec<Bucket>,
+    /// tensor -> (bucket index, flat element offset inside the bucket).
+    slot: Vec<(usize, usize)>,
+}
+
+impl BucketPlan {
+    /// Plan over tensors of the given `lens`, visited in `order` (must be
+    /// a permutation of `0..lens.len()`), flushing a bucket when adding
+    /// the next tensor would push it past `bucket_bytes` (0 = unbounded;
+    /// a tensor bigger than the cap gets a bucket of its own).
+    pub fn new(lens: &[usize], order: &[usize], bucket_bytes: usize) -> Result<BucketPlan> {
+        let n = lens.len();
+        ensure!(n > 0, "bucket plan over zero tensors");
+        ensure!(
+            order.len() == n,
+            "ready order lists {} tensors, model has {n}",
+            order.len()
+        );
+        let mut seen = vec![false; n];
+        for &t in order {
+            ensure!(t < n, "ready order names tensor {t}, model has {n}");
+            ensure!(!seen[t], "ready order lists tensor {t} twice");
+            seen[t] = true;
+        }
+        let cap_elems = if bucket_bytes == 0 {
+            usize::MAX
+        } else {
+            (bucket_bytes / 4).max(1)
+        };
+        let mut buckets: Vec<Bucket> = Vec::new();
+        let mut cur = Bucket { tensors: Vec::new(), elems: 0 };
+        for &t in order {
+            if !cur.tensors.is_empty() && cur.elems.saturating_add(lens[t]) > cap_elems {
+                buckets.push(std::mem::replace(&mut cur, Bucket { tensors: Vec::new(), elems: 0 }));
+            }
+            cur.tensors.push(t);
+            cur.elems += lens[t];
+        }
+        buckets.push(cur);
+        let mut slot = vec![(0usize, 0usize); n];
+        for (b, bucket) in buckets.iter().enumerate() {
+            let mut off = 0;
+            for &t in &bucket.tensors {
+                slot[t] = (b, off);
+                off += lens[t];
+            }
+        }
+        Ok(BucketPlan { lens: lens.to_vec(), buckets, slot })
+    }
+
+    /// Plan for a model: tensor sizes from its param specs, grouping in
+    /// [`grad_ready_order`].
+    pub fn for_model(info: &ModelInfo, bucket_bytes: usize) -> Result<BucketPlan> {
+        let lens: Vec<usize> = info
+            .param_specs
+            .iter()
+            .map(|(_, shape)| shape.iter().product())
+            .collect();
+        BucketPlan::new(&lens, &grad_ready_order(info)?, bucket_bytes)
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.lens.len()
+    }
+
+    pub fn n_buckets(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    pub fn tensor_len(&self, t: usize) -> usize {
+        self.lens[t]
+    }
+
+    /// Where tensor `t` stages: (bucket index, flat offset).
+    pub fn slot_of(&self, t: usize) -> (usize, usize) {
+        self.slot[t]
+    }
+
+    /// Largest staged bucket, in elements (sizing aid for benches).
+    pub fn max_bucket_elems(&self) -> usize {
+        self.buckets.iter().map(|b| b.elems).max().unwrap_or(0)
+    }
+}
+
+/// Per-worker error-feedback state for the 8-bit compressed allreduce:
+/// one residual buffer per (worker, bucket), carried across rounds so
+/// quantization error cancels instead of compounding. Shared by `&` —
+/// build once per training run, pass to every round's [`ReduceOptions`].
+pub struct CompressionState {
+    workers: usize,
+    n_buckets: usize,
+    residuals: Vec<Mutex<Vec<f32>>>,
+}
+
+impl CompressionState {
+    pub fn new(workers: usize, plan: &BucketPlan) -> CompressionState {
+        CompressionState {
+            workers,
+            n_buckets: plan.n_buckets(),
+            residuals: (0..workers * plan.n_buckets())
+                .map(|_| Mutex::new(Vec::new()))
+                .collect(),
+        }
+    }
+
+    fn shape(&self) -> (usize, usize) {
+        (self.workers, self.n_buckets)
+    }
+
+    /// Quantize one worker's completed bucket in place, folding in (and
+    /// refreshing) that slot's residual.
+    fn quantize_bucket(&self, worker: usize, bucket: usize, buf: &mut [f32]) {
+        let mut residual = self.residuals[worker * self.n_buckets + bucket].lock().unwrap();
+        quantize_with_feedback(buf, &mut residual);
+    }
+}
+
+/// Simulated 8-bit affine quantization with error feedback, in place:
+/// add the previous round's residual, pick a per-bucket scale/offset from
+/// the min/max, round every value to its 256-level code, store the
+/// dequantized value back, and keep the rounding error as the next
+/// round's residual. Degenerate buckets (non-finite values, overflowing
+/// range) pass through uncompressed; constant buckets reconstruct
+/// exactly from the offset alone.
+pub fn quantize_with_feedback(buf: &mut [f32], residual: &mut Vec<f32>) {
+    if residual.len() != buf.len() {
+        residual.clear();
+        residual.resize(buf.len(), 0.0);
+    }
+    for (x, r) in buf.iter_mut().zip(residual.iter()) {
+        *x += *r;
+    }
+    if buf.is_empty() || buf.iter().any(|x| !x.is_finite()) {
+        for r in residual.iter_mut() {
+            *r = 0.0;
+        }
+        return;
+    }
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in buf.iter() {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let scale = (hi - lo) / 255.0;
+    if scale == 0.0 || !scale.is_finite() {
+        // constant bucket (offset reconstructs it exactly) or a range too
+        // wide for f32 — either way nothing to round, residuals clear
+        for r in residual.iter_mut() {
+            *r = 0.0;
+        }
+        return;
+    }
+    for (x, r) in buf.iter_mut().zip(residual.iter_mut()) {
+        let code = ((*x - lo) / scale).round().clamp(0.0, 255.0);
+        let deq = lo + code * scale;
+        *r = *x - deq;
+        *x = deq;
+    }
+}
+
+/// Per-round reduction knobs.
+pub struct ReduceOptions<'a> {
+    /// Reduce buckets concurrently with the backward. Off = the pinned
+    /// reference: run every worker to completion, then drain the very
+    /// same queue — bitwise identical, zero overlap.
+    pub overlap: bool,
+    /// Buffer pool for staging and output buffers; with a warm pool a
+    /// steady-state round allocates nothing.
+    pub workspace: Option<&'a Workspace>,
+    /// 8-bit transport with error feedback (trajectory-changing opt-in).
+    pub compression: Option<&'a CompressionState>,
+}
+
+impl Default for ReduceOptions<'_> {
+    fn default() -> Self {
+        ReduceOptions { overlap: true, workspace: None, compression: None }
+    }
+}
+
+/// One worker's (worker, bucket) staging slot.
+struct SlotBuf {
+    /// Flat bucket buffer, lazily taken on the first publish into it;
+    /// taken out again by the reducer once the bucket completes.
+    buf: Option<Vec<f32>>,
+    /// Member tensors already copied in.
+    filled: usize,
+}
+
+/// Shared round state: the scheduler all workers publish into and the
+/// reducer drains from.
+struct SchedState<'a> {
+    plan: &'a BucketPlan,
+    workers: usize,
+    /// workers * n_buckets staging slots, worker-major.
+    slots: Vec<Mutex<SlotBuf>>,
+    /// Per bucket: workers that have not completed it yet.
+    pending: Vec<AtomicUsize>,
+    /// workers * n_tensors publish-once guard, worker-major.
+    published: Vec<AtomicBool>,
+    /// Per worker: tensors published so far (completeness check).
+    counts: Vec<AtomicUsize>,
+    /// Buckets every worker has staged, in completion order. One slot per
+    /// bucket, so pushes never block; closing it is the abort signal.
+    ready: BoundedQueue<usize>,
+    aborted: AtomicBool,
+    ws: Option<&'a Workspace>,
+    compression: Option<&'a CompressionState>,
+}
+
+impl<'a> SchedState<'a> {
+    fn new(workers: usize, plan: &'a BucketPlan, opts: &ReduceOptions<'a>) -> SchedState<'a> {
+        let (nb, nt) = (plan.n_buckets(), plan.n_tensors());
+        SchedState {
+            plan,
+            workers,
+            slots: (0..workers * nb)
+                .map(|_| Mutex::new(SlotBuf { buf: None, filled: 0 }))
+                .collect(),
+            pending: (0..nb).map(|_| AtomicUsize::new(workers)).collect(),
+            published: (0..workers * nt).map(|_| AtomicBool::new(false)).collect(),
+            counts: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            ready: BoundedQueue::new(nb),
+            aborted: AtomicBool::new(false),
+            ws: opts.workspace,
+            compression: opts.compression,
+        }
+    }
+
+    fn take_buf(&self, len: usize) -> Vec<f32> {
+        match self.ws {
+            Some(ws) => ws.take(len),
+            None => vec![0.0; len],
+        }
+    }
+
+    fn give_buf(&self, buf: Vec<f32>) {
+        if let Some(ws) = self.ws {
+            ws.give(buf);
+        }
+    }
+
+    /// Stage one final gradient tensor from `worker`. When this completes
+    /// the tensor's bucket on its last outstanding worker, the bucket is
+    /// queued for reduction.
+    fn publish(&self, worker: usize, tensor: usize, grad: &[f32]) -> Result<()> {
+        if self.aborted.load(Ordering::SeqCst) {
+            bail!("overlapped allreduce aborted: another worker failed mid-round");
+        }
+        let nt = self.plan.n_tensors();
+        ensure!(tensor < nt, "gradient publish for unknown tensor {tensor} (plan has {nt})");
+        let want = self.plan.lens[tensor];
+        ensure!(
+            grad.len() == want,
+            "gradient publish for tensor {tensor}: got {} elements, plan says {want}",
+            grad.len()
+        );
+        ensure!(
+            !self.published[worker * nt + tensor].swap(true, Ordering::SeqCst),
+            "gradient for tensor {tensor} published twice by worker {worker}"
+        );
+        let (b, off) = self.plan.slot[tensor];
+        let bucket = &self.plan.buckets[b];
+        let complete = {
+            let mut slot = self.slots[worker * self.plan.n_buckets() + b].lock().unwrap();
+            let buf = slot.buf.get_or_insert_with(|| self.take_buf(bucket.elems));
+            buf[off..off + want].copy_from_slice(grad);
+            slot.filled += 1;
+            let complete = slot.filled == bucket.tensors.len();
+            if complete {
+                if let Some(c) = self.compression {
+                    // quantize at the transport boundary: the reducer only
+                    // ever sees dequantized values, like a real wire would
+                    c.quantize_bucket(worker, b, slot.buf.as_mut().expect("bucket staged"));
+                }
+            }
+            complete
+        };
+        self.counts[worker].fetch_add(1, Ordering::SeqCst);
+        if complete && self.pending[b].fetch_sub(1, Ordering::SeqCst) == 1 {
+            // `Closed` can only mean an abort raced us; the bucket is moot
+            let _ = self.ready.try_push(b);
+        }
+        Ok(())
+    }
+
+    /// A worker that returns Ok must have published the full tensor set —
+    /// otherwise its buckets would never complete and the reducer would
+    /// wait forever.
+    fn check_complete(&self, worker: usize) -> Result<()> {
+        let got = self.counts[worker].load(Ordering::SeqCst);
+        let want = self.plan.n_tensors();
+        ensure!(got == want, "worker {worker} published {got} of {want} gradient tensors");
+        Ok(())
+    }
+
+    fn abort(&self) {
+        self.aborted.store(true, Ordering::SeqCst);
+        self.ready.close();
+    }
+
+    /// Drain completed buckets until all are reduced or the round aborts.
+    fn reduce_loop(&self, out: &mut [Option<Vec<f32>>]) -> Result<()> {
+        let total = self.plan.n_buckets();
+        let mut done = 0;
+        while done < total {
+            let Some(b) = self.ready.pop() else {
+                bail!("overlapped allreduce aborted with {done} of {total} buckets reduced");
+            };
+            self.reduce_bucket(b, out)?;
+            done += 1;
+        }
+        Ok(())
+    }
+
+    /// Combine one completed bucket across workers and scatter the mean
+    /// into per-tensor outputs. The combine replays `tree_allreduce_mean`
+    /// exactly — same stride-doubling pairing, same `+=` order, then one
+    /// `1/workers` scale — on the flat staging buffers. Per element that
+    /// is the identical f32 operation sequence, so bucketing cannot move
+    /// a single bit.
+    fn reduce_bucket(&self, b: usize, out: &mut [Option<Vec<f32>>]) -> Result<()> {
+        let w = self.workers;
+        let nb = self.plan.n_buckets();
+        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(w);
+        for wk in 0..w {
+            match self.slots[wk * nb + b].lock().unwrap().buf.take() {
+                Some(buf) => bufs.push(buf),
+                None => bail!("reduce: bucket {b} missing worker {wk}'s staging buffer"),
+            }
+        }
+        let mut stride = 1usize;
+        while stride < w {
+            let mut dst = 0;
+            while dst + stride < w {
+                let (left, right) = bufs.split_at_mut(dst + stride);
+                let a = &mut left[dst];
+                let src = &right[0];
+                for (xa, &xb) in a.iter_mut().zip(src) {
+                    *xa += xb;
+                }
+                dst += stride * 2;
+            }
+            stride *= 2;
+        }
+        let scale = 1.0 / w as f32;
+        for x in bufs[0].iter_mut() {
+            *x *= scale;
+        }
+        for &t in &self.plan.buckets[b].tensors {
+            let (_, off) = self.plan.slot[t];
+            let len = self.plan.lens[t];
+            let mut g = self.take_buf(len);
+            g.copy_from_slice(&bufs[0][off..off + len]);
+            out[t] = Some(g);
+        }
+        for buf in bufs {
+            self.give_buf(buf);
+        }
+        Ok(())
+    }
+}
+
+/// Closes the scheduler on any non-success exit from a worker — an error
+/// return or a panic unwinding through — so the reducer and the other
+/// workers wake instead of waiting on buckets that will never complete.
+struct AbortGuard<'s, 'a> {
+    st: &'s SchedState<'a>,
+    defused: bool,
+}
+
+impl Drop for AbortGuard<'_, '_> {
+    fn drop(&mut self) {
+        if !self.defused {
+            self.st.abort();
+        }
+    }
+}
+
+/// One worker's handle into the round's scheduler. Implements
+/// [`GradHook`], so it threads directly into the backend's `*_hooked`
+/// backward entries.
+pub struct GradPublisher<'a> {
+    st: &'a SchedState<'a>,
+    worker: usize,
+}
+
+impl GradPublisher<'_> {
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Publish one final gradient tensor (exactly once per tensor).
+    pub fn publish(&self, tensor: usize, grad: &[f32]) -> Result<()> {
+        self.st.publish(self.worker, tensor, grad)
+    }
+}
+
+impl GradHook for GradPublisher<'_> {
+    fn on_grad(&self, tensor: usize, grad: &[f32]) -> Result<()> {
+        self.st.publish(self.worker, tensor, grad)
+    }
+}
+
+/// Run one DDP round with bucketed reduction. `grad_fn(w, publisher)`
+/// computes worker `w`'s backward, publishing every gradient tensor
+/// through the publisher (pass it as the [`GradHook`] of a `*_hooked`
+/// backend entry, or call [`GradPublisher::publish`] directly). Returns
+/// the per-tensor mean gradients, param order — bitwise identical to
+/// `tree_allreduce_mean` over the same per-worker gradients, with
+/// `opts.overlap` on or off.
+///
+/// With overlap on, worker backwards run on scoped threads and the
+/// calling thread reduces buckets as they complete; with overlap off (or
+/// one worker) the backwards run first — via the same inline-for-one
+/// `scoped_workers` path the phased round uses — and the queue drains
+/// after.
+pub fn overlapped_allreduce<F>(
+    workers: usize,
+    plan: &BucketPlan,
+    opts: &ReduceOptions<'_>,
+    grad_fn: F,
+) -> Result<Vec<Vec<f32>>>
+where
+    F: Fn(usize, &GradPublisher<'_>) -> Result<()> + Sync,
+{
+    ensure!(workers > 0, "overlapped_allreduce: zero workers");
+    if let Some(c) = opts.compression {
+        ensure!(
+            c.shape() == (workers, plan.n_buckets()),
+            "compression state shaped {:?}, round is ({workers} workers, {} buckets)",
+            c.shape(),
+            plan.n_buckets()
+        );
+    }
+    let st = SchedState::new(workers, plan, opts);
+    let mut out: Vec<Option<Vec<f32>>> = (0..plan.n_tensors()).map(|_| None).collect();
+
+    let run_worker = |w: usize| -> Result<()> {
+        let mut guard = AbortGuard { st: &st, defused: false };
+        let publisher = GradPublisher { st: &st, worker: w };
+        grad_fn(w, &publisher)?;
+        st.check_complete(w)?;
+        guard.defused = true;
+        Ok(())
+    };
+
+    if opts.overlap && workers > 1 {
+        let mut worker_res: Vec<Result<()>> = Vec::with_capacity(workers);
+        let mut reduce_res: Result<()> = Ok(());
+        std::thread::scope(|s| {
+            let run_worker = &run_worker;
+            let handles: Vec<_> =
+                (0..workers).map(|w| s.spawn(move || run_worker(w))).collect();
+            // the caller's thread is the reduction stream: head buckets
+            // combine while tail (early-layer) buckets still backprop
+            reduce_res = st.reduce_loop(&mut out);
+            for h in handles {
+                worker_res.push(h.join().expect("worker thread panicked"));
+            }
+        });
+        // prefer the originating failure: a worker that merely tripped over
+        // the abort (its publish failed *because* another worker died) must
+        // not mask the real error
+        let mut first: Option<crate::error::Error> = None;
+        for r in worker_res {
+            if let Err(e) = r {
+                let secondary = e.to_string().contains("overlapped allreduce aborted");
+                match &first {
+                    None => first = Some(e),
+                    Some(f)
+                        if !secondary
+                            && f.to_string().contains("overlapped allreduce aborted") =>
+                    {
+                        first = Some(e)
+                    }
+                    _ => {}
+                }
+            }
+        }
+        if let Some(e) = first {
+            return Err(e);
+        }
+        reduce_res?;
+    } else {
+        // pinned reference: full backwards first, then drain — the very
+        // same staging, combine order and bits, with zero overlap
+        for r in super::parallel::scoped_workers(workers, run_worker) {
+            r?;
+        }
+        st.reduce_loop(&mut out)?;
+    }
+
+    let mut grads = Vec::with_capacity(out.len());
+    for (t, slot) in out.into_iter().enumerate() {
+        match slot {
+            Some(g) => grads.push(g),
+            None => bail!("overlapped allreduce: tensor {t} was never reduced"),
+        }
+    }
+    Ok(grads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::parallel::tree_allreduce_mean;
+    use crate::runtime::{Backend, NativeBackend};
+    use crate::util::proptest::{check, ensure, Gen};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn ready_order_is_a_permutation_for_every_model() {
+        let be = NativeBackend::with_default_models();
+        for m in be.models() {
+            let info = be.info(&m).unwrap();
+            let order = grad_ready_order(&info).unwrap();
+            assert_eq!(order.len(), info.n_params(), "{m}");
+            let mut seen = vec![false; order.len()];
+            for t in order {
+                assert!(!seen[t], "{m}: tensor {t} listed twice");
+                seen[t] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{m}: order misses tensors");
+        }
+    }
+
+    #[test]
+    fn bucket_plan_tiles_every_bucket_exactly() {
+        let be = NativeBackend::with_default_models();
+        for m in be.models() {
+            let info = be.info(&m).unwrap();
+            for cap in [0usize, 1, 64 * 1024, DEFAULT_BUCKET_BYTES] {
+                let plan = BucketPlan::for_model(&info, cap).unwrap();
+                assert_eq!(plan.n_tensors(), info.n_params());
+                let mut covered = vec![false; plan.n_tensors()];
+                for (b, bucket) in plan.buckets().iter().enumerate() {
+                    let mut off = 0;
+                    for &t in &bucket.tensors {
+                        assert_eq!(plan.slot_of(t), (b, off), "{m}: tensor {t}");
+                        covered[t] = true;
+                        off += plan.tensor_len(t);
+                    }
+                    assert_eq!(off, bucket.elems, "{m}: bucket {b} offsets tile it");
+                }
+                assert!(covered.iter().all(|&c| c), "{m}: plan misses tensors");
+                if cap == 0 {
+                    assert_eq!(plan.n_buckets(), 1, "{m}: 0 = unbounded, one bucket");
+                }
+                if cap == 1 {
+                    assert_eq!(
+                        plan.n_buckets(),
+                        plan.n_tensors(),
+                        "{m}: sub-tensor cap degenerates to one tensor per bucket"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_reduce_matches_tree_allreduce_bitwise() {
+        check("overlapped matches sequential tree reduce", 25, |g: &mut Gen| {
+            let workers = g.usize_in(1, 8);
+            let n_tensors = g.usize_in(1, 6);
+            let lens: Vec<usize> = (0..n_tensors).map(|_| g.usize_in(1, 40)).collect();
+            let grads: Vec<Vec<Vec<f32>>> = (0..workers)
+                .map(|_| lens.iter().map(|&l| g.vec_normal(l, 1.0)).collect())
+                .collect();
+            let order: Vec<usize> = (0..n_tensors).collect();
+            let cap_bytes = g.usize_in(0, 60) * 4;
+            let plan = BucketPlan::new(&lens, &order, cap_bytes).map_err(|e| e.to_string())?;
+            let want = tree_allreduce_mean(grads.clone()).map_err(|e| e.to_string())?;
+            for overlap in [false, true] {
+                let opts = ReduceOptions { overlap, ..Default::default() };
+                let got = overlapped_allreduce(workers, &plan, &opts, |w, p| {
+                    for (t, gr) in grads[w].iter().enumerate() {
+                        p.publish(t, gr)?;
+                    }
+                    Ok(())
+                })
+                .map_err(|e| e.to_string())?;
+                ensure(
+                    got == want,
+                    format!("overlap={overlap}: bucketed reduce changed bits"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn publish_misuse_is_a_typed_error_not_a_deadlock() {
+        let lens = [4usize, 2];
+        let order = [0usize, 1];
+        let plan = BucketPlan::new(&lens, &order, 0).unwrap();
+        let seq = ReduceOptions { overlap: false, ..Default::default() };
+
+        let err = overlapped_allreduce(1, &plan, &seq, |_, p| {
+            p.publish(0, &[1.0; 4])?;
+            p.publish(0, &[1.0; 4])?;
+            p.publish(1, &[0.0; 2])
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+
+        let err =
+            overlapped_allreduce(1, &plan, &seq, |_, p| p.publish(0, &[1.0; 3])).unwrap_err();
+        assert!(err.to_string().contains("elements"), "{err}");
+
+        // under-publish: the completion check aborts the round instead of
+        // leaving the reducer waiting on a bucket that never finishes
+        let err = overlapped_allreduce(2, &plan, &ReduceOptions::default(), |_, p| {
+            p.publish(0, &[2.0; 4])
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("published 1 of 2"), "{err}");
+    }
+
+    #[test]
+    fn quantization_bounds_and_exact_constant_bucket() {
+        let orig: Vec<f32> = (0..256).map(|i| i as f32 / 17.0 - 3.0).collect();
+        let mut buf = orig.clone();
+        let mut residual = Vec::new();
+        quantize_with_feedback(&mut buf, &mut residual);
+        let lo = orig.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = orig.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let step = (hi - lo) / 255.0;
+        for ((&q, &x), &r) in buf.iter().zip(&orig).zip(&residual) {
+            assert!((q - x).abs() <= step * 0.5 + 1e-5, "within half a step: {q} vs {x}");
+            assert!((x - (q + r)).abs() <= 1e-5, "residual carries the full rounding error");
+        }
+
+        let mut cbuf = vec![0.25f32; 16];
+        let mut cres = Vec::new();
+        quantize_with_feedback(&mut cbuf, &mut cres);
+        assert!(cbuf.iter().all(|&x| x == 0.25), "constant bucket is exact");
+        assert!(cres.iter().all(|&r| r == 0.0));
+    }
+
+    #[test]
+    fn error_feedback_transmits_the_running_sum() {
+        // invariant of EF: after every round, residual = cumulative input
+        // - cumulative transmitted, so the transmitted stream never loses
+        // signal permanently — it only delays it by (at most) one step
+        let mut rng = Pcg32::new(7, 11);
+        let n = 33;
+        let mut residual = Vec::new();
+        let mut sum_in = vec![0.0f64; n];
+        let mut sum_tx = vec![0.0f64; n];
+        for _ in 0..50 {
+            let input: Vec<f32> = (0..n).map(|_| (rng.normal() * 0.01) as f32).collect();
+            let mut buf = input.clone();
+            quantize_with_feedback(&mut buf, &mut residual);
+            for i in 0..n {
+                sum_in[i] += input[i] as f64;
+                sum_tx[i] += buf[i] as f64;
+            }
+        }
+        for i in 0..n {
+            assert!(
+                (sum_in[i] - sum_tx[i]).abs() <= residual[i].abs() as f64 + 1e-3,
+                "elem {i}: transmitted sum {} drifted from input sum {}",
+                sum_tx[i],
+                sum_in[i]
+            );
+        }
+    }
+
+    #[test]
+    fn compressed_allreduce_stays_within_tolerance_of_exact() {
+        let workers = 4;
+        let lens = [96usize, 32, 5];
+        let order = [0usize, 1, 2];
+        let plan = BucketPlan::new(&lens, &order, 64 * 4).unwrap();
+        assert!(plan.n_buckets() > 1, "exercise multiple per-bucket scales");
+        let comp = CompressionState::new(workers, &plan);
+        let mut rng = Pcg32::new(3, 9);
+        let total: usize = lens.iter().sum();
+        let mut acc_exact = vec![0.0f32; total];
+        let mut acc_comp = vec![0.0f32; total];
+        for round in 0..30 {
+            let grads: Vec<Vec<Vec<f32>>> = (0..workers)
+                .map(|_| {
+                    lens.iter()
+                        .map(|&l| (0..l).map(|_| (rng.normal() * 0.1) as f32).collect())
+                        .collect()
+                })
+                .collect();
+            let exact = tree_allreduce_mean(grads.clone()).unwrap();
+            let opts =
+                ReduceOptions { overlap: true, workspace: None, compression: Some(&comp) };
+            let got = overlapped_allreduce(workers, &plan, &opts, |w, p| {
+                for (t, gr) in grads[w].iter().enumerate() {
+                    p.publish(t, gr)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+            let mut k = 0;
+            for (e, c) in exact.iter().zip(&got) {
+                for (&ev, &cv) in e.iter().zip(c) {
+                    assert!(
+                        (ev - cv).abs() < 0.05,
+                        "round {round}: compressed mean {cv} vs exact {ev}"
+                    );
+                    acc_exact[k] += ev;
+                    acc_comp[k] += cv;
+                    k += 1;
+                }
+            }
+        }
+        // trajectory agreement: error feedback keeps the accumulated
+        // (optimizer-visible) signal from drifting
+        for (e, c) in acc_exact.iter().zip(&acc_comp) {
+            assert!((e - c).abs() < 0.2, "accumulated {e} vs {c}");
+        }
+    }
+
+    #[test]
+    fn workspace_backed_rounds_allocate_nothing_in_steady_state() {
+        let ws = Workspace::new();
+        let lens = [300usize, 100, 7];
+        let order = [2usize, 1, 0];
+        let plan = BucketPlan::new(&lens, &order, 150 * 4).unwrap();
+        // sequential path so the take/give sequence is deterministic
+        let opts =
+            ReduceOptions { overlap: false, workspace: Some(&ws), compression: None };
+        let run = |seed: f32| {
+            let grads: Vec<Vec<Vec<f32>>> = (0..3)
+                .map(|w| lens.iter().map(|&l| vec![seed + w as f32; l]).collect())
+                .collect();
+            let out = overlapped_allreduce(3, &plan, &opts, |w, p| {
+                for (t, gr) in grads[w].iter().enumerate() {
+                    p.publish(t, gr)?;
+                }
+                Ok(())
+            })
+            .unwrap();
+            for (t, g) in out.into_iter().enumerate() {
+                assert_eq!(g[0], seed + 1.0, "tensor {t}: mean of seed+{{0,1,2}}");
+                ws.give(g); // the optimizer hands result buffers back
+            }
+        };
+        run(1.0); // warm round populates the pool
+        let allocs = ws.allocations();
+        let takes = ws.takes();
+        run(2.0);
+        run(3.0);
+        assert_eq!(ws.allocations(), allocs, "steady-state rounds are allocation-free");
+        assert!(ws.takes() > takes, "rounds went through the pool");
+    }
+
+    #[test]
+    fn comm_config_resolves_train_knobs() {
+        let cfg = TrainConfig {
+            overlap: Some(false),
+            bucket_kb: 64,
+            compress: true,
+            ..TrainConfig::default()
+        };
+        let c = CommConfig::resolve(&cfg);
+        assert!(!c.overlap);
+        assert_eq!(c.bucket_bytes, 64 * 1024);
+        assert!(c.compress);
+
+        let d = CommConfig::default();
+        assert_eq!(d.bucket_bytes, DEFAULT_BUCKET_BYTES);
+        assert!(!d.compress, "compression is strictly opt-in");
+        if std::env::var("VCAS_OVERLAP").is_err() {
+            assert!(default_overlap(), "overlap defaults on");
+        }
+    }
+}

@@ -1,11 +1,14 @@
 //! The L3 coordinator: the paper's variance-controlled adaptation (Alg. 1),
 //! the comparison baselines, FLOPs accounting, the training loop, the
-//! real-thread data-parallel substrate (`parallel`) and the async batch
+//! real-thread data-parallel substrate (`parallel`), the async batch
 //! pipeline (`pipeline`: sharded prefetch streams with deterministic
-//! double buffering).
+//! double buffering) and the overlapped DDP reduction scheduler (`comm`:
+//! bucketed gradient allreduce that runs concurrently with the backward,
+//! plus the config-gated compressed transport).
 
 pub mod baselines;
 pub mod channel;
+pub mod comm;
 pub mod flops;
 pub mod metrics;
 pub mod parallel;
@@ -13,6 +16,10 @@ pub mod pipeline;
 pub mod trainer;
 pub mod vcas;
 
+pub use comm::{
+    default_overlap, overlapped_allreduce, BucketPlan, CommConfig, CompressionState,
+    GradPublisher, ReduceOptions, DEFAULT_BUCKET_BYTES,
+};
 pub use metrics::{EvalPoint, RunResult, VarianceSnapshot};
 pub use pipeline::{BatchSource, BatchStream, PreparedBatch, Prefetcher};
 pub use trainer::Trainer;

@@ -15,15 +15,20 @@
 //! `Send`); callers that hold a `dyn Backend` keep the leader-loop shape,
 //! native callers get true concurrency.
 
+use std::sync::Mutex;
+
 use crate::error::{ensure, Result};
 
+use super::comm::{overlapped_allreduce, BucketPlan, GradPublisher, ReduceOptions};
 use super::pipeline::{PreparedBatch, Prefetcher};
 
 /// Average a set of per-worker gradient vectors with a binary-tree
-/// reduction. `grads[w][t]` is worker w's flattened tensor t.
-/// Returns the averaged gradients (same layout as one worker's); an empty
-/// worker set is an error.
-pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>>> {
+/// reduction, in place: the mean lands in `grads[0]`, the other workers'
+/// buffers are left as combine scratch. The zero-allocation core of
+/// [`tree_allreduce_mean`] — callers that own reusable worker buffers
+/// (the overlapped scheduler, benches) call this directly and recycle
+/// them.
+pub fn tree_allreduce_mean_in_place(grads: &mut [Vec<Vec<f32>>]) -> Result<()> {
     let w = grads.len();
     ensure!(w > 0, "tree_allreduce_mean: no worker gradients to combine");
     let mut stride = 1usize;
@@ -43,14 +48,22 @@ pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>
         }
         stride *= 2;
     }
-    let mut out = std::mem::take(&mut grads[0]);
     let scale = 1.0 / w as f32;
-    for t in out.iter_mut() {
+    for t in grads[0].iter_mut() {
         for x in t.iter_mut() {
             *x *= scale;
         }
     }
-    Ok(out)
+    Ok(())
+}
+
+/// Average a set of per-worker gradient vectors with a binary-tree
+/// reduction. `grads[w][t]` is worker w's flattened tensor t.
+/// Returns the averaged gradients (same layout as one worker's); an empty
+/// worker set is an error.
+pub fn tree_allreduce_mean(mut grads: Vec<Vec<Vec<f32>>>) -> Result<Vec<Vec<f32>>> {
+    tree_allreduce_mean_in_place(&mut grads)?;
+    Ok(std::mem::take(&mut grads[0]))
 }
 
 /// Number of pairwise combine rounds the tree performs (comm-depth model
@@ -167,6 +180,55 @@ where
         grads.push(r?);
     }
     tree_allreduce_mean(grads)
+}
+
+/// [`data_parallel_grads`] with overlapped bucketed reduction: worker `w`
+/// computes its shard's backward, publishing each tensor's final gradient
+/// through the given [`GradPublisher`] (thread it into a `*_hooked`
+/// backend entry), and completed buckets reduce on the caller thread
+/// while later buckets still backprop. Bitwise identical to
+/// [`data_parallel_grads`] over the same shard gradients at any worker
+/// count, bucket cap, or `opts.overlap` setting.
+pub fn data_parallel_grads_overlapped<F>(
+    workers: usize,
+    n: usize,
+    plan: &BucketPlan,
+    opts: &ReduceOptions<'_>,
+    grad_fn: F,
+) -> Result<Vec<Vec<f32>>>
+where
+    F: Fn(usize, (usize, usize), &GradPublisher<'_>) -> Result<()> + Sync,
+{
+    ensure!(workers > 0, "data_parallel_grads: zero workers");
+    let ranges = shard_ranges(n, workers);
+    overlapped_allreduce(workers, plan, opts, |w, publisher| {
+        grad_fn(w, ranges[w], publisher)
+    })
+}
+
+/// [`data_parallel_grads_streamed`] with overlapped bucketed reduction:
+/// worker `w` pulls the next batch from its own shard stream, then
+/// publishes its backward through the scheduler. Same bitwise contract as
+/// [`data_parallel_grads_overlapped`]; stream errors surface exactly like
+/// worker errors (first worker in order wins) and abort the round.
+pub fn data_parallel_grads_streamed_overlapped<F>(
+    shards: &mut [Prefetcher],
+    plan: &BucketPlan,
+    opts: &ReduceOptions<'_>,
+    grad_fn: F,
+) -> Result<Vec<Vec<f32>>>
+where
+    F: Fn(usize, PreparedBatch, &GradPublisher<'_>) -> Result<()> + Sync,
+{
+    ensure!(!shards.is_empty(), "data_parallel_grads_streamed: zero shard streams");
+    let workers = shards.len();
+    // each worker locks only its own slot; the mutex exists to hand `&mut
+    // Prefetcher` across the scoped-thread boundary, never contended
+    let slots: Vec<Mutex<&mut Prefetcher>> = shards.iter_mut().map(Mutex::new).collect();
+    overlapped_allreduce(workers, plan, opts, |w, publisher| {
+        let batch = slots[w].lock().unwrap().next()?;
+        grad_fn(w, batch, publisher)
+    })
 }
 
 #[cfg(test)]
@@ -405,6 +467,211 @@ mod tests {
         // empty shard set is a typed error
         let err = data_parallel_grads_streamed(&mut [], |_w, _b| Ok(vec![])).unwrap_err();
         assert!(err.to_string().contains("zero shard streams"), "{err}");
+    }
+
+    #[test]
+    fn in_place_allreduce_is_the_same_reduction() {
+        check("in-place tree reduce == by-value tree reduce", 32, |g: &mut Gen| {
+            let w = g.usize_in(1, 8);
+            let lens: Vec<usize> = (0..g.usize_in(1, 3)).map(|_| g.usize_in(1, 12)).collect();
+            let grads: Vec<Vec<Vec<f32>>> = (0..w)
+                .map(|_| lens.iter().map(|&l| g.vec_normal(l, 1.0)).collect())
+                .collect();
+            let want = tree_allreduce_mean(grads.clone()).expect("non-empty");
+            let mut bufs = grads;
+            tree_allreduce_mean_in_place(&mut bufs).expect("non-empty");
+            ensure(bufs[0] == want, "in-place result differs from by-value")?;
+            ensure(bufs.len() == w, "in-place must keep worker buffers for reuse")
+        });
+    }
+
+    #[test]
+    fn overlapped_ddp_round_matches_sequential_reference_bitwise() {
+        use super::super::comm::{BucketPlan, ReduceOptions, DEFAULT_BUCKET_BYTES};
+        use crate::data::batch::gather_img;
+        use crate::data::images::{generate_images, ImageSpec};
+        use crate::runtime::{Backend, NativeBackend};
+
+        for threads in [1usize, 2] {
+            let backend = NativeBackend::with_default_models().with_threads(threads);
+            let info = backend.info("cnn").unwrap();
+            let params = backend.init_params("cnn").unwrap();
+            let spec = ImageSpec {
+                img: info.img,
+                channels: info.in_ch,
+                n_classes: info.n_classes,
+                ..ImageSpec::default()
+            };
+            let ds = generate_images(&spec, 16, 31);
+            let rho = vec![1.0f32; info.n_layers];
+            for workers in [1usize, 2, 4, 8] {
+                let want = data_parallel_grads(workers, ds.n, |w, (s, e)| {
+                    let idx: Vec<usize> = (s..e).collect();
+                    let batch = gather_img(&ds, &idx);
+                    backend
+                        .cnn_fwd_bwd("cnn", &params, &batch, w as i32, &rho)
+                        .map(|o| o.grads)
+                })
+                .unwrap();
+                // caps: one tensor per bucket, the default, unbounded
+                for cap in [1usize, DEFAULT_BUCKET_BYTES, 0] {
+                    let plan = BucketPlan::for_model(&info, cap).unwrap();
+                    for overlap in [false, true] {
+                        let opts = ReduceOptions { overlap, ..Default::default() };
+                        let got = data_parallel_grads_overlapped(
+                            workers,
+                            ds.n,
+                            &plan,
+                            &opts,
+                            |w, (s, e), publisher| {
+                                let idx: Vec<usize> = (s..e).collect();
+                                let batch = gather_img(&ds, &idx);
+                                backend
+                                    .cnn_fwd_bwd_hooked(
+                                        "cnn", &params, &batch, w as i32, &rho, publisher,
+                                    )
+                                    .map(|_| ())
+                            },
+                        )
+                        .unwrap();
+                        assert_eq!(
+                            got, want,
+                            "workers={workers} cap={cap} overlap={overlap} \
+                             threads={threads}: overlapped round changed bits"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_overlapped_round_matches_streamed_reference_bitwise() {
+        use super::super::comm::{BucketPlan, ReduceOptions};
+        use crate::coordinator::pipeline::{sharded_streams, BatchSource, ImgSource};
+        use crate::data::images::{generate_images, ImageSpec};
+        use crate::runtime::{Backend, NativeBackend};
+        use std::sync::Arc;
+
+        let backend = NativeBackend::with_default_models();
+        let info = backend.info("cnn").unwrap();
+        let params = backend.init_params("cnn").unwrap();
+        let spec = ImageSpec {
+            img: info.img,
+            channels: info.in_ch,
+            n_classes: info.n_classes,
+            ..ImageSpec::default()
+        };
+        let batch = 16usize;
+        let workers = 4usize;
+        let ds = Arc::new(generate_images(&spec, batch * 2, 41));
+        let rho = vec![1.0f32; info.n_layers];
+        let new_shards = |depth: usize| {
+            sharded_streams(workers, batch, depth, |range| {
+                Box::new(ImgSource::new(ds.clone(), batch, 37).with_shard(range))
+                    as Box<dyn BatchSource>
+            })
+        };
+
+        // reference: the phased streamed round over an identical stream set
+        let mut ref_shards = new_shards(0);
+        let mut want_rounds = Vec::new();
+        for _ in 0..2 {
+            let round = data_parallel_grads_streamed(&mut ref_shards, |w, b| {
+                let img = b.into_img()?;
+                backend
+                    .cnn_fwd_bwd("cnn", &params, &img, w as i32, &rho)
+                    .map(|o| o.grads)
+            })
+            .unwrap();
+            want_rounds.push(round);
+        }
+
+        let plan = BucketPlan::for_model(&info, 4096).unwrap();
+        for depth in [0usize, 2] {
+            for overlap in [false, true] {
+                let mut shards = new_shards(depth);
+                let opts = ReduceOptions { overlap, ..Default::default() };
+                for (round, want) in want_rounds.iter().enumerate() {
+                    let got = data_parallel_grads_streamed_overlapped(
+                        &mut shards,
+                        &plan,
+                        &opts,
+                        |w, b, publisher| {
+                            let img = b.into_img()?;
+                            backend
+                                .cnn_fwd_bwd_hooked(
+                                    "cnn", &params, &img, w as i32, &rho, publisher,
+                                )
+                                .map(|_| ())
+                        },
+                    )
+                    .unwrap();
+                    assert_eq!(
+                        &got, want,
+                        "depth={depth} overlap={overlap} round={round}: \
+                         streamed overlapped round changed bits"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overlapped_round_aborts_on_worker_error_without_deadlock() {
+        use super::super::comm::{BucketPlan, ReduceOptions};
+
+        let lens = vec![8usize, 8, 8, 8];
+        let order = vec![0usize, 1, 2, 3];
+        let plan = BucketPlan::new(&lens, &order, 8 * 4).unwrap();
+        assert_eq!(plan.n_buckets(), 4, "one tensor per bucket");
+        let err = data_parallel_grads_overlapped(
+            4,
+            16,
+            &plan,
+            &ReduceOptions::default(),
+            |w, _range, p| {
+                p.publish(0, &[w as f32; 8])?;
+                if w == 2 {
+                    return Err(crate::anyhow!("worker {w} lost its shard mid-backward"));
+                }
+                for t in 1..4 {
+                    p.publish(t, &[w as f32; 8])?;
+                }
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert!(
+            err.to_string().contains("mid-backward"),
+            "the originating worker error must win over secondary aborts: {err}"
+        );
+    }
+
+    #[test]
+    fn overlapped_round_propagates_worker_panics() {
+        use super::super::comm::{BucketPlan, ReduceOptions};
+        use std::panic::{catch_unwind, AssertUnwindSafe};
+
+        let lens = vec![4usize, 4];
+        let order = vec![0usize, 1];
+        let plan = BucketPlan::new(&lens, &order, 0).unwrap();
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            data_parallel_grads_overlapped(
+                4,
+                8,
+                &plan,
+                &ReduceOptions::default(),
+                |w, _range, p| {
+                    if w == 3 {
+                        panic!("worker 3 crashed");
+                    }
+                    p.publish(0, &[0.0; 4])?;
+                    p.publish(1, &[0.0; 4])
+                },
+            )
+        }));
+        assert!(res.is_err(), "a worker panic must propagate, not deadlock the reducer");
     }
 
     #[test]

@@ -27,6 +27,13 @@
 //!   locks) and keeps only its shard's rows, so the shard queues jointly
 //!   reproduce the old leader gather bitwise while each worker pulls from
 //!   its own queue.
+//! - [`fanout_streams`] is the fan-out mode: one producer thread owns the
+//!   source and slices each full batch across per-shard queues, for
+//!   sources that cannot be replicated per worker (and to avoid replaying
+//!   the sequence `workers` times). [`ProbeSplitSource`] splits one batch
+//!   sequence into train/probe views so the VCAS controller's probe
+//!   batches can stream like train batches instead of being re-sliced on
+//!   the trainer thread.
 //!
 //! **Determinism contract:** for a fixed source seed, the sequence of
 //! batches observed by the consumer is bitwise identical at every prefetch
@@ -37,7 +44,7 @@
 //! with per-step sampler seeds), so the trainer forces depth 0 for MLM;
 //! [`MlmSource`] carries its own dedicated RNG and streams at any depth.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::data::batch::{
@@ -101,6 +108,49 @@ impl PreparedBatch {
         match self {
             PreparedBatch::Img(b) => Ok(b),
             other => bail!("batch stream yielded a {} batch where img was expected", other.kind()),
+        }
+    }
+
+    /// Rows in this batch.
+    pub fn n(&self) -> usize {
+        match self {
+            PreparedBatch::Cls(b) => b.n,
+            PreparedBatch::Mlm(b) => b.n,
+            PreparedBatch::Img(b) => b.n,
+        }
+    }
+
+    /// Copy rows `[start, end)` out as a new batch of the same kind. Row
+    /// payloads are bitwise copies of the full batch's, so a round of
+    /// contiguous slices reproduces a leader gather's shard split exactly
+    /// (the fan-out producer's slicing primitive).
+    pub fn slice_rows(&self, start: usize, end: usize) -> PreparedBatch {
+        assert!(
+            start <= end && end <= self.n(),
+            "slice {start}..{end} out of a {}-row batch",
+            self.n()
+        );
+        match self {
+            PreparedBatch::Cls(b) => {
+                let t = b.seq_len;
+                PreparedBatch::Cls(ClsBatch {
+                    n: end - start,
+                    seq_len: b.seq_len,
+                    x: b.x[start * t..end * t].to_vec(),
+                    y: b.y[start..end].to_vec(),
+                    idx: b.idx[start..end].to_vec(),
+                })
+            }
+            PreparedBatch::Mlm(b) => PreparedBatch::Mlm(b.slice_rows(start, end)),
+            PreparedBatch::Img(b) => {
+                let px = if b.n == 0 { 0 } else { b.x.len() / b.n };
+                PreparedBatch::Img(ImgBatch {
+                    n: end - start,
+                    x: b.x[start * px..end * px].to_vec(),
+                    y: b.y[start..end].to_vec(),
+                    idx: b.idx[start..end].to_vec(),
+                })
+            }
         }
     }
 }
@@ -372,6 +422,184 @@ where
         .collect()
 }
 
+/// Shared lifecycle of a fan-out producer: closing every shard queue and
+/// joining the producer thread when the last shard handle drops.
+struct FanoutCtl {
+    queues: Vec<Arc<BoundedQueue<Result<PreparedBatch>>>>,
+    producer: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Drop for FanoutCtl {
+    fn drop(&mut self) {
+        for q in &self.queues {
+            q.close();
+        }
+        if let Some(h) = self.producer.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// One consumer's view of a fan-out producer: pops shard batches from its
+/// own bounded queue.
+struct FanoutShard {
+    queue: Arc<BoundedQueue<Result<PreparedBatch>>>,
+    /// Keeps the producer alive; the last shard to drop joins it.
+    _ctl: Arc<FanoutCtl>,
+}
+
+impl BatchSource for FanoutShard {
+    fn next_batch(&mut self) -> Result<PreparedBatch> {
+        match self.queue.pop() {
+            Some(item) => item,
+            None => bail!("batch stream closed: producer terminated (after an error or panic)"),
+        }
+    }
+}
+
+impl Drop for FanoutShard {
+    fn drop(&mut self) {
+        // Close only this shard's queue: the producer skips it from now on
+        // (and wakes immediately if it was blocked pushing here) while the
+        // surviving shards keep streaming — dropping a subset of consumers
+        // must never wedge the rest.
+        self.queue.close();
+    }
+}
+
+/// Fan-out mode for sharded streaming: instead of [`sharded_streams`]'s
+/// one-replica-per-worker producers, **one** producer thread owns the
+/// source, pulls each full batch once, slices it with
+/// [`shard_ranges`] + [`PreparedBatch::slice_rows`], and pushes shard `w`'s
+/// rows into shard `w`'s own bounded queue (capacity `max(depth, 1)`).
+///
+/// Use it when the source cannot be replicated per worker — a live RNG
+/// stream, a non-seekable reader — or when replaying the full sequence
+/// `workers` times (what `sharded_streams` producers do) costs more than
+/// one slice pass. The shard queues yield bitwise the rows the per-worker
+/// replicas would have: same `shard_ranges` split of the same full
+/// batches.
+///
+/// A source error is broadcast to every shard queue as a typed `Err`,
+/// then the producer stops; a source panic closes all queues (consumers
+/// see the closed-stream error). Dropping any subset of the returned
+/// prefetchers closes their queues only; the last one joins the producer.
+pub fn fanout_streams(
+    workers: usize,
+    depth: usize,
+    mut source: Box<dyn BatchSource>,
+) -> Vec<Prefetcher> {
+    assert!(workers > 0, "fanout_streams: zero workers");
+    let queues: Vec<Arc<BoundedQueue<Result<PreparedBatch>>>> =
+        (0..workers).map(|_| Arc::new(BoundedQueue::new(depth.max(1)))).collect();
+    let qs = queues.clone();
+    let producer = std::thread::Builder::new()
+        .name("vcas-fanout".into())
+        .spawn(move || {
+            // close every queue however this thread exits (normal stop,
+            // all consumers gone, or a source panic)
+            struct CloseAllOnExit(Vec<Arc<BoundedQueue<Result<PreparedBatch>>>>);
+            impl Drop for CloseAllOnExit {
+                fn drop(&mut self) {
+                    for q in &self.0 {
+                        q.close();
+                    }
+                }
+            }
+            let _close = CloseAllOnExit(qs.clone());
+            loop {
+                match source.next_batch() {
+                    Ok(full) => {
+                        let ranges = shard_ranges(full.n(), qs.len());
+                        let mut any_open = false;
+                        for (q, &(s, e)) in qs.iter().zip(&ranges) {
+                            // a Closed push means that shard's consumer
+                            // hung up; keep feeding the others
+                            if q.push(Ok(full.slice_rows(s, e))).is_ok() {
+                                any_open = true;
+                            }
+                        }
+                        if !any_open {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        // broadcast the error, then stop: the sequence is
+                        // broken and must not resynchronize silently
+                        let msg = e.to_string();
+                        for q in qs.iter() {
+                            let _ = q.push(Err(crate::anyhow!("{msg}")));
+                        }
+                        return;
+                    }
+                }
+            }
+        })
+        .expect("spawn fanout producer thread");
+    let ctl = Arc::new(FanoutCtl {
+        queues: queues.clone(),
+        producer: Mutex::new(Some(producer)),
+    });
+    queues
+        .into_iter()
+        // depth 0 on the consumer side: the shard queue already decouples
+        .map(|queue| Prefetcher::new(FanoutShard { queue, _ctl: ctl.clone() }, 0))
+        .collect()
+}
+
+/// One side of a probe/train split over a shared batch sequence.
+///
+/// The VCAS trainer interleaves Alg. 1 controller probes with training on
+/// one stream: at every step where the controller is due (`step % freq ==
+/// 0`, step 0 included) it pulls `m` probe batches, then the due step and
+/// the `freq - 1` steps after it each pull one train batch. Globally,
+/// pull `g` of the underlying sequence is a probe batch iff
+/// `g % (m + freq) < m`.
+///
+/// [`ProbeSplitSource::train`] and [`ProbeSplitSource::probe`] each wrap
+/// their *own replica* of the underlying source (same constructor seed)
+/// and yield only their side's slots, skipping the twin's. Jointly the
+/// two views consume exactly the single-stream sequence, bitwise — but
+/// each side can now stream through its own prefetcher, so controller
+/// probe batches stop being materialized on the trainer thread.
+pub struct ProbeSplitSource {
+    inner: Box<dyn BatchSource>,
+    m: usize,
+    cycle: usize,
+    /// Next global pull index of the underlying sequence.
+    cursor: usize,
+    /// Which side's slots this view yields.
+    probe_side: bool,
+}
+
+impl ProbeSplitSource {
+    /// The train-side view: yields pulls with `g % (m + freq) >= m`.
+    pub fn train(inner: Box<dyn BatchSource>, m: usize, freq: usize) -> ProbeSplitSource {
+        assert!(m > 0 && freq > 0, "probe split needs m > 0 and freq > 0");
+        ProbeSplitSource { inner, m, cycle: m + freq, cursor: 0, probe_side: false }
+    }
+
+    /// The probe-side view: yields pulls with `g % (m + freq) < m`.
+    pub fn probe(inner: Box<dyn BatchSource>, m: usize, freq: usize) -> ProbeSplitSource {
+        assert!(m > 0 && freq > 0, "probe split needs m > 0 and freq > 0");
+        ProbeSplitSource { inner, m, cycle: m + freq, cursor: 0, probe_side: true }
+    }
+}
+
+impl BatchSource for ProbeSplitSource {
+    fn next_batch(&mut self) -> Result<PreparedBatch> {
+        loop {
+            let slot_is_probe = self.cursor % self.cycle < self.m;
+            self.cursor += 1;
+            let batch = self.inner.next_batch()?;
+            if slot_is_probe == self.probe_side {
+                return Ok(batch);
+            }
+            // the twin view yields this slot; advance past it
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -614,6 +842,108 @@ mod tests {
         assert_eq!(DEFAULT_PREFETCH, 2);
         if std::env::var("VCAS_PREFETCH").is_err() {
             assert_eq!(default_prefetch(), DEFAULT_PREFETCH);
+        }
+    }
+
+    #[test]
+    fn fanout_stream_bitwise_equal_to_sharded_streams() {
+        let ds = cls_ds();
+        for workers in [1usize, 2, 3] {
+            for depth in [1usize, 3] {
+                let mut reference = sharded_streams(workers, 8, 0, |r| {
+                    Box::new(ClsSource::new(ds.clone(), 8, 51).with_shard(r))
+                });
+                let mut fanout =
+                    fanout_streams(workers, depth, Box::new(ClsSource::new(ds.clone(), 8, 51)));
+                assert_eq!(fanout.len(), workers);
+                for round in 0..10 {
+                    for (w, (f, r)) in fanout.iter_mut().zip(reference.iter_mut()).enumerate() {
+                        assert_eq!(
+                            field_bits(&f.next().unwrap()),
+                            field_bits(&r.next().unwrap()),
+                            "fanout diverged: workers={workers} depth={depth} \
+                             round={round} shard={w}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dropping_a_fanout_shard_leaves_the_rest_streaming() {
+        let produced = Arc::new(AtomicUsize::new(0));
+        let mut shards =
+            fanout_streams(3, 2, Box::new(CountingSource { produced: produced.clone() }));
+        // CountingSource batches have one row; shard_ranges(1, 3) hands it
+        // to shard 0 and empty slices to the others.
+        let first = shards[0].next().unwrap().into_cls().unwrap();
+        assert_eq!(first.x, vec![0]);
+        // drop the middle consumer mid-stream; survivors keep their order
+        drop(shards.remove(1));
+        let second = shards[0].next().unwrap().into_cls().unwrap();
+        assert_eq!(second.x, vec![1]);
+        assert_eq!(shards[1].next().unwrap().n(), 0, "tail shard gets its empty slice");
+        // dropping the last handles closes every queue and joins the
+        // producer, releasing its source (and Arc clone)
+        drop(shards);
+        assert_eq!(Arc::strong_count(&produced), 1, "fanout producer not joined");
+    }
+
+    #[test]
+    fn fanout_broadcasts_source_error_to_every_shard() {
+        // depth 4 > batches-per-shard so the producer drains the source
+        // without ever blocking on a full queue
+        let mut shards = fanout_streams(2, 4, Box::new(FailingSource { left: 2 }));
+        for (w, shard) in shards.iter_mut().enumerate() {
+            for _ in 0..2 {
+                assert!(shard.next().is_ok(), "shard {w}: good slices consumed first");
+            }
+            let err = shard.next().unwrap_err();
+            assert!(err.to_string().contains("unreadable mid-epoch"), "shard {w}: {err}");
+            let err = shard.next().unwrap_err();
+            assert!(err.to_string().contains("closed"), "shard {w}: {err}");
+        }
+    }
+
+    #[test]
+    fn probe_split_views_jointly_replay_the_single_stream_bitwise() {
+        let ds = cls_ds();
+        let (m, freq) = (2usize, 3);
+        let mut reference = ClsSource::new(ds.clone(), 8, 61);
+        let ref_batches: Vec<PreparedBatch> =
+            (0..3 * (m + freq)).map(|_| reference.next_batch().unwrap()).collect();
+
+        let mut train =
+            ProbeSplitSource::train(Box::new(ClsSource::new(ds.clone(), 8, 61)), m, freq);
+        let mut probe =
+            ProbeSplitSource::probe(Box::new(ClsSource::new(ds.clone(), 8, 61)), m, freq);
+
+        // the trainer's single-stream pattern: at each controller-due step
+        // the m probe pulls precede the train pull, so pull g is a probe
+        // slot iff g % (m + freq) < m
+        let mut expect_probe = Vec::new();
+        let mut expect_train = Vec::new();
+        for (g, b) in ref_batches.iter().enumerate() {
+            if g % (m + freq) < m {
+                expect_probe.push(b);
+            } else {
+                expect_train.push(b);
+            }
+        }
+        for (k, want) in expect_probe.into_iter().enumerate() {
+            assert_eq!(
+                field_bits(&probe.next_batch().unwrap()),
+                field_bits(want),
+                "probe view pull {k}"
+            );
+        }
+        for (k, want) in expect_train.into_iter().enumerate() {
+            assert_eq!(
+                field_bits(&train.next_batch().unwrap()),
+                field_bits(want),
+                "train view pull {k}"
+            );
         }
     }
 }

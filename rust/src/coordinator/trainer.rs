@@ -30,7 +30,7 @@ use crate::util::Stopwatch;
 use super::baselines::{ub_select, uniform_select, SbSelector, Selection};
 use super::flops::{CnnFlops, FlopsLedger, TransformerFlops};
 use super::metrics::{EvalPoint, RunResult, VarianceSnapshot};
-use super::pipeline::{default_prefetch, ClsSource, ImgSource, Prefetcher};
+use super::pipeline::{default_prefetch, ClsSource, ImgSource, Prefetcher, ProbeSplitSource};
 use super::vcas::{GradSample, VcasController};
 
 const TRAIN_SET: usize = 4096;
@@ -46,11 +46,16 @@ fn no_controller_err(method: &str) -> crate::error::Error {
 /// Task payload bound to a trainer. Training batches arrive through the
 /// async pipeline's [`Prefetcher`] (depth 0 = the old synchronous gather,
 /// run inline; depth N = producer thread, bitwise-identical sequence);
-/// eval stays a direct gather over fixed index ranges.
+/// eval stays a direct gather over fixed index ranges. VCAS runs carry a
+/// second `probe` stream — the probe-side view of a
+/// [`ProbeSplitSource`] split over the same seeded sequence — so Alg. 1
+/// probe batches stream ahead like train batches instead of being
+/// materialized on the trainer thread. The two views jointly replay the
+/// single-stream pull order bitwise.
 enum TaskData {
-    Cls { eval: ClsDataset, stream: Prefetcher },
+    Cls { eval: ClsDataset, stream: Prefetcher, probe: Option<Prefetcher> },
     Mlm { corpus: MarkovCorpus },
-    Img { eval: ImageDataset, stream: Prefetcher },
+    Img { eval: ImageDataset, stream: Prefetcher, probe: Option<Prefetcher> },
 }
 
 pub struct Trainer<'a> {
@@ -86,6 +91,15 @@ impl<'a> Trainer<'a> {
         // the whole trajectory — is bitwise identical at any depth.
         let depth = cfg.prefetch.unwrap_or_else(default_prefetch);
 
+        // VCAS pulls follow a fixed cadence (m probe batches before the
+        // train batch at every controller-due step), so one seeded
+        // sequence can be split into train/probe views that jointly
+        // replay it bitwise — the probe side streams through its own
+        // prefetcher instead of re-slicing on the trainer thread.
+        let split_probe =
+            cfg.method == Method::Vcas && cfg.vcas.m_repeats > 0 && cfg.vcas.freq > 0;
+        let (m, freq) = (cfg.vcas.m_repeats, cfg.vcas.freq);
+
         let (data, tf_flops, cnn_flops, main_batch, prefetch) = if info.kind == ModelKind::Cnn {
             let spec = ImageSpec {
                 img: info.img,
@@ -96,9 +110,24 @@ impl<'a> Trainer<'a> {
             let train = Arc::new(generate_images(&spec, TRAIN_SET, cfg.seed ^ 0x11));
             let eval = generate_images(&spec, EVAL_SET, cfg.seed ^ 0x22);
             let batch = backend.cnn_batch();
-            let stream = Prefetcher::new(ImgSource::new(train, batch, rng.next_u64()), depth);
+            let seed = rng.next_u64();
+            let make = |t: Arc<ImageDataset>| ImgSource::new(t, batch, seed);
+            let (stream, probe) = if split_probe {
+                (
+                    Prefetcher::new(
+                        ProbeSplitSource::train(Box::new(make(train.clone())), m, freq),
+                        depth,
+                    ),
+                    Some(Prefetcher::new(
+                        ProbeSplitSource::probe(Box::new(make(train)), m, freq),
+                        depth,
+                    )),
+                )
+            } else {
+                (Prefetcher::new(make(train), depth), None)
+            };
             (
-                TaskData::Img { eval, stream },
+                TaskData::Img { eval, stream, probe },
                 None,
                 Some(CnnFlops::from_info(&info)),
                 batch,
@@ -125,9 +154,24 @@ impl<'a> Trainer<'a> {
             ));
             let eval = generate_cls(&spec, session.vocab, session.seq_len, EVAL_SET, cfg.seed ^ 0x22);
             let batch = backend.main_batch();
-            let stream = Prefetcher::new(ClsSource::new(train, batch, rng.next_u64()), depth);
+            let seed = rng.next_u64();
+            let make = |t: Arc<ClsDataset>| ClsSource::new(t, batch, seed);
+            let (stream, probe) = if split_probe {
+                (
+                    Prefetcher::new(
+                        ProbeSplitSource::train(Box::new(make(train.clone())), m, freq),
+                        depth,
+                    ),
+                    Some(Prefetcher::new(
+                        ProbeSplitSource::probe(Box::new(make(train)), m, freq),
+                        depth,
+                    )),
+                )
+            } else {
+                (Prefetcher::new(make(train), depth), None)
+            };
             (
-                TaskData::Cls { eval, stream },
+                TaskData::Cls { eval, stream, probe },
                 Some(TransformerFlops::from_info(&info)),
                 None,
                 batch,
@@ -225,6 +269,23 @@ impl<'a> Trainer<'a> {
             TaskData::Img { stream, .. } => stream.next()?.into_img(),
             _ => bail!("img batch requested on a non-img task"),
         }
+    }
+
+    /// Probe-slot batch for the VCAS controller: pulled from the dedicated
+    /// probe stream when the split is active (the default for VCAS runs);
+    /// falls back to the train stream (m_repeats or freq of 0).
+    fn next_probe_cls_batch(&mut self) -> Result<ClsBatch> {
+        if let TaskData::Cls { probe: Some(p), .. } = &mut self.data {
+            return p.next()?.into_cls();
+        }
+        self.next_cls_batch()
+    }
+
+    fn next_probe_img_batch(&mut self) -> Result<ImgBatch> {
+        if let TaskData::Img { probe: Some(p), .. } = &mut self.data {
+            return p.next()?.into_img();
+        }
+        self.next_img_batch()
     }
 
     fn is_mlm(&self) -> bool {
@@ -345,7 +406,7 @@ impl<'a> Trainer<'a> {
 
         for _ in 0..m {
             if self.is_img() {
-                let batch = self.next_img_batch()?;
+                let batch = self.next_probe_img_batch()?;
                 let ones_sites = vec![1.0f32; self.session.n_layers];
                 exact.push(Self::to_sample(self.grad_img(&batch, &ones_sites)?));
                 let mut reps = Vec::with_capacity(m);
@@ -366,7 +427,7 @@ impl<'a> Trainer<'a> {
                 }
                 sampled.push(reps);
             } else {
-                let batch = self.next_cls_batch()?;
+                let batch = self.next_probe_cls_batch()?;
                 exact.push(Self::to_sample(self.grad_cls(
                     &batch, &ones_rho, &ones_nu, &nu_probe, None,
                 )?));

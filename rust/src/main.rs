@@ -15,7 +15,7 @@ use std::path::{Path, PathBuf};
 
 use vcas::cli::Args;
 use vcas::config::{Method, TrainConfig};
-use vcas::coordinator::Trainer;
+use vcas::coordinator::{CommConfig, Trainer};
 use vcas::data::tasks;
 use vcas::error::Result;
 use vcas::runtime::{default_backend, default_backend_with_threads, default_threads, Backend};
@@ -38,6 +38,9 @@ fn parse_args() -> Result<Args> {
         .flag("eval-every", "evaluate every N steps (0 = end only)")
         .flag("threads", "native kernel threads (0 = auto; results identical at any value)")
         .flag("prefetch", "batch prefetch depth (0 = sync; default VCAS_PREFETCH or 2)")
+        .flag("overlap", "overlap DDP reduction with backward: 1|0 (default VCAS_OVERLAP or 1)")
+        .flag("bucket-kb", "DDP reduction bucket cap in KiB (0 = unbounded; default 256)")
+        .switch("compress", "8-bit quantized allreduce with error feedback (changes trajectories)")
         .flag("out-dir", "write metric CSVs here")
         .flag("tau", "vcas variance thresholds tau_act = tau_w")
         .flag("freq", "vcas adaptation frequency F")
@@ -181,6 +184,13 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     if args.flag("prefetch").is_some() {
         cfg.prefetch = Some(args.flag_usize("prefetch", 0)?);
     }
+    if args.flag("overlap").is_some() {
+        cfg.overlap = Some(args.flag_usize("overlap", 1)? != 0);
+    }
+    cfg.bucket_kb = args.flag_usize("bucket-kb", cfg.bucket_kb)?;
+    if args.switch("compress") {
+        cfg.compress = true;
+    }
     if let Some(v) = args.flag("out-dir") {
         cfg.out_dir = v.to_string();
     }
@@ -208,6 +218,17 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
         "async pipeline: prefetch depth {} ({})",
         trainer.prefetch_depth(),
         if trainer.prefetch_depth() == 0 { "synchronous" } else { "double-buffered" }
+    );
+    let comm = CommConfig::resolve(&cfg);
+    let bucket = if comm.bucket_bytes == 0 {
+        "unbounded bucket".to_string()
+    } else {
+        format!("{} KiB buckets", comm.bucket_bytes / 1024)
+    };
+    println!(
+        "ddp comm: overlap {} ({bucket}, compression {})",
+        if comm.overlap { "on" } else { "off" },
+        if comm.compress { "8-bit + error feedback" } else { "off" }
     );
     let result = trainer.run()?;
 

@@ -19,6 +19,30 @@ use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
 use crate::error::{bail, Result};
 use crate::formats::params::ParamSet;
 
+/// Per-tensor gradient callback for overlapped DDP reduction.
+///
+/// The `*_hooked` grad entries call [`GradHook::on_grad`] exactly once per
+/// parameter tensor with its *final* gradient — for the native backend as
+/// soon as the tensor's backward finishes (reverse layer order), so a
+/// reduction scheduler can start combining early layers' buckets while the
+/// rest of the backward is still running. An `Err` aborts the backward at
+/// the next publish point (how a mid-round reduction failure on another
+/// worker cancels this one).
+pub trait GradHook: Sync {
+    fn on_grad(&self, tensor: usize, grad: &[f32]) -> Result<()>;
+}
+
+/// Publish every tensor of a finished gradient set, param order. The
+/// fallback used by the default `*_hooked` entries: correct for any
+/// backend (all tensors are final once the plain entry returns), just
+/// without intra-backward overlap.
+pub fn publish_all_grads(grads: &[Vec<f32>], hook: &dyn GradHook) -> Result<()> {
+    for (t, g) in grads.iter().enumerate() {
+        hook.on_grad(t, g)?;
+    }
+    Ok(())
+}
+
 /// Output of a transformer grad entry.
 #[derive(Clone, Debug)]
 pub struct GradOut {
@@ -159,6 +183,27 @@ pub trait Backend {
         nu_probe: &[f32],
     ) -> Result<GradOut>;
 
+    /// [`Backend::fwd_bwd_cls`] with a per-tensor gradient callback. The
+    /// default runs the plain entry and publishes every tensor afterwards
+    /// (correct, no overlap); the native backend overrides it to publish
+    /// each tensor the moment its backward finishes.
+    fn fwd_bwd_cls_hooked(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+        hook: &dyn GradHook,
+    ) -> Result<GradOut> {
+        let out = self.fwd_bwd_cls(model, params, batch, sw, seed, rho, nu_apply, nu_probe)?;
+        publish_all_grads(&out.grads, hook)?;
+        Ok(out)
+    }
+
     /// Transformer masked-LM grad step.
     fn fwd_bwd_mlm(
         &self,
@@ -170,6 +215,24 @@ pub trait Backend {
         nu_apply: &[f32],
         nu_probe: &[f32],
     ) -> Result<GradOut>;
+
+    /// [`Backend::fwd_bwd_mlm`] with a per-tensor gradient callback
+    /// (default: run then publish everything; see `fwd_bwd_cls_hooked`).
+    fn fwd_bwd_mlm_hooked(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+        hook: &dyn GradHook,
+    ) -> Result<GradOut> {
+        let out = self.fwd_bwd_mlm(model, params, batch, seed, rho, nu_apply, nu_probe)?;
+        publish_all_grads(&out.grads, hook)?;
+        Ok(out)
+    }
 
     /// Per-sample losses + UB importance scores (baseline selection pass).
     fn fwd_loss_cls(
@@ -211,6 +274,22 @@ pub trait Backend {
         seed: i32,
         rho: &[f32],
     ) -> Result<CnnGradOut>;
+
+    /// [`Backend::cnn_fwd_bwd`] with a per-tensor gradient callback
+    /// (default: run then publish everything; see `fwd_bwd_cls_hooked`).
+    fn cnn_fwd_bwd_hooked(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        rho: &[f32],
+        hook: &dyn GradHook,
+    ) -> Result<CnnGradOut> {
+        let out = self.cnn_fwd_bwd(model, params, batch, seed, rho)?;
+        publish_all_grads(&out.grads, hook)?;
+        Ok(out)
+    }
 
     /// CNN eval: (loss_sum, correct).
     fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)>;

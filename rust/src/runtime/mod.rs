@@ -18,7 +18,9 @@ mod engine;
 #[cfg(feature = "xla")]
 mod xla;
 
-pub use backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
+pub use backend::{
+    publish_all_grads, Backend, CnnGradOut, GradHook, GradOut, ModelInfo, ModelKind,
+};
 pub use kernels::{default_threads, KernelCtx, MatmulPlan, Workspace};
 pub use manifest::{EntrySpec, Manifest, ModelManifest};
 pub use native::{CnnCfg, NativeBackend, TransformerCfg};

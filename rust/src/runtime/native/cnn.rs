@@ -472,7 +472,7 @@ fn stage_bwd(
     v: &StageView,
     g: &mut Vec<f32>,
     grads: &mut [Vec<f32>],
-) {
+) -> Result<()> {
     let (kctx, ws) = (ectx.kctx, ectx.ws);
     let mut dr2 = ws.take(v.r2.len());
     pool2_bwd_into(g, v.pool_idx, &mut dr2);
@@ -490,7 +490,11 @@ fn stage_bwd(
     grads[4 * s + 1] = db1;
     grads[4 * s + 2] = dw2;
     grads[4 * s + 3] = db2;
+    for off in 0..4 {
+        ectx.publish(4 * s + off, &grads[4 * s + off])?;
+    }
     ws.give(std::mem::replace(g, dx));
+    Ok(())
 }
 
 /// Draw SampleA site `site` over the full batch and fold it into the
@@ -590,6 +594,8 @@ pub fn fwd_bwd(
     let g = dlogits;
     grads[4 * n_sites] = weighted_tn(kctx, &feat, &g, None, n, df, c);
     grads[4 * n_sites + 1] = col_sums(&g, c);
+    ectx.publish(4 * n_sites, &grads[4 * n_sites])?;
+    ectx.publish(4 * n_sites + 1, &grads[4 * n_sites + 1])?;
     let mut gfeat = ws.take(n * df);
     matmul_nt_into(kctx, &g, fc_w, n, c, df, &mut gfeat);
     ws.give(g);
@@ -615,7 +621,7 @@ pub fn fwd_bwd(
                     cin: st.cin,
                     cout: st.cout,
                 };
-                stage_bwd(ectx, params, s, &view, &mut g, &mut grads);
+                stage_bwd(ectx, params, s, &view, &mut g, &mut grads)?;
             }
             Some(k) => {
                 let kk = k.len();
@@ -648,7 +654,7 @@ pub fn fwd_bwd(
                     cin: st.cin,
                     cout: st.cout,
                 };
-                stage_bwd(ectx, params, s, &view, &mut g, &mut grads);
+                stage_bwd(ectx, params, s, &view, &mut g, &mut grads)?;
                 ws.give(x_c);
                 ws.give(r1_c);
                 ws.give(r2_c);

@@ -47,18 +47,32 @@ use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
 use crate::error::{anyhow, bail, ensure, Result};
 use crate::formats::params::ParamSet;
 
-use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo, ModelKind};
+use super::backend::{Backend, CnnGradOut, GradHook, GradOut, ModelInfo, ModelKind};
 use super::kernels::{default_simd, default_threads, KernelCtx, Workspace};
 
 /// Per-call execution context handed to the native model code: the kernel
-/// thread budget, the backend's reusable buffer pool, and whether sampled
+/// thread budget, the backend's reusable buffer pool, whether sampled
 /// backwards run gather-compacted (results are bitwise identical either
-/// way; only wall-clock moves).
+/// way; only wall-clock moves), and an optional per-tensor gradient hook
+/// the backward calls as each parameter's gradient is finalised.
 #[derive(Clone, Copy)]
 pub(crate) struct ExecCtx<'w> {
     pub kctx: KernelCtx,
     pub ws: &'w Workspace,
     pub compact: bool,
+    pub hook: Option<&'w dyn GradHook>,
+}
+
+impl ExecCtx<'_> {
+    /// Hand a finalised gradient tensor to the hook (no-op without one).
+    /// The backward must call this exactly once per tensor, only after the
+    /// tensor's gradient can no longer change.
+    pub(crate) fn publish(&self, tensor: usize, grad: &[f32]) -> Result<()> {
+        match self.hook {
+            Some(h) => h.on_grad(tensor, grad),
+            None => Ok(()),
+        }
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -137,7 +151,12 @@ impl NativeBackend {
             kctx: KernelCtx::new(self.threads).with_simd(self.simd),
             ws: &self.ws,
             compact: self.compact,
+            hook: None,
         }
+    }
+
+    fn ectx_hooked<'a>(&'a self, hook: &'a dyn GradHook) -> ExecCtx<'a> {
+        ExecCtx { hook: Some(hook), ..self.ectx() }
     }
 
     /// The default model zoo: miniature counterparts of the AOT models
@@ -303,6 +322,25 @@ impl Backend for NativeBackend {
         )
     }
 
+    fn fwd_bwd_cls_hooked(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+        hook: &dyn GradHook,
+    ) -> Result<GradOut> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_bwd_cls(
+            cfg, self.ectx_hooked(hook), params, &batch.x, &batch.y, sw, batch.n,
+            batch.seq_len, seed, rho, nu_apply, nu_probe,
+        )
+    }
+
     fn fwd_bwd_mlm(
         &self,
         model: &str,
@@ -317,6 +355,24 @@ impl Backend for NativeBackend {
         transformer::fwd_bwd_mlm(
             cfg, self.ectx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
             seed, rho, nu_apply, nu_probe,
+        )
+    }
+
+    fn fwd_bwd_mlm_hooked(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        rho: &[f32],
+        nu_apply: &[f32],
+        nu_probe: &[f32],
+        hook: &dyn GradHook,
+    ) -> Result<GradOut> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_bwd_mlm(
+            cfg, self.ectx_hooked(hook), params, &batch.x, &batch.y, &batch.w, batch.n,
+            batch.seq_len, seed, rho, nu_apply, nu_probe,
         )
     }
 
@@ -366,6 +422,19 @@ impl Backend for NativeBackend {
     ) -> Result<CnnGradOut> {
         let cfg = self.cnn(model)?;
         cnn::fwd_bwd(cfg, self.ectx(), params, &batch.x, &batch.y, batch.n, seed, rho)
+    }
+
+    fn cnn_fwd_bwd_hooked(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        rho: &[f32],
+        hook: &dyn GradHook,
+    ) -> Result<CnnGradOut> {
+        let cfg = self.cnn(model)?;
+        cnn::fwd_bwd(cfg, self.ectx_hooked(hook), params, &batch.x, &batch.y, batch.n, seed, rho)
     }
 
     fn cnn_eval(&self, model: &str, params: &ParamSet, batch: &ImgBatch) -> Result<(f32, f32)> {

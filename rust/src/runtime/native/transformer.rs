@@ -687,6 +687,8 @@ fn block_bwd(
     grads[cfg.blk(l, W_FF2)] = gw2;
     grads[cfg.blk(l, B_FF2)] = gb2;
     vw[LINEARS_PER_BLOCK * l + 3] = v3;
+    ectx.publish(cfg.blk(l, W_FF2), &grads[cfg.blk(l, W_FF2)])?;
+    ectx.publish(cfg.blk(l, B_FF2), &grads[cfg.blk(l, B_FF2)])?;
 
     let mut gu1 = ws.take(nrows * f);
     gelu_bwd_into(kctx, v.u1, &gf1, &mut gu1);
@@ -711,6 +713,8 @@ fn block_bwd(
     grads[cfg.blk(l, W_FF1)] = gw1;
     grads[cfg.blk(l, B_FF1)] = gb1;
     vw[LINEARS_PER_BLOCK * l + 2] = v2;
+    ectx.publish(cfg.blk(l, W_FF1), &grads[cfg.blk(l, W_FF1)])?;
+    ectx.publish(cfg.blk(l, B_FF1), &grads[cfg.blk(l, B_FF1)])?;
 
     let mut gh2 = ws.take(nrows * d);
     let (gln2g, gln2b) = layernorm_bwd_into(
@@ -725,6 +729,8 @@ fn block_bwd(
     ws.give(gb2in);
     grads[cfg.blk(l, LN2_G)] = gln2g;
     grads[cfg.blk(l, LN2_B)] = gln2b;
+    ectx.publish(cfg.blk(l, LN2_G), &grads[cfg.blk(l, LN2_G)])?;
+    ectx.publish(cfg.blk(l, LN2_B), &grads[cfg.blk(l, LN2_B)])?;
     // residual: gh2 = g + ln2-bwd dx (commutative — same bits as add)
     add_assign(&mut gh2, g);
 
@@ -747,6 +753,8 @@ fn block_bwd(
     grads[cfg.blk(l, W_O)] = gwo;
     grads[cfg.blk(l, B_O)] = gbo;
     vw[LINEARS_PER_BLOCK * l + 1] = v1;
+    ectx.publish(cfg.blk(l, W_O), &grads[cfg.blk(l, W_O)])?;
+    ectx.publish(cfg.blk(l, B_O), &grads[cfg.blk(l, B_O)])?;
 
     let mut gqkv = ws.take(nrows * 3 * d);
     attention_bwd(ectx, v.qkv, v.probs, &gattn, v.n, t, d, cfg.n_heads, &mut gqkv);
@@ -771,6 +779,8 @@ fn block_bwd(
     grads[cfg.blk(l, W_QKV)] = gwqkv;
     grads[cfg.blk(l, B_QKV)] = gbqkv;
     vw[LINEARS_PER_BLOCK * l] = v0;
+    ectx.publish(cfg.blk(l, W_QKV), &grads[cfg.blk(l, W_QKV)])?;
+    ectx.publish(cfg.blk(l, B_QKV), &grads[cfg.blk(l, B_QKV)])?;
 
     let mut gh_ln = ws.take(nrows * d);
     let (gln1g, gln1b) = layernorm_bwd_into(
@@ -785,6 +795,8 @@ fn block_bwd(
     ws.give(ga);
     grads[cfg.blk(l, LN1_G)] = gln1g;
     grads[cfg.blk(l, LN1_B)] = gln1b;
+    ectx.publish(cfg.blk(l, LN1_G), &grads[cfg.blk(l, LN1_G)])?;
+    ectx.publish(cfg.blk(l, LN1_B), &grads[cfg.blk(l, LN1_B)])?;
     // g_out = gh2 + ln1-bwd dx, into block l-1
     add_assign(&mut gh_ln, &gh2);
     ws.give(gh2);
@@ -796,6 +808,10 @@ fn block_bwd(
 /// final hidden state (N*T, D), as a workspace buffer the backward
 /// consumes. Fills block/embed/pos grads in `grads`; returns
 /// (act_norms (L, N) flat, vw (4L,)).
+///
+/// `publish_embed` defers the embed-tensor publish to the caller: the MLM
+/// entry still adds the tied-head contribution after this returns, so its
+/// embed gradient is not final here.
 #[allow(clippy::too_many_arguments)]
 fn encode_bwd(
     cfg: &TransformerCfg,
@@ -810,6 +826,7 @@ fn encode_bwd(
     nu_apply: &[f32],
     nu_probe: &[f32],
     grads: &mut [Vec<f32>],
+    publish_embed: bool,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
     let (t, d, f) = (cfg.seq_len, cfg.d_model, cfg.d_ff);
     let ws = ectx.ws;
@@ -954,6 +971,9 @@ fn encode_bwd(
             }
         }
     }
+    if publish_embed {
+        ectx.publish(0, &grads[0])?;
+    }
     {
         let gpos = &mut grads[1];
         for j in 0..kept_slice.len() {
@@ -966,6 +986,7 @@ fn encode_bwd(
             }
         }
     }
+    ectx.publish(1, &grads[1])?;
     ws.give(g);
     Ok((act_norms, vw))
 }
@@ -1072,6 +1093,10 @@ pub fn fwd_bwd_cls(
     let mut grads = zero_grads(cfg);
     grads[cfg.idx_head_b()] = col_sums(&dlogits, c);
     grads[cfg.idx_head_w()] = weighted_tn(kctx, &pooled, &dlogits, None, n, d, c);
+    ectx.publish(cfg.idx_head_b(), &grads[cfg.idx_head_b()])?;
+    ectx.publish(cfg.idx_head_w(), &grads[cfg.idx_head_w()])?;
+    // the MLM bias is not part of the cls loss — final (all-zero) already
+    ectx.publish(cfg.idx_mlm_b(), &grads[cfg.idx_mlm_b()])?;
     let mut gpooled = ws.take(n * d);
     matmul_nt_into(kctx, &dlogits, tdata(params, cfg.idx_head_w()), n, c, d, &mut gpooled);
     ws.give(dlogits);
@@ -1100,10 +1125,12 @@ pub fn fwd_bwd_cls(
     ws.give(dhf);
     grads[cfg.idx_ln_f_g()] = glnf_g;
     grads[cfg.idx_ln_f_b()] = glnf_b;
+    ectx.publish(cfg.idx_ln_f_g(), &grads[cfg.idx_ln_f_g()])?;
+    ectx.publish(cfg.idx_ln_f_b(), &grads[cfg.idx_ln_f_b()])?;
     release_head(ws, hf, lnf, pooled, logits);
 
     let (act_norms, vw) = encode_bwd(
-        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
+        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads, true,
     )?;
     saved.release(ws);
     Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
@@ -1168,6 +1195,10 @@ pub fn fwd_bwd_mlm(
 
     let mut grads = zero_grads(cfg);
     grads[cfg.idx_mlm_b()] = col_sums(&dlogits, v);
+    ectx.publish(cfg.idx_mlm_b(), &grads[cfg.idx_mlm_b()])?;
+    // the cls head is not part of the MLM loss — final (all-zero) already
+    ectx.publish(cfg.idx_head_w(), &grads[cfg.idx_head_w()])?;
+    ectx.publish(cfg.idx_head_b(), &grads[cfg.idx_head_b()])?;
     // tied-embedding head gradient: dlogits^T @ hf -> (V, D)
     let mut gemb_head = ws.take(v * d);
     weighted_tn_into(kctx, &dlogits, &hf, None, rows, v, d, &mut gemb_head);
@@ -1190,15 +1221,20 @@ pub fn fwd_bwd_mlm(
     ws.give(lnf.rstd);
     grads[cfg.idx_ln_f_g()] = glnf_g;
     grads[cfg.idx_ln_f_b()] = glnf_b;
+    ectx.publish(cfg.idx_ln_f_g(), &grads[cfg.idx_ln_f_g()])?;
+    ectx.publish(cfg.idx_ln_f_b(), &grads[cfg.idx_ln_f_b()])?;
 
+    // publish_embed = false: the tied-head contribution below still has to
+    // land before the embed gradient is final
     let (act_norms, vw) = encode_bwd(
-        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads,
+        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads, false,
     )?;
     saved.release(ws);
     // tied embedding: encoder scatter + head contribution
     for (o, &hv) in grads[0].iter_mut().zip(&gemb_head) {
         *o += hv;
     }
+    ectx.publish(0, &grads[0])?;
     ws.give(gemb_head);
     Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
 }

@@ -940,3 +940,126 @@ mod xla_checks {
         assert!(r.losses.iter().all(|&(_, l)| l.is_finite() && l > 0.0));
     }
 }
+
+// ---------------------------------------------------------------------------
+// Per-layer gradient hooks: the hooked backward entries must publish every
+// tensor exactly once, bitwise equal to the returned gradients, without
+// perturbing the output — the contract the overlapped DDP reducer builds
+// on (a missing or doubled publish would deadlock or corrupt a bucket).
+// ---------------------------------------------------------------------------
+
+struct RecordingHook {
+    slots: std::sync::Mutex<Vec<Option<Vec<f32>>>>,
+}
+
+impl RecordingHook {
+    fn new(n: usize) -> RecordingHook {
+        RecordingHook { slots: std::sync::Mutex::new(vec![None; n]) }
+    }
+
+    fn into_slots(self) -> Vec<Option<Vec<f32>>> {
+        self.slots.into_inner().unwrap()
+    }
+}
+
+impl vcas::runtime::GradHook for RecordingHook {
+    fn on_grad(&self, tensor: usize, grad: &[f32]) -> vcas::error::Result<()> {
+        let mut slots = self.slots.lock().unwrap();
+        if slots[tensor].is_some() {
+            vcas::bail!("tensor {tensor} published twice");
+        }
+        slots[tensor] = Some(grad.to_vec());
+        Ok(())
+    }
+}
+
+fn assert_published_matches(published: Vec<Option<Vec<f32>>>, grads: &[Vec<f32>], tag: &str) {
+    assert_eq!(published.len(), grads.len(), "{tag}: published tensor count");
+    for (t, (slot, g)) in published.iter().zip(grads).enumerate() {
+        let p = slot
+            .as_ref()
+            .unwrap_or_else(|| panic!("{tag}: tensor {t} never published"));
+        assert_eq!(p.len(), g.len(), "{tag}: tensor {t} length");
+        assert!(
+            p.iter().zip(g).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{tag}: tensor {t} published bytes differ from returned grads"
+        );
+    }
+}
+
+#[test]
+fn hooked_cls_backward_publishes_every_tensor_bitwise() {
+    let b = backend();
+    let sess = ModelSession::open(b, "tiny").unwrap();
+    let params = sess.load_params().unwrap();
+    let batch = tiny_batch(23);
+    let sw = vec![1.0 / batch.n as f32; batch.n];
+    let (ones_l, ones_w) = ones(&sess);
+    let half_l = vec![0.5f32; sess.n_layers];
+    let half_w = vec![0.5f32; sess.n_sampled];
+    for (tag, rho, nu) in [
+        ("cls exact", &ones_l, &ones_w),
+        ("cls sampled", &half_l, &half_w),
+    ] {
+        let plain = b
+            .fwd_bwd_cls("tiny", &params, &batch, &sw, 3, rho, nu, nu)
+            .unwrap();
+        let hook = RecordingHook::new(plain.grads.len());
+        let hooked = b
+            .fwd_bwd_cls_hooked("tiny", &params, &batch, &sw, 3, rho, nu, nu, &hook)
+            .unwrap();
+        assert_gradout_bits_eq(&plain, &hooked, tag);
+        assert_published_matches(hook.into_slots(), &hooked.grads, tag);
+    }
+}
+
+#[test]
+fn hooked_mlm_backward_publishes_every_tensor_bitwise() {
+    let b = backend();
+    let sess = ModelSession::open(b, "tiny").unwrap();
+    let params = sess.load_params().unwrap();
+    let n = b.main_batch();
+    let seq_len = sess.seq_len;
+    let mut rng = Pcg32::new(31, 0x31);
+    let x: Vec<i32> = (0..n * seq_len).map(|_| rng.below(sess.vocab as u64) as i32).collect();
+    let y: Vec<i32> = (0..n * seq_len).map(|_| rng.below(sess.vocab as u64) as i32).collect();
+    let w: Vec<f32> =
+        (0..n * seq_len).map(|_| if rng.bernoulli(0.2) { 1.0 } else { 0.0 }).collect();
+    let batch = vcas::data::batch::MlmBatch { n, seq_len, x, y, w };
+    let (ones_l, ones_w) = ones(&sess);
+    let plain = b
+        .fwd_bwd_mlm("tiny", &params, &batch, 5, &ones_l, &ones_w, &ones_w)
+        .unwrap();
+    let hook = RecordingHook::new(plain.grads.len());
+    let hooked = b
+        .fwd_bwd_mlm_hooked("tiny", &params, &batch, 5, &ones_l, &ones_w, &ones_w, &hook)
+        .unwrap();
+    assert_gradout_bits_eq(&plain, &hooked, "mlm exact");
+    assert_published_matches(hook.into_slots(), &hooked.grads, "mlm exact");
+}
+
+#[test]
+fn hooked_cnn_backward_publishes_every_tensor_bitwise() {
+    let b = backend();
+    let info = b.info("cnn").unwrap();
+    let sess = ModelSession::open(b, "cnn").unwrap();
+    let params = sess.load_params().unwrap();
+    let n = b.cnn_batch();
+    let mut rng = Pcg32::new(37, 0x37);
+    let x: Vec<f32> =
+        (0..n * info.img * info.img * info.in_ch).map(|_| rng.normal() as f32).collect();
+    let y: Vec<i32> = (0..n).map(|_| rng.below(info.n_classes as u64) as i32).collect();
+    let batch = vcas::data::batch::ImgBatch { n, x, y, idx: vec![] };
+    let ones_sites = vec![1.0f32; sess.n_layers];
+    let half_sites = vec![0.5f32; sess.n_layers];
+    for (tag, rho) in [("cnn exact", &ones_sites), ("cnn sampled", &half_sites)] {
+        let plain = b.cnn_fwd_bwd("cnn", &params, &batch, 7, rho).unwrap();
+        let hook = RecordingHook::new(plain.grads.len());
+        let hooked = b.cnn_fwd_bwd_hooked("cnn", &params, &batch, 7, rho, &hook).unwrap();
+        assert_eq!(plain.loss.to_bits(), hooked.loss.to_bits(), "{tag}: loss");
+        for (t, (ga, gb)) in plain.grads.iter().zip(&hooked.grads).enumerate() {
+            assert_eq!(ga, gb, "{tag}: tensor {t} grads differ");
+        }
+        assert_published_matches(hook.into_slots(), &hooked.grads, tag);
+    }
+}
