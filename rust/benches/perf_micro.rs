@@ -2,8 +2,9 @@
 //! controller update cost, allreduce cost, the kernel layer's single- vs
 //! multi-thread scaling, the zero-scan vs gather-compacted sampled
 //! backward across keep ratios, the sync-vs-prefetch step time of the
-//! async batch pipeline, and sequential vs overlapped DDP reduction at
-//! 2/4/8 workers — the L3 hot-path profile. The kernel section
+//! async batch pipeline, sequential vs overlapped DDP reduction at
+//! 2/4/8 workers, and the reduced-precision tiers (f32 vs bf16 kernels,
+//! f32 vs int8 serving) — the L3 hot-path profile. The kernel section
 //! writes `results/BENCH_kernels.json`, the sampling section
 //! `results/BENCH_sampling.json`, the pipeline section
 //! `results/BENCH_pipeline.json` and the serving section (p50/p99 latency
@@ -29,7 +30,7 @@ use vcas::data::tasks::{find, generate_cls, MarkovCorpus};
 use vcas::formats::json::Json;
 use vcas::runtime::kernels::{reference, weighted_gather_tn, Layout, MatmulPlan, Workspace};
 use vcas::runtime::native::sampling::SampledRows;
-use vcas::runtime::{Backend, KernelCtx, ModelSession, NativeBackend};
+use vcas::runtime::{Backend, KernelCtx, ModelSession, NativeBackend, Precision, TransformerCfg};
 use vcas::util::rng::Pcg32;
 
 fn main() {
@@ -275,6 +276,75 @@ fn main() {
             Json::Num(ms_of[&(4, false)] / ms_of[&(4, true)]),
         );
         kernels_json.insert("fwd_bwd_small".into(), Json::Obj(fb));
+    }
+    // precision tiers: f32 vs bf16 on the matmul and fwd_bwd hot paths.
+    // bf16 packs both operands to u16 before the tile loop, halving the
+    // bytes the inner loops stream at the cost of a pack pass — both the
+    // wall-clock (pack included) and the analytic operand traffic land in
+    // the json so the bytes-moved claim is checkable against the timing.
+    {
+        let (m, k, n) = (512usize, 512, 512);
+        let mut rng = Pcg32::new(13, 13);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        for threads in [1usize, 4] {
+            let f32_plan = MatmulPlan::with_threads(Layout::Nn, m, k, n, threads);
+            let fms = common::time_median_ms(5, || {
+                std::hint::black_box(f32_plan.run(&a, &b));
+            });
+            let bf16_plan = f32_plan.with_precision(Precision::Bf16);
+            let bms = common::time_median_ms(5, || {
+                std::hint::black_box(bf16_plan.run(&a, &b));
+            });
+            table.row(vec![
+                format!("matmul {m}x{k}x{n} bf16, {threads} thr"),
+                format!("{bms:.1}"),
+                format!("f32 {fms:.1} ms, {:.2}x", fms / bms),
+            ]);
+            o.insert(format!("f32_threads_{threads}_ms"), Json::Num(fms));
+            o.insert(format!("bf16_threads_{threads}_ms"), Json::Num(bms));
+        }
+        let f32_bytes = ((m * k + k * n) * 4) as f64;
+        o.insert("operand_bytes_f32".into(), Json::Num(f32_bytes));
+        o.insert("operand_bytes_bf16".into(), Json::Num(f32_bytes / 2.0));
+        kernels_json.insert("precision_matmul_512".into(), Json::Obj(o));
+    }
+    {
+        // end-to-end tier cost: "small" exact fwd_bwd, f32 vs bf16 backend
+        let spec = find("sst2-sim").unwrap();
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        let mut tier_ms = [0.0f64; 2];
+        for (slot, (tier, precision)) in
+            [("f32", Precision::F32), ("bf16", Precision::Bf16)].into_iter().enumerate()
+        {
+            let nb = NativeBackend::with_default_models()
+                .with_threads(4)
+                .with_precision(precision);
+            let sess = ModelSession::open(&nb, "small").unwrap();
+            let params = sess.load_params().unwrap();
+            let ds = generate_cls(&spec, sess.vocab, sess.seq_len, 256, 1);
+            let mut sampler = EpochSampler::new(256, 1);
+            let batch = gather_cls(&ds, &sampler.take(nb.main_batch()));
+            let sw = vec![1.0 / batch.n as f32; batch.n];
+            let ones_l = vec![1.0f32; sess.n_layers];
+            let ones_w = vec![1.0f32; sess.n_sampled];
+            // warm the workspace (bf16 additionally warms the u16 pool)
+            sess.fwd_bwd_cls(&params, &batch, &sw, 0, &ones_l, &ones_w, &ones_w).unwrap();
+            let ms = common::time_median_ms(7, || {
+                sess.fwd_bwd_cls(&params, &batch, &sw, 1, &ones_l, &ones_w, &ones_w)
+                    .unwrap();
+            });
+            table.row(vec![
+                format!("small: fwd_bwd exact, 4 thr, {tier}"),
+                format!("{ms:.1}"),
+                "precision tier".into(),
+            ]);
+            o.insert(format!("{tier}_ms"), Json::Num(ms));
+            tier_ms[slot] = ms;
+        }
+        o.insert("bf16_speedup".into(), Json::Num(tier_ms[0] / tier_ms[1]));
+        kernels_json.insert("precision_fwd_bwd_small".into(), Json::Obj(o));
     }
     let json_path = common::results_dir().join("BENCH_kernels.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(kernels_json))).unwrap();
@@ -581,6 +651,59 @@ fn main() {
                 );
             }
         }
+
+        // precision tiers at the serving layer: f32 vs int8 weights at
+        // max_batch 16 under back-to-back load, on a wider transformer
+        // ("mid": d_model 128, d_ff 256) where the dense linears dominate
+        // the forward — the regime the int8 tier targets. Identical load
+        // and coalescing config; only the kernel tier moves.
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        let mut p50_by = [0.0f64; 2];
+        for (slot, (tier, precision)) in
+            [("f32", Precision::F32), ("int8", Precision::Int8Infer)].into_iter().enumerate()
+        {
+            let mut nb = NativeBackend::new(16, 5, 16)
+                .with_threads(2)
+                .with_precision(precision);
+            nb.add_transformer(
+                "mid",
+                TransformerCfg {
+                    vocab: 256,
+                    d_model: 128,
+                    n_heads: 4,
+                    d_ff: 256,
+                    n_layers: 2,
+                    seq_len: 32,
+                    n_classes: 4,
+                },
+            );
+            let cfg = ServeConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                queue_capacity: 64,
+                workers: 2,
+            };
+            let pool = SessionPool::builder(Arc::new(nb)).model("mid").build(cfg).unwrap();
+            let spec = LoadSpec { requests: 64, rate_hz: 0.0, seed: 0x10AD };
+            let report = run_open_loop(&pool, "mid", &spec).unwrap();
+            table.row(vec![
+                format!("serve mid: back-to-back, max_batch 16, {tier}"),
+                format!("{:.2}", report.p50_us() / 1000.0),
+                format!(
+                    "p99 {:.2} ms, {:.1} req/s, batch<= {}",
+                    report.p99_us() / 1000.0,
+                    report.throughput_rps(),
+                    report.max_batched
+                ),
+            ]);
+            o.insert(format!("{tier}_p50_us"), Json::Num(report.p50_us()));
+            o.insert(format!("{tier}_p99_us"), Json::Num(report.p99_us()));
+            o.insert(format!("{tier}_throughput_rps"), Json::Num(report.throughput_rps()));
+            p50_by[slot] = report.p50_us();
+        }
+        o.insert("max_batch".into(), Json::Num(16.0));
+        o.insert("int8_p50_speedup".into(), Json::Num(p50_by[0] / p50_by[1]));
+        serving_json.insert("precision_mid_max_batch_16".into(), Json::Obj(o));
     }
     let json_path = common::results_dir().join("BENCH_serving.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(serving_json))).unwrap();

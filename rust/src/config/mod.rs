@@ -11,6 +11,20 @@ mod toml;
 pub use toml::{TomlTable, TomlValue};
 
 use crate::error::{bail, Result};
+use crate::runtime::Precision;
+
+/// Parse + validate a training-run precision string. Training accepts
+/// `f32`/`bf16` only: `int8` is a serving-forward tier with no backward,
+/// so asking for it in a train config is an error, not a silent f32
+/// fallback (the permissive `VCAS_PRECISION` env knob is the escape hatch
+/// that *does* fall back).
+pub fn parse_train_precision(s: &str) -> Result<Precision> {
+    let p = Precision::parse(s)?;
+    if p == Precision::Int8Infer {
+        bail!("precision \"int8\" is inference-only (no int8 backward); training supports f32 or bf16");
+    }
+    Ok(p)
+}
 
 /// Which training method drives the run (paper Sec. 6 comparison set).
 #[derive(Clone, Debug, PartialEq)]
@@ -157,6 +171,11 @@ pub struct TrainConfig {
     /// 8-bit quantized allreduce with error feedback. Changes numeric
     /// trajectories — strictly opt-in, tolerance-tested.
     pub compress: bool,
+    /// Reduced-precision kernel tier (`None` = auto: `VCAS_PRECISION` env
+    /// when set, else f32). Only `f32`/`bf16` are valid for training
+    /// (int8 is inference-only and rejected typed). Bf16 changes numeric
+    /// trajectories — strictly opt-in, tolerance-tested.
+    pub precision: Option<Precision>,
     /// Where to write metrics CSVs (empty = no CSV).
     pub out_dir: String,
 }
@@ -180,6 +199,7 @@ impl Default for TrainConfig {
             overlap: None,
             bucket_kb: 256,
             compress: false,
+            precision: None,
             out_dir: String::new(),
         }
     }
@@ -230,6 +250,9 @@ impl TrainConfig {
         }
         if let Some(v) = t.get_bool("train", "compress") {
             c.compress = v;
+        }
+        if let Some(v) = t.get_str("train", "precision") {
+            c.precision = Some(parse_train_precision(&v)?);
         }
         if let Some(v) = t.get_str("train", "out_dir") {
             c.out_dir = v;
@@ -315,6 +338,7 @@ mod tests {
             overlap = false
             bucket_kb = 64
             compress = true
+            precision = "bf16"
             [vcas]
             tau_act = 0.1
             m_repeats = 4
@@ -337,6 +361,7 @@ mod tests {
         assert_eq!(c.overlap, Some(false));
         assert_eq!(c.bucket_kb, 64);
         assert!(c.compress);
+        assert_eq!(c.precision, Some(Precision::Bf16));
         // untouched keys keep defaults
         assert_eq!(c.vcas.beta, 0.95);
         assert_eq!(TrainConfig::default().threads, 0, "default threads = auto");
@@ -344,11 +369,30 @@ mod tests {
         assert_eq!(TrainConfig::default().overlap, None, "default overlap = auto");
         assert_eq!(TrainConfig::default().bucket_kb, 256, "default bucket cap 256 KiB");
         assert!(!TrainConfig::default().compress, "compression is opt-in");
+        assert_eq!(TrainConfig::default().precision, None, "default precision = auto");
     }
 
     #[test]
     fn bad_method_rejected() {
         let t = TomlTable::parse("[train]\nmethod = \"sgd\"\n").unwrap();
         assert!(TrainConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn precision_validation_is_typed_not_silent() {
+        // unknown strings are a typed error, never a silent f32 fallback
+        let t = TomlTable::parse("[train]\nprecision = \"fp8\"\n").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("unknown precision"), "{err}");
+        // int8 parses as a Precision but is inference-only: invalid combo
+        let t = TomlTable::parse("[train]\nprecision = \"int8\"\n").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("inference-only"), "{err}");
+        // the valid training tiers come through typed
+        for (s, want) in [("f32", Precision::F32), ("fp32", Precision::F32), ("bf16", Precision::Bf16)]
+        {
+            let t = TomlTable::parse(&format!("[train]\nprecision = \"{s}\"\n")).unwrap();
+            assert_eq!(TrainConfig::from_toml(&t).unwrap().precision, Some(want));
+        }
     }
 }

@@ -14,11 +14,13 @@
 use std::path::{Path, PathBuf};
 
 use vcas::cli::Args;
-use vcas::config::{Method, TrainConfig};
+use vcas::config::{parse_train_precision, Method, TrainConfig};
 use vcas::coordinator::{CommConfig, Trainer};
 use vcas::data::tasks;
 use vcas::error::Result;
-use vcas::runtime::{default_backend, default_backend_with_threads, default_threads, Backend};
+use vcas::runtime::{
+    default_backend, default_backend_with, default_precision, default_threads, Backend, Precision,
+};
 
 fn main() {
     if let Err(e) = run() {
@@ -41,6 +43,7 @@ fn parse_args() -> Result<Args> {
         .flag("overlap", "overlap DDP reduction with backward: 1|0 (default VCAS_OVERLAP or 1)")
         .flag("bucket-kb", "DDP reduction bucket cap in KiB (0 = unbounded; default 256)")
         .switch("compress", "8-bit quantized allreduce with error feedback (changes trajectories)")
+        .flag("precision", "kernel tier: f32|bf16 for train, f32|bf16|int8 for serve (changes numerics)")
         .flag("out-dir", "write metric CSVs here")
         .flag("tau", "vcas variance thresholds tau_act = tau_w")
         .flag("freq", "vcas adaptation frequency F")
@@ -114,6 +117,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         0 => default_threads(),
         t => t,
     };
+    // serving accepts every tier, including the inference-only int8
+    let precision = match args.flag("precision") {
+        Some(v) => Precision::parse(v)?,
+        None => default_precision(),
+    };
     let cfg = ServeConfig {
         max_batch: args.flag_usize("max-batch", 8)?,
         max_wait: Duration::from_micros(args.flag_u64("max-wait-us", 200)?),
@@ -128,7 +136,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     // Serving runs on the native backend: it is Send + Sync (pool workers
     // share it) and carries the logits inference entry.
-    let backend = Arc::new(NativeBackend::with_default_models().with_threads(threads));
+    let backend = Arc::new(
+        NativeBackend::with_default_models().with_threads(threads).with_precision(precision),
+    );
     let mut builder = SessionPool::builder(backend);
     builder = match args.flag("checkpoint") {
         Some(path) => builder.model_from_checkpoint(&model, path),
@@ -136,12 +146,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let pool = builder.build(cfg)?;
     println!(
-        "serving {model}: {} worker(s), max_batch {}, max_wait {}us, queue {} ({} kernel threads)",
+        "serving {model}: {} worker(s), max_batch {}, max_wait {}us, queue {} ({} kernel threads, {} tier)",
         cfg.workers,
         cfg.max_batch,
         cfg.max_wait.as_micros(),
         cfg.queue_capacity,
-        threads
+        threads,
+        precision
     );
     println!(
         "open-loop load: {} requests at {} req/s (seed {})",
@@ -191,6 +202,9 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     if args.switch("compress") {
         cfg.compress = true;
     }
+    if let Some(v) = args.flag("precision") {
+        cfg.precision = Some(parse_train_precision(v)?);
+    }
     if let Some(v) = args.flag("out-dir") {
         cfg.out_dir = v.to_string();
     }
@@ -203,7 +217,8 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     cfg.optim.lr = args.flag_f64("lr", cfg.optim.lr)?;
 
     let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
-    let backend = default_backend_with_threads(artifacts, threads);
+    let precision = cfg.precision.unwrap_or_else(default_precision);
+    let backend = default_backend_with(artifacts, threads, precision);
     println!(
         "training {} on {} with {} for {} steps (backend {}, {} kernel threads)",
         cfg.model,
@@ -229,6 +244,15 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
         "ddp comm: overlap {} ({bucket}, compression {})",
         if comm.overlap { "on" } else { "off" },
         if comm.compress { "8-bit + error feedback" } else { "off" }
+    );
+    println!(
+        "precision: {} ({})",
+        precision,
+        if precision == Precision::F32 {
+            "bitwise-deterministic tier"
+        } else {
+            "reduced-precision tier — numerics differ from f32, tolerance-tested"
+        }
     );
     let result = trainer.run()?;
 

@@ -15,9 +15,46 @@
 //! - `vw` is the analytic Eq. 3 weight-gradient variance per sampled
 //!   linear, evaluated at `nu_probe`.
 
+use std::collections::BTreeMap;
+
 use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
 use crate::error::{bail, Result};
 use crate::formats::params::ParamSet;
+
+use super::kernels::Precision;
+
+/// One weight matrix quantized for the int8 serving tier: symmetric
+/// per-output-channel int8 with the data stored **transposed** relative to
+/// the f32 layout — `(dout, din)` row-major, so the int8 microkernel's dot
+/// products run over contiguous rows. `scale[j]` dequantizes output channel
+/// `j` (`w_f32[i, j] ≈ data[j * din + i] as f32 * scale[j]`).
+#[derive(Clone, Debug)]
+pub struct QuantTensor {
+    pub data: Vec<i8>,
+    pub scale: Vec<f32>,
+    pub din: usize,
+    pub dout: usize,
+}
+
+/// Int8 images of a model's dense linears, keyed by index into the
+/// param-spec order. Built once per parameter set (at `SessionPool` load
+/// time on the serving path) and shared read-only across forwards; params
+/// without an entry keep their f32 path, so partially-quantized models are
+/// well-defined.
+#[derive(Clone, Debug, Default)]
+pub struct QuantParamSet {
+    pub tensors: BTreeMap<usize, QuantTensor>,
+}
+
+impl QuantParamSet {
+    pub fn get(&self, idx: usize) -> Option<&QuantTensor> {
+        self.tensors.get(&idx)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+}
 
 /// Per-tensor gradient callback for overlapped DDP reduction.
 ///
@@ -159,6 +196,14 @@ pub trait Backend {
         false
     }
 
+    /// The reduced-precision tier this backend computes with (f32 unless
+    /// explicitly opted in). Unlike `threads()`/`compaction()` a non-f32
+    /// tier *does* change numerics; the serving pool reads it to decide
+    /// whether to quantize tenant weights at load time.
+    fn precision(&self) -> Precision {
+        Precision::F32
+    }
+
     /// Registered model names.
     fn models(&self) -> Vec<String>;
 
@@ -255,6 +300,32 @@ pub trait Backend {
     /// only ships grad/eval executables) fail typed instead of silently.
     fn infer_cls(&self, model: &str, _params: &ParamSet, _batch: &ClsBatch) -> Result<Vec<f32>> {
         bail!("backend {} has no logits inference entry for model {model:?}", self.name())
+    }
+
+    /// Quantize a model's dense linears for the int8 serving tier. Done
+    /// once per parameter set (the `SessionPool` calls this at tenant load
+    /// time) so the per-forward cost is activation quantization only.
+    ///
+    /// Default errors: backends without an int8 path fail typed instead of
+    /// silently serving f32.
+    fn quantize_params(&self, model: &str, _params: &ParamSet) -> Result<QuantParamSet> {
+        bail!("backend {} has no int8 quantization for model {model:?}", self.name())
+    }
+
+    /// [`Backend::infer_cls`] through pre-quantized int8 weights: dense
+    /// linears run int8×int8→i32 with an f32 dequant epilogue, everything
+    /// else (LN, attention, softmax, bias, GELU) stays f32. Deterministic —
+    /// integer accumulation is order-independent, so rows keep the
+    /// batch-composition independence of the f32 entry — but NOT bitwise
+    /// comparable to f32 logits; agreement is tolerance-tested.
+    fn infer_cls_q(
+        &self,
+        model: &str,
+        _params: &ParamSet,
+        _quant: &QuantParamSet,
+        _batch: &ClsBatch,
+    ) -> Result<Vec<f32>> {
+        bail!("backend {} has no int8 inference entry for model {model:?}", self.name())
     }
 
     /// MLM eval: returns (weighted_loss_sum, weighted_correct, weight_sum).

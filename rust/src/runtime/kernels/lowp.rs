@@ -1,0 +1,599 @@
+//! Reduced-precision microkernels: bf16-storage / f32-accumulate matmul
+//! tiles for the [`Precision::Bf16`](super::Precision) training tier, and
+//! the int8 weight-quantized linear kernel behind the
+//! [`Precision::Int8Infer`](super::Precision) serving tier. Portable
+//! chunked code only — no `std::arch` — exactly like the [`simd`] tier it
+//! mirrors.
+//!
+//! # bf16 tier determinism
+//!
+//! bf16 is f32's top 16 bits, so encode is a round (to nearest even) and
+//! decode is an exact widening (`(u as u32) << 16` reinterpreted). The
+//! tiles below decode each operand element once and accumulate in f32
+//! with the same [`MR`] x [`LANES`] column-lane register blocking as the
+//! SIMD tier: every lane owns one output element and the contraction
+//! keeps its serial ascending order. The tier is therefore **bitwise
+//! equal to the f32 reference run over bf16-rounded operands** — at any
+//! thread count, SIMD flag, keep ratio and compaction mode — which is
+//! exactly what the property tests pin. It is deliberately *not* bitwise
+//! equal to the f32 tier (operands lost 16 mantissa bits); that gap is
+//! bounded by tolerance tests against f32, anchored by the
+//! finite-difference gradcheck harness on the f32 side.
+//!
+//! The zero-skip branches compare the *decoded* value (`bf16(0) == 0.0`
+//! bit-exactly, and bf16 rounding never rounds a nonzero f32 to zero
+//! without the reference-over-rounded-operands seeing the same zero), so
+//! sampled zero rows still cost nothing.
+//!
+//! # int8 serving kernel
+//!
+//! [`quantize_weights_per_out`] does static symmetric per-output-channel
+//! weight quantization (absmax / 127), storing the quantized matrix
+//! transposed `(dout, din)` so every output channel's dot runs over a
+//! contiguous `i8` row. [`int8_linear_into`] quantizes activations
+//! dynamically per row (absmax / 127), accumulates `i8 x i8` products in
+//! `i32` — exact integer arithmetic, so accumulation order is irrelevant
+//! and the result is deterministic and batch-composition independent —
+//! and applies the f32 dequant epilogue
+//! `out = acc * a_scale[row] * w_scale[col] + bias[col]`.
+
+use super::workspace::Workspace;
+use super::{par_row_chunks, workers_for, KernelCtx};
+
+use super::simd::LANES;
+
+/// Output rows per bf16 register block (mirrors the SIMD tier's `MR`).
+const MR: usize = 4;
+
+// ---------------------------------------------------------------------------
+// bf16 conversion
+// ---------------------------------------------------------------------------
+
+/// f32 -> bf16 bits, round to nearest even (NaN stays NaN, quieted).
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits.wrapping_add(round)) >> 16) as u16
+}
+
+/// bf16 bits -> f32, exact (bf16 is a subset of f32).
+#[inline(always)]
+pub fn bf16_to_f32(u: u16) -> f32 {
+    f32::from_bits((u as u32) << 16)
+}
+
+/// The f32 value a bf16 round-trip produces — the tier's effective
+/// operand value, used by the bitwise-over-rounded-operands tests.
+#[inline(always)]
+pub fn round_bf16(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Pack an f32 slice into bf16 (round to nearest even), element-aligned.
+pub fn pack_bf16(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f32_to_bf16(s);
+    }
+}
+
+/// Decode [`LANES`] bf16 elements into an f32 lane vector.
+#[inline(always)]
+fn load_bf16(src: &[u16]) -> [f32; LANES] {
+    let mut out = [0.0f32; LANES];
+    for (o, &u) in out.iter_mut().zip(&src[..LANES]) {
+        *o = bf16_to_f32(u);
+    }
+    out
+}
+
+#[inline(always)]
+fn axpy_lane(acc: &mut [f32; LANES], a: f32, b: &[f32; LANES]) {
+    for (o, &bv) in acc.iter_mut().zip(b) {
+        *o += a * bv;
+    }
+}
+
+/// Process-wide staging pool for packed operands. The matmul entry points
+/// have no workspace parameter (PR 3 kept staging internal to the plan),
+/// so the bf16 tier draws its `u16` buffers here; steady-state training
+/// steps reuse the same packed-panel buffers allocation-free.
+pub(crate) fn staging() -> &'static Workspace {
+    static POOL: std::sync::OnceLock<Workspace> = std::sync::OnceLock::new();
+    POOL.get_or_init(Workspace::new)
+}
+
+// ---------------------------------------------------------------------------
+// bf16 matmul tiles (worker bodies for the `par_row_chunks` closures).
+// ---------------------------------------------------------------------------
+
+/// NN worker body, bf16 tier: out rows `row0..` of `a (m,k) @ b (k,n)`,
+/// both operands bf16-packed, f32 accumulators. Same register blocking,
+/// zero-skip and ragged-tail structure as the SIMD tier's `nn_tile`, so
+/// per output element the adds are the reference loop's over decoded
+/// operands. `out` arrives zero-filled.
+pub fn nn_tile_bf16(a: &[u16], b: &[u16], k: usize, n: usize, row0: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    let n_main = n - n % LANES;
+    let mut j = 0;
+    while j < n_main {
+        let mut i = 0;
+        while i + MR <= rows {
+            let mut acc = [[0.0f32; LANES]; MR];
+            for p in 0..k {
+                let bvec = load_bf16(&b[p * n + j..]);
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = bf16_to_f32(a[(row0 + i + r) * k + p]);
+                    if av != 0.0 {
+                        axpy_lane(accr, av, &bvec);
+                    }
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                out[(i + r) * n + j..][..LANES].copy_from_slice(accr);
+            }
+            i += MR;
+        }
+        while i < rows {
+            let mut acc = [0.0f32; LANES];
+            let arow = &a[(row0 + i) * k..][..k];
+            for (p, &au) in arow.iter().enumerate() {
+                let av = bf16_to_f32(au);
+                if av != 0.0 {
+                    axpy_lane(&mut acc, av, &load_bf16(&b[p * n + j..]));
+                }
+            }
+            out[i * n + j..][..LANES].copy_from_slice(&acc);
+            i += 1;
+        }
+        j += LANES;
+    }
+    if n_main < n {
+        for i in 0..rows {
+            let arow = &a[(row0 + i) * k..][..k];
+            let orow = &mut out[i * n + n_main..(i + 1) * n];
+            for (p, &au) in arow.iter().enumerate() {
+                let av = bf16_to_f32(au);
+                if av == 0.0 {
+                    continue;
+                }
+                let brow = &b[p * n + n_main..(p + 1) * n];
+                for (o, &bu) in orow.iter_mut().zip(brow) {
+                    *o += av * bf16_to_f32(bu);
+                }
+            }
+        }
+    }
+}
+
+/// NT worker body, bf16 tier: [`LANES`] independent dot chains per output
+/// row over bf16 operands, f32 accumulation, ascending `k` — mirrors the
+/// SIMD `nt_tile` exactly.
+pub fn nt_tile_bf16(a: &[u16], b: &[u16], k: usize, n: usize, row0: usize, out: &mut [f32]) {
+    if n == 0 {
+        return;
+    }
+    let rows = out.len() / n;
+    let n_main = n - n % LANES;
+    for i in 0..rows {
+        let arow = &a[(row0 + i) * k..][..k];
+        let mut j = 0;
+        while j < n_main {
+            let brows: [&[u16]; LANES] =
+                std::array::from_fn(|l| &b[(j + l) * k..(j + l + 1) * k]);
+            let mut acc = [0.0f32; LANES];
+            for (p, &au) in arow.iter().enumerate() {
+                let av = bf16_to_f32(au);
+                for (o, brow) in acc.iter_mut().zip(&brows) {
+                    *o += av * bf16_to_f32(brow[p]);
+                }
+            }
+            out[i * n + j..][..LANES].copy_from_slice(&acc);
+            j += LANES;
+        }
+        for jj in n_main..n {
+            let brow = &b[jj * k..(jj + 1) * k];
+            let mut acc = 0.0f32;
+            for (&au, &bu) in arow.iter().zip(brow) {
+                acc += bf16_to_f32(au) * bf16_to_f32(bu);
+            }
+            out[i * n + jj] = acc;
+        }
+    }
+}
+
+/// TN worker body, bf16 tier: output rows `c0..` (columns of `a`), both
+/// operands bf16, optional f32 row weights (SampleW 1/q scales stay full
+/// precision — only the matmul *operands* narrow).
+#[allow(clippy::too_many_arguments)]
+pub fn tn_tile_bf16(
+    a: &[u16],
+    b: &[u16],
+    w: Option<&[f32]>,
+    r: usize,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    tn_tile_body_bf16(a, b, w, r, m, n, c0, out, |row| row);
+}
+
+/// Gather-compacted TN worker body, bf16 tier: contraction over the rows
+/// listed in `idx`, weights aligned with `idx` — the compacted sampled
+/// backward's site.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_tn_tile_bf16(
+    a: &[u16],
+    b: &[u16],
+    idx: &[u32],
+    w: Option<&[f32]>,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+) {
+    tn_tile_body_bf16(a, b, w, idx.len(), m, n, c0, out, |j| idx[j] as usize);
+}
+
+/// Shared bf16 TN body — the SIMD `tn_tile_body` with decoded operands.
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn tn_tile_body_bf16<F: Fn(usize) -> usize>(
+    a: &[u16],
+    b: &[u16],
+    w: Option<&[f32]>,
+    steps: usize,
+    m: usize,
+    n: usize,
+    c0: usize,
+    out: &mut [f32],
+    row_of: F,
+) {
+    if n == 0 {
+        return;
+    }
+    let cols = out.len() / n;
+    let n_main = n - n % LANES;
+    let mut j = 0;
+    while j < n_main {
+        let mut p0 = 0;
+        while p0 < cols {
+            let pb = MR.min(cols - p0);
+            let mut acc = [[0.0f32; LANES]; MR];
+            for s in 0..steps {
+                let wv = match w {
+                    Some(w) => {
+                        if w[s] == 0.0 {
+                            continue;
+                        }
+                        w[s]
+                    }
+                    None => 1.0,
+                };
+                let row = row_of(s);
+                let bvec = load_bf16(&b[row * n + j..]);
+                let abase = row * m + c0 + p0;
+                for (pp, accp) in acc[..pb].iter_mut().enumerate() {
+                    let av = bf16_to_f32(a[abase + pp]);
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let avw = if w.is_some() { av * wv } else { av };
+                    axpy_lane(accp, avw, &bvec);
+                }
+            }
+            for (pp, accp) in acc[..pb].iter().enumerate() {
+                out[(p0 + pp) * n + j..][..LANES].copy_from_slice(accp);
+            }
+            p0 += pb;
+        }
+        j += LANES;
+    }
+    if n_main < n {
+        for s in 0..steps {
+            let wv = match w {
+                Some(w) => {
+                    if w[s] == 0.0 {
+                        continue;
+                    }
+                    w[s]
+                }
+                None => 1.0,
+            };
+            let row = row_of(s);
+            for p in 0..cols {
+                let av = bf16_to_f32(a[row * m + c0 + p]);
+                if av == 0.0 {
+                    continue;
+                }
+                let avw = if w.is_some() { av * wv } else { av };
+                let brow = &b[row * n + n_main..row * n + n];
+                let orow = &mut out[p * n + n_main..p * n + n];
+                for (o, &bu) in orow.iter_mut().zip(brow) {
+                    *o += avw * bf16_to_f32(bu);
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// int8 serving kernel
+// ---------------------------------------------------------------------------
+
+/// Symmetric per-output-channel weight quantization for a `(din, dout)`
+/// row-major dense weight: channel `j`'s scale is `absmax(col j) / 127`
+/// and the quantized matrix is stored **transposed** `(dout, din)` so each
+/// channel's contraction runs over a contiguous `i8` row. An all-zero
+/// channel gets scale 0 and quantizes to zeros (dequant is exact).
+pub fn quantize_weights_per_out(w: &[f32], din: usize, dout: usize) -> (Vec<i8>, Vec<f32>) {
+    debug_assert_eq!(w.len(), din * dout);
+    let mut scale = vec![0.0f32; dout];
+    for row in w.chunks_exact(dout) {
+        for (s, &v) in scale.iter_mut().zip(row) {
+            *s = s.max(v.abs());
+        }
+    }
+    for s in scale.iter_mut() {
+        *s /= 127.0;
+    }
+    let mut q = vec![0i8; din * dout];
+    for j in 0..dout {
+        let s = scale[j];
+        let inv = if s > 0.0 { 1.0 / s } else { 0.0 };
+        let qrow = &mut q[j * din..(j + 1) * din];
+        for (p, qv) in qrow.iter_mut().enumerate() {
+            *qv = (w[p * dout + j] * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+    }
+    (q, scale)
+}
+
+/// Symmetric per-row activation quantization: `scale = absmax(row) / 127`,
+/// `q = round(x / scale)` clamped to ±127. Depends only on the row itself,
+/// so quantized serving stays batch-composition independent.
+fn quantize_row_i8(row: &[f32], q: &mut [i8]) -> f32 {
+    let absmax = row.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    if absmax == 0.0 {
+        q.fill(0);
+        return 0.0;
+    }
+    let scale = absmax / 127.0;
+    let inv = 127.0 / absmax;
+    for (qv, &v) in q.iter_mut().zip(row) {
+        *qv = (v * inv).round().clamp(-127.0, 127.0) as i8;
+    }
+    scale
+}
+
+/// Widening i8 dot with exact i32 accumulation.
+#[inline(always)]
+fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    let mut acc = 0i32;
+    for (&x, &y) in a.iter().zip(b) {
+        acc += x as i32 * y as i32;
+    }
+    acc
+}
+
+/// Int8 dense linear: `out (rows, dout) = dequant(q8(a) @ qw^T) + bias`,
+/// with `qw`/`w_scale` from [`quantize_weights_per_out`] (so `qw` is
+/// `(dout, din)` row-major). Activations are quantized per row into `u8`
+/// workspace staging (two's-complement `i8` bytes), the `i8 x i8`
+/// products accumulate exactly in `i32`, and the epilogue dequantizes in
+/// f32: `out[i][j] = acc * a_scale[i] * w_scale[j] + bias[j]`.
+/// Threaded over output rows; integer accumulation is exact, so results
+/// are bitwise identical at any thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn int8_linear_into(
+    ctx: KernelCtx,
+    ws: &Workspace,
+    a: &[f32],
+    qw: &[i8],
+    w_scale: &[f32],
+    bias: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(a.len(), rows * din);
+    debug_assert_eq!(qw.len(), din * dout);
+    debug_assert_eq!(w_scale.len(), dout);
+    debug_assert_eq!(bias.len(), dout);
+    debug_assert_eq!(out.len(), rows * dout);
+    // Per-row dynamic activation quantization, staged once for the batch.
+    let mut qa_bytes = ws.take_u8(rows * din);
+    let mut a_scale = ws.take(rows);
+    for i in 0..rows {
+        let qrow = &mut qa_bytes[i * din..(i + 1) * din];
+        // u8 staging holds the i8 two's-complement bytes
+        let qrow_i8 =
+            unsafe { std::slice::from_raw_parts_mut(qrow.as_mut_ptr() as *mut i8, din) };
+        a_scale[i] = quantize_row_i8(&a[i * din..(i + 1) * din], qrow_i8);
+    }
+    let qa =
+        unsafe { std::slice::from_raw_parts(qa_bytes.as_ptr() as *const i8, qa_bytes.len()) };
+    let threads = workers_for(ctx, rows * din * dout);
+    par_row_chunks(threads, out, dout, |row0, chunk| {
+        for (i, orow) in chunk.chunks_mut(dout).enumerate() {
+            let row = row0 + i;
+            let qrow = &qa[row * din..(row + 1) * din];
+            let s = a_scale[row];
+            // 4 independent output channels per step: amortises the qrow
+            // traffic and gives the autovectorizer independent i32 chains
+            let mut j = 0;
+            while j + 4 <= dout {
+                let mut acc = [0i32; 4];
+                for (l, accl) in acc.iter_mut().enumerate() {
+                    *accl = dot_i8(qrow, &qw[(j + l) * din..(j + l + 1) * din]);
+                }
+                for (l, &accl) in acc.iter().enumerate() {
+                    orow[j + l] = accl as f32 * s * w_scale[j + l] + bias[j + l];
+                }
+                j += 4;
+            }
+            while j < dout {
+                let acc = dot_i8(qrow, &qw[j * din..(j + 1) * din]);
+                orow[j] = acc as f32 * s * w_scale[j] + bias[j];
+                j += 1;
+            }
+        }
+    });
+    ws.give_u8(qa_bytes);
+    ws.give(a_scale);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bf16_roundtrip_is_exact_on_bf16_values_and_rounds_to_nearest_even() {
+        // exactly representable values survive the round-trip bit-for-bit
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 128.0, -0.15625] {
+            assert_eq!(round_bf16(v).to_bits(), v.to_bits(), "{v}");
+        }
+        // 1 + 2^-8 sits exactly between bf16(1.0) and the next value
+        // 1 + 2^-7; ties go to even (mantissa lsb 0 -> 1.0)
+        assert_eq!(round_bf16(1.0 + 1.0 / 256.0), 1.0);
+        // 1 + 3*2^-8 ties between 1+2^-7 and 1+2^-6; even is 1+2^-6
+        assert_eq!(round_bf16(1.0 + 3.0 / 256.0), 1.0 + 1.0 / 64.0);
+        // above the midpoint rounds up
+        assert_eq!(round_bf16(1.0 + 1.5 / 256.0), 1.0 + 1.0 / 128.0);
+        // sign is preserved, relative error bounded by 2^-8
+        for i in 1..200 {
+            let v = (i as f32) * 0.37 - 30.0;
+            let r = round_bf16(v);
+            assert!((r - v).abs() <= v.abs() / 256.0 + f32::EPSILON, "{v} -> {r}");
+        }
+        // NaN stays NaN; infinities are exact
+        assert!(round_bf16(f32::NAN).is_nan());
+        assert_eq!(round_bf16(f32::INFINITY), f32::INFINITY);
+        assert_eq!(round_bf16(f32::NEG_INFINITY), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn pack_decodes_to_rounded_values() {
+        let src: Vec<f32> = (0..33).map(|i| (i as f32 - 11.0) * 0.173).collect();
+        let mut packed = vec![0u16; src.len()];
+        pack_bf16(&src, &mut packed);
+        for (&u, &v) in packed.iter().zip(&src) {
+            assert_eq!(bf16_to_f32(u).to_bits(), round_bf16(v).to_bits());
+        }
+    }
+
+    #[test]
+    fn weight_quantization_is_per_channel_transposed_and_bounded() {
+        let (din, dout) = (5, 3);
+        // column j has absmax 2^j so scales differ per channel
+        let mut w = vec![0.0f32; din * dout];
+        for p in 0..din {
+            for j in 0..dout {
+                w[p * dout + j] = ((p + 1) as f32 / din as f32) * (1 << j) as f32
+                    * if p % 2 == 0 { 1.0 } else { -1.0 };
+            }
+        }
+        let (q, scale) = quantize_weights_per_out(&w, din, dout);
+        assert_eq!(q.len(), din * dout);
+        assert_eq!(scale.len(), dout);
+        for j in 0..dout {
+            assert!((scale[j] - (1 << j) as f32 / 127.0).abs() < 1e-6);
+            for p in 0..din {
+                // transposed layout: channel j's weights are row j of q
+                let deq = q[j * din + p] as f32 * scale[j];
+                assert!(
+                    (deq - w[p * dout + j]).abs() <= scale[j] * 0.5 + 1e-6,
+                    "channel {j} elem {p}: {deq} vs {}",
+                    w[p * dout + j]
+                );
+            }
+        }
+        // all-zero channel: scale 0, quantized zeros
+        let (q0, s0) = quantize_weights_per_out(&[0.0; 6], 3, 2);
+        assert!(q0.iter().all(|&v| v == 0) && s0.iter().all(|&s| s == 0.0));
+    }
+
+    #[test]
+    fn int8_linear_matches_f32_within_quant_tolerance_and_is_thread_invariant() {
+        let (rows, din, dout) = (7, 33, 19);
+        let a: Vec<f32> =
+            (0..rows * din).map(|i| ((i * 37 + 11) % 101) as f32 / 50.0 - 1.0).collect();
+        let w: Vec<f32> =
+            (0..din * dout).map(|i| ((i * 29 + 5) % 97) as f32 / 48.0 - 1.0).collect();
+        let bias: Vec<f32> = (0..dout).map(|j| j as f32 * 0.01 - 0.05).collect();
+        let (qw, ws_scale) = quantize_weights_per_out(&w, din, dout);
+
+        let ws = Workspace::new();
+        let mut out1 = vec![f32::NAN; rows * dout];
+        int8_linear_into(
+            KernelCtx::serial(),
+            &ws,
+            &a,
+            &qw,
+            &ws_scale,
+            &bias,
+            rows,
+            din,
+            dout,
+            &mut out1,
+        );
+        // f32 reference
+        let mut reference = vec![0.0f32; rows * dout];
+        for i in 0..rows {
+            for j in 0..dout {
+                let mut acc = 0.0f32;
+                for p in 0..din {
+                    acc += a[i * din + p] * w[p * dout + j];
+                }
+                reference[i * dout + j] = acc + bias[j];
+            }
+        }
+        for (i, (&got, &want)) in out1.iter().zip(&reference).enumerate() {
+            // ~1% of the row's dynamic range per operand; generous bound
+            assert!(
+                (got - want).abs() < 0.35,
+                "elem {i}: int8 {got} vs f32 {want}"
+            );
+        }
+        // bitwise thread invariance (exact integer accumulation)
+        let mut out4 = vec![f32::NAN; rows * dout];
+        int8_linear_into(
+            KernelCtx::new(4),
+            &ws,
+            &a,
+            &qw,
+            &ws_scale,
+            &bias,
+            rows,
+            din,
+            dout,
+            &mut out4,
+        );
+        assert!(out1.iter().zip(&out4).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // zero activation row dequantizes to exactly the bias
+        let zeros = vec![0.0f32; din];
+        let mut outz = vec![f32::NAN; dout];
+        int8_linear_into(
+            KernelCtx::serial(),
+            &ws,
+            &zeros,
+            &qw,
+            &ws_scale,
+            &bias,
+            1,
+            din,
+            dout,
+            &mut outz,
+        );
+        assert!(outz.iter().zip(&bias).all(|(o, b)| o.to_bits() == b.to_bits()));
+    }
+}

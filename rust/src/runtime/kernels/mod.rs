@@ -24,6 +24,20 @@
 //! only, so it is bitwise identical to the scalar tiles — see the [`simd`]
 //! module docs for the column-lane determinism argument.
 //!
+//! # Precision tier
+//!
+//! [`Precision`] selects the storage width matmuls run at. The default
+//! [`Precision::F32`] is the bitwise reference above. [`Precision::Bf16`]
+//! packs both operands into bf16 (`u16`) staging buffers and accumulates
+//! in f32 — it **deliberately breaks the f32 bitwise contract** (operands
+//! are rounded), but remains fully deterministic: identical bits at any
+//! thread count, SIMD setting, keep ratio and compaction mode, equal to
+//! the serial reference over bf16-rounded operands (see [`lowp`]).
+//! [`Precision::Int8Infer`] is a serving-only weight-quantized forward
+//! tier handled above the matmul layer; inside `MatmulPlan` it executes as
+//! f32. The tier is opt-in: `VCAS_PRECISION` env, `[train] precision`
+//! config, `--precision` CLI.
+//!
 //! # Work gating
 //!
 //! A scoped fork/join costs tens of microseconds; [`workers_for`] keeps
@@ -33,6 +47,7 @@
 //! only.
 
 mod elementwise;
+pub mod lowp;
 mod matmul;
 pub mod simd;
 mod workspace;
@@ -50,21 +65,82 @@ pub use matmul::{
 };
 pub use workspace::Workspace;
 
+/// Storage precision for matmul operands. Unlike the thread/SIMD knobs,
+/// non-default tiers **change numeric results** (still deterministically)
+/// — they are strictly opt-in and tolerance-tested against `F32`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    /// Full f32 storage and accumulation — the bitwise reference tier.
+    #[default]
+    F32,
+    /// bf16 operand storage, f32 accumulation. Halves operand bytes moved;
+    /// bitwise-deterministic across threads/SIMD/compaction but *not*
+    /// bitwise-equal to `F32`.
+    Bf16,
+    /// int8 weight-quantized serving forwards (per-output-channel weight
+    /// scales, per-row dynamic activation scales, i32 accumulate, f32
+    /// dequant epilogue). Inference-only: training matmuls under this
+    /// tier execute as `F32`; the int8 path lives above the kernel layer
+    /// in the serving forward.
+    Int8Infer,
+}
+
+impl Precision {
+    /// Parse a config/CLI precision string. Unknown strings are a typed
+    /// error (never a silent f32 fallback) — mirrors `Method::parse`.
+    pub fn parse(s: &str) -> crate::error::Result<Precision> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            "int8" => Ok(Precision::Int8Infer),
+            _ => crate::error::bail!("unknown precision {s:?} (expected f32, bf16 or int8)"),
+        }
+    }
+
+    /// Canonical config/CLI spelling.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+            Precision::Int8Infer => "int8",
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
 /// Immutable execution context handed down to every kernel: how many
-/// scoped worker threads a call may fan out to (1 = fully serial), and
-/// whether the SIMD-width microkernel tier is dispatched. Both knobs move
-/// wall-clock only — results are bitwise identical either way.
+/// scoped worker threads a call may fan out to (1 = fully serial),
+/// whether the SIMD-width microkernel tier is dispatched, and which
+/// [`Precision`] tier matmuls store their operands at. Threads and SIMD
+/// move wall-clock only; precision is the one knob that changes numeric
+/// results (deterministically, opt-in).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct KernelCtx {
     threads: usize,
     simd: bool,
+    precision: Precision,
 }
 
 impl KernelCtx {
     /// Context with the given worker budget (clamped to >= 1); SIMD
     /// dispatch follows [`default_simd`] (the `VCAS_SIMD` env knob).
+    /// Precision is pinned to the f32 reference tier: only the *backend*
+    /// layer reads [`default_precision`] (`VCAS_PRECISION`), so a
+    /// reduced-precision env sweep reroutes model forwards/backwards
+    /// without silently changing the numerics of direct kernel callers —
+    /// every bitwise kernel property test stays meaningful under the
+    /// sweep. Opt in per-context with [`KernelCtx::with_precision`].
     pub fn new(threads: usize) -> KernelCtx {
-        KernelCtx { threads: threads.max(1), simd: default_simd() }
+        KernelCtx {
+            threads: threads.max(1),
+            simd: default_simd(),
+            precision: Precision::F32,
+        }
     }
 
     /// Single-threaded context — the bitwise reference execution.
@@ -72,15 +148,21 @@ impl KernelCtx {
         KernelCtx::new(1)
     }
 
-    /// This context restricted to one worker thread, keeping its SIMD
-    /// policy — what per-sample inner loops (attention) run on.
+    /// This context restricted to one worker thread, keeping its SIMD and
+    /// precision policies — what per-sample inner loops (attention) run on.
     pub fn to_serial(self) -> KernelCtx {
-        KernelCtx { threads: 1, simd: self.simd }
+        KernelCtx { threads: 1, ..self }
     }
 
     /// Override SIMD dispatch (tests drive both tiers explicitly).
     pub fn with_simd(mut self, simd: bool) -> KernelCtx {
         self.simd = simd;
+        self
+    }
+
+    /// Override the storage precision tier.
+    pub fn with_precision(mut self, precision: Precision) -> KernelCtx {
+        self.precision = precision;
         self
     }
 
@@ -91,6 +173,11 @@ impl KernelCtx {
     /// Whether kernels under this context dispatch the SIMD tier.
     pub fn simd(self) -> bool {
         self.simd
+    }
+
+    /// The storage precision tier kernels under this context run at.
+    pub fn precision(self) -> Precision {
+        self.precision
     }
 }
 
@@ -128,6 +215,24 @@ pub fn default_simd() -> bool {
                 || v.eq_ignore_ascii_case("false")
                 || v == "0"
         )
+    })
+}
+
+/// Default storage precision: `VCAS_PRECISION` when set to `bf16` or
+/// `int8` (case-insensitive), else [`Precision::F32`]. Read once per
+/// process. Unlike the config/CLI knobs (which reject unknown strings
+/// with typed errors), the env escape hatch treats any other value —
+/// including `f32` — as the f32 reference tier, mirroring `VCAS_SIMD`'s
+/// permissive parsing: env knobs are for CI matrices and triage, not
+/// validated user input.
+pub fn default_precision() -> Precision {
+    static PRECISION: std::sync::OnceLock<Precision> = std::sync::OnceLock::new();
+    *PRECISION.get_or_init(|| {
+        match std::env::var("VCAS_PRECISION").ok().as_deref().map(str::trim) {
+            Some(v) if v.eq_ignore_ascii_case("bf16") => Precision::Bf16,
+            Some(v) if v.eq_ignore_ascii_case("int8") => Precision::Int8Infer,
+            _ => Precision::F32,
+        }
     })
 }
 
@@ -307,6 +412,34 @@ mod tests {
         assert!(KernelCtx::new(4).with_simd(true).to_serial().simd());
         // default_simd is process-cached; whatever it returns, new() follows it
         assert_eq!(KernelCtx::new(1).simd(), default_simd());
+    }
+
+    #[test]
+    fn precision_knob_carries_through_ctx() {
+        let ctx = KernelCtx::new(4).with_precision(Precision::Bf16);
+        assert_eq!(ctx.precision(), Precision::Bf16);
+        assert_eq!(
+            ctx.to_serial().precision(),
+            Precision::Bf16,
+            "to_serial must keep the precision policy"
+        );
+        assert_eq!(ctx.with_simd(false).precision(), Precision::Bf16);
+        // new() pins the reference tier regardless of VCAS_PRECISION —
+        // only backends read the env default
+        assert_eq!(KernelCtx::new(1).precision(), Precision::F32);
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+
+    #[test]
+    fn precision_parse_accepts_known_and_rejects_unknown() {
+        assert_eq!(Precision::parse("f32").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse(" FP32 ").unwrap(), Precision::F32);
+        assert_eq!(Precision::parse("bf16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("BF16").unwrap(), Precision::Bf16);
+        assert_eq!(Precision::parse("int8").unwrap(), Precision::Int8Infer);
+        let err = Precision::parse("fp8").unwrap_err().to_string();
+        assert!(err.contains("unknown precision"), "{err}");
+        assert_eq!(Precision::Bf16.to_string(), "bf16");
     }
 
     #[test]

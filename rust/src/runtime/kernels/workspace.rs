@@ -1,5 +1,5 @@
-//! Reusable f32 buffer pool — the per-backend scratch arena that removes
-//! the per-step `vec![0.0; …]` allocations from the native hot loops.
+//! Reusable scratch-buffer pool — the per-backend arena that removes the
+//! per-step `vec![0.0; …]` allocations from the native hot loops.
 //!
 //! The pool is deliberately dumb: [`Workspace::take`] hands out a
 //! `Vec<f32>` of exactly the requested length with unspecified contents
@@ -15,7 +15,17 @@
 //! simply drops — the pool degrades to plain allocation, never leaks or
 //! aliases.
 //!
-//! Thread safety: the free list sits behind a `Mutex` and the counters are
+//! The reduced-precision kernel tier stages narrower operands, so the pool
+//! also keeps **byte-typed free lists**: [`Workspace::take_u16`] /
+//! [`Workspace::give_u16`] pool `Vec<u16>` bf16 staging buffers and
+//! [`Workspace::take_u8`] / [`Workspace::give_u8`] pool `Vec<u8>` int8
+//! staging buffers. All element widths share one mutex, one
+//! [`MAX_POOLED`] buffer-count cap and one resident-byte budget (bytes are
+//! accounted at each list's true element width), so a serving pool mixing
+//! f32 activations with int8 rows can never park more than the configured
+//! byte cap in total.
+//!
+//! Thread safety: the free lists sit behind a `Mutex` and the counters are
 //! atomic, so DDP workers and scoped kernel threads can share one pool
 //! through `&Workspace`. Buffers are plain values while taken — the lock is
 //! held only for the push/pop, never across compute.
@@ -27,25 +37,36 @@
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-/// Free-list cap: more simultaneous live buffers than this means shapes
-/// are churning and pooling has stopped paying; excess buffers just drop.
+/// Free-list cap (across all element widths): more simultaneous live
+/// buffers than this means shapes are churning and pooling has stopped
+/// paying; excess buffers just drop.
 const MAX_POOLED: usize = 128;
 
-/// Default cap on total bytes parked in the free list (64 MiB). Before
+/// Default cap on total bytes parked in the free lists (64 MiB). Before
 /// this cap, concurrent serving sessions could each park their largest
 /// activation buffers and the pool's resident set grew with tenant count;
 /// now overflow buffers drop back to the allocator instead.
 const MAX_POOLED_BYTES: usize = 64 << 20;
 
-/// The capacity-sorted free list plus its resident byte count (tracked
-/// under the same lock so the byte cap is race-free).
+/// The capacity-sorted free lists (one per element width) plus the shared
+/// resident byte count (tracked under the same lock so the byte cap is
+/// race-free across widths).
 struct FreeList {
     bufs: Vec<Vec<f32>>,
+    u16s: Vec<Vec<u16>>,
+    u8s: Vec<Vec<u8>>,
     bytes: usize,
 }
 
-/// A shared pool of reusable `Vec<f32>` scratch buffers. The free list is
-/// sorted ascending by capacity (ties in any order — contents are
+impl FreeList {
+    fn total_bufs(&self) -> usize {
+        self.bufs.len() + self.u16s.len() + self.u8s.len()
+    }
+}
+
+/// A shared pool of reusable scratch buffers (`Vec<f32>` plus byte-typed
+/// `Vec<u16>` / `Vec<u8>` for reduced-precision staging). Each free list
+/// is sorted ascending by capacity (ties in any order — contents are
 /// unspecified anyway), which is what makes best-fit a binary search.
 pub struct Workspace {
     pool: Mutex<FreeList>,
@@ -58,38 +79,46 @@ impl Workspace {
     /// An empty pool with the default byte cap.
     pub fn new() -> Workspace {
         Workspace {
-            pool: Mutex::new(FreeList { bufs: Vec::new(), bytes: 0 }),
+            pool: Mutex::new(FreeList {
+                bufs: Vec::new(),
+                u16s: Vec::new(),
+                u8s: Vec::new(),
+                bytes: 0,
+            }),
             takes: AtomicUsize::new(0),
             allocs: AtomicUsize::new(0),
             byte_cap: MAX_POOLED_BYTES,
         }
     }
 
-    /// Cap the total bytes the free list may park (buffers beyond it drop
-    /// on `give`). Taken buffers are never affected — the cap bounds idle
-    /// memory, not working memory.
+    /// Cap the total bytes the free lists may park (buffers beyond it drop
+    /// on `give`; the budget is shared across element widths). Taken
+    /// buffers are never affected — the cap bounds idle memory, not
+    /// working memory.
     pub fn with_byte_capacity(mut self, bytes: usize) -> Workspace {
         self.byte_cap = bytes;
         self
     }
 
-    /// A buffer of exactly `len` elements with **unspecified contents**
-    /// (every consumer either writes all elements or zero-fills
-    /// explicitly, so a steady-state same-size reuse costs no memset).
-    /// Reuses the pooled buffer with the *smallest sufficient* capacity —
-    /// the free list is sorted by capacity, so best-fit is the
-    /// `partition_point` binary search for the first capacity >= `len`
-    /// (an O(log n) probe plus a bounded `Vec::remove` header shift under
-    /// the lock, same selection the old full linear scan made); only when
-    /// none fits does the take count as a heap allocation.
-    pub fn take(&self, len: usize) -> Vec<f32> {
+    /// Width-generic take: pop the smallest sufficient buffer from the
+    /// projected free list (debiting the shared byte count at this width's
+    /// element size), else allocate. All widths share the take/alloc
+    /// counters, so the steady-state "allocations stay flat" assertions
+    /// cover mixed-width cycles too.
+    fn take_in<T: Copy + Default>(
+        &self,
+        len: usize,
+        proj: fn(&mut FreeList) -> (&mut Vec<Vec<T>>, &mut usize),
+    ) -> Vec<T> {
         self.takes.fetch_add(1, Ordering::Relaxed);
+        let esz = std::mem::size_of::<T>();
         let mut buf = {
             let mut pool = self.pool.lock().unwrap();
-            let i = pool.bufs.partition_point(|b| b.capacity() < len);
-            if i < pool.bufs.len() {
-                let buf = pool.bufs.remove(i);
-                pool.bytes -= buf.capacity() * 4;
+            let (list, bytes) = proj(&mut pool);
+            let i = list.partition_point(|b| b.capacity() < len);
+            if i < list.len() {
+                let buf = list.remove(i);
+                *bytes -= buf.capacity() * esz;
                 buf
             } else {
                 Vec::new()
@@ -100,29 +129,72 @@ impl Workspace {
         }
         // shrink is O(1), grow writes only the new tail — contents are
         // unspecified either way, so no full memset is ever paid
-        buf.resize(len, 0.0);
+        buf.resize(len, T::default());
         buf
+    }
+
+    /// Width-generic give: park at the capacity-sorted position iff both
+    /// the shared buffer-count cap and the shared byte budget allow it.
+    fn give_in<T>(&self, buf: Vec<T>, proj: fn(&mut FreeList) -> (&mut Vec<Vec<T>>, &mut usize)) {
+        if buf.capacity() == 0 {
+            return;
+        }
+        let cap_bytes = buf.capacity() * std::mem::size_of::<T>();
+        let mut pool = self.pool.lock().unwrap();
+        if pool.total_bufs() < MAX_POOLED && pool.bytes + cap_bytes <= self.byte_cap {
+            let (list, bytes) = proj(&mut pool);
+            let i = list.partition_point(|b| b.capacity() <= buf.capacity());
+            list.insert(i, buf);
+            *bytes += cap_bytes;
+        }
+    }
+
+    /// A buffer of exactly `len` f32 elements with **unspecified contents**
+    /// (every consumer either writes all elements or zero-fills
+    /// explicitly, so a steady-state same-size reuse costs no memset).
+    /// Reuses the pooled buffer with the *smallest sufficient* capacity —
+    /// the free list is sorted by capacity, so best-fit is the
+    /// `partition_point` binary search for the first capacity >= `len`
+    /// (an O(log n) probe plus a bounded `Vec::remove` header shift under
+    /// the lock, same selection the old full linear scan made); only when
+    /// none fits does the take count as a heap allocation.
+    pub fn take(&self, len: usize) -> Vec<f32> {
+        self.take_in(len, |p| (&mut p.bufs, &mut p.bytes))
     }
 
     /// Return a buffer to the pool (capacity is what gets reused; length
     /// is irrelevant), inserted at its capacity-sorted position (binary
     /// search + one bounded element shift). Zero-capacity buffers,
-    /// overflow beyond [`MAX_POOLED`] buffers, and anything that would
-    /// push the parked byte total past the byte cap are silently dropped.
+    /// overflow beyond [`MAX_POOLED`] buffers (counted across widths), and
+    /// anything that would push the parked byte total past the byte cap
+    /// are silently dropped.
     pub fn give(&self, buf: Vec<f32>) {
-        if buf.capacity() == 0 {
-            return;
-        }
-        let cap_bytes = buf.capacity() * 4;
-        let mut pool = self.pool.lock().unwrap();
-        if pool.bufs.len() < MAX_POOLED && pool.bytes + cap_bytes <= self.byte_cap {
-            let i = pool.bufs.partition_point(|b| b.capacity() <= buf.capacity());
-            pool.bufs.insert(i, buf);
-            pool.bytes += cap_bytes;
-        }
+        self.give_in(buf, |p| (&mut p.bufs, &mut p.bytes))
     }
 
-    /// Total `take` calls served.
+    /// [`Workspace::take`] for `u16` staging buffers (bf16-packed matmul
+    /// operands). Same unspecified-contents / best-fit contract.
+    pub fn take_u16(&self, len: usize) -> Vec<u16> {
+        self.take_in(len, |p| (&mut p.u16s, &mut p.bytes))
+    }
+
+    /// [`Workspace::give`] for `u16` staging buffers.
+    pub fn give_u16(&self, buf: Vec<u16>) {
+        self.give_in(buf, |p| (&mut p.u16s, &mut p.bytes))
+    }
+
+    /// [`Workspace::take`] for `u8` staging buffers (int8-quantized rows).
+    /// Same unspecified-contents / best-fit contract.
+    pub fn take_u8(&self, len: usize) -> Vec<u8> {
+        self.take_in(len, |p| (&mut p.u8s, &mut p.bytes))
+    }
+
+    /// [`Workspace::give`] for `u8` staging buffers.
+    pub fn give_u8(&self, buf: Vec<u8>) {
+        self.give_in(buf, |p| (&mut p.u8s, &mut p.bytes))
+    }
+
+    /// Total `take` calls served (all element widths).
     pub fn takes(&self) -> usize {
         self.takes.load(Ordering::Relaxed)
     }
@@ -133,13 +205,13 @@ impl Workspace {
         self.allocs.load(Ordering::Relaxed)
     }
 
-    /// Buffers currently parked in the free list.
+    /// Buffers currently parked across all free lists.
     pub fn pooled(&self) -> usize {
-        self.pool.lock().unwrap().bufs.len()
+        self.pool.lock().unwrap().total_bufs()
     }
 
-    /// Total bytes currently parked in the free list (always <= the byte
-    /// cap).
+    /// Total bytes currently parked across all free lists (always <= the
+    /// byte cap; each width accounted at its true element size).
     pub fn pooled_bytes(&self) -> usize {
         self.pool.lock().unwrap().bytes
     }
@@ -293,55 +365,135 @@ mod tests {
         assert_eq!(ws.clone().byte_cap, 4096);
     }
 
+    /// Byte-typed buffers pool through the same lists, counters and byte
+    /// budget: u16 capacity costs 2 bytes/element, u8 costs 1, and a
+    /// narrow-width give that would overflow the *shared* budget drops
+    /// even when its own list is empty.
+    #[test]
+    fn byte_typed_lists_share_budget_and_counters() {
+        let ws = Workspace::new().with_byte_capacity(4096);
+        let h = ws.take_u16(256); // 512 bytes once parked
+        let q = ws.take_u8(128); // 128 bytes once parked
+        assert_eq!((h.len(), q.len()), (256, 128));
+        assert_eq!(ws.takes(), 2);
+        assert_eq!(ws.allocations(), 2);
+        ws.give_u16(h);
+        ws.give_u8(q);
+        assert_eq!(ws.pooled(), 2);
+        assert_eq!(ws.pooled_bytes(), 256 * 2 + 128);
+        // same-width retake reuses — the mixed pool stays allocation-free
+        let h = ws.take_u16(200);
+        assert_eq!(h.capacity(), 256);
+        let q = ws.take_u8(128);
+        assert_eq!(ws.allocations(), 2, "mixed-width reuse must not allocate");
+        ws.give_u16(h);
+        ws.give_u8(q);
+        // an f32 give that fits its own list but not the shared byte
+        // budget is dropped: budget is global, not per width
+        ws.give(Vec::with_capacity(1024)); // 4096 bytes > 4096 - 640 remaining
+        assert_eq!(ws.pooled(), 2, "shared byte budget must gate every width");
+        assert_eq!(ws.pooled_bytes(), 256 * 2 + 128);
+    }
+
     /// Simultaneous forward passes from serving pool workers share one
     /// pool: no buffer may ever be handed to two threads at once (each
-    /// thread tags every element of its buffers and re-checks after a
-    /// yield), the free list stays under both caps, and — after a
-    /// single-threaded warm-up parks enough max-size buffers for every
-    /// concurrent taker — the contended phase allocates nothing.
+    /// thread tags every element of its buffers — f32, u16 and u8 widths
+    /// round-robin — and re-checks after a yield), the free lists stay
+    /// under both caps, and — after a single-threaded warm-up parks enough
+    /// max-size buffers of every width for every concurrent taker — the
+    /// contended phase allocates nothing.
     #[test]
     fn concurrent_take_give_no_double_handout_and_bounded_growth() {
         let cap_bytes = 1 << 20;
         let ws = Workspace::new().with_byte_capacity(cap_bytes);
         let n_threads = 4usize;
         let rounds = 200usize;
-        // warm-up: park 2 max-size buffers per thread, so every concurrent
-        // take (at most 2 live per thread) finds a fitting pooled buffer
+        // warm-up: park 2 max-size buffers per thread *per width*, so
+        // every concurrent take (at most 2 live per thread per width)
+        // finds a fitting pooled buffer
         let warm: Vec<_> = (0..2 * n_threads).map(|_| ws.take(384)).collect();
+        let warm16: Vec<_> = (0..2 * n_threads).map(|_| ws.take_u16(384)).collect();
+        let warm8: Vec<_> = (0..2 * n_threads).map(|_| ws.take_u8(384)).collect();
         for b in warm {
             ws.give(b);
         }
+        for b in warm16 {
+            ws.give_u16(b);
+        }
+        for b in warm8 {
+            ws.give_u8(b);
+        }
         let warm_allocs = ws.allocations();
-        assert_eq!(warm_allocs, 2 * n_threads);
+        assert_eq!(warm_allocs, 3 * 2 * n_threads);
 
         std::thread::scope(|s| {
             for t in 0..n_threads {
                 let ws = &ws;
                 s.spawn(move || {
                     let tag = (t + 1) as f32;
+                    let tag16 = (t + 1) as u16;
+                    let tag8 = (t + 1) as u8;
                     for r in 0..rounds {
                         let len = 64 + 32 * ((t + r) % 5); // 64..=192
-                        let mut a = ws.take(len);
-                        let mut b = ws.take(len * 2); // 128..=384
-                        a.iter_mut().for_each(|v| *v = tag);
-                        b.iter_mut().for_each(|v| *v = -tag);
-                        std::thread::yield_now();
-                        assert!(
-                            a.iter().all(|&v| v == tag),
-                            "buffer handed to two threads at once"
-                        );
-                        assert!(
-                            b.iter().all(|&v| v == -tag),
-                            "buffer handed to two threads at once"
-                        );
-                        ws.give(a);
-                        ws.give(b);
+                        match r % 3 {
+                            0 => {
+                                let mut a = ws.take(len);
+                                let mut b = ws.take(len * 2); // 128..=384
+                                a.iter_mut().for_each(|v| *v = tag);
+                                b.iter_mut().for_each(|v| *v = -tag);
+                                std::thread::yield_now();
+                                assert!(
+                                    a.iter().all(|&v| v == tag),
+                                    "f32 buffer handed to two threads at once"
+                                );
+                                assert!(
+                                    b.iter().all(|&v| v == -tag),
+                                    "f32 buffer handed to two threads at once"
+                                );
+                                ws.give(a);
+                                ws.give(b);
+                            }
+                            1 => {
+                                let mut a = ws.take_u16(len);
+                                let mut b = ws.take_u16(len * 2);
+                                a.iter_mut().for_each(|v| *v = tag16);
+                                b.iter_mut().for_each(|v| *v = tag16 | 0x8000);
+                                std::thread::yield_now();
+                                assert!(
+                                    a.iter().all(|&v| v == tag16),
+                                    "u16 buffer handed to two threads at once"
+                                );
+                                assert!(
+                                    b.iter().all(|&v| v == tag16 | 0x8000),
+                                    "u16 buffer handed to two threads at once"
+                                );
+                                ws.give_u16(a);
+                                ws.give_u16(b);
+                            }
+                            _ => {
+                                let mut a = ws.take_u8(len);
+                                let mut b = ws.take_u8(len * 2);
+                                a.iter_mut().for_each(|v| *v = tag8);
+                                b.iter_mut().for_each(|v| *v = tag8 | 0x80);
+                                std::thread::yield_now();
+                                assert!(
+                                    a.iter().all(|&v| v == tag8),
+                                    "u8 buffer handed to two threads at once"
+                                );
+                                assert!(
+                                    b.iter().all(|&v| v == tag8 | 0x80),
+                                    "u8 buffer handed to two threads at once"
+                                );
+                                ws.give_u8(a);
+                                ws.give_u8(b);
+                            }
+                        }
                     }
                 });
             }
         });
 
-        assert_eq!(ws.takes(), 2 * n_threads + 2 * n_threads * rounds);
+        assert_eq!(ws.takes(), 3 * 2 * n_threads + 2 * n_threads * rounds);
         assert_eq!(
             ws.allocations(),
             warm_allocs,

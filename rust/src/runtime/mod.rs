@@ -20,8 +20,11 @@ mod xla;
 
 pub use backend::{
     publish_all_grads, Backend, CnnGradOut, GradHook, GradOut, ModelInfo, ModelKind,
+    QuantParamSet, QuantTensor,
 };
-pub use kernels::{default_threads, KernelCtx, MatmulPlan, Workspace};
+pub use kernels::{
+    default_precision, default_threads, KernelCtx, MatmulPlan, Precision, Workspace,
+};
 pub use manifest::{EntrySpec, Manifest, ModelManifest};
 pub use native::{CnnCfg, NativeBackend, TransformerCfg};
 pub use session::ModelSession;
@@ -49,6 +52,19 @@ pub fn default_backend(artifacts: &Path) -> Box<dyn Backend> {
 /// consumes it — the PJRT path parallelises inside XLA. Results are
 /// bitwise identical at any thread count.
 pub fn default_backend_with_threads(artifacts: &Path, threads: usize) -> Box<dyn Backend> {
+    default_backend_with(artifacts, threads, default_precision())
+}
+
+/// [`default_backend_with_threads`] with an explicit reduced-precision
+/// tier (the CLI `--precision` / config `[train] precision` knob; the
+/// plain entries default it from `VCAS_PRECISION`). Only the native
+/// backend consumes it; unlike threads it changes numerics and is
+/// strictly opt-in.
+pub fn default_backend_with(
+    artifacts: &Path,
+    threads: usize,
+    precision: Precision,
+) -> Box<dyn Backend> {
     #[cfg(feature = "xla")]
     {
         if artifacts.join("manifest.json").exists() {
@@ -61,5 +77,7 @@ pub fn default_backend_with_threads(artifacts: &Path, threads: usize) -> Box<dyn
         }
     }
     let _ = artifacts;
-    Box::new(NativeBackend::with_default_models().with_threads(threads))
+    Box::new(
+        NativeBackend::with_default_models().with_threads(threads).with_precision(precision),
+    )
 }

@@ -20,7 +20,11 @@
 //! backend's thread count ([`NativeBackend::with_threads`]) and SIMD
 //! policy ([`NativeBackend::with_simd`], defaulting to the `VCAS_SIMD`
 //! env knob); results are bitwise identical at any thread count and on
-//! either kernel tier, so both are purely wall-clock knobs.
+//! either kernel tier, so both are purely wall-clock knobs. The one
+//! exception is the opt-in reduced-precision tier
+//! ([`NativeBackend::with_precision`]): bf16 operand storage / int8
+//! serving forwards change numerics by design and are tolerance-tested
+//! against the f32 tier instead.
 //!
 //! Sampled backwards execute **gather-compacted** by default: the SampleA
 //! draw yields a [`sampling::SampledRows`] kept-row set, the block/stage
@@ -47,8 +51,12 @@ use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
 use crate::error::{anyhow, bail, ensure, Result};
 use crate::formats::params::ParamSet;
 
-use super::backend::{Backend, CnnGradOut, GradHook, GradOut, ModelInfo, ModelKind};
-use super::kernels::{default_simd, default_threads, KernelCtx, Workspace};
+use super::backend::{
+    Backend, CnnGradOut, GradHook, GradOut, ModelInfo, ModelKind, QuantParamSet,
+};
+use super::kernels::{
+    default_precision, default_simd, default_threads, KernelCtx, Precision, Workspace,
+};
 
 /// Per-call execution context handed to the native model code: the kernel
 /// thread budget, the backend's reusable buffer pool, whether sampled
@@ -91,6 +99,7 @@ pub struct NativeBackend {
     threads: usize,
     compact: bool,
     simd: bool,
+    precision: Precision,
     ws: Workspace,
 }
 
@@ -112,6 +121,7 @@ impl NativeBackend {
             threads: 1,
             compact: true,
             simd: default_simd(),
+            precision: default_precision(),
             ws: Workspace::new(),
         }
     }
@@ -140,6 +150,22 @@ impl NativeBackend {
         self
     }
 
+    /// Set the reduced-precision tier (default: the `VCAS_PRECISION` env
+    /// knob, f32 unless set). `Bf16` narrows training/eval matmul operand
+    /// storage; `Int8Infer` only changes `infer_cls` (training matmuls
+    /// stay f32 — the config layer rejects int8 for training outright).
+    /// Unlike threads/SIMD/compaction this *does* change numerics; it is a
+    /// strictly opt-in, tolerance-tested tier.
+    pub fn with_precision(mut self, precision: Precision) -> NativeBackend {
+        self.precision = precision;
+        self
+    }
+
+    /// The backend's reduced-precision tier.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     /// The backend's scratch-buffer pool (shared across threads). Exposed
     /// so tests can assert steady-state allocation-freedom.
     pub fn workspace(&self) -> &Workspace {
@@ -148,7 +174,15 @@ impl NativeBackend {
 
     fn ectx(&self) -> ExecCtx<'_> {
         ExecCtx {
-            kctx: KernelCtx::new(self.threads).with_simd(self.simd),
+            // Int8Infer lives above the kernel layer (quantized serving
+            // forwards); the dense training/eval matmuls it doesn't cover
+            // run f32.
+            kctx: KernelCtx::new(self.threads).with_simd(self.simd).with_precision(
+                match self.precision {
+                    Precision::Int8Infer => Precision::F32,
+                    p => p,
+                },
+            ),
             ws: &self.ws,
             compact: self.compact,
             hook: None,
@@ -285,6 +319,10 @@ impl Backend for NativeBackend {
         self.compact
     }
 
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
     fn models(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }
@@ -397,7 +435,35 @@ impl Backend for NativeBackend {
 
     fn infer_cls(&self, model: &str, params: &ParamSet, batch: &ClsBatch) -> Result<Vec<f32>> {
         let cfg = self.transformer(model)?;
-        transformer::infer_cls(cfg, self.ectx(), params, &batch.x, batch.n, batch.seq_len)
+        // Int8Infer without a prepared QuantParamSet (callers outside the
+        // serving pool): quantize on the fly. Quantization is a pure
+        // function of `params`, so this produces bitwise the same logits
+        // as the pool's cached-quant path.
+        if self.precision == Precision::Int8Infer {
+            let quant = transformer::quantize_linears(cfg, params);
+            return transformer::infer_cls(
+                cfg, self.ectx(), params, Some(&quant), &batch.x, batch.n, batch.seq_len,
+            );
+        }
+        transformer::infer_cls(cfg, self.ectx(), params, None, &batch.x, batch.n, batch.seq_len)
+    }
+
+    fn quantize_params(&self, model: &str, params: &ParamSet) -> Result<QuantParamSet> {
+        let cfg = self.transformer(model)?;
+        Ok(transformer::quantize_linears(cfg, params))
+    }
+
+    fn infer_cls_q(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        quant: &QuantParamSet,
+        batch: &ClsBatch,
+    ) -> Result<Vec<f32>> {
+        let cfg = self.transformer(model)?;
+        transformer::infer_cls(
+            cfg, self.ectx(), params, Some(quant), &batch.x, batch.n, batch.seq_len,
+        )
     }
 
     fn eval_mlm(

@@ -37,11 +37,11 @@
 
 use crate::error::{ensure, Result};
 use crate::formats::params::{ParamSet, Tensor};
-use crate::runtime::backend::{GradOut, ModelInfo, ModelKind};
+use crate::runtime::backend::{GradOut, ModelInfo, ModelKind, QuantParamSet, QuantTensor};
 use crate::runtime::kernels::{
     add_assign, add_bias, add_into, argmax_row, ce_loss_and_dlogits_into, col_sums,
     gather_rows, gather_rows_scaled, gelu_bwd_into, gelu_fwd_into, layernorm_bwd_into,
-    layernorm_fwd_into,
+    layernorm_fwd_into, lowp,
     matmul_into, matmul_nt_into, par_row_chunks, par_row_chunks2, softmax_rows,
     weighted_gather_tn, weighted_tn, weighted_tn_into, workers_for,
     LnStats, Workspace,
@@ -430,14 +430,46 @@ fn attention_bwd(
     });
 }
 
+/// Dense linear forward `out = z @ w(widx) + b(bidx)`, routed through the
+/// int8 serving microkernel when `quant` carries tensor `widx` (the
+/// serving-only reduced-precision tier), else the f32 matmul. Only the
+/// weight contraction narrows; bias stays f32 either way.
+#[allow(clippy::too_many_arguments)]
+fn linear_fwd(
+    ectx: ExecCtx,
+    params: &ParamSet,
+    quant: Option<&QuantParamSet>,
+    widx: usize,
+    bidx: usize,
+    z: &[f32],
+    rows: usize,
+    din: usize,
+    dout: usize,
+    out: &mut [f32],
+) {
+    let bias = tdata(params, bidx);
+    if let Some(qt) = quant.and_then(|q| q.get(widx)) {
+        debug_assert_eq!((qt.din, qt.dout), (din, dout));
+        lowp::int8_linear_into(
+            ectx.kctx, ectx.ws, z, &qt.data, &qt.scale, bias, rows, din, dout, out,
+        );
+        return;
+    }
+    matmul_into(ectx.kctx, z, tdata(params, widx), rows, din, dout, out);
+    add_bias(out, bias);
+}
+
 /// Forward through embedding + blocks. With `save` the per-block
 /// activations are retained (as workspace buffers) for the instrumented
 /// backward; eval/loss-only entries pass `false` so each block's buffers
-/// return to the pool as soon as the next block is computed.
+/// return to the pool as soon as the next block is computed. `quant`
+/// routes the block linears through the int8 tier (serving forwards only
+/// — grad entries always pass `None`).
 fn encode_fwd(
     cfg: &TransformerCfg,
     ectx: ExecCtx,
     params: &ParamSet,
+    quant: Option<&QuantParamSet>,
     x: &[i32],
     n: usize,
     save: bool,
@@ -473,12 +505,12 @@ fn encode_fwd(
             &mut ln1.rstd,
         );
         let mut qkv = ws.take(rows * 3 * d);
-        matmul_into(kctx, &a, tdata(params, cfg.blk(l, W_QKV)), rows, d, 3 * d, &mut qkv);
-        add_bias(&mut qkv, tdata(params, cfg.blk(l, B_QKV)));
+        let (wi, bi) = (cfg.blk(l, W_QKV), cfg.blk(l, B_QKV));
+        linear_fwd(ectx, params, quant, wi, bi, &a, rows, d, 3 * d, &mut qkv);
         let (attn, probs) = attention_fwd(ectx, &qkv, n, t, d, cfg.n_heads);
         let mut o = ws.take(rows * d);
-        matmul_into(kctx, &attn, tdata(params, cfg.blk(l, W_O)), rows, d, d, &mut o);
-        add_bias(&mut o, tdata(params, cfg.blk(l, B_O)));
+        let (wi, bi) = (cfg.blk(l, W_O), cfg.blk(l, B_O));
+        linear_fwd(ectx, params, quant, wi, bi, &attn, rows, d, d, &mut o);
         let mut h2 = ws.take(rows * d);
         add_into(&h_in, &o, &mut h2);
         ws.give(o);
@@ -495,13 +527,13 @@ fn encode_fwd(
             &mut ln2.rstd,
         );
         let mut u1 = ws.take(rows * cfg.d_ff);
-        matmul_into(kctx, &b2, tdata(params, cfg.blk(l, W_FF1)), rows, d, cfg.d_ff, &mut u1);
-        add_bias(&mut u1, tdata(params, cfg.blk(l, B_FF1)));
+        let (wi, bi) = (cfg.blk(l, W_FF1), cfg.blk(l, B_FF1));
+        linear_fwd(ectx, params, quant, wi, bi, &b2, rows, d, cfg.d_ff, &mut u1);
         let mut f1 = ws.take(rows * cfg.d_ff);
         gelu_fwd_into(kctx, &u1, &mut f1);
         let mut f2 = ws.take(rows * d);
-        matmul_into(kctx, &f1, tdata(params, cfg.blk(l, W_FF2)), rows, cfg.d_ff, d, &mut f2);
-        add_bias(&mut f2, tdata(params, cfg.blk(l, B_FF2)));
+        let (wi, bi) = (cfg.blk(l, W_FF2), cfg.blk(l, B_FF2));
+        linear_fwd(ectx, params, quant, wi, bi, &f1, rows, cfg.d_ff, d, &mut f2);
         // h = h2 + f2 (f32 addition is commutative: same bits as add(&h2, &f2))
         add_assign(&mut f2, &h2);
         h = f2;
@@ -1005,6 +1037,7 @@ fn cls_head_fwd(
     cfg: &TransformerCfg,
     ectx: ExecCtx,
     params: &ParamSet,
+    quant: Option<&QuantParamSet>,
     hl: &[f32],
     n: usize,
 ) -> (Vec<f32>, LnStats, Vec<f32>, Vec<f32>) {
@@ -1039,8 +1072,8 @@ fn cls_head_fwd(
         }
     }
     let mut logits = ws.take(n * c);
-    matmul_into(kctx, &pooled, tdata(params, cfg.idx_head_w()), n, d, c, &mut logits);
-    add_bias(&mut logits, tdata(params, cfg.idx_head_b()));
+    let (wi, bi) = (cfg.idx_head_w(), cfg.idx_head_b());
+    linear_fwd(ectx, params, quant, wi, bi, &pooled, n, d, c, &mut logits);
     (hf, stats, pooled, logits)
 }
 
@@ -1077,8 +1110,8 @@ pub fn fwd_bwd_cls(
     let (t, d, c) = (cfg.seq_len, cfg.d_model, cfg.n_classes);
     let (kctx, ws) = (ectx.kctx, ectx.ws);
 
-    let saved = encode_fwd(cfg, ectx, params, x, n, true);
-    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let saved = encode_fwd(cfg, ectx, params, None, x, n, true);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, None, &saved.h_final, n);
     let mut losses = ws.take(n);
     let mut dlogits = ws.take(n * c);
     ce_loss_and_dlogits_into(kctx, &logits, y, c, &mut losses, &mut dlogits);
@@ -1159,7 +1192,7 @@ pub fn fwd_bwd_mlm(
     let (kctx, ws) = (ectx.kctx, ectx.ws);
     let rows = n * t;
 
-    let saved = encode_fwd(cfg, ectx, params, x, n, true);
+    let saved = encode_fwd(cfg, ectx, params, None, x, n, true);
     let mut hf = ws.take(rows * d);
     let mut lnf = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
     layernorm_fwd_into(
@@ -1252,8 +1285,8 @@ pub fn fwd_loss_cls(
     ensure!(y.len() == n);
     let c = cfg.n_classes;
     let ws = ectx.ws;
-    let saved = encode_fwd(cfg, ectx, params, x, n, false);
-    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let saved = encode_fwd(cfg, ectx, params, None, x, n, false);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, None, &saved.h_final, n);
     // losses escape to the caller; dlogits only feeds the UB scores
     let mut losses = vec![0.0f32; n];
     let mut dlogits = ws.take(n * c);
@@ -1278,8 +1311,8 @@ pub fn eval_cls(
     ensure!(y.len() == n);
     let c = cfg.n_classes;
     let ws = ectx.ws;
-    let saved = encode_fwd(cfg, ectx, params, x, n, false);
-    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let saved = encode_fwd(cfg, ectx, params, None, x, n, false);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, None, &saved.h_final, n);
     let mut losses = ws.take(n);
     let mut dlogits = ws.take(n * c);
     ce_loss_and_dlogits_into(ectx.kctx, &logits, y, c, &mut losses, &mut dlogits);
@@ -1301,10 +1334,14 @@ pub fn eval_cls(
 /// No loss, no labels, no gradients; every intermediate goes back to the
 /// workspace. Tokens are range-checked here because serving feeds this
 /// path caller-supplied inputs (training batches are generated in-range).
+/// With `quant` the dense linears run the int8 tier (same weights the
+/// [`quantize_linears`] call derived from `params`); everything else is
+/// identical.
 pub fn infer_cls(
     cfg: &TransformerCfg,
     ectx: ExecCtx,
     params: &ParamSet,
+    quant: Option<&QuantParamSet>,
     x: &[i32],
     n: usize,
     seq_len: usize,
@@ -1316,12 +1353,34 @@ pub fn infer_cls(
     );
     let c = cfg.n_classes;
     let ws = ectx.ws;
-    let saved = encode_fwd(cfg, ectx, params, x, n, false);
-    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, &saved.h_final, n);
+    let saved = encode_fwd(cfg, ectx, params, quant, x, n, false);
+    let (hf, lnf, pooled, logits) = cls_head_fwd(cfg, ectx, params, quant, &saved.h_final, n);
     let out = logits[..n * c].to_vec();
     release_head(ws, hf, lnf, pooled, logits);
     saved.release(ws);
     Ok(out)
+}
+
+/// Quantize every dense linear of the transformer (per block: qkv,
+/// attn-out, ff1, ff2; plus the cls head) to the int8 serving format —
+/// deterministic given `params`, so two independent calls produce
+/// bit-identical quantized sets. Embedding, layernorm gains/biases and
+/// all bias vectors stay f32.
+pub fn quantize_linears(cfg: &TransformerCfg, params: &ParamSet) -> QuantParamSet {
+    let (d, f, c) = (cfg.d_model, cfg.d_ff, cfg.n_classes);
+    let mut set = QuantParamSet::default();
+    let mut push = |idx: usize, din: usize, dout: usize| {
+        let (data, scale) = lowp::quantize_weights_per_out(tdata(params, idx), din, dout);
+        set.tensors.insert(idx, QuantTensor { data, scale, din, dout });
+    };
+    for l in 0..cfg.n_layers {
+        push(cfg.blk(l, W_QKV), d, 3 * d);
+        push(cfg.blk(l, W_O), d, d);
+        push(cfg.blk(l, W_FF1), d, f);
+        push(cfg.blk(l, W_FF2), f, d);
+    }
+    push(cfg.idx_head_w(), d, c);
+    set
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -1340,7 +1399,7 @@ pub fn eval_mlm(
     let rows = n * t;
     ensure!(w.len() == rows && y.len() == rows);
     let (kctx, ws) = (ectx.kctx, ectx.ws);
-    let saved = encode_fwd(cfg, ectx, params, x, n, false);
+    let saved = encode_fwd(cfg, ectx, params, None, x, n, false);
     let mut hf = ws.take(rows * d);
     let mut lnf = LnStats { mu: ws.take(rows), rstd: ws.take(rows) };
     layernorm_fwd_into(

@@ -6,7 +6,7 @@ use crate::data::batch::{ClsBatch, ImgBatch, MlmBatch};
 use crate::error::Result;
 use crate::formats::params::ParamSet;
 
-use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo};
+use super::backend::{Backend, CnnGradOut, GradOut, ModelInfo, QuantParamSet};
 
 /// A model bound to a backend, with its structural dims cached.
 pub struct ModelSession<'a> {
@@ -104,6 +104,24 @@ impl<'a> ModelSession<'a> {
     /// (see [`Backend::infer_cls`]). The serving hot path.
     pub fn infer_cls(&self, params: &ParamSet, batch: &ClsBatch) -> Result<Vec<f32>> {
         self.backend.infer_cls(&self.name, params, batch)
+    }
+
+    /// Quantize this model's dense linears for the int8 serving tier
+    /// (see [`Backend::quantize_params`]).
+    pub fn quantize_params(&self, params: &ParamSet) -> Result<QuantParamSet> {
+        self.backend.quantize_params(&self.name, params)
+    }
+
+    /// Int8 inference through pre-quantized weights (see
+    /// [`Backend::infer_cls_q`]). The serving hot path under the
+    /// `Int8Infer` tier.
+    pub fn infer_cls_q(
+        &self,
+        params: &ParamSet,
+        quant: &QuantParamSet,
+        batch: &ClsBatch,
+    ) -> Result<Vec<f32>> {
+        self.backend.infer_cls_q(&self.name, params, quant, batch)
     }
 
     /// MLM eval: returns (weighted_loss_sum, weighted_correct, weight_sum).

@@ -32,6 +32,14 @@
 //! *wall-clock only* — the integration suite sweeps pool sizes ×
 //! max-batch and diffs the bits.
 //!
+//! **Reduced-precision serving.** When the backend opts into the
+//! `Int8Infer` tier, `build` quantizes each tenant's dense linears once
+//! (per-output-channel symmetric int8) and workers serve through the
+//! cached [`QuantParamSet`]. Logits are then *not* bitwise the f32
+//! tier's — agreement is tolerance-tested — but the contract above still
+//! holds within the tier: integer accumulation is exact, so batch
+//! composition, worker count and kernel threads remain bitwise-neutral.
+//!
 //! **Shutdown.** Dropping the pool closes every queue and joins every
 //! worker (the PR 5 join-on-drop idiom): workers drain the requests
 //! already admitted — each still gets its reply — then exit; tickets
@@ -68,7 +76,7 @@ use crate::coordinator::channel::BoundedQueue;
 use crate::data::batch::ClsBatch;
 use crate::error::{bail, ensure, Result};
 use crate::formats::params::ParamSet;
-use crate::runtime::{Backend, ModelInfo, ModelKind, ModelSession};
+use crate::runtime::{Backend, ModelInfo, ModelKind, ModelSession, Precision, QuantParamSet};
 
 /// The backend handle serving shares across pool workers.
 pub type SharedBackend = Arc<dyn Backend + Send + Sync>;
@@ -188,6 +196,11 @@ struct Pending {
 struct Tenant {
     info: ModelInfo,
     params: Arc<ParamSet>,
+    /// Int8 images of the dense linears, built once at pool load when the
+    /// backend runs the `Int8Infer` tier (`None` on the f32 path). Workers
+    /// serve through these so the per-request cost is activation
+    /// quantization only, never weight re-quantization.
+    quant: Option<Arc<QuantParamSet>>,
     queue: BoundedQueue<Pending>,
     completed: AtomicU64,
 }
@@ -226,11 +239,20 @@ impl PoolBuilder {
                 Some(path) => ParamSet::load_bin(path, &info.param_specs)?,
                 None => self.backend.init_params(name)?,
             };
+            // Int8 tier: quantize the dense linears once, here, so the
+            // request hot path never touches f32 weights again.
+            let quant = match self.backend.precision() {
+                Precision::Int8Infer => {
+                    Some(Arc::new(self.backend.quantize_params(name, &params)?))
+                }
+                _ => None,
+            };
             tenants.insert(
                 name.clone(),
                 Arc::new(Tenant {
                     info,
                     params: Arc::new(params),
+                    quant,
                     queue: BoundedQueue::new(cfg.queue_capacity),
                     completed: AtomicU64::new(0),
                 }),
@@ -268,7 +290,11 @@ fn worker_loop(backend: SharedBackend, tenant: Arc<Tenant>, max_batch: usize, ma
             x.extend_from_slice(&p.tokens);
         }
         let cls = ClsBatch { n, seq_len, x, y: vec![0; n], idx: (0..n).collect() };
-        match session.infer_cls(&tenant.params, &cls) {
+        let res = match &tenant.quant {
+            Some(q) => session.infer_cls_q(&tenant.params, q, &cls),
+            None => session.infer_cls(&tenant.params, &cls),
+        };
+        match res {
             Ok(logits) => {
                 for (r, p) in batch.into_iter().enumerate() {
                     let done_seq = tenant.completed.fetch_add(1, Ordering::SeqCst);

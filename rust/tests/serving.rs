@@ -14,12 +14,17 @@
 //! 4. **Shutdown** — dropping the pool joins every worker (no detached
 //!    threads: the backend `Arc` strong count returns to 1) and admitted
 //!    in-flight requests are still answered.
+//! 5. **Int8 tier agreement** — a pool built on an `Int8Infer` backend
+//!    quantizes weights once at load and must track the f32 pool within
+//!    a logit tolerance (top-1 preserved wherever the margin is
+//!    decisive), while staying bitwise batch/thread-invariant within
+//!    its own tier (i32 accumulation is exact).
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use vcas::data::batch::ClsBatch;
-use vcas::runtime::{ModelSession, NativeBackend};
+use vcas::runtime::{ModelSession, NativeBackend, Precision};
 use vcas::serving::{ServeConfig, ServingError, SessionPool};
 
 /// Deterministic per-request token stream (distinct per request index).
@@ -46,7 +51,16 @@ fn reference_logits(n: usize) -> Vec<Vec<f32>> {
 /// Serve requests 0..n through a pool with the given config and kernel
 /// thread count; logits returned in request order.
 fn serve_all(n: usize, cfg: ServeConfig, threads: usize) -> Vec<Vec<f32>> {
-    let backend = Arc::new(NativeBackend::with_default_models().with_threads(threads));
+    // Follows the env-default tier (like `reference_logits`) so the whole
+    // suite stays self-consistent under a VCAS_PRECISION sweep.
+    serve_all_tier(n, cfg, threads, vcas::runtime::default_precision())
+}
+
+/// `serve_all` with an explicit kernel precision tier on the backend.
+fn serve_all_tier(n: usize, cfg: ServeConfig, threads: usize, tier: Precision) -> Vec<Vec<f32>> {
+    let backend = Arc::new(
+        NativeBackend::with_default_models().with_threads(threads).with_precision(tier),
+    );
     let pool = SessionPool::builder(backend).model("tiny").build(cfg).unwrap();
     let info = pool.info("tiny").unwrap();
     let (seq_len, vocab) = (info.seq_len, info.vocab);
@@ -235,4 +249,90 @@ fn drop_mid_flight_joins_workers_and_answers_admitted_requests() {
     // join-on-drop actually joined: no detached worker still holds the
     // backend
     assert_eq!(Arc::strong_count(&backend), 1, "worker thread leaked past drop");
+}
+
+fn argmax(v: &[f32]) -> usize {
+    v.iter().enumerate().max_by(|a, b| a.1.total_cmp(b.1)).unwrap().0
+}
+
+#[test]
+fn int8_pool_agrees_with_f32_reference() {
+    // The int8 tier is a lossy opt-in: per-output-channel weight quant +
+    // per-row activation quant bound each linear's error at ~1/127 of its
+    // operand range, so logits must land within a small fraction of the
+    // row's own scale. Top-1 must survive wherever the f32 margin is
+    // decisive (wider than twice the logit tolerance); near-ties are
+    // legitimately allowed to flip, so they are excluded rather than
+    // letting the test hinge on them.
+    let n = 12;
+    let reference = reference_logits(n);
+    let cfg = ServeConfig {
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_capacity: 64,
+        workers: 2,
+    };
+    let served = serve_all_tier(n, cfg, 1, Precision::Int8Infer);
+    let mut decisive = 0usize;
+    for (i, (got, want)) in served.iter().zip(&reference).enumerate() {
+        assert_eq!(got.len(), want.len());
+        let scale = want.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(0.05);
+        let tol = 0.10 * scale;
+        for (c, (&g, &w)) in got.iter().zip(want).enumerate() {
+            assert!(
+                (g - w).abs() <= tol,
+                "request {i} class {c}: int8 logit {g} vs f32 {w} exceeds tol {tol}"
+            );
+        }
+        let top = argmax(want);
+        let mut sorted = want.clone();
+        sorted.sort_by(f32::total_cmp);
+        let margin = sorted[sorted.len() - 1] - sorted[sorted.len() - 2];
+        if margin > 2.0 * tol {
+            decisive += 1;
+            assert_eq!(
+                argmax(got),
+                top,
+                "request {i}: int8 flipped a decisive top-1 (margin {margin}, tol {tol})"
+            );
+        }
+    }
+    assert!(
+        decisive > 0,
+        "every reference margin was inside the tolerance band; argmax check was vacuous"
+    );
+}
+
+#[test]
+fn int8_tier_is_batch_and_thread_invariant_bitwise() {
+    // Within the int8 tier the batching-equivalence contract holds
+    // bitwise, same as f32: i32 accumulation is exact (order-free) and
+    // the dequant epilogue is per-(row, column), so coalescing and kernel
+    // threading cannot move a single bit. Strictly-serial singles are the
+    // reference; wide coalescing and a second kernel thread must match.
+    let n = 10;
+    let singles = ServeConfig {
+        max_batch: 1,
+        max_wait: Duration::from_micros(100),
+        queue_capacity: 64,
+        workers: 1,
+    };
+    let reference = serve_all_tier(n, singles, 1, Precision::Int8Infer);
+    let coalesced = ServeConfig {
+        max_batch: 16,
+        max_wait: Duration::from_micros(500),
+        queue_capacity: 64,
+        workers: 2,
+    };
+    for (label, served) in [
+        ("coalesced", serve_all_tier(n, coalesced, 1, Precision::Int8Infer)),
+        ("two kernel threads", serve_all_tier(n, coalesced, 2, Precision::Int8Infer)),
+    ] {
+        for (i, (got, want)) in served.iter().zip(&reference).enumerate() {
+            assert!(
+                got.iter().zip(want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "int8 request {i} diverged from serial singles under {label}"
+            );
+        }
+    }
 }
