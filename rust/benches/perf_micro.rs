@@ -3,8 +3,11 @@
 //! multi-thread scaling, the zero-scan vs gather-compacted sampled
 //! backward across keep ratios, the sync-vs-prefetch step time of the
 //! async batch pipeline, sequential vs overlapped DDP reduction at
-//! 2/4/8 workers, and the reduced-precision tiers (f32 vs bf16 kernels,
-//! f32 vs int8 serving) — the L3 hot-path profile. The kernel section
+//! 2/4/8 workers, the reduced-precision tiers (f32 vs bf16 kernels,
+//! f32 vs int8 serving), and the sampler-strategy layer (per-strategy
+//! step time + estimator variance, the approx-VJP vjp_rho sweep, and a
+//! same-seed vcas vs approx_vjp trajectory comparison) — the L3
+//! hot-path profile. The kernel section
 //! writes `results/BENCH_kernels.json`, the sampling section
 //! `results/BENCH_sampling.json`, the pipeline section
 //! `results/BENCH_pipeline.json` and the serving section (p50/p99 latency
@@ -31,6 +34,7 @@ use vcas::formats::json::Json;
 use vcas::runtime::kernels::{reference, weighted_gather_tn, Layout, MatmulPlan, Workspace};
 use vcas::runtime::native::sampling::SampledRows;
 use vcas::runtime::{Backend, KernelCtx, ModelSession, NativeBackend, Precision, TransformerCfg};
+use vcas::sampling::SamplerStrategy;
 use vcas::util::rng::Pcg32;
 
 fn main() {
@@ -443,6 +447,106 @@ fn main() {
         }
         e2e.insert("speedup".into(), Json::Num(ms_by_mode[0] / ms_by_mode[1]));
         sampling_json.insert("fwd_bwd_small_rho_0.25".into(), Json::Obj(e2e));
+    }
+    // strategy layer: per-strategy trainer step time plus the empirical
+    // estimator variance each SamplerStrategy trades for its FLOPs saving
+    // (Fig. 5-style v_extra on a fixed batch, v_sgd across batches). The
+    // approx-VJP family is swept over vjp_rho — its keep-ratio knob — so
+    // the variance/ratio curve of the sketch sits next to the kernel-level
+    // keep-ratio rows above.
+    {
+        let chunk = (common::bench_steps(24) / 3).max(2);
+        let nb = NativeBackend::with_default_models();
+        for (name, method, vjp_rho) in [
+            ("exact", Method::Exact, 1.0f64),
+            ("vcas", Method::Vcas, 1.0),
+            ("sb", Method::Sb, 1.0),
+            ("ub", Method::Ub, 1.0),
+            ("uniform", Method::Uniform, 1.0),
+            ("approx_vjp_rho_0.25", Method::ApproxVjp, 0.25),
+            ("approx_vjp_rho_0.5", Method::ApproxVjp, 0.5),
+            ("approx_vjp_rho_0.75", Method::ApproxVjp, 0.75),
+        ] {
+            let mut cfg = TrainConfig {
+                model: "tiny".into(),
+                task: "sst2-sim".into(),
+                method: method.clone(),
+                steps: 2 + 3 * chunk,
+                seed: 17,
+                prefetch: Some(0),
+                vcas: VcasConfig { freq: 8, ..Default::default() },
+                ..Default::default()
+            };
+            cfg.strategy.vjp_rho = vjp_rho;
+            let mut tr = Trainer::new(&nb, &cfg).unwrap();
+            // warm-up: workspace pool and (for vcas) the first probe
+            tr.advance(2).unwrap();
+            let ms = common::time_median_ms(3, || {
+                tr.advance(chunk).unwrap();
+            }) / chunk as f64;
+            let snap = tr.measure_variance(4).unwrap();
+            table.row(vec![
+                format!("strategy {name}: trainer step"),
+                format!("{ms:.2}"),
+                format!("v_extra {:.3e} (v_sgd {:.3e})", snap.v_extra, snap.v_sgd),
+            ]);
+            let mut o: BTreeMap<String, Json> = BTreeMap::new();
+            o.insert("step_ms".into(), Json::Num(ms));
+            o.insert("v_sgd".into(), Json::Num(snap.v_sgd));
+            o.insert("v_extra".into(), Json::Num(snap.v_extra));
+            if method == Method::ApproxVjp {
+                o.insert("vjp_rho".into(), Json::Num(vjp_rho));
+                let trace = tr.strategy().variance_trace();
+                let mean = trace.iter().map(|&(_, v)| v as f64).sum::<f64>()
+                    / trace.len().max(1) as f64;
+                o.insert("sketch_var_mean".into(), Json::Num(mean));
+            }
+            sampling_json.insert(format!("strategy_{name}"), Json::Obj(o));
+        }
+    }
+    // same-seed vcas vs approx_vjp: identical batch sequence and seed, so
+    // final loss / FLOPs reduction / estimator variance compare the two
+    // adaptive families head to head on one trajectory pair.
+    {
+        let steps = common::bench_steps(24);
+        let nb = NativeBackend::with_default_models();
+        let mk = |method: Method, vjp_rho: f64| {
+            let mut cfg = TrainConfig {
+                model: "tiny".into(),
+                task: "sst2-sim".into(),
+                method,
+                steps,
+                seed: 17,
+                prefetch: Some(0),
+                vcas: VcasConfig { freq: 8, ..Default::default() },
+                ..Default::default()
+            };
+            cfg.strategy.vjp_rho = vjp_rho;
+            cfg
+        };
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("seed".into(), Json::Num(17.0));
+        o.insert("steps".into(), Json::Num(steps as f64));
+        for (name, method) in [("vcas", Method::Vcas), ("approx_vjp", Method::ApproxVjp)] {
+            let mut tr = Trainer::new(&nb, &mk(method, 0.5)).unwrap();
+            let r = tr.run().unwrap();
+            let snap = tr.measure_variance(4).unwrap();
+            table.row(vec![
+                format!("strategy cmp {name} (seed 17)"),
+                format!("{:.2}", r.wall_s * 1e3 / steps as f64),
+                format!(
+                    "final loss {:.4}, flops -{:.1}%, v_extra {:.3e}",
+                    r.final_train_loss,
+                    r.flops_reduction * 100.0,
+                    snap.v_extra
+                ),
+            ]);
+            o.insert(format!("{name}_final_loss"), Json::Num(r.final_train_loss));
+            o.insert(format!("{name}_flops_reduction"), Json::Num(r.flops_reduction));
+            o.insert(format!("{name}_v_extra"), Json::Num(snap.v_extra));
+            o.insert(format!("{name}_v_sgd"), Json::Num(snap.v_sgd));
+        }
+        sampling_json.insert("strategy_cmp_vcas_vs_approx_vjp".into(), Json::Obj(o));
     }
     let json_path = common::results_dir().join("BENCH_sampling.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(sampling_json))).unwrap();

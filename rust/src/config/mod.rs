@@ -26,7 +26,9 @@ pub fn parse_train_precision(s: &str) -> Result<Precision> {
     Ok(p)
 }
 
-/// Which training method drives the run (paper Sec. 6 comparison set).
+/// Which sampler strategy drives the run (paper Sec. 6 comparison set plus
+/// the unbiased approx-VJP family). Every variant maps 1:1 onto a
+/// `sampling::SamplerStrategy` implementation.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Method {
     Exact,
@@ -37,6 +39,9 @@ pub enum Method {
     Ub,
     /// Uniform random subset of the same keep ratio (sanity baseline).
     Uniform,
+    /// Unbiased approximate VJPs: sketched activation-gradient propagation
+    /// (Bernoulli column sketch per dense linear), exact weight gradients.
+    ApproxVjp,
 }
 
 impl Method {
@@ -47,7 +52,8 @@ impl Method {
             "sb" => Method::Sb,
             "ub" => Method::Ub,
             "uniform" => Method::Uniform,
-            _ => bail!("unknown method {s:?} (exact|vcas|sb|ub|uniform)"),
+            "approx_vjp" => Method::ApproxVjp,
+            _ => bail!("unknown strategy {s:?} (exact|vcas|sb|ub|uniform|approx_vjp)"),
         })
     }
 
@@ -58,8 +64,20 @@ impl Method {
             Method::Sb => "sb",
             Method::Ub => "ub",
             Method::Uniform => "uniform",
+            Method::ApproxVjp => "approx_vjp",
         }
     }
+}
+
+/// The default strategy: the permissive `VCAS_STRATEGY` env knob when it
+/// names a known strategy, else VCAS. Permissive (like `VCAS_PRECISION`)
+/// so a CI matrix can sweep the whole suite per strategy while configs and
+/// tests that pin `method` explicitly are unaffected.
+pub fn default_method() -> Method {
+    std::env::var("VCAS_STRATEGY")
+        .ok()
+        .and_then(|s| Method::parse(&s).ok())
+        .unwrap_or(Method::Vcas)
 }
 
 /// VCAS controller hyperparameters (paper Alg. 1; defaults = paper Sec. 6.1).
@@ -98,6 +116,29 @@ impl Default for VcasConfig {
             act_only: false,
             weight_only: false,
         }
+    }
+}
+
+/// Knobs of the pluggable sampler-strategy layer (`[strategy]` section):
+/// the approx-VJP sketch ratio and the Stanpie3-style variance-reduction
+/// gate on the subset selectors.
+#[derive(Clone, Debug)]
+pub struct StrategyConfig {
+    /// Expected kept fraction of the approx-VJP column sketch, in (0, 1].
+    pub vjp_rho: f64,
+    /// Gate SB/UB importance sampling on the EMA'd variance-reduction
+    /// estimate (fall back to uniform draws while below threshold).
+    /// Opt-in: changes rng-draw trajectories when enabled.
+    pub vr_gate: bool,
+    /// Variance-reduction threshold the EMA must exceed to sample.
+    pub vr_threshold: f64,
+    /// EMA momentum of the variance-reduction estimate, in [0, 1).
+    pub vr_momentum: f64,
+}
+
+impl Default for StrategyConfig {
+    fn default() -> Self {
+        StrategyConfig { vjp_rho: 0.5, vr_gate: false, vr_threshold: 1.2, vr_momentum: 0.9 }
     }
 }
 
@@ -151,6 +192,7 @@ pub struct TrainConfig {
     /// Number of eval batches per evaluation.
     pub eval_batches: usize,
     pub vcas: VcasConfig,
+    pub strategy: StrategyConfig,
     pub optim: OptimConfig,
     /// Data-parallel worker count (1 = single stream).
     pub workers: usize,
@@ -185,13 +227,14 @@ impl Default for TrainConfig {
         TrainConfig {
             model: "tiny".into(),
             task: "sst2-sim".into(),
-            method: Method::Vcas,
+            method: default_method(),
             steps: 300,
             seed: 0,
             keep_ratio: 1.0 / 3.0,
             eval_every: 0,
             eval_batches: 8,
             vcas: VcasConfig::default(),
+            strategy: StrategyConfig::default(),
             optim: OptimConfig::default(),
             workers: 1,
             threads: 0,
@@ -216,6 +259,11 @@ impl TrainConfig {
             c.task = v;
         }
         if let Some(v) = t.get_str("train", "method") {
+            c.method = Method::parse(&v)?;
+        }
+        // `strategy` is the trait-era spelling of `method` (same registry,
+        // same typed unknown-name error); when both appear, it wins.
+        if let Some(v) = t.get_str("train", "strategy") {
             c.method = Method::parse(&v)?;
         }
         if let Some(v) = t.get_int("train", "steps") {
@@ -283,6 +331,25 @@ impl TrainConfig {
             c.vcas.weight_only = v;
         }
 
+        if let Some(v) = t.get_f64("strategy", "vjp_rho") {
+            if !(v > 0.0 && v <= 1.0) {
+                bail!("strategy.vjp_rho must be in (0, 1], got {v}");
+            }
+            c.strategy.vjp_rho = v;
+        }
+        if let Some(v) = t.get_bool("strategy", "vr_gate") {
+            c.strategy.vr_gate = v;
+        }
+        if let Some(v) = t.get_f64("strategy", "vr_threshold") {
+            c.strategy.vr_threshold = v;
+        }
+        if let Some(v) = t.get_f64("strategy", "vr_momentum") {
+            if !(0.0..1.0).contains(&v) {
+                bail!("strategy.vr_momentum must be in [0, 1), got {v}");
+            }
+            c.strategy.vr_momentum = v;
+        }
+
         if let Some(v) = t.get_str("optim", "kind") {
             c.optim.kind = v;
         }
@@ -322,6 +389,51 @@ mod tests {
         assert_eq!(c.vcas.beta, 0.95);
         assert_eq!(c.vcas.m_repeats, 2);
         assert!((c.keep_ratio - 1.0 / 3.0).abs() < 1e-12);
+        // the default strategy honors the permissive VCAS_STRATEGY env
+        // knob (the CI matrix sweeps it), falling back to VCAS
+        let want = std::env::var("VCAS_STRATEGY")
+            .ok()
+            .and_then(|s| Method::parse(&s).ok())
+            .unwrap_or(Method::Vcas);
+        assert_eq!(c.method, want);
+        assert_eq!(c.strategy.vjp_rho, 0.5);
+        assert!(!c.strategy.vr_gate, "VR gate is opt-in");
+        assert_eq!(c.strategy.vr_threshold, 1.2);
+        assert_eq!(c.strategy.vr_momentum, 0.9);
+    }
+
+    #[test]
+    fn strategy_key_and_knobs() {
+        // `strategy` is an alias of `method` through the same registry
+        let t = TomlTable::parse(
+            "[train]\nstrategy = \"approx_vjp\"\n[strategy]\nvjp_rho = 0.25\nvr_gate = true\nvr_threshold = 1.5\nvr_momentum = 0.8\n",
+        )
+        .unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.method, Method::ApproxVjp);
+        assert_eq!(c.strategy.vjp_rho, 0.25);
+        assert!(c.strategy.vr_gate);
+        assert_eq!(c.strategy.vr_threshold, 1.5);
+        assert_eq!(c.strategy.vr_momentum, 0.8);
+        // when both spellings appear, strategy wins
+        let t = TomlTable::parse("[train]\nmethod = \"sb\"\nstrategy = \"ub\"\n").unwrap();
+        assert_eq!(TrainConfig::from_toml(&t).unwrap().method, Method::Ub);
+        // unknown names fail typed through either spelling
+        let t = TomlTable::parse("[train]\nstrategy = \"sketchy\"\n").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("unknown strategy"), "{err}");
+    }
+
+    #[test]
+    fn strategy_knob_validation_is_typed() {
+        for bad in ["0.0", "1.5", "-0.3"] {
+            let t = TomlTable::parse(&format!("[strategy]\nvjp_rho = {bad}\n")).unwrap();
+            let err = TrainConfig::from_toml(&t).unwrap_err();
+            assert!(err.to_string().contains("vjp_rho"), "{err}");
+        }
+        let t = TomlTable::parse("[strategy]\nvr_momentum = 1.0\n").unwrap();
+        let err = TrainConfig::from_toml(&t).unwrap_err();
+        assert!(err.to_string().contains("vr_momentum"), "{err}");
     }
 
     #[test]

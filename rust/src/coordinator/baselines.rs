@@ -29,6 +29,14 @@ pub struct Selection {
     pub weights: Vec<f32>,
 }
 
+/// Typed guard shared by the subset selectors: non-finite raw scores are a
+/// hard error *before* any probability is formed or any state is touched,
+/// so a rejected batch cannot contaminate selector state (PR 4 semantics).
+fn ensure_finite_scores(scores: &[f32], msg: &'static str) -> Result<()> {
+    ensure!(scores.iter().all(|s| s.is_finite()), "{msg}");
+    Ok(())
+}
+
 /// Selective-backprop state: rolling loss history + percentile selection.
 #[derive(Clone, Debug)]
 pub struct SbSelector {
@@ -51,52 +59,73 @@ impl SbSelector {
         below as f64 / self.history.len() as f64
     }
 
-    /// Record losses and pick k rows by percentile-weighted sampling
-    /// without replacement; kept rows train with plain 1/k weights.
+    /// Percentile keep-probabilities for a candidate batch (CDF^power,
+    /// floored at 1e-6) — the score→probability half of [`Self::select`],
+    /// split out so the strategy layer's variance-reduction gate can
+    /// inspect the same distribution the selector would draw from.
     ///
     /// Non-finite losses are a hard error *before* they enter the rolling
     /// history: the Gumbel-top-k sort compares keys with
     /// `partial_cmp(..).unwrap_or(Equal)`, so a NaN loss would silently
     /// mis-sort the selection (and an inf would pin it) — the same bug
     /// class the `keep_probs`/`ProbSolve` water-filling guard closed.
-    pub fn select(&mut self, losses: &[f32], k: usize, rng: &mut Pcg32) -> Result<Selection> {
-        ensure!(
-            losses.iter().all(|l| l.is_finite()),
+    pub fn probs(&self, losses: &[f32]) -> Result<Vec<f64>> {
+        ensure_finite_scores(
+            losses,
             "sb select: non-finite per-sample loss (NaN/inf) — \
-             percentile CDF and Gumbel keys would silently mis-sort"
-        );
-        let probs: Vec<f64> = losses
+             percentile CDF and Gumbel keys would silently mis-sort",
+        )?;
+        Ok(losses
             .iter()
             .map(|&l| self.cdf(l).powf(self.power).max(1e-6))
-            .collect();
+            .collect())
+    }
+
+    /// Fold a candidate batch into the rolling loss history (only after the
+    /// batch passed the finite guard — a rejected batch stays out).
+    pub fn record(&mut self, losses: &[f32]) {
         for &l in losses {
             if self.history.len() == self.capacity {
                 self.history.pop_front();
             }
             self.history.push_back(l);
         }
+    }
+
+    /// Record losses and pick k rows by percentile-weighted sampling
+    /// without replacement; kept rows train with plain 1/k weights.
+    pub fn select(&mut self, losses: &[f32], k: usize, rng: &mut Pcg32) -> Result<Selection> {
+        let probs = self.probs(losses)?;
+        self.record(losses);
         let rows = sample_without_replacement(rng, &probs, k);
         let w = 1.0 / k as f32;
         Ok(Selection { rows: rows.clone(), weights: vec![w; rows.len()] })
     }
 }
 
-/// UB importance sampling: with-replacement draws proportional to the
-/// upper-bound score, unbiased 1/(N k p) reweighting.
+/// Normalized UB importance probabilities (scores floored at 1e-9) — the
+/// score→probability half of [`ub_select`], shared with the strategy
+/// layer's variance-reduction gate.
 ///
 /// Non-finite scores are a hard error: a NaN poisons the normalizing
 /// total (every probability becomes NaN and `weighted_index` walks off
 /// the distribution) and an inf collapses it onto one row with zero-
 /// probability siblings whose 1/(Nkp) weights explode.
-pub fn ub_select(scores: &[f32], k: usize, rng: &mut Pcg32) -> Result<Selection> {
-    ensure!(
-        scores.iter().all(|s| s.is_finite()),
+pub fn ub_probs(scores: &[f32]) -> Result<Vec<f64>> {
+    ensure_finite_scores(
+        scores,
         "ub select: non-finite gradient-norm score (NaN/inf) — \
-         importance probabilities would be poisoned"
-    );
-    let n = scores.len();
+         importance probabilities would be poisoned",
+    )?;
     let total: f64 = scores.iter().map(|&s| s.max(1e-9) as f64).sum();
-    let probs: Vec<f64> = scores.iter().map(|&s| s.max(1e-9) as f64 / total).collect();
+    Ok(scores.iter().map(|&s| s.max(1e-9) as f64 / total).collect())
+}
+
+/// UB importance sampling: with-replacement draws proportional to the
+/// upper-bound score, unbiased 1/(N k p) reweighting.
+pub fn ub_select(scores: &[f32], k: usize, rng: &mut Pcg32) -> Result<Selection> {
+    let probs = ub_probs(scores)?;
+    let n = scores.len();
     let rows = sample_with_replacement(rng, &probs, k);
     let weights = rows
         .iter()
@@ -265,6 +294,23 @@ mod tests {
         // clean inputs still select
         let mut rng = Pcg32::new(5, 5);
         assert!(ub_select(&[1.0, 2.0, 3.0], 2, &mut rng).is_ok());
+    }
+
+    /// The deduped score→probability helpers keep the selector semantics:
+    /// `ub_probs` is the normalized categorical `ub_select` draws from, and
+    /// `SbSelector::probs` is a pure view that leaves the history alone.
+    #[test]
+    fn prob_helpers_share_selector_semantics() {
+        let p = ub_probs(&[1.0, 3.0, 0.0]).unwrap();
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(p[1] > p[0] && p[0] > 0.0 && p[2] > 0.0);
+        let mut sb = SbSelector::new(10, 1.0);
+        let mut rng = Pcg32::new(9, 9);
+        sb.select(&[0.1, 0.9], 1, &mut rng).unwrap();
+        let len = sb.history.len();
+        let probs = sb.probs(&[0.5, 0.5]).unwrap();
+        assert_eq!(sb.history.len(), len, "probs must not record");
+        assert_eq!(probs.len(), 2);
     }
 
     #[test]

@@ -1,13 +1,21 @@
-//! The training loop driver: wires data, runtime, optimizer, the VCAS
-//! controller and the baseline selectors into one run.
+//! The training loop driver: wires data, runtime, optimizer and the
+//! pluggable sampler strategy (`crate::sampling`) into one run.
 //!
-//! Per step (paper Sec. 6 protocol):
-//! - **exact**: full-batch fwd+bwd at rho = nu = 1.
-//! - **vcas**: every F steps run the Alg. 1 probe (M exact + M*M SampleA
-//!   passes) and update (s, rho, nu); every step train at the live ratios.
-//! - **sb / ub / uniform**: full-batch forward for per-sample losses / UB
-//!   scores, select k rows, fwd+bwd the gathered sub-batch (static shape
-//!   `sub_batch` from the backend) with the selector's loss weights.
+//! All sampling decisions live behind the [`SamplerStrategy`] object the
+//! config's method names; the trainer executes whatever [`StepPlan`] the
+//! strategy returns (paper Sec. 6 protocol):
+//! - **Exact**: full-batch fwd+bwd at rho = nu = 1.
+//! - **Adaptive** (vcas): every F steps run the Alg. 1 probe (M exact +
+//!   M*M SampleA passes) through the strategy's controller; every step
+//!   train at its live ratios.
+//! - **Subset** (sb / ub / uniform): full-batch forward for per-sample
+//!   losses / UB scores, let the strategy select k rows, fwd+bwd the
+//!   gathered sub-batch (static shape `sub_batch` from the backend) with
+//!   the selection's loss weights.
+//! - **ApproxVjp**: full-batch fwd+bwd with sketched activation-gradient
+//!   propagation at the strategy's `vjp_rho` (exact weight gradients);
+//!   the backward's per-linear sketch variances feed the strategy's
+//!   telemetry trace.
 //!
 //! Execution goes through `&dyn Backend`, so the same loop drives the
 //! hermetic native path and the PJRT artifacts. FLOPs are charged to the
@@ -24,10 +32,11 @@ use crate::error::{anyhow, bail, Result};
 use crate::formats::params::ParamSet;
 use crate::optim::{AdamW, LrSchedule, Optimizer, Sgdm};
 use crate::runtime::{Backend, GradOut, ModelKind, ModelSession};
+use crate::sampling::{build_strategy, SamplerStrategy, StepPlan};
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
 
-use super::baselines::{ub_select, uniform_select, SbSelector, Selection};
+use super::baselines::Selection;
 use super::flops::{CnnFlops, FlopsLedger, TransformerFlops};
 use super::metrics::{EvalPoint, RunResult, VarianceSnapshot};
 use super::pipeline::{default_prefetch, ClsSource, ImgSource, Prefetcher, ProbeSplitSource};
@@ -65,8 +74,7 @@ pub struct Trainer<'a> {
     opt: Box<dyn Optimizer>,
     sched: LrSchedule,
     data: TaskData,
-    pub controller: Option<VcasController>,
-    sb: SbSelector,
+    strategy: Box<dyn SamplerStrategy>,
     tf_flops: Option<TransformerFlops>,
     cnn_flops: Option<CnnFlops>,
     ledger: FlopsLedger,
@@ -179,19 +187,15 @@ impl<'a> Trainer<'a> {
             )
         };
 
-        let controller = if cfg.method == Method::Vcas {
-            let act_only = info.kind == ModelKind::Cnn || cfg.vcas.act_only;
-            let mut vc = cfg.vcas.clone();
-            vc.act_only = act_only;
-            Some(VcasController::new(
-                vc,
-                session.n_layers,
-                info.sampled_indices(),
-                main_batch,
-            ))
-        } else {
-            None
-        };
+        // all sampling decisions live behind the strategy object from here
+        // on; the CNN path forces the controller into activation-only mode
+        let strategy = build_strategy(
+            cfg,
+            session.n_layers,
+            info.sampled_indices(),
+            main_batch,
+            info.kind == ModelKind::Cnn,
+        );
 
         let opt: Box<dyn Optimizer> = if cfg.optim.kind == "sgdm" || info.kind == ModelKind::Cnn {
             Box::new(Sgdm::new(&params, cfg.optim.momentum, cfg.optim.weight_decay))
@@ -219,8 +223,7 @@ impl<'a> Trainer<'a> {
             opt,
             sched,
             data,
-            controller,
-            sb: SbSelector::new(8 * main_batch * 4, 1.0),
+            strategy,
             tf_flops,
             cnn_flops,
             ledger: FlopsLedger::default(),
@@ -304,12 +307,17 @@ impl<'a> Trainer<'a> {
 
     fn controller(&self) -> Result<&VcasController> {
         let method = self.cfg.method.name();
-        self.controller.as_ref().ok_or_else(|| no_controller_err(method))
+        self.strategy.controller().ok_or_else(|| no_controller_err(method))
     }
 
     fn controller_mut(&mut self) -> Result<&mut VcasController> {
         let method = self.cfg.method.name();
-        self.controller.as_mut().ok_or_else(|| no_controller_err(method))
+        self.strategy.controller_mut().ok_or_else(|| no_controller_err(method))
+    }
+
+    /// The live sampler strategy (telemetry/diagnostics).
+    pub fn strategy(&self) -> &dyn SamplerStrategy {
+        &*self.strategy
     }
 
     fn cnn_flops_model(&self) -> Result<&CnnFlops> {
@@ -465,8 +473,13 @@ impl<'a> Trainer<'a> {
         let n = self.main_batch;
         let fwd = self.fwd_flops(n)?;
         let bwd = self.bwd_exact_flops(n)?;
-        match self.cfg.method {
-            Method::Exact => {
+        // the strategy decides probe cadence and the step's execution plan
+        // (plan is read *after* the probe so a due update lands this step)
+        if self.strategy.probe_due(self.step) {
+            self.run_probe()?;
+        }
+        match self.strategy.plan() {
+            StepPlan::Exact => {
                 let (rho1, nu1) = self.ones();
                 let loss = if self.is_img() {
                     let batch = self.next_img_batch()?;
@@ -488,11 +501,7 @@ impl<'a> Trainer<'a> {
                 self.ledger.step(fwd, bwd, fwd, bwd);
                 Ok(loss)
             }
-            Method::Vcas => {
-                if self.controller()?.due(self.step) {
-                    self.run_probe()?;
-                }
-                let (rho, nu) = self.controller()?.train_ratios();
+            StepPlan::Adaptive { rho, nu } => {
                 let loss = if self.is_img() {
                     let batch = self.next_img_batch()?;
                     let out = self.grad_img(&batch, &rho)?;
@@ -512,18 +521,51 @@ impl<'a> Trainer<'a> {
                 self.ledger.step(fwd, bwd, fwd, self.bwd_vcas_flops(n, &rho, &nu)?);
                 Ok(loss)
             }
-            Method::Sb | Method::Ub | Method::Uniform => {
+            StepPlan::ApproxVjp { vjp_rho } => {
+                let (loss, vw) = if self.is_img() {
+                    let batch = self.next_img_batch()?;
+                    let seed = self.next_seed();
+                    let out =
+                        self.session.cnn_fwd_bwd_vjp(&self.params, &batch, seed, vjp_rho)?;
+                    self.apply(&out.grads);
+                    (out.loss, vec![])
+                } else if self.is_mlm() {
+                    let batch = self.next_mlm_batch()?;
+                    let seed = self.next_seed();
+                    let out =
+                        self.session.fwd_bwd_mlm_vjp(&self.params, &batch, seed, vjp_rho)?;
+                    self.apply(&out.grads);
+                    (out.loss, out.vw)
+                } else {
+                    let batch = self.next_cls_batch()?;
+                    let sw = vec![1.0 / batch.n as f32; batch.n];
+                    let seed = self.next_seed();
+                    let out = self
+                        .session
+                        .fwd_bwd_cls_vjp(&self.params, &batch, &sw, seed, vjp_rho)?;
+                    self.apply(&out.grads);
+                    (out.loss, out.vw)
+                };
+                // per-linear sketch variances ride the vw channel (the
+                // backward runs nu = 1, so nothing else contributes)
+                let step = self.step;
+                self.strategy.record_step_variance(step, &vw);
+                // the sketch thins only the activation-gradient (dgrad)
+                // GEMMs — about half the backward — so the actual cost is
+                // bwd * (1 + rho) / 2 (weight gradients stay exact)
+                let bwd_vjp = bwd * (1.0 + vjp_rho as f64) / 2.0;
+                self.ledger.step(fwd, bwd, fwd, bwd_vjp);
+                Ok(loss)
+            }
+            StepPlan::Subset => {
                 if self.is_img() || self.is_mlm() {
                     bail!("SB/UB/uniform baselines are wired for classification tasks");
                 }
                 let batch = self.next_cls_batch()?;
                 let (losses, ub_scores) = self.session.fwd_loss_cls(&self.params, &batch)?;
                 let k = self.sub_batch;
-                let sel: Selection = match self.cfg.method {
-                    Method::Sb => self.sb.select(&losses, k, &mut self.rng)?,
-                    Method::Ub => ub_select(&ub_scores, k, &mut self.rng)?,
-                    _ => uniform_select(batch.n, k, &mut self.rng),
-                };
+                let sel: Selection =
+                    self.strategy.select(&losses, &ub_scores, k, &mut self.rng)?;
                 // gather the kept rows into the static sub-batch shape
                 let t = batch.seq_len;
                 let mut x = Vec::with_capacity(k * t);
@@ -655,21 +697,23 @@ impl<'a> Trainer<'a> {
         let exact = &exact_grads[0];
         let mut v_extra = 0.0f64;
         for _ in 0..reps {
-            let est = match self.cfg.method {
-                Method::Exact => self.grad_cls(&batch, &rho1, &nu1, &nu1, None)?.grads,
-                Method::Vcas => {
-                    let (rho, nu) = self.controller()?.train_ratios();
+            let est = match self.strategy.plan() {
+                StepPlan::Exact => self.grad_cls(&batch, &rho1, &nu1, &nu1, None)?.grads,
+                StepPlan::Adaptive { rho, nu } => {
                     self.grad_cls(&batch, &rho, &nu, &nu, None)?.grads
                 }
-                Method::Sb | Method::Ub | Method::Uniform => {
+                StepPlan::ApproxVjp { vjp_rho } => {
+                    let sw = vec![1.0 / batch.n as f32; batch.n];
+                    let seed = self.next_seed();
+                    self.session
+                        .fwd_bwd_cls_vjp(&self.params, &batch, &sw, seed, vjp_rho)?
+                        .grads
+                }
+                StepPlan::Subset => {
                     let (losses, scores) =
                         self.session.fwd_loss_cls(&self.params, &batch)?;
                     let k = self.sub_batch;
-                    let sel = match self.cfg.method {
-                        Method::Sb => self.sb.select(&losses, k, &mut self.rng)?,
-                        Method::Ub => ub_select(&scores, k, &mut self.rng)?,
-                        _ => uniform_select(batch.n, k, &mut self.rng),
-                    };
+                    let sel = self.strategy.select(&losses, &scores, k, &mut self.rng)?;
                     let t = batch.seq_len;
                     let mut x = Vec::with_capacity(k * t);
                     let mut y = Vec::with_capacity(k);
@@ -758,7 +802,7 @@ impl<'a> Trainer<'a> {
         result.flops_actual = self.ledger.actual_total;
         result.flops_probe = self.ledger.probe_total;
         result.wall_s = watch.elapsed_s();
-        if let Some(c) = &self.controller {
+        if let Some(c) = self.strategy.controller() {
             result.probes = c.log.clone();
         }
 
@@ -785,9 +829,9 @@ impl<'a> Trainer<'a> {
 
     /// Current live ratios (diagnostics; exact/baselines report all-ones).
     pub fn live_ratios(&self) -> (Vec<f32>, Vec<f32>) {
-        match &self.controller {
-            Some(c) => c.train_ratios(),
-            None => (
+        match self.strategy.plan() {
+            StepPlan::Adaptive { rho, nu } => (rho, nu),
+            _ => (
                 vec![1.0; self.session.n_layers],
                 vec![1.0; self.session.n_sampled],
             ),

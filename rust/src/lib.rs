@@ -47,5 +47,6 @@ pub mod error;
 pub mod formats;
 pub mod optim;
 pub mod runtime;
+pub mod sampling;
 pub mod serving;
 pub mod util;

@@ -34,7 +34,9 @@ fn parse_args() -> Result<Args> {
         .flag("artifacts", "artifact directory (default: artifacts)")
         .flag("model", "model name from the backend registry (tiny|small|cnn)")
         .flag("task", "task name (sst2-sim|mnli-sim|qqp-sim|qnli-sim|vision-sim|mlm)")
-        .flag("method", "exact|vcas|sb|ub|uniform")
+        .flag("method", "exact|vcas|sb|ub|uniform|approx_vjp")
+        .flag("strategy", "sampler strategy (alias of --method; wins when both given)")
+        .flag("vjp-rho", "approx_vjp: expected kept fraction of the column sketch, in (0, 1]")
         .flag("steps", "training steps")
         .flag("seed", "run seed")
         .flag("eval-every", "evaluate every N steps (0 = end only)")
@@ -187,6 +189,16 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     }
     if let Some(v) = args.flag("method") {
         cfg.method = Method::parse(v)?;
+    }
+    if let Some(v) = args.flag("strategy") {
+        cfg.method = Method::parse(v)?;
+    }
+    if args.flag("vjp-rho").is_some() {
+        let v = args.flag_f64("vjp-rho", cfg.strategy.vjp_rho)?;
+        if !(v > 0.0 && v <= 1.0) {
+            vcas::error::bail!("strategy.vjp_rho must be in (0, 1], got {v}");
+        }
+        cfg.strategy.vjp_rho = v;
     }
     cfg.steps = args.flag_usize("steps", cfg.steps)?;
     cfg.seed = args.flag_u64("seed", cfg.seed)?;

@@ -279,6 +279,49 @@ pub trait Backend {
         Ok(out)
     }
 
+    /// [`Backend::fwd_bwd_cls`] with the unbiased approx-VJP column sketch
+    /// on every activation-gradient contraction: rows stay full and weight
+    /// gradients exact; only the `gz` propagation is sketched at
+    /// `vjp_rho`. `vw` telemetry carries the per-linear analytic sketch
+    /// variance. Default errors so backends without a sketched backward
+    /// fail typed.
+    fn fwd_bwd_cls_vjp(
+        &self,
+        model: &str,
+        _params: &ParamSet,
+        _batch: &ClsBatch,
+        _sw: &[f32],
+        _seed: i32,
+        _vjp_rho: f32,
+    ) -> Result<GradOut> {
+        bail!("backend {} has no approx-VJP cls entry for model {model:?}", self.name())
+    }
+
+    /// MLM twin of [`Backend::fwd_bwd_cls_vjp`].
+    fn fwd_bwd_mlm_vjp(
+        &self,
+        model: &str,
+        _params: &ParamSet,
+        _batch: &MlmBatch,
+        _seed: i32,
+        _vjp_rho: f32,
+    ) -> Result<GradOut> {
+        bail!("backend {} has no approx-VJP mlm entry for model {model:?}", self.name())
+    }
+
+    /// CNN twin of [`Backend::fwd_bwd_cls_vjp`]: the fc feature-gradient
+    /// contraction is sketched, conv stages run exact, SampleA stays off.
+    fn cnn_fwd_bwd_vjp(
+        &self,
+        model: &str,
+        _params: &ParamSet,
+        _batch: &ImgBatch,
+        _seed: i32,
+        _vjp_rho: f32,
+    ) -> Result<CnnGradOut> {
+        bail!("backend {} has no approx-VJP cnn entry for model {model:?}", self.name())
+    }
+
     /// Per-sample losses + UB importance scores (baseline selection pass).
     fn fwd_loss_cls(
         &self,

@@ -27,7 +27,7 @@ use crate::runtime::kernels::{
 };
 use crate::util::rng::Pcg32;
 
-use super::sampling::{row_norm, row_norms, SampledRows};
+use super::sampling::{row_norm, row_norms, vjp_col_sketch, SampledRows};
 use super::ExecCtx;
 
 /// Static architecture config of a native CNN.
@@ -443,6 +443,12 @@ fn rng_site(seed: i32, site: usize) -> Pcg32 {
     Pcg32::new(seed as u32 as u64, 0xC000 + site as u64)
 }
 
+/// Stream for the approx-VJP sketch of the fc feature gradient — disjoint
+/// from the SampleA site streams; never drawn from when `vjp_rho >= 1`.
+fn rng_fc_vjp(seed: i32) -> Pcg32 {
+    Pcg32::new(seed as u32 as u64, 0xDF00)
+}
+
 // ---------------------------------------------------------------------------
 // Backward drivers.
 // ---------------------------------------------------------------------------
@@ -558,6 +564,39 @@ pub fn fwd_bwd(
     seed: i32,
     rho: &[f32],
 ) -> Result<CnnGradOut> {
+    fwd_bwd_impl(cfg, ectx, params, x, y, n, seed, rho, 1.0)
+}
+
+/// CNN backward with the unbiased approx-VJP column sketch on the fc
+/// feature-gradient contraction (the only dense linear in this model);
+/// SampleA stays off (all sites at rho 1) and conv stages run exact.
+#[allow(clippy::too_many_arguments)]
+pub fn fwd_bwd_vjp(
+    cfg: &CnnCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    seed: i32,
+    vjp_rho: f32,
+) -> Result<CnnGradOut> {
+    let ones = vec![1.0f32; cfg.n_sites()];
+    fwd_bwd_impl(cfg, ectx, params, x, y, n, seed, &ones, vjp_rho)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fwd_bwd_impl(
+    cfg: &CnnCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[f32],
+    y: &[i32],
+    n: usize,
+    seed: i32,
+    rho: &[f32],
+    vjp_rho: f32,
+) -> Result<CnnGradOut> {
     cfg.validate(params, x.len(), n)?;
     let n_sites = cfg.n_sites();
     ensure!(rho.len() == n_sites, "rho has {} entries, want {n_sites}", rho.len());
@@ -597,7 +636,12 @@ pub fn fwd_bwd(
     ectx.publish(4 * n_sites, &grads[4 * n_sites])?;
     ectx.publish(4 * n_sites + 1, &grads[4 * n_sites + 1])?;
     let mut gfeat = ws.take(n * df);
-    matmul_nt_into(kctx, &g, fc_w, n, c, df, &mut gfeat);
+    if vjp_rho < 1.0 {
+        let mut kv = rng_fc_vjp(seed);
+        vjp_col_sketch(kctx, ws, &g, fc_w, n, c, df, vjp_rho, &mut kv, &mut gfeat)?;
+    } else {
+        matmul_nt_into(kctx, &g, fc_w, n, c, df, &mut gfeat);
+    }
     ws.give(g);
     ws.give(feat);
 

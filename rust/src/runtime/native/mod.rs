@@ -414,6 +414,49 @@ impl Backend for NativeBackend {
         )
     }
 
+    fn fwd_bwd_cls_vjp(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        vjp_rho: f32,
+    ) -> Result<GradOut> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_bwd_cls_vjp(
+            cfg, self.ectx(), params, &batch.x, &batch.y, sw, batch.n, batch.seq_len, seed,
+            vjp_rho,
+        )
+    }
+
+    fn fwd_bwd_mlm_vjp(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        vjp_rho: f32,
+    ) -> Result<GradOut> {
+        let cfg = self.transformer(model)?;
+        transformer::fwd_bwd_mlm_vjp(
+            cfg, self.ectx(), params, &batch.x, &batch.y, &batch.w, batch.n, batch.seq_len,
+            seed, vjp_rho,
+        )
+    }
+
+    fn cnn_fwd_bwd_vjp(
+        &self,
+        model: &str,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        vjp_rho: f32,
+    ) -> Result<CnnGradOut> {
+        let cfg = self.cnn(model)?;
+        cnn::fwd_bwd_vjp(cfg, self.ectx(), params, &batch.x, &batch.y, batch.n, seed, vjp_rho)
+    }
+
     fn fwd_loss_cls(
         &self,
         model: &str,

@@ -21,7 +21,9 @@
 //!   keep probabilities, emitted per sampled linear for the Eq. 7 update.
 
 use crate::error::{ensure, Result};
-use crate::runtime::kernels::{gather_rows_scaled, scatter_rows};
+use crate::runtime::kernels::{
+    gather_rows_scaled, matmul_into, matmul_nt_into, scatter_rows, KernelCtx, Workspace,
+};
 use crate::util::rng::Pcg32;
 
 /// L2 norm of one row — the shared norm rule (f64 accumulate, f32 result).
@@ -33,6 +35,19 @@ pub fn row_norm(row: &[f32]) -> f32 {
 /// Per-row L2 norm of a `(rows, cols)` matrix.
 pub fn row_norms(g: &[f32], cols: usize) -> Vec<f32> {
     g.chunks(cols).map(row_norm).collect()
+}
+
+/// Per-column L2 norm of a `(rows, cols)` matrix (f64 accumulate, f32
+/// result — the column twin of [`row_norms`], scoring the approx-VJP
+/// column sketch).
+pub fn col_norms(a: &[f32], cols: usize) -> Vec<f32> {
+    let mut acc = vec![0.0f64; cols];
+    for row in a.chunks(cols) {
+        for (s, &v) in acc.iter_mut().zip(row) {
+            *s += (v as f64) * (v as f64);
+        }
+    }
+    acc.iter().map(|&s| s.sqrt() as f32).collect()
 }
 
 /// The solved water-filling problem behind [`keep_probs`]: the cap level
@@ -286,6 +301,89 @@ pub fn eq3_variance_with<F: Fn(usize) -> f32>(
         total += (1.0 - qi as f64) / qi as f64 * g2 * z2;
     }
     total as f32
+}
+
+/// Unbiased approximate VJP by Bernoulli column sketching: estimates the
+/// activation-gradient contraction `gz (rows, din) = g (rows, dout) @ W^T`
+/// with `w (din, dout)` row-major, by keeping a subset of the `dout`
+/// contraction columns with probability proportional to the column score
+/// `s_j = ||g[:, j]|| * ||w[:, j]||` (water-filled by [`ProbSolve`] at
+/// keep ratio `vjp_rho`) and scaling survivors by `1/p_j`:
+///
+/// `gz = sum_{j in K} (1/p_j) g[:, j] w[:, j]^T`,  `E[gz]` exact.
+///
+/// The draw reuses [`SampledRows::draw`] on the column scores (one rng
+/// value per column, column order), the packed column panels come from
+/// the shared [`Workspace`] pool, and the sketched contraction runs as a
+/// dense NN matmul on the compact panels — the same gather/compute-dense
+/// recipe as the row-sampled backward, turned 90 degrees. At
+/// `vjp_rho >= 1` every probability is exactly 1 and the call is bitwise
+/// identical to the exact NT contraction (the rng still consumes its
+/// `dout` draws, keeping streams aligned across ratios).
+///
+/// Returns the analytic sketch variance `sum_j (1-p_j)/p_j s_j^2` — the
+/// Eq. 3 shape over columns instead of rows — for per-step telemetry.
+#[allow(clippy::too_many_arguments)]
+pub fn vjp_col_sketch(
+    ctx: KernelCtx,
+    ws: &Workspace,
+    g: &[f32],
+    w: &[f32],
+    rows: usize,
+    dout: usize,
+    din: usize,
+    vjp_rho: f32,
+    rng: &mut Pcg32,
+    gz: &mut [f32],
+) -> Result<f32> {
+    debug_assert_eq!(g.len(), rows * dout);
+    debug_assert_eq!(w.len(), din * dout);
+    debug_assert_eq!(gz.len(), rows * din);
+    let scores: Vec<f32> = col_norms(g, dout)
+        .iter()
+        .zip(&col_norms(w, dout))
+        .map(|(&a, &b)| a * b)
+        .collect();
+    let solve = ProbSolve::new(&scores, vjp_rho)?;
+    let variance: f64 = scores
+        .iter()
+        .map(|&s| {
+            let p = solve.prob(s) as f64;
+            (1.0 - p) / p * (s as f64) * (s as f64)
+        })
+        .sum();
+    let sr = SampledRows::draw(scores, vjp_rho, rng)?;
+    if sr.all_kept() && sr.scales.iter().all(|&s| s == 1.0) {
+        // nothing dropped, nothing scaled: the exact contraction, bitwise
+        matmul_nt_into(ctx, g, w, rows, dout, din, gz);
+        return Ok(variance as f32);
+    }
+    let k = sr.n_kept();
+    if k == 0 {
+        gz.fill(0.0);
+        return Ok(variance as f32);
+    }
+    // pack the kept columns: gy (rows, k) scaled by 1/p, wt (k, din) the
+    // matching transposed weight columns
+    let mut gy = ws.take(rows * k);
+    let mut wt = ws.take(k * din);
+    for i in 0..rows {
+        let src = &g[i * dout..(i + 1) * dout];
+        let dst = &mut gy[i * k..(i + 1) * k];
+        for (t, (&j, &s)) in sr.kept.iter().zip(&sr.scales).enumerate() {
+            dst[t] = src[j as usize] * s;
+        }
+    }
+    for (t, &j) in sr.kept.iter().enumerate() {
+        let dst = &mut wt[t * din..(t + 1) * din];
+        for (c, v) in dst.iter_mut().enumerate() {
+            *v = w[c * dout + j as usize];
+        }
+    }
+    matmul_into(ctx, &gy, &wt, rows, k, din, gz);
+    ws.give(gy);
+    ws.give(wt);
+    Ok(variance as f32)
 }
 
 #[cfg(test)]
@@ -571,5 +669,99 @@ mod tests {
             (var - analytic).abs() < 0.1 * analytic.max(1e-6),
             "empirical {var} vs Eq.3 {analytic}"
         );
+    }
+
+    #[test]
+    fn col_norms_matches_transposed_row_norms() {
+        let mut gen = Gen::new(17);
+        let (rows, cols) = (7, 5);
+        let a = gen.vec_normal(rows * cols, 1.0);
+        // transpose and take row norms: must agree with col_norms
+        let mut t = vec![0.0f32; rows * cols];
+        for i in 0..rows {
+            for j in 0..cols {
+                t[j * rows + i] = a[i * cols + j];
+            }
+        }
+        let want = row_norms(&t, rows);
+        let got = col_norms(&a, cols);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-6, "col norm {x} vs transposed row norm {y}");
+        }
+    }
+
+    #[test]
+    fn vjp_col_sketch_unbiased() {
+        // The approx-VJP estimator through the EstimatorTest harness: the
+        // mean of the sketched contraction over many draws must converge to
+        // the exact gz = g @ W^T, coordinate by coordinate.
+        use crate::runtime::kernels::matmul_nt;
+        let mut gen = Gen::new(stat_seed(40));
+        let (rows, dout, din) = (6, 12, 5);
+        let g = gen.vec_normal(rows * dout, 1.0);
+        let w = gen.vec_normal(din * dout, 1.0);
+        let ctx = KernelCtx::serial();
+        let ws = Workspace::new();
+        let exact = matmul_nt(ctx, &g, &w, rows, dout, din);
+        let mut est = EstimatorTest::new_f32("approx-VJP column sketch", &exact);
+        let mut rng = Pcg32::new(stat_seed(41), 7);
+        let mut gz = vec![0.0f32; rows * din];
+        let mut var_analytic = 0.0f32;
+        for _ in 0..6000 {
+            var_analytic = vjp_col_sketch(
+                ctx, &ws, &g, &w, rows, dout, din, 0.45, &mut rng, &mut gz,
+            )
+            .unwrap();
+            est.push_f32(&gz);
+        }
+        est.assert_unbiased(6.0);
+        assert!(var_analytic > 0.0, "sketch variance must be positive below ratio 1");
+    }
+
+    #[test]
+    fn vjp_col_sketch_ratio1_bitwise_exact_and_stream_aligned() {
+        use crate::runtime::kernels::matmul_nt;
+        check("vjp sketch at rho 1 == exact NT", 48, |gen: &mut Gen| {
+            let rows = gen.usize_in(1, 10);
+            let dout = gen.usize_in(1, 16);
+            let din = gen.usize_in(1, 12);
+            let g = gen.vec_normal(rows * dout, 1.0);
+            let w = gen.vec_normal(din * dout, 1.0);
+            let ctx = KernelCtx::serial();
+            let ws = Workspace::new();
+            let exact = matmul_nt(ctx, &g, &w, rows, dout, din);
+            let seed = gen.usize_in(0, 1 << 20) as u64;
+            let mut rng = Pcg32::new(seed, 0xD0);
+            let mut gz = vec![f32::NAN; rows * din];
+            let v = vjp_col_sketch(ctx, &ws, &g, &w, rows, dout, din, 1.0, &mut rng, &mut gz)
+                .unwrap();
+            ensure(v == 0.0, format!("variance {v} != 0 at rho 1"))?;
+            ensure(
+                gz.iter().zip(&exact).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "rho-1 sketch not bitwise exact",
+            )?;
+            // the draw still consumes exactly one value per column so
+            // streams stay aligned across ratios
+            let mut fresh = Pcg32::new(seed, 0xD0);
+            for _ in 0..dout {
+                fresh.f32();
+            }
+            ensure(
+                rng.f32().to_bits() == fresh.f32().to_bits(),
+                "rng stream misaligned after rho-1 sketch",
+            )
+        });
+    }
+
+    #[test]
+    fn vjp_col_sketch_rejects_non_finite_scores() {
+        let ctx = KernelCtx::serial();
+        let ws = Workspace::new();
+        let g = vec![1.0f32, f32::NAN, 0.5, 2.0];
+        let w = vec![0.5f32, 1.0];
+        let mut rng = Pcg32::new(1, 1);
+        let mut gz = vec![0.0f32; 2];
+        let err = vjp_col_sketch(ctx, &ws, &g, &w, 2, 2, 1, 0.5, &mut rng, &mut gz).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "unexpected error text: {err}");
     }
 }

@@ -48,7 +48,9 @@ use crate::runtime::kernels::{
 };
 use crate::util::rng::Pcg32;
 
-use super::sampling::{eq3_variance_with, row_norm, row_norms, ProbSolve, SampledRows};
+use super::sampling::{
+    eq3_variance_with, row_norm, row_norms, vjp_col_sketch, ProbSolve, SampledRows,
+};
 use super::ExecCtx;
 
 /// Number of sampled linears per transformer block: qkv, attn-out, ff1, ff2.
@@ -588,6 +590,8 @@ fn linear_bwd_sampled(
     nu_apply: f32,
     nu_probe: f32,
     rng: &mut Pcg32,
+    vjp_rho: f32,
+    vjp_rng: &mut Pcg32,
     gz: &mut [f32],
 ) -> Result<(Vec<f32>, Vec<f32>, f32)> {
     let ws = ectx.ws;
@@ -643,10 +647,17 @@ fn linear_bwd_sampled(
     }
     let gw = weighted_gather_tn(ectx.kctx, z2d, g2d, &widx, &wsc, din, dout);
     let gb = col_sums(g2d, dout);
-    matmul_nt_into(ectx.kctx, g2d, w, present, dout, din, gz);
-    // analytic SampleW variance (paper Eq. 3) at the probe ratios; absent
-    // rows have zero gradient norm and contribute exactly 0
-    let vw = eq3_variance_with(g2d, z2d, |i| probe.prob(scores[i]), present, dout, din);
+    // activation-gradient propagation: exact NT contraction, or — when the
+    // approx-VJP strategy is active (vjp_rho < 1) — the unbiased column
+    // sketch, whose analytic variance rides along in the vw telemetry slot
+    let mut vw = eq3_variance_with(g2d, z2d, |i| probe.prob(scores[i]), present, dout, din);
+    if vjp_rho < 1.0 {
+        vw += vjp_col_sketch(
+            ectx.kctx, ws, g2d, w, present, dout, din, vjp_rho, vjp_rng, gz,
+        )?;
+    } else {
+        matmul_nt_into(ectx.kctx, g2d, w, present, dout, din, gz);
+    }
     ws.give(scores);
     Ok((gw, gb, vw))
 }
@@ -657,6 +668,14 @@ fn rng_sample_a(seed: i32, layer: usize) -> Pcg32 {
 
 fn rng_sample_w(seed: i32, layer: usize, linear: usize) -> Pcg32 {
     Pcg32::new(seed as u32 as u64, 0xB000 + (LINEARS_PER_BLOCK * layer + linear) as u64)
+}
+
+/// Per-(layer, linear) stream for the approx-VJP column sketch — disjoint
+/// from the SampleA (`0xA000`), SampleW (`0xB000`) and CNN (`0xC000`)
+/// streams. Never drawn from when `vjp_rho >= 1`, so the pre-existing
+/// strategies are untouched bit for bit.
+fn rng_vjp(seed: i32, layer: usize, linear: usize) -> Pcg32 {
+    Pcg32::new(seed as u32 as u64, 0xD000 + (LINEARS_PER_BLOCK * layer + linear) as u64)
 }
 
 /// Borrowed per-block activations the backward consumes — either the
@@ -692,6 +711,7 @@ fn block_bwd(
     seed: i32,
     nu_apply: &[f32],
     nu_probe: &[f32],
+    vjp_rho: f32,
     grads: &mut [Vec<f32>],
     vw: &mut [f32],
 ) -> Result<()> {
@@ -702,6 +722,7 @@ fn block_bwd(
 
     // --- FFN ---
     let mut k3 = rng_sample_w(seed, l, 3);
+    let mut kv3 = rng_vjp(seed, l, 3);
     let mut gf1 = ws.take(nrows * f);
     let (gw2, gb2, v3) = linear_bwd_sampled(
         ectx,
@@ -714,6 +735,8 @@ fn block_bwd(
         nu_apply[LINEARS_PER_BLOCK * l + 3],
         nu_probe[LINEARS_PER_BLOCK * l + 3],
         &mut k3,
+        vjp_rho,
+        &mut kv3,
         &mut gf1,
     )?;
     grads[cfg.blk(l, W_FF2)] = gw2;
@@ -727,6 +750,7 @@ fn block_bwd(
     ws.give(gf1);
 
     let mut k2 = rng_sample_w(seed, l, 2);
+    let mut kv2 = rng_vjp(seed, l, 2);
     let mut gb2in = ws.take(nrows * d);
     let (gw1, gb1, v2) = linear_bwd_sampled(
         ectx,
@@ -739,6 +763,8 @@ fn block_bwd(
         nu_apply[LINEARS_PER_BLOCK * l + 2],
         nu_probe[LINEARS_PER_BLOCK * l + 2],
         &mut k2,
+        vjp_rho,
+        &mut kv2,
         &mut gb2in,
     )?;
     ws.give(gu1);
@@ -768,6 +794,7 @@ fn block_bwd(
 
     // --- attention ---
     let mut k1 = rng_sample_w(seed, l, 1);
+    let mut kv1 = rng_vjp(seed, l, 1);
     let mut gattn = ws.take(nrows * d);
     let (gwo, gbo, v1) = linear_bwd_sampled(
         ectx,
@@ -780,6 +807,8 @@ fn block_bwd(
         nu_apply[LINEARS_PER_BLOCK * l + 1],
         nu_probe[LINEARS_PER_BLOCK * l + 1],
         &mut k1,
+        vjp_rho,
+        &mut kv1,
         &mut gattn,
     )?;
     grads[cfg.blk(l, W_O)] = gwo;
@@ -793,6 +822,7 @@ fn block_bwd(
     ws.give(gattn);
 
     let mut k0 = rng_sample_w(seed, l, 0);
+    let mut kv0 = rng_vjp(seed, l, 0);
     let mut ga = ws.take(nrows * d);
     let (gwqkv, gbqkv, v0) = linear_bwd_sampled(
         ectx,
@@ -805,6 +835,8 @@ fn block_bwd(
         nu_apply[LINEARS_PER_BLOCK * l],
         nu_probe[LINEARS_PER_BLOCK * l],
         &mut k0,
+        vjp_rho,
+        &mut kv0,
         &mut ga,
     )?;
     ws.give(gqkv);
@@ -857,6 +889,7 @@ fn encode_bwd(
     rho: &[f32],
     nu_apply: &[f32],
     nu_probe: &[f32],
+    vjp_rho: f32,
     grads: &mut [Vec<f32>],
     publish_embed: bool,
 ) -> Result<(Vec<f32>, Vec<f32>)> {
@@ -909,7 +942,7 @@ fn encode_bwd(
             };
             block_bwd(
                 cfg, ectx, params, l, &view, &RowSet::Full, &mut g, seed, nu_apply,
-                nu_probe, grads, &mut vw,
+                nu_probe, vjp_rho, grads, &mut vw,
             )?;
         } else {
             // gather-compacted path: intersect the previous kept set with
@@ -958,7 +991,7 @@ fn encode_bwd(
                 let rowset = RowSet::Samples { kept: &new_kept, t, full_samples: n };
                 block_bwd(
                     cfg, ectx, params, l, &view, &rowset, &mut g, seed, nu_apply,
-                    nu_probe, grads, &mut vw,
+                    nu_probe, vjp_rho, grads, &mut vw,
                 )?;
             }
             ws.give(h_in_c);
@@ -1104,6 +1137,50 @@ pub fn fwd_bwd_cls(
     nu_apply: &[f32],
     nu_probe: &[f32],
 ) -> Result<GradOut> {
+    fwd_bwd_cls_impl(cfg, ectx, params, x, y, sw, n, seq_len, seed, rho, nu_apply, nu_probe, 1.0)
+}
+
+/// Classification backward with the unbiased approx-VJP column sketch on
+/// every activation-gradient contraction: rows stay full and weight
+/// gradients exact (rho = nu = 1); only the `gz` propagation is sketched
+/// at `vjp_rho`. The returned `vw` telemetry carries the per-linear
+/// analytic sketch variance.
+#[allow(clippy::too_many_arguments)]
+pub fn fwd_bwd_cls_vjp(
+    cfg: &TransformerCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    sw: &[f32],
+    n: usize,
+    seq_len: usize,
+    seed: i32,
+    vjp_rho: f32,
+) -> Result<GradOut> {
+    let ones_l = vec![1.0f32; cfg.n_layers];
+    let ones_s = vec![1.0f32; cfg.n_sampled()];
+    fwd_bwd_cls_impl(
+        cfg, ectx, params, x, y, sw, n, seq_len, seed, &ones_l, &ones_s, &ones_s, vjp_rho,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fwd_bwd_cls_impl(
+    cfg: &TransformerCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    sw: &[f32],
+    n: usize,
+    seq_len: usize,
+    seed: i32,
+    rho: &[f32],
+    nu_apply: &[f32],
+    nu_probe: &[f32],
+    vjp_rho: f32,
+) -> Result<GradOut> {
     cfg.validate(params, n, seq_len, x.len())?;
     ensure!(rho.len() == cfg.n_layers && nu_apply.len() == cfg.n_sampled());
     ensure!(nu_probe.len() == cfg.n_sampled() && sw.len() == n && y.len() == n);
@@ -1163,7 +1240,8 @@ pub fn fwd_bwd_cls(
     release_head(ws, hf, lnf, pooled, logits);
 
     let (act_norms, vw) = encode_bwd(
-        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads, true,
+        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, vjp_rho, &mut grads,
+        true,
     )?;
     saved.release(ws);
     Ok(GradOut { loss: loss as f32, grads, act_norms, vw })
@@ -1183,6 +1261,46 @@ pub fn fwd_bwd_mlm(
     rho: &[f32],
     nu_apply: &[f32],
     nu_probe: &[f32],
+) -> Result<GradOut> {
+    fwd_bwd_mlm_impl(cfg, ectx, params, x, y, w, n, seq_len, seed, rho, nu_apply, nu_probe, 1.0)
+}
+
+/// MLM twin of [`fwd_bwd_cls_vjp`].
+#[allow(clippy::too_many_arguments)]
+pub fn fwd_bwd_mlm_vjp(
+    cfg: &TransformerCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    w: &[f32],
+    n: usize,
+    seq_len: usize,
+    seed: i32,
+    vjp_rho: f32,
+) -> Result<GradOut> {
+    let ones_l = vec![1.0f32; cfg.n_layers];
+    let ones_s = vec![1.0f32; cfg.n_sampled()];
+    fwd_bwd_mlm_impl(
+        cfg, ectx, params, x, y, w, n, seq_len, seed, &ones_l, &ones_s, &ones_s, vjp_rho,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fwd_bwd_mlm_impl(
+    cfg: &TransformerCfg,
+    ectx: ExecCtx,
+    params: &ParamSet,
+    x: &[i32],
+    y: &[i32],
+    w: &[f32],
+    n: usize,
+    seq_len: usize,
+    seed: i32,
+    rho: &[f32],
+    nu_apply: &[f32],
+    nu_probe: &[f32],
+    vjp_rho: f32,
 ) -> Result<GradOut> {
     cfg.validate(params, n, seq_len, x.len())?;
     ensure!(rho.len() == cfg.n_layers && nu_apply.len() == cfg.n_sampled());
@@ -1260,7 +1378,8 @@ pub fn fwd_bwd_mlm(
     // publish_embed = false: the tied-head contribution below still has to
     // land before the embed gradient is final
     let (act_norms, vw) = encode_bwd(
-        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, &mut grads, false,
+        cfg, ectx, params, x, &saved, g, n, seed, rho, nu_apply, nu_probe, vjp_rho, &mut grads,
+        false,
     )?;
     saved.release(ws);
     // tied embedding: encoder scatter + head contribution

@@ -86,6 +86,41 @@ impl<'a> ModelSession<'a> {
             .fwd_bwd_mlm(&self.name, params, batch, seed, rho, nu_apply, nu_probe)
     }
 
+    /// Approx-VJP classification grad step (see
+    /// [`Backend::fwd_bwd_cls_vjp`]).
+    pub fn fwd_bwd_cls_vjp(
+        &self,
+        params: &ParamSet,
+        batch: &ClsBatch,
+        sw: &[f32],
+        seed: i32,
+        vjp_rho: f32,
+    ) -> Result<GradOut> {
+        self.backend.fwd_bwd_cls_vjp(&self.name, params, batch, sw, seed, vjp_rho)
+    }
+
+    /// Approx-VJP masked-LM grad step (see [`Backend::fwd_bwd_mlm_vjp`]).
+    pub fn fwd_bwd_mlm_vjp(
+        &self,
+        params: &ParamSet,
+        batch: &MlmBatch,
+        seed: i32,
+        vjp_rho: f32,
+    ) -> Result<GradOut> {
+        self.backend.fwd_bwd_mlm_vjp(&self.name, params, batch, seed, vjp_rho)
+    }
+
+    /// Approx-VJP CNN grad step (see [`Backend::cnn_fwd_bwd_vjp`]).
+    pub fn cnn_fwd_bwd_vjp(
+        &self,
+        params: &ParamSet,
+        batch: &ImgBatch,
+        seed: i32,
+        vjp_rho: f32,
+    ) -> Result<CnnGradOut> {
+        self.backend.cnn_fwd_bwd_vjp(&self.name, params, batch, seed, vjp_rho)
+    }
+
     /// Per-sample losses + UB importance scores (baseline selection pass).
     pub fn fwd_loss_cls(
         &self,

@@ -1,0 +1,593 @@
+//! The pluggable sampler-strategy layer: every sampling decision the
+//! trainer makes — whether to probe, which keep ratios to train at,
+//! which sub-batch rows to select, whether to sketch the activation-VJP —
+//! lives behind one [`SamplerStrategy`] object built from the config's
+//! `method`/`[train] strategy` knob.
+//!
+//! A strategy owns its score computation, its keep-set draw (producing the
+//! kernel layer's [`SampledRows`]), its ratio/variance controller state,
+//! and its per-step variance telemetry. The trainer consumes only the
+//! trait: it asks for a [`StepPlan`], executes the matching backward, and
+//! hands selection/telemetry back to the strategy. The five families:
+//!
+//! - **exact** — full-batch backward at rho = nu = 1 ([`ExactStrategy`]).
+//! - **vcas** — the paper's Alg. 1 controller; probes on the controller's
+//!   cadence and trains at the live `(rho, nu)` ([`VcasStrategy`]).
+//! - **sb / ub / uniform** — subset selection over a full-batch forward
+//!   ([`SubsetStrategy`]), optionally gated by the Stanpie3-style
+//!   variance-reduction condition ([`VrGate`], `[strategy] vr_gate`).
+//! - **approx_vjp** — unbiased approximate VJPs: each dense linear's
+//!   activation-gradient propagation runs the Bernoulli column sketch
+//!   ([`vjp_col_sketch`]) at `[strategy] vjp_rho`, reusing the
+//!   [`SampledRows`] gather/scatter kernels and the `Workspace` pool;
+//!   weight gradients stay exact ([`ApproxVjpStrategy`]).
+//!
+//! The port of the pre-existing methods onto the trait is
+//! behavior-preserving: with the gate off (the default), a strategy
+//! consumes exactly the rng draws its pre-refactor code path consumed, in
+//! the same order, so same-seed trajectories are bitwise identical
+//! (pinned by `tests/strategies.rs`).
+//!
+//! **Adding a strategy**: implement [`SamplerStrategy`] (only `name` and
+//! `plan` are required), add a `config::Method` variant + parse name, and
+//! map it in [`build_strategy`]. If it changes rng-draw trajectories, it
+//! must be a config-gated opt-in (see the determinism contract in
+//! ROADMAP.md).
+
+use crate::config::{Method, TrainConfig};
+use crate::coordinator::baselines::{ub_probs, ub_select, uniform_select, SbSelector, Selection};
+use crate::coordinator::vcas::VcasController;
+use crate::error::{bail, Result};
+use crate::util::rng::Pcg32;
+
+// The strategy layer's kernel-side vocabulary, re-exported so strategy
+// implementations (and external callers) reach the keep-set/sketch
+// primitives without knowing the native module layout.
+pub use crate::runtime::native::sampling::{col_norms, vjp_col_sketch, ProbSolve, SampledRows};
+
+/// What the trainer should execute for one step, as decided by the
+/// strategy. The trainer owns batches, sessions and FLOPs accounting; the
+/// plan carries only the sampling decision.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StepPlan {
+    /// Full-batch backward at rho = nu = 1.
+    Exact,
+    /// VCAS backward at the controller's live per-layer ratios.
+    Adaptive { rho: Vec<f32>, nu: Vec<f32> },
+    /// Full-batch forward for scores, then `select` a sub-batch to train.
+    Subset,
+    /// Full-batch backward with sketched activation-gradient propagation.
+    ApproxVjp { vjp_rho: f32 },
+}
+
+/// One sampling strategy: score computation, keep-set draw, controller
+/// state and variance telemetry behind a single object (see module docs).
+pub trait SamplerStrategy {
+    /// The config-facing name (`--strategy` value).
+    fn name(&self) -> &'static str;
+
+    /// Should the trainer run a variance probe before this step?
+    fn probe_due(&self, _step: usize) -> bool {
+        false
+    }
+
+    /// The Alg. 1 controller, for strategies that own one (probe results
+    /// are fed back through it; its log is the probe telemetry).
+    fn controller(&self) -> Option<&VcasController> {
+        None
+    }
+
+    fn controller_mut(&mut self) -> Option<&mut VcasController> {
+        None
+    }
+
+    /// Decide what this step executes.
+    fn plan(&self) -> StepPlan;
+
+    /// Draw the sub-batch for a [`StepPlan::Subset`] step from the
+    /// full-batch per-sample losses and UB gradient-norm scores. Only
+    /// subset strategies implement this; the default is a typed error so a
+    /// mismatched trainer arm surfaces instead of panicking.
+    fn select(
+        &mut self,
+        _losses: &[f32],
+        _ub_scores: &[f32],
+        _k: usize,
+        _rng: &mut Pcg32,
+    ) -> Result<Selection> {
+        bail!(
+            "strategy {:?} does not select sub-batches (no Subset plan)",
+            self.name()
+        )
+    }
+
+    /// Per-step variance telemetry sink: the trainer reports the step's
+    /// per-linear estimator variances (the `vw` channel) after each
+    /// training backward. Default: discard.
+    fn record_step_variance(&mut self, _step: usize, _vw: &[f32]) {}
+
+    /// The recorded `(step, total variance)` trace (empty unless the
+    /// strategy accumulates one).
+    fn variance_trace(&self) -> &[(usize, f32)] {
+        &[]
+    }
+}
+
+// ---- exact ----------------------------------------------------------------
+
+/// Full-batch exact training; no sampling state at all.
+pub struct ExactStrategy;
+
+impl SamplerStrategy for ExactStrategy {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn plan(&self) -> StepPlan {
+        StepPlan::Exact
+    }
+}
+
+// ---- vcas -----------------------------------------------------------------
+
+/// The paper's variance-controlled adaptation: owns the Alg. 1 controller,
+/// probes on its cadence, trains at its live ratios.
+pub struct VcasStrategy {
+    ctrl: VcasController,
+}
+
+impl VcasStrategy {
+    pub fn new(ctrl: VcasController) -> VcasStrategy {
+        VcasStrategy { ctrl }
+    }
+}
+
+impl SamplerStrategy for VcasStrategy {
+    fn name(&self) -> &'static str {
+        "vcas"
+    }
+
+    fn probe_due(&self, step: usize) -> bool {
+        self.ctrl.due(step)
+    }
+
+    fn controller(&self) -> Option<&VcasController> {
+        Some(&self.ctrl)
+    }
+
+    fn controller_mut(&mut self) -> Option<&mut VcasController> {
+        Some(&mut self.ctrl)
+    }
+
+    fn plan(&self) -> StepPlan {
+        let (rho, nu) = self.ctrl.train_ratios();
+        StepPlan::Adaptive { rho, nu }
+    }
+}
+
+// ---- subset baselines (sb / ub / uniform) ---------------------------------
+
+/// Which subset baseline a [`SubsetStrategy`] runs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum SubsetKind {
+    Sb,
+    Ub,
+    Uniform,
+}
+
+/// The Stanpie3-style variance-reduction condition: an EMA of the
+/// estimated variance-reduction factor of importance sampling over uniform
+/// draws, gating the selector. While the EMA sits at or below the
+/// threshold the strategy falls back to uniform selection (importance
+/// weights too flat to pay for themselves); once it exceeds the threshold
+/// the importance selector takes over.
+///
+/// For normalized scores g_i = s_i / sum(s), the per-batch estimate is
+///
+/// ```text
+/// vr = 1 / sqrt(1 - sum_i (g_i - 1/n)^2 / sum_i g_i^2)  = sqrt(n * sum_i g_i^2)
+/// ```
+///
+/// which is exactly 1 for uniform scores and grows with score skew; the
+/// EMA starts at 0 (a deliberate warmup: the gate cannot open before
+/// enough batches accumulate) and the gate decision always uses the EMA
+/// *before* the current batch is folded in (hysteresis — the batch that
+/// first crosses the threshold still trains uniformly).
+#[derive(Clone, Debug)]
+pub struct VrGate {
+    threshold: f64,
+    momentum: f64,
+    vr: f64,
+    previously_satisfied: bool,
+}
+
+impl VrGate {
+    pub fn new(threshold: f64, momentum: f64) -> VrGate {
+        VrGate { threshold, momentum, vr: 0.0, previously_satisfied: false }
+    }
+
+    /// Gate decision from the EMA as of the previous update.
+    pub fn satisfied(&mut self) -> bool {
+        self.previously_satisfied = self.vr > self.threshold;
+        self.previously_satisfied
+    }
+
+    /// The decision [`Self::satisfied`] last returned.
+    pub fn previously_satisfied(&self) -> bool {
+        self.previously_satisfied
+    }
+
+    /// Current EMA'd variance-reduction estimate.
+    pub fn value(&self) -> f64 {
+        self.vr
+    }
+
+    /// Fold one batch's sampling distribution into the EMA.
+    pub fn update(&mut self, probs: &[f64]) {
+        let n = probs.len();
+        if n == 0 {
+            return;
+        }
+        let total: f64 = probs.iter().sum();
+        let new_vr = if total > 0.0 && total.is_finite() {
+            let u = 1.0 / n as f64;
+            let (mut dev, mut sq) = (0.0f64, 0.0f64);
+            for &p in probs {
+                let g = p / total;
+                dev += (g - u) * (g - u);
+                sq += g * g;
+            }
+            // 1 - dev/sq == (1/n)/sq after normalization, so this is
+            // sqrt(n * sum g^2) >= 1 with equality exactly at uniform.
+            1.0 / (1.0 - dev / sq).sqrt()
+        } else {
+            1.0 // degenerate all-zero scores: no reduction available
+        };
+        self.vr = self.momentum * self.vr + (1.0 - self.momentum) * new_vr;
+    }
+}
+
+/// SB / UB / uniform subset selection behind the trait, with the optional
+/// [`VrGate`]. With the gate off (the default) `select` is bitwise the
+/// pre-refactor selector call — same draws, same order.
+pub struct SubsetStrategy {
+    kind: SubsetKind,
+    sb: SbSelector,
+    gate: Option<VrGate>,
+}
+
+impl SubsetStrategy {
+    pub fn new(kind: SubsetKind, sb: SbSelector, gate: Option<VrGate>) -> SubsetStrategy {
+        SubsetStrategy { kind, sb, gate }
+    }
+
+    /// The gate, for telemetry/tests.
+    pub fn gate(&self) -> Option<&VrGate> {
+        self.gate.as_ref()
+    }
+}
+
+impl SamplerStrategy for SubsetStrategy {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            SubsetKind::Sb => "sb",
+            SubsetKind::Ub => "ub",
+            SubsetKind::Uniform => "uniform",
+        }
+    }
+
+    fn plan(&self) -> StepPlan {
+        StepPlan::Subset
+    }
+
+    fn select(
+        &mut self,
+        losses: &[f32],
+        ub_scores: &[f32],
+        k: usize,
+        rng: &mut Pcg32,
+    ) -> Result<Selection> {
+        let n = losses.len();
+        if let Some(gate) = &mut self.gate {
+            // the same score→probability mapping the selector below would
+            // draw from (shared helpers — see baselines.rs), so the gate
+            // judges the actual sampling distribution
+            let probs: Vec<f64> = match self.kind {
+                SubsetKind::Sb => self.sb.probs(losses)?,
+                SubsetKind::Ub => ub_probs(ub_scores)?,
+                SubsetKind::Uniform => vec![1.0 / n as f64; n],
+            };
+            let sample = gate.satisfied();
+            gate.update(&probs);
+            if !sample {
+                // warm the SB loss history even while gated, so the
+                // percentile CDF is ready the moment the gate opens
+                if self.kind == SubsetKind::Sb {
+                    self.sb.record(losses);
+                }
+                return Ok(uniform_select(n, k, rng));
+            }
+        }
+        match self.kind {
+            SubsetKind::Sb => self.sb.select(losses, k, rng),
+            SubsetKind::Ub => ub_select(ub_scores, k, rng),
+            SubsetKind::Uniform => Ok(uniform_select(n, k, rng)),
+        }
+    }
+}
+
+// ---- approx_vjp -----------------------------------------------------------
+
+/// Unbiased approximate VJPs: full-batch training where every dense
+/// linear's activation-gradient propagation runs the Bernoulli column
+/// sketch at `vjp_rho` instead of the exact NT contraction. Weight
+/// gradients stay exact, so the parameter update is unbiased with a
+/// per-linear analytic variance the backward reports through the `vw`
+/// channel — accumulated here as the per-step variance trace.
+pub struct ApproxVjpStrategy {
+    vjp_rho: f32,
+    trace: Vec<(usize, f32)>,
+}
+
+impl ApproxVjpStrategy {
+    pub fn new(vjp_rho: f32) -> ApproxVjpStrategy {
+        ApproxVjpStrategy { vjp_rho, trace: Vec::new() }
+    }
+}
+
+impl SamplerStrategy for ApproxVjpStrategy {
+    fn name(&self) -> &'static str {
+        "approx_vjp"
+    }
+
+    fn plan(&self) -> StepPlan {
+        StepPlan::ApproxVjp { vjp_rho: self.vjp_rho }
+    }
+
+    fn record_step_variance(&mut self, step: usize, vw: &[f32]) {
+        self.trace.push((step, vw.iter().sum()));
+    }
+
+    fn variance_trace(&self) -> &[(usize, f32)] {
+        &self.trace
+    }
+}
+
+// ---- builder ---------------------------------------------------------------
+
+/// Build the strategy the config names. `n_layers` / `sampled_param_idx` /
+/// `batch_n` size the VCAS controller; `force_act_only` is the CNN path's
+/// activation-only override; `batch_n` also sizes the SB rolling history
+/// (`8 * batch * 4`, as before the refactor).
+pub fn build_strategy(
+    cfg: &TrainConfig,
+    n_layers: usize,
+    sampled_param_idx: Vec<usize>,
+    batch_n: usize,
+    force_act_only: bool,
+) -> Box<dyn SamplerStrategy> {
+    match cfg.method {
+        Method::Exact => Box::new(ExactStrategy),
+        Method::Vcas => {
+            let mut vc = cfg.vcas.clone();
+            vc.act_only = force_act_only || vc.act_only;
+            Box::new(VcasStrategy::new(VcasController::new(
+                vc,
+                n_layers,
+                sampled_param_idx,
+                batch_n,
+            )))
+        }
+        Method::Sb | Method::Ub | Method::Uniform => {
+            let kind = match cfg.method {
+                Method::Sb => SubsetKind::Sb,
+                Method::Ub => SubsetKind::Ub,
+                _ => SubsetKind::Uniform,
+            };
+            let sb = SbSelector::new(8 * batch_n * 4, 1.0);
+            let gate = if cfg.strategy.vr_gate {
+                Some(VrGate::new(cfg.strategy.vr_threshold, cfg.strategy.vr_momentum))
+            } else {
+                None
+            };
+            Box::new(SubsetStrategy::new(kind, sb, gate))
+        }
+        Method::ApproxVjp => Box::new(ApproxVjpStrategy::new(cfg.strategy.vjp_rho as f32)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Eq.-style pin of the EMA update: for normalized scores g the
+    /// per-batch estimate is sqrt(n * sum g^2), folded in as
+    /// `vr <- m*vr + (1-m)*new_vr` from an initial 0.
+    #[test]
+    fn vr_gate_ema_matches_closed_form() {
+        // one-hot scores over n=4: g = e_0, sum g^2 = 1, new_vr = sqrt(4) = 2
+        let probs = [1.0f64, 0.0, 0.0, 0.0];
+        let m = 0.9f64;
+        let mut gate = VrGate::new(1.2, m);
+        assert_eq!(gate.value(), 0.0, "EMA must start at 0 (warmup)");
+        gate.update(&probs);
+        let expect1 = (1.0 - m) * 2.0;
+        assert!((gate.value() - expect1).abs() < 1e-12, "after 1: {}", gate.value());
+        gate.update(&probs);
+        let expect2 = m * expect1 + (1.0 - m) * 2.0;
+        assert!((gate.value() - expect2).abs() < 1e-12, "after 2: {}", gate.value());
+        // uniform scores: new_vr is exactly 1
+        let mut flat = VrGate::new(1.2, 0.0);
+        flat.update(&[0.25; 4]);
+        assert!((flat.value() - 1.0).abs() < 1e-12, "uniform vr: {}", flat.value());
+        // scale invariance: only the normalized shape matters
+        let mut a = VrGate::new(1.2, 0.0);
+        let mut b = VrGate::new(1.2, 0.0);
+        a.update(&[0.1, 0.2, 0.7]);
+        b.update(&[1.0, 2.0, 7.0]);
+        assert!((a.value() - b.value()).abs() < 1e-12);
+        // degenerate inputs leave the EMA alone / fall to the floor
+        let mut d = VrGate::new(1.2, 0.0);
+        d.update(&[]);
+        assert_eq!(d.value(), 0.0);
+        d.update(&[0.0, 0.0]);
+        assert!((d.value() - 1.0).abs() < 1e-12, "all-zero scores floor at 1");
+    }
+
+    /// The gate decision always uses the EMA from *before* the current
+    /// batch: the batch that first crosses the threshold still trains
+    /// uniformly, and a flattening score distribution closes the gate one
+    /// batch late (hysteresis).
+    #[test]
+    fn vr_gate_hysteresis_uses_previous_ema() {
+        // momentum 0: the EMA is exactly the last batch's estimate
+        let mut gate = VrGate::new(1.5, 0.0);
+        let skewed = [1.0f64, 0.0, 0.0, 0.0]; // new_vr = 2.0 > 1.5
+        let flat = [0.25f64; 4]; // new_vr = 1.0 < 1.5
+        // warmup: EMA still 0 when the first decision is taken
+        assert!(!gate.satisfied(), "gate must start closed");
+        gate.update(&skewed);
+        // the skew registered last batch: gate now open
+        assert!(gate.satisfied());
+        assert!(gate.previously_satisfied());
+        gate.update(&flat);
+        // flat batch closed it — but only visible from the NEXT decision
+        assert!(!gate.satisfied());
+        assert!(!gate.previously_satisfied());
+        // and with high momentum a single skewed batch cannot open it
+        let mut slow = VrGate::new(1.5, 0.9);
+        slow.satisfied();
+        slow.update(&skewed); // vr = 0.1*2.0 = 0.2
+        assert!(!slow.satisfied(), "one batch must not dominate a 0.9 EMA");
+    }
+
+    #[test]
+    fn build_strategy_maps_every_method() {
+        let mut cfg = TrainConfig::default();
+        for (method, name) in [
+            (Method::Exact, "exact"),
+            (Method::Vcas, "vcas"),
+            (Method::Sb, "sb"),
+            (Method::Ub, "ub"),
+            (Method::Uniform, "uniform"),
+            (Method::ApproxVjp, "approx_vjp"),
+        ] {
+            cfg.method = method.clone();
+            let s = build_strategy(&cfg, 2, vec![0, 1, 2], 16, false);
+            assert_eq!(s.name(), name);
+            assert_eq!(s.controller().is_some(), method == Method::Vcas);
+            match (&method, s.plan()) {
+                (Method::Exact, StepPlan::Exact) => {}
+                (Method::Vcas, StepPlan::Adaptive { rho, nu }) => {
+                    assert_eq!(rho.len(), 2);
+                    assert_eq!(nu.len(), 3);
+                }
+                (Method::Sb | Method::Ub | Method::Uniform, StepPlan::Subset) => {}
+                (Method::ApproxVjp, StepPlan::ApproxVjp { vjp_rho }) => {
+                    assert!((vjp_rho as f64 - cfg.strategy.vjp_rho).abs() < 1e-7);
+                }
+                (m, p) => panic!("method {m:?} produced plan {p:?}"),
+            }
+        }
+    }
+
+    /// With the gate off, the trait `select` is the pre-refactor selector
+    /// call bit for bit: same rows, same weights, same rng draws.
+    #[test]
+    fn subset_select_gate_off_is_bitwise_passthrough() {
+        let losses = [0.3f32, 1.4, 0.2, 0.9, 2.0, 0.1];
+        let scores = [0.5f32, 2.5, 0.1, 1.0, 3.0, 0.2];
+        for kind in [SubsetKind::Sb, SubsetKind::Ub, SubsetKind::Uniform] {
+            let mut st = SubsetStrategy::new(kind, SbSelector::new(64, 1.0), None);
+            let mut r1 = Pcg32::new(11, 3);
+            let got = st.select(&losses, &scores, 3, &mut r1).unwrap();
+            let mut r2 = Pcg32::new(11, 3);
+            let want = match kind {
+                SubsetKind::Sb => {
+                    SbSelector::new(64, 1.0).select(&losses, 3, &mut r2).unwrap()
+                }
+                SubsetKind::Ub => ub_select(&scores, 3, &mut r2).unwrap(),
+                SubsetKind::Uniform => uniform_select(losses.len(), 3, &mut r2),
+            };
+            assert_eq!(got.rows, want.rows, "{kind:?} rows");
+            assert!(
+                got.weights.iter().zip(&want.weights).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{kind:?} weights"
+            );
+            // rng streams advanced identically
+            assert_eq!(r1.next_u64(), r2.next_u64(), "{kind:?} rng draws");
+        }
+    }
+
+    /// Gate on: warmup batches draw uniformly (bitwise `uniform_select`);
+    /// once the EMA crosses the threshold the importance selector takes
+    /// over (bitwise `ub_select` on the same stream position).
+    #[test]
+    fn subset_select_gate_warms_up_then_opens() {
+        let losses = [0.3f32, 1.4, 0.2, 0.9];
+        let scores = [10.0f32, 0.1, 0.1, 0.1]; // heavily skewed: vr = sqrt(n*sum g^2) >> 1.2
+        let gate = VrGate::new(1.2, 0.0); // momentum 0: opens after one batch
+        let mut st = SubsetStrategy::new(SubsetKind::Ub, SbSelector::new(64, 1.0), Some(gate));
+        let mut rng = Pcg32::new(21, 5);
+        let mut shadow = Pcg32::new(21, 5);
+        // batch 1: EMA still 0 -> uniform fallback
+        let got = st.select(&losses, &scores, 2, &mut rng).unwrap();
+        let want = uniform_select(losses.len(), 2, &mut shadow);
+        assert_eq!(got.rows, want.rows, "warmup batch must be uniform");
+        assert!(!st.gate().unwrap().previously_satisfied());
+        // batch 2: the skew registered -> importance sampling
+        let got = st.select(&losses, &scores, 2, &mut rng).unwrap();
+        let want = ub_select(&scores, 2, &mut shadow).unwrap();
+        assert_eq!(got.rows, want.rows, "open gate must run the ub selector");
+        assert!(st.gate().unwrap().previously_satisfied());
+        // gated SB still records its loss history during warmup
+        let gate = VrGate::new(1e9, 0.0); // never opens
+        let mut sb_st =
+            SubsetStrategy::new(SubsetKind::Sb, SbSelector::new(64, 1.0), Some(gate));
+        let mut rng = Pcg32::new(22, 5);
+        sb_st.select(&losses, &scores, 2, &mut rng).unwrap();
+        // history warmed: the cdf is no longer the empty-history constant,
+        // observable through changed selection probabilities vs a cold one
+        let warm_probs = sb_st.sb.probs(&losses).unwrap();
+        let cold_probs = SbSelector::new(64, 1.0).probs(&losses).unwrap();
+        assert_ne!(warm_probs, cold_probs, "gated SB must still warm its history");
+    }
+
+    /// Gate + non-finite scores: the typed selector error surfaces through
+    /// the gate path too, and the EMA stays unpoisoned.
+    #[test]
+    fn subset_select_gate_rejects_non_finite() {
+        let gate = VrGate::new(1.2, 0.0);
+        let mut st = SubsetStrategy::new(SubsetKind::Ub, SbSelector::new(64, 1.0), Some(gate));
+        let mut rng = Pcg32::new(31, 7);
+        let err = st
+            .select(&[0.5, 0.5], &[1.0, f32::NAN], 1, &mut rng)
+            .unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "err: {err}");
+        assert_eq!(st.gate().unwrap().value(), 0.0, "EMA must stay untouched");
+    }
+
+    #[test]
+    fn non_subset_strategies_refuse_selection() {
+        let mut rng = Pcg32::new(41, 9);
+        let err = ExactStrategy
+            .select(&[1.0], &[1.0], 1, &mut rng)
+            .unwrap_err();
+        assert!(err.to_string().contains("select"), "err: {err}");
+        let mut vjp = ApproxVjpStrategy::new(0.5);
+        assert!(vjp.select(&[1.0], &[1.0], 1, &mut rng).is_err());
+    }
+
+    #[test]
+    fn approx_vjp_accumulates_variance_trace() {
+        let mut s = ApproxVjpStrategy::new(0.5);
+        assert!(s.variance_trace().is_empty());
+        s.record_step_variance(0, &[0.5, 1.5]);
+        s.record_step_variance(1, &[0.25, 0.25]);
+        assert_eq!(s.variance_trace(), &[(0, 2.0), (1, 0.5)]);
+        // the default sink discards
+        let mut e = ExactStrategy;
+        e.record_step_variance(0, &[1.0]);
+        assert!(e.variance_trace().is_empty());
+    }
+}
