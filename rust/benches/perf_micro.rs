@@ -6,8 +6,9 @@
 //! 2/4/8 workers, the reduced-precision tiers (f32 vs bf16 kernels,
 //! f32 vs int8 serving), and the sampler-strategy layer (per-strategy
 //! step time + estimator variance, the approx-VJP vjp_rho sweep, and a
-//! same-seed vcas vs approx_vjp trajectory comparison) — the L3
-//! hot-path profile. The kernel section
+//! same-seed vcas vs approx_vjp trajectory comparison), plus the
+//! telemetry registry's overhead on the threaded matmul hot path — the
+//! L3 hot-path profile. The kernel section
 //! writes `results/BENCH_kernels.json`, the sampling section
 //! `results/BENCH_sampling.json`, the pipeline section
 //! `results/BENCH_pipeline.json` and the serving section (p50/p99 latency
@@ -349,6 +350,46 @@ fn main() {
         }
         o.insert("bf16_speedup".into(), Json::Num(tier_ms[0] / tier_ms[1]));
         kernels_json.insert("precision_fwd_bwd_small".into(), Json::Obj(o));
+    }
+    // telemetry registry overhead on the kernel hot path: the same
+    // threaded matmul with and without the per-call bookkeeping the
+    // runtime does when metrics are live (one relaxed counter inc + one
+    // histogram observe per call). Acceptance: <= 2% overhead, recorded
+    // as telemetry_overhead_pct so the claim stays checkable.
+    {
+        use vcas::telemetry::Registry;
+        let (m, k, n) = (256usize, 256, 256);
+        let mut rng = Pcg32::new(23, 23);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let plan = MatmulPlan::with_threads(Layout::Nn, m, k, n, 4);
+        let reps = 8usize;
+        let bare_ms = common::time_median_ms(7, || {
+            for _ in 0..reps {
+                std::hint::black_box(plan.run(&a, &b));
+            }
+        });
+        let registry = Registry::new();
+        let calls = registry.counter("bench_matmul_calls");
+        let lat = registry.histogram("bench_matmul_us");
+        let metered_ms = common::time_median_ms(7, || {
+            for i in 0..reps {
+                std::hint::black_box(plan.run(&a, &b));
+                calls.inc();
+                lat.observe((i + 1) as f64);
+            }
+        });
+        let overhead_pct = (metered_ms / bare_ms - 1.0) * 100.0;
+        table.row(vec![
+            format!("matmul {m}^3 + registry write, 4 thr"),
+            format!("{metered_ms:.2}"),
+            format!("bare {bare_ms:.2} ms, overhead {overhead_pct:+.2}%"),
+        ]);
+        let mut o: BTreeMap<String, Json> = BTreeMap::new();
+        o.insert("bare_ms".into(), Json::Num(bare_ms));
+        o.insert("metered_ms".into(), Json::Num(metered_ms));
+        o.insert("telemetry_overhead_pct".into(), Json::Num(overhead_pct));
+        kernels_json.insert("telemetry_matmul_256".into(), Json::Obj(o));
     }
     let json_path = common::results_dir().join("BENCH_kernels.json");
     std::fs::write(&json_path, format!("{}\n", Json::Obj(kernels_json))).unwrap();

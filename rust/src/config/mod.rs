@@ -142,6 +142,46 @@ impl Default for StrategyConfig {
     }
 }
 
+/// Telemetry knobs (`[telemetry]` section). Tracing is a pure observer:
+/// on or off, trajectories are bitwise identical (see `telemetry`
+/// module docs), so unlike precision/compression it needs no opt-in
+/// ceremony — but it defaults off to keep runs allocation-quiet.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetryConfig {
+    /// Enable span/event tracing (`None` = auto from `VCAS_TRACE`).
+    pub trace: Option<bool>,
+    /// JSONL trace destination ("" = keep events in memory; the CLI
+    /// `--trace-out` flag and a path-valued `VCAS_TRACE` set this).
+    pub trace_out: String,
+}
+
+impl TelemetryConfig {
+    /// Resolve to `(tracing_enabled, trace_out_path)` with the usual
+    /// precedence: explicit config beats the `VCAS_TRACE` env default.
+    pub fn resolve(&self) -> (bool, String) {
+        let trace = self.trace.unwrap_or_else(default_trace);
+        let out = if self.trace_out.is_empty() { env_trace_path() } else { self.trace_out.clone() };
+        (trace, out)
+    }
+}
+
+/// The `VCAS_TRACE` default: unset / `0` / `off` / `false` → disabled;
+/// anything else enables tracing. A value that is not a boolean token
+/// (e.g. `VCAS_TRACE=trace.jsonl`) doubles as the output path.
+pub fn default_trace() -> bool {
+    match std::env::var("VCAS_TRACE") {
+        Ok(v) => !matches!(v.as_str(), "" | "0" | "off" | "false"),
+        Err(_) => false,
+    }
+}
+
+fn env_trace_path() -> String {
+    match std::env::var("VCAS_TRACE") {
+        Ok(v) if !matches!(v.as_str(), "" | "0" | "off" | "false" | "1" | "on" | "true") => v,
+        _ => String::new(),
+    }
+}
+
 /// Optimizer selection + hyperparameters.
 #[derive(Clone, Debug)]
 pub struct OptimConfig {
@@ -194,6 +234,7 @@ pub struct TrainConfig {
     pub vcas: VcasConfig,
     pub strategy: StrategyConfig,
     pub optim: OptimConfig,
+    pub telemetry: TelemetryConfig,
     /// Data-parallel worker count (1 = single stream).
     pub workers: usize,
     /// Native kernel threads (0 = auto: `VCAS_THREADS` env when set, else
@@ -236,6 +277,7 @@ impl Default for TrainConfig {
             vcas: VcasConfig::default(),
             strategy: StrategyConfig::default(),
             optim: OptimConfig::default(),
+            telemetry: TelemetryConfig::default(),
             workers: 1,
             threads: 0,
             prefetch: None,
@@ -348,6 +390,13 @@ impl TrainConfig {
                 bail!("strategy.vr_momentum must be in [0, 1), got {v}");
             }
             c.strategy.vr_momentum = v;
+        }
+
+        if let Some(v) = t.get_bool("telemetry", "trace") {
+            c.telemetry.trace = Some(v);
+        }
+        if let Some(v) = t.get_str("telemetry", "trace_out") {
+            c.telemetry.trace_out = v;
         }
 
         if let Some(v) = t.get_str("optim", "kind") {
@@ -482,6 +531,24 @@ mod tests {
         assert_eq!(TrainConfig::default().bucket_kb, 256, "default bucket cap 256 KiB");
         assert!(!TrainConfig::default().compress, "compression is opt-in");
         assert_eq!(TrainConfig::default().precision, None, "default precision = auto");
+    }
+
+    #[test]
+    fn telemetry_section_parses_and_defaults_off() {
+        let d = TrainConfig::default();
+        assert_eq!(d.telemetry.trace, None, "default trace = auto (VCAS_TRACE)");
+        assert!(d.telemetry.trace_out.is_empty());
+        let t = TomlTable::parse("[telemetry]\ntrace = true\ntrace_out = \"t.jsonl\"\n").unwrap();
+        let c = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(c.telemetry.trace, Some(true));
+        assert_eq!(c.telemetry.trace_out, "t.jsonl");
+        // explicit config wins over whatever VCAS_TRACE says
+        let (on, out) = c.telemetry.resolve();
+        assert!(on);
+        assert_eq!(out, "t.jsonl");
+        let t = TomlTable::parse("[telemetry]\ntrace = false\n").unwrap();
+        let (on, _) = TrainConfig::from_toml(&t).unwrap().telemetry.resolve();
+        assert!(!on);
     }
 
     #[test]

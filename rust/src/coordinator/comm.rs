@@ -344,11 +344,16 @@ pub struct ReduceOptions<'a> {
     pub workspace: Option<&'a Workspace>,
     /// 8-bit transport with error feedback (trajectory-changing opt-in).
     pub compression: Option<&'a CompressionState>,
+    /// Sink for per-bucket combine latency (histogram `allreduce_bucket_us`
+    /// plus an `allreduce/bucket` trace event when tracing). Observing
+    /// never touches RNG or reorders the combine, so the trajectory is
+    /// bitwise unaffected.
+    pub telemetry: Option<&'a crate::telemetry::Telemetry>,
 }
 
 impl Default for ReduceOptions<'_> {
     fn default() -> Self {
-        ReduceOptions { overlap: true, workspace: None, compression: None }
+        ReduceOptions { overlap: true, workspace: None, compression: None, telemetry: None }
     }
 }
 
@@ -380,6 +385,7 @@ struct SchedState<'a> {
     aborted: AtomicBool,
     ws: Option<&'a Workspace>,
     compression: Option<&'a CompressionState>,
+    telemetry: Option<&'a crate::telemetry::Telemetry>,
 }
 
 impl<'a> SchedState<'a> {
@@ -398,6 +404,7 @@ impl<'a> SchedState<'a> {
             aborted: AtomicBool::new(false),
             ws: opts.workspace,
             compression: opts.compression,
+            telemetry: opts.telemetry,
         }
     }
 
@@ -494,6 +501,7 @@ impl<'a> SchedState<'a> {
     /// is the identical f32 operation sequence, so bucketing cannot move
     /// a single bit.
     fn reduce_bucket(&self, b: usize, out: &mut [Option<Vec<f32>>]) -> Result<()> {
+        let started = self.telemetry.map(|_| std::time::Instant::now());
         let w = self.workers;
         let nb = self.plan.n_buckets();
         let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(w);
@@ -530,6 +538,20 @@ impl<'a> SchedState<'a> {
         }
         for buf in bufs {
             self.give_buf(buf);
+        }
+        if let (Some(tel), Some(started)) = (self.telemetry, started) {
+            let us = started.elapsed().as_micros() as f64;
+            tel.registry().histogram("allreduce_bucket_us").observe(us);
+            if tel.tracing() {
+                tel.event(
+                    "allreduce/bucket",
+                    vec![
+                        ("bucket", crate::telemetry::Value::from(b)),
+                        ("elems", crate::telemetry::Value::from(self.plan.buckets[b].elems)),
+                        ("dur_us", crate::telemetry::Value::from(us)),
+                    ],
+                );
+            }
         }
         Ok(())
     }
@@ -863,7 +885,7 @@ mod tests {
                 .collect();
             let exact = tree_allreduce_mean(grads.clone()).unwrap();
             let opts =
-                ReduceOptions { overlap: true, workspace: None, compression: Some(&comp) };
+                ReduceOptions { overlap: true, compression: Some(&comp), ..Default::default() };
             let got = overlapped_allreduce(workers, &plan, &opts, |w, p| {
                 for (t, gr) in grads[w].iter().enumerate() {
                     p.publish(t, gr)?;
@@ -899,7 +921,7 @@ mod tests {
         let plan = BucketPlan::new(&lens, &order, 150 * 4).unwrap();
         // sequential path so the take/give sequence is deterministic
         let opts =
-            ReduceOptions { overlap: false, workspace: Some(&ws), compression: None };
+            ReduceOptions { overlap: false, workspace: Some(&ws), ..Default::default() };
         let run = |seed: f32| {
             let grads: Vec<Vec<Vec<f32>>> = (0..3)
                 .map(|w| lens.iter().map(|&l| vec![seed + w as f32; l]).collect())

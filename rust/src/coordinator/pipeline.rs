@@ -356,6 +356,12 @@ impl BatchStream {
             None => bail!("batch stream closed: producer terminated (after an error or panic)"),
         }
     }
+
+    /// Batches currently queued ahead of the consumer (the prefetcher
+    /// occupancy telemetry reads this; racy by nature, diagnostics only).
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
 }
 
 impl Drop for BatchStream {
@@ -381,6 +387,7 @@ enum Inner {
 pub struct Prefetcher {
     inner: Inner,
     depth: usize,
+    telemetry: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
 }
 
 impl Prefetcher {
@@ -390,7 +397,19 @@ impl Prefetcher {
         } else {
             Inner::Stream(BatchStream::spawn(source, depth))
         };
-        Prefetcher { inner, depth }
+        Prefetcher { inner, depth, telemetry: None }
+    }
+
+    /// Attach a telemetry handle: every pull records a `prefetch_wait`
+    /// span (time blocked on the producer), a `prefetch_wait_us`
+    /// histogram sample and the queue-occupancy gauge. Pure observation —
+    /// the pull order and batch contents are untouched.
+    pub fn with_telemetry(
+        mut self,
+        tel: std::sync::Arc<crate::telemetry::Telemetry>,
+    ) -> Prefetcher {
+        self.telemetry = Some(tel);
+        self
     }
 
     /// Configured depth (0 = synchronous inline source).
@@ -401,7 +420,29 @@ impl Prefetcher {
     pub fn next(&mut self) -> Result<PreparedBatch> {
         match &mut self.inner {
             Inner::Sync(source) => source.next_batch(),
-            Inner::Stream(stream) => stream.next(),
+            Inner::Stream(stream) => {
+                let Some(tel) = &self.telemetry else {
+                    return stream.next();
+                };
+                let occupancy = stream.queued();
+                let watch = std::time::Instant::now();
+                let item = stream.next();
+                let wait_us = watch.elapsed().as_micros() as u64;
+                let reg = tel.registry();
+                reg.gauge("prefetch_occupancy").set(occupancy as f64);
+                reg.histogram("prefetch_wait_us").observe(wait_us as f64);
+                if tel.tracing() {
+                    use crate::telemetry::Value;
+                    tel.event(
+                        "prefetch_wait",
+                        vec![
+                            ("occupancy", Value::from(occupancy)),
+                            ("wait_us", Value::from(wait_us)),
+                        ],
+                    );
+                }
+                item
+            }
         }
     }
 }

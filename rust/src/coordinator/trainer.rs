@@ -33,10 +33,12 @@ use crate::formats::params::ParamSet;
 use crate::optim::{AdamW, LrSchedule, Optimizer, Sgdm};
 use crate::runtime::{Backend, GradOut, ModelKind, ModelSession};
 use crate::sampling::{build_strategy, SamplerStrategy, StepPlan};
+use crate::telemetry::{Telemetry, Value};
 use crate::util::rng::Pcg32;
 use crate::util::Stopwatch;
 
 use super::baselines::Selection;
+use super::comm::CommConfig;
 use super::flops::{CnnFlops, FlopsLedger, TransformerFlops};
 use super::metrics::{EvalPoint, RunResult, VarianceSnapshot};
 use super::pipeline::{default_prefetch, ClsSource, ImgSource, Prefetcher, ProbeSplitSource};
@@ -83,6 +85,7 @@ pub struct Trainer<'a> {
     sub_batch: usize,
     prefetch: usize,
     step: usize,
+    telemetry: Arc<Telemetry>,
 }
 
 impl<'a> Trainer<'a> {
@@ -91,6 +94,9 @@ impl<'a> Trainer<'a> {
         let params = session.load_params()?;
         let info = session.info().clone();
         let mut rng = Pcg32::new(cfg.seed, 0x7EA1);
+        // one telemetry handle per run; subsystems share it by Arc clone
+        // (tracing off = inert spans, but metric handles stay live)
+        let telemetry = Telemetry::from_config(&cfg.telemetry);
 
         // Prefetch depth: config override, else VCAS_PREFETCH / double
         // buffering. The epoch sampler's RNG lives inside the stream's
@@ -125,14 +131,18 @@ impl<'a> Trainer<'a> {
                     Prefetcher::new(
                         ProbeSplitSource::train(Box::new(make(train.clone())), m, freq),
                         depth,
+                    )
+                    .with_telemetry(telemetry.clone()),
+                    Some(
+                        Prefetcher::new(
+                            ProbeSplitSource::probe(Box::new(make(train)), m, freq),
+                            depth,
+                        )
+                        .with_telemetry(telemetry.clone()),
                     ),
-                    Some(Prefetcher::new(
-                        ProbeSplitSource::probe(Box::new(make(train)), m, freq),
-                        depth,
-                    )),
                 )
             } else {
-                (Prefetcher::new(make(train), depth), None)
+                (Prefetcher::new(make(train), depth).with_telemetry(telemetry.clone()), None)
             };
             (
                 TaskData::Img { eval, stream, probe },
@@ -169,14 +179,18 @@ impl<'a> Trainer<'a> {
                     Prefetcher::new(
                         ProbeSplitSource::train(Box::new(make(train.clone())), m, freq),
                         depth,
+                    )
+                    .with_telemetry(telemetry.clone()),
+                    Some(
+                        Prefetcher::new(
+                            ProbeSplitSource::probe(Box::new(make(train)), m, freq),
+                            depth,
+                        )
+                        .with_telemetry(telemetry.clone()),
                     ),
-                    Some(Prefetcher::new(
-                        ProbeSplitSource::probe(Box::new(make(train)), m, freq),
-                        depth,
-                    )),
                 )
             } else {
-                (Prefetcher::new(make(train), depth), None)
+                (Prefetcher::new(make(train), depth).with_telemetry(telemetry.clone()), None)
             };
             (
                 TaskData::Cls { eval, stream, probe },
@@ -189,13 +203,14 @@ impl<'a> Trainer<'a> {
 
         // all sampling decisions live behind the strategy object from here
         // on; the CNN path forces the controller into activation-only mode
-        let strategy = build_strategy(
+        let mut strategy = build_strategy(
             cfg,
             session.n_layers,
             info.sampled_indices(),
             main_batch,
             info.kind == ModelKind::Cnn,
         );
+        strategy.bind_telemetry(telemetry.clone());
 
         let opt: Box<dyn Optimizer> = if cfg.optim.kind == "sgdm" || info.kind == ModelKind::Cnn {
             Box::new(Sgdm::new(&params, cfg.optim.momentum, cfg.optim.weight_decay))
@@ -216,6 +231,29 @@ impl<'a> Trainer<'a> {
         );
 
         let sub_batch = backend.sub_batch();
+
+        // one structured event captures the whole resolved run config —
+        // the startup story the CLI used to scatter across print lines
+        if telemetry.tracing() {
+            let comm = CommConfig::resolve(cfg);
+            telemetry.event(
+                "run_config",
+                vec![
+                    ("model", Value::from(cfg.model.as_str())),
+                    ("task", Value::from(cfg.task.as_str())),
+                    ("method", Value::from(cfg.method.name())),
+                    ("steps", Value::from(cfg.steps)),
+                    ("seed", Value::from(cfg.seed)),
+                    ("prefetch", Value::from(prefetch)),
+                    ("overlap", Value::from(comm.overlap)),
+                    ("bucket_bytes", Value::from(comm.bucket_bytes)),
+                    ("compress", Value::from(comm.compress)),
+                    ("precision", Value::from(backend.precision().to_string())),
+                    ("threads", Value::from(backend.threads())),
+                ],
+            );
+        }
+
         Ok(Trainer {
             cfg: cfg.clone(),
             session,
@@ -232,6 +270,7 @@ impl<'a> Trainer<'a> {
             sub_batch,
             prefetch,
             step: 0,
+            telemetry,
         })
     }
 
@@ -342,6 +381,9 @@ impl<'a> Trainer<'a> {
         let default_sw = vec![1.0 / batch.n as f32; batch.n];
         let sw = sw.unwrap_or(&default_sw);
         let seed = self.next_seed();
+        let tel = self.telemetry.clone();
+        let mut sp = tel.span("bwd");
+        sp.field("n", batch.n);
         self.session
             .fwd_bwd_cls(&self.params, batch, sw, seed, rho, nu_apply, nu_probe)
     }
@@ -354,12 +396,18 @@ impl<'a> Trainer<'a> {
         nu_probe: &[f32],
     ) -> Result<GradOut> {
         let seed = self.next_seed();
+        let tel = self.telemetry.clone();
+        let mut sp = tel.span("bwd");
+        sp.field("n", batch.n);
         self.session
             .fwd_bwd_mlm(&self.params, batch, seed, rho, nu_apply, nu_probe)
     }
 
     fn grad_img(&mut self, batch: &ImgBatch, rho: &[f32]) -> Result<GradOut> {
         let seed = self.next_seed();
+        let tel = self.telemetry.clone();
+        let mut sp = tel.span("bwd");
+        sp.field("n", batch.n);
         let out = self.session.cnn_fwd_bwd(&self.params, batch, seed, rho)?;
         Ok(GradOut { loss: out.loss, grads: out.grads, act_norms: out.act_norms, vw: vec![] })
     }
@@ -404,6 +452,8 @@ impl<'a> Trainer<'a> {
     }
 
     fn run_probe(&mut self) -> Result<()> {
+        let tel = self.telemetry.clone();
+        let mut sp = tel.span("probe");
         let m = self.cfg.vcas.m_repeats;
         let (ones_rho, ones_nu) = self.ones();
         let (rho, _) = self.controller()?.train_ratios();
@@ -458,6 +508,25 @@ impl<'a> Trainer<'a> {
 
         let step = self.step;
         self.controller_mut()?.update(step, &exact, &sampled);
+
+        // publish the probe's variance decomposition; gauges are always
+        // live, the span payload only materializes when tracing
+        if let Some(rec) = self.controller()?.log.last() {
+            let reg = tel.registry();
+            reg.gauge("vcas_v_sgd").set(rec.v_s);
+            reg.gauge("vcas_v_act").set(rec.v_act);
+            reg.gauge("vcas_v_w").set(rec.v_w);
+            reg.gauge("vcas_s").set(rec.s);
+            if tel.tracing() {
+                sp.field("step", rec.step);
+                sp.field("v_sgd", rec.v_s);
+                sp.field("v_act", rec.v_act);
+                sp.field("v_w", rec.v_w);
+                sp.field("s", rec.s);
+                sp.field("rho", rec.rho.clone());
+                sp.field("nu", rec.nu.clone());
+            }
+        }
         Ok(())
     }
 
@@ -522,27 +591,40 @@ impl<'a> Trainer<'a> {
                 Ok(loss)
             }
             StepPlan::ApproxVjp { vjp_rho } => {
+                let tel = self.telemetry.clone();
                 let (loss, vw) = if self.is_img() {
                     let batch = self.next_img_batch()?;
                     let seed = self.next_seed();
-                    let out =
-                        self.session.cnn_fwd_bwd_vjp(&self.params, &batch, seed, vjp_rho)?;
+                    let out = {
+                        let mut sp = tel.span("bwd");
+                        sp.field("n", batch.n);
+                        sp.field("vjp_rho", vjp_rho);
+                        self.session.cnn_fwd_bwd_vjp(&self.params, &batch, seed, vjp_rho)?
+                    };
                     self.apply(&out.grads);
                     (out.loss, vec![])
                 } else if self.is_mlm() {
                     let batch = self.next_mlm_batch()?;
                     let seed = self.next_seed();
-                    let out =
-                        self.session.fwd_bwd_mlm_vjp(&self.params, &batch, seed, vjp_rho)?;
+                    let out = {
+                        let mut sp = tel.span("bwd");
+                        sp.field("n", batch.n);
+                        sp.field("vjp_rho", vjp_rho);
+                        self.session.fwd_bwd_mlm_vjp(&self.params, &batch, seed, vjp_rho)?
+                    };
                     self.apply(&out.grads);
                     (out.loss, out.vw)
                 } else {
                     let batch = self.next_cls_batch()?;
                     let sw = vec![1.0 / batch.n as f32; batch.n];
                     let seed = self.next_seed();
-                    let out = self
-                        .session
-                        .fwd_bwd_cls_vjp(&self.params, &batch, &sw, seed, vjp_rho)?;
+                    let out = {
+                        let mut sp = tel.span("bwd");
+                        sp.field("n", batch.n);
+                        sp.field("vjp_rho", vjp_rho);
+                        self.session
+                            .fwd_bwd_cls_vjp(&self.params, &batch, &sw, seed, vjp_rho)?
+                    };
                     self.apply(&out.grads);
                     (out.loss, out.vw)
                 };
@@ -597,6 +679,10 @@ impl<'a> Trainer<'a> {
     // ---- evaluation --------------------------------------------------------
 
     pub fn evaluate(&mut self) -> Result<EvalPoint> {
+        let tel = self.telemetry.clone();
+        let mut sp = tel.span("fwd");
+        sp.field("step", self.step);
+        sp.field("eval", true);
         let step = self.step;
         match &self.data {
             TaskData::Cls { eval, .. } => {
@@ -770,6 +856,57 @@ impl<'a> Trainer<'a> {
         Ok(out.act_norms)
     }
 
+    /// Per-step telemetry: step counter and loss gauge always; a `step`
+    /// trace event with the executed plan when tracing. The loss crosses
+    /// into JSONL through f64 (exact for every f32), so traced losses
+    /// round-trip bitwise against the in-memory loss curve.
+    fn note_step(&self, step: usize, loss: f32) {
+        let reg = self.telemetry.registry();
+        reg.counter("train_steps").inc();
+        reg.gauge("train_loss").set(f64::from(loss));
+        if !self.telemetry.tracing() {
+            return;
+        }
+        let mut fields: Vec<(&'static str, Value)> = vec![
+            ("step", Value::from(step)),
+            ("loss", Value::from(loss)),
+            ("flops", Value::from(self.ledger.actual_total)),
+        ];
+        match self.strategy.plan() {
+            StepPlan::Exact => fields.push(("plan", Value::from("exact"))),
+            StepPlan::Adaptive { rho, nu } => {
+                fields.push(("plan", Value::from("adaptive")));
+                fields.push(("rho", Value::from(rho)));
+                fields.push(("nu", Value::from(nu)));
+            }
+            StepPlan::ApproxVjp { vjp_rho } => {
+                fields.push(("plan", Value::from("approx_vjp")));
+                fields.push(("vjp_rho", Value::from(vjp_rho)));
+            }
+            StepPlan::Subset => fields.push(("plan", Value::from("subset"))),
+        }
+        // the sketch-variance channel, when this step recorded one
+        if let Some(&(s, vw)) = self.strategy.variance_trace().last() {
+            if s == step {
+                fields.push(("vw", Value::from(vw)));
+            }
+        }
+        self.telemetry.event("step", fields);
+    }
+
+    /// End-of-run registry publication: kernel workspace pool statistics
+    /// (per width) and the process-wide matmul tier counters.
+    fn publish_run_metrics(&self) {
+        let reg = self.telemetry.registry();
+        if let Some(stats) = self.session.backend().workspace_stats() {
+            stats.publish(reg);
+        }
+        let tiers = crate::runtime::kernels::matmul_tier_counts();
+        reg.gauge("matmul_calls_f32").set(tiers[crate::runtime::kernels::TIER_F32] as f64);
+        reg.gauge("matmul_calls_bf16").set(tiers[crate::runtime::kernels::TIER_BF16] as f64);
+        reg.gauge("matmul_calls_int8").set(tiers[crate::runtime::kernels::TIER_INT8] as f64);
+    }
+
     pub fn run(&mut self) -> Result<RunResult> {
         let watch = Stopwatch::start();
         let mut result = RunResult {
@@ -784,6 +921,7 @@ impl<'a> Trainer<'a> {
             let loss = self.train_step()?;
             result.losses.push((step, loss));
             result.flops_curve.push((step, self.ledger.actual_total));
+            self.note_step(step, loss);
             self.step += 1;
             if self.cfg.eval_every > 0 && (step + 1) % self.cfg.eval_every == 0 {
                 let ev = self.evaluate()?;
@@ -817,6 +955,9 @@ impl<'a> Trainer<'a> {
                 result.write_probe_csv(&dir.join(format!("{tag}_probes.csv")))?;
             }
         }
+
+        self.publish_run_metrics();
+        self.telemetry.flush()?;
         Ok(result)
     }
 
@@ -825,6 +966,12 @@ impl<'a> Trainer<'a> {
     /// trainer RNG stream — see the pipeline module docs).
     pub fn prefetch_depth(&self) -> usize {
         self.prefetch
+    }
+
+    /// The run's telemetry handle (registry + trace sink). Callers can
+    /// drain trace events or read metrics after (or during) a run.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
     }
 
     /// Current live ratios (diagnostics; exact/baselines report all-ones).

@@ -38,6 +38,10 @@
 // read like the math (and so the zero-row skips are visible); the iterator
 // rewrites this lint suggests obscure both.
 #![allow(clippy::needless_range_loop)]
+// Library code reports through `telemetry` (structured events + metrics),
+// never raw stdout/stderr — those belong to the CLI binary. Grep-resistant
+// by construction: a stray print in the library is a compile error.
+#![deny(clippy::print_stdout, clippy::print_stderr)]
 
 pub mod cli;
 pub mod config;
@@ -49,4 +53,5 @@ pub mod optim;
 pub mod runtime;
 pub mod sampling;
 pub mod serving;
+pub mod telemetry;
 pub mod util;

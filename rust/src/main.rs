@@ -47,6 +47,7 @@ fn parse_args() -> Result<Args> {
         .switch("compress", "8-bit quantized allreduce with error feedback (changes trajectories)")
         .flag("precision", "kernel tier: f32|bf16 for train, f32|bf16|int8 for serve (changes numerics)")
         .flag("out-dir", "write metric CSVs here")
+        .flag("trace-out", "write the telemetry trace as JSONL here (implies tracing on)")
         .flag("tau", "vcas variance thresholds tau_act = tau_w")
         .flag("freq", "vcas adaptation frequency F")
         .flag("lr", "peak learning rate")
@@ -57,6 +58,7 @@ fn parse_args() -> Result<Args> {
         .flag("queue", "serve: bounded queue depth (admission control)")
         .flag("workers", "serve: worker threads for the model")
         .flag("checkpoint", "serve: .params.bin checkpoint to load (default: init params)")
+        .switch("metrics", "serve: print a Prometheus metrics snapshot after the run")
         .switch("quiet", "suppress per-step logging")
         .parse_env()
 }
@@ -172,6 +174,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.throughput_rps(),
         report.max_batched
     );
+    if args.switch("metrics") {
+        println!("--- metrics snapshot (prometheus text) ---");
+        print!("{}", pool.metrics_text());
+    }
     Ok(())
 }
 
@@ -227,43 +233,44 @@ fn cmd_train(args: &Args, artifacts: &Path) -> Result<()> {
     }
     cfg.vcas.freq = args.flag_usize("freq", cfg.vcas.freq)?;
     cfg.optim.lr = args.flag_f64("lr", cfg.optim.lr)?;
+    if let Some(v) = args.flag("trace-out") {
+        cfg.telemetry.trace_out = v.to_string();
+        cfg.telemetry.trace = Some(true);
+    }
 
     let threads = if cfg.threads == 0 { default_threads() } else { cfg.threads };
     let precision = cfg.precision.unwrap_or_else(default_precision);
     let backend = default_backend_with(artifacts, threads, precision);
+    let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
+
+    // One human-readable summary line; the machine-readable twin is the
+    // `run_config` trace event the trainer emits when tracing is on.
+    let comm = CommConfig::resolve(&cfg);
+    let tel = trainer.telemetry().clone();
     println!(
-        "training {} on {} with {} for {} steps (backend {}, {} kernel threads)",
+        "train {}/{} method={} steps={} seed={} | backend {} threads={} precision={}{} | \
+         prefetch={} overlap={} buckets={} compress={}{}",
         cfg.model,
         cfg.task,
         cfg.method.name(),
         cfg.steps,
+        cfg.seed,
         backend.name(),
-        backend.threads()
-    );
-    let mut trainer = Trainer::new(backend.as_ref(), &cfg)?;
-    println!(
-        "async pipeline: prefetch depth {} ({})",
-        trainer.prefetch_depth(),
-        if trainer.prefetch_depth() == 0 { "synchronous" } else { "double-buffered" }
-    );
-    let comm = CommConfig::resolve(&cfg);
-    let bucket = if comm.bucket_bytes == 0 {
-        "unbounded bucket".to_string()
-    } else {
-        format!("{} KiB buckets", comm.bucket_bytes / 1024)
-    };
-    println!(
-        "ddp comm: overlap {} ({bucket}, compression {})",
-        if comm.overlap { "on" } else { "off" },
-        if comm.compress { "8-bit + error feedback" } else { "off" }
-    );
-    println!(
-        "precision: {} ({})",
+        backend.threads(),
         precision,
-        if precision == Precision::F32 {
-            "bitwise-deterministic tier"
+        if precision == Precision::F32 { "" } else { " (non-f32 tier: numerics differ)" },
+        trainer.prefetch_depth(),
+        if comm.overlap { "on" } else { "off" },
+        if comm.bucket_bytes == 0 {
+            "unbounded".to_string()
         } else {
-            "reduced-precision tier — numerics differ from f32, tolerance-tested"
+            format!("{}KiB", comm.bucket_bytes / 1024)
+        },
+        if comm.compress { "8bit" } else { "off" },
+        if tel.tracing() && !tel.trace_out().is_empty() {
+            format!(" | trace={}", tel.trace_out())
+        } else {
+            String::new()
         }
     );
     let result = trainer.run()?;

@@ -204,6 +204,13 @@ pub trait Backend {
         Precision::F32
     }
 
+    /// Point-in-time statistics of this backend's kernel scratch pool,
+    /// when it has one (the native backend does). Telemetry publishes
+    /// these into the metrics registry at run end; informational only.
+    fn workspace_stats(&self) -> Option<crate::runtime::kernels::WorkspaceStats> {
+        None
+    }
+
     /// Registered model names.
     fn models(&self) -> Vec<String>;
 

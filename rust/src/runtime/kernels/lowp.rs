@@ -410,6 +410,7 @@ pub fn int8_linear_into(
     debug_assert_eq!(w_scale.len(), dout);
     debug_assert_eq!(bias.len(), dout);
     debug_assert_eq!(out.len(), rows * dout);
+    super::note_int8_linear();
     // Per-row dynamic activation quantization, staged once for the batch.
     let mut qa_bytes = ws.take_u8(rows * din);
     let mut a_scale = ws.take(rows);

@@ -167,6 +167,7 @@ impl MatmulPlan {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), k * n);
         debug_assert_eq!(out.len(), m * n);
+        super::note_matmul(self.precision);
         out.fill(0.0);
         if self.precision == Precision::Bf16 {
             let (qa, qb) = pack_operands(a, b);
@@ -191,6 +192,7 @@ impl MatmulPlan {
         debug_assert_eq!(a.len(), m * k);
         debug_assert_eq!(b.len(), n * k);
         debug_assert_eq!(out.len(), m * n);
+        super::note_matmul(self.precision);
         // NT writes every output element directly — no zero fill needed.
         if self.precision == Precision::Bf16 {
             let (qa, qb) = pack_operands(a, b);
@@ -232,6 +234,7 @@ impl MatmulPlan {
         debug_assert_eq!(a.len(), r * m);
         debug_assert_eq!(b.len(), r * n);
         debug_assert_eq!(out.len(), m * n);
+        super::note_matmul(self.precision);
         out.fill(0.0);
         if self.precision == Precision::Bf16 {
             let (qa, qb) = pack_operands(a, b);

@@ -63,7 +63,49 @@ pub use matmul::{
     matmul_tn_into, reference, weighted_gather_tn, weighted_gather_tn_into, weighted_tn,
     weighted_tn_into, Layout, MatmulPlan,
 };
-pub use workspace::Workspace;
+pub use workspace::{Workspace, WorkspaceStats, WIDTH_F32, WIDTH_U16, WIDTH_U8};
+
+/// Process-wide per-tier matmul call counters (f32 / bf16 / int8), one
+/// relaxed increment per planned matmul execution — cheap enough to stay
+/// on unconditionally (pinned ≤ 2% by the `perf_micro` telemetry
+/// section). Indexed by [`TIER_F32`]/[`TIER_BF16`]/[`TIER_INT8`].
+static MATMUL_CALLS: [std::sync::atomic::AtomicU64; 3] = [
+    std::sync::atomic::AtomicU64::new(0),
+    std::sync::atomic::AtomicU64::new(0),
+    std::sync::atomic::AtomicU64::new(0),
+];
+
+/// Index into [`matmul_tier_counts`] for the f32 tier.
+pub const TIER_F32: usize = 0;
+/// Index into [`matmul_tier_counts`] for the bf16 tier.
+pub const TIER_BF16: usize = 1;
+/// Index into [`matmul_tier_counts`] for the int8 serving tier.
+pub const TIER_INT8: usize = 2;
+
+/// Charge one matmul execution to `precision`'s tier counter.
+/// `Int8Infer` plans execute as f32 (the real int8 path is
+/// [`lowp::int8_linear_into`], which charges [`TIER_INT8`] itself).
+#[inline]
+pub(crate) fn note_matmul(precision: Precision) {
+    let tier = match precision {
+        Precision::F32 | Precision::Int8Infer => TIER_F32,
+        Precision::Bf16 => TIER_BF16,
+    };
+    MATMUL_CALLS[tier].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Charge one int8 serving linear to the [`TIER_INT8`] counter.
+#[inline]
+pub(crate) fn note_int8_linear() {
+    MATMUL_CALLS[TIER_INT8].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Cumulative process-wide matmul executions per precision tier
+/// (`[f32, bf16, int8]`). Monotone; telemetry publishes deltas or
+/// absolutes as gauges.
+pub fn matmul_tier_counts() -> [u64; 3] {
+    std::array::from_fn(|i| MATMUL_CALLS[i].load(std::sync::atomic::Ordering::Relaxed))
+}
 
 /// Storage precision for matmul operands. Unlike the thread/SIMD knobs,
 /// non-default tiers **change numeric results** (still deterministically)

@@ -64,14 +64,67 @@ impl FreeList {
     }
 }
 
+/// Element-width index into the per-width counter arrays: the free
+/// lists were always separate per width, and the counters now are too,
+/// so a `u8` take can never masquerade as a hit on the `u16` list.
+pub const WIDTH_F32: usize = 0;
+/// See [`WIDTH_F32`].
+pub const WIDTH_U16: usize = 1;
+/// See [`WIDTH_F32`].
+pub const WIDTH_U8: usize = 2;
+const N_WIDTHS: usize = 3;
+
+/// Point-in-time pool statistics, per element width, for telemetry.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkspaceStats {
+    /// Take calls served, indexed by [`WIDTH_F32`]/[`WIDTH_U16`]/[`WIDTH_U8`].
+    pub takes: [usize; 3],
+    /// Takes that had to allocate, same indexing.
+    pub allocs: [usize; 3],
+    /// Buffers currently parked across all free lists.
+    pub pooled: usize,
+    /// Bytes currently parked across all free lists.
+    pub pooled_bytes: usize,
+}
+
+impl WorkspaceStats {
+    /// Pool hit rate for one width: fraction of takes served without
+    /// touching the heap (1.0 for a width with no takes yet).
+    pub fn hit_rate(&self, width: usize) -> f64 {
+        if self.takes[width] == 0 {
+            return 1.0;
+        }
+        1.0 - self.allocs[width] as f64 / self.takes[width] as f64
+    }
+
+    /// Publish this snapshot into a metrics registry: per-width
+    /// `workspace_takes_*` / `workspace_allocs_*` / `workspace_hit_rate_*`
+    /// gauges plus the parked buffer/byte totals.
+    pub fn publish(&self, registry: &crate::telemetry::Registry) {
+        for (w, tag) in [(WIDTH_F32, "f32"), (WIDTH_U16, "u16"), (WIDTH_U8, "u8")] {
+            registry
+                .gauge(&format!("workspace_takes_{tag}"))
+                .set(self.takes[w] as f64);
+            registry
+                .gauge(&format!("workspace_allocs_{tag}"))
+                .set(self.allocs[w] as f64);
+            registry
+                .gauge(&format!("workspace_hit_rate_{tag}"))
+                .set(self.hit_rate(w));
+        }
+        registry.gauge("workspace_pooled_bufs").set(self.pooled as f64);
+        registry.gauge("workspace_pooled_bytes").set(self.pooled_bytes as f64);
+    }
+}
+
 /// A shared pool of reusable scratch buffers (`Vec<f32>` plus byte-typed
 /// `Vec<u16>` / `Vec<u8>` for reduced-precision staging). Each free list
 /// is sorted ascending by capacity (ties in any order — contents are
 /// unspecified anyway), which is what makes best-fit a binary search.
 pub struct Workspace {
     pool: Mutex<FreeList>,
-    takes: AtomicUsize,
-    allocs: AtomicUsize,
+    takes: [AtomicUsize; N_WIDTHS],
+    allocs: [AtomicUsize; N_WIDTHS],
     byte_cap: usize,
 }
 
@@ -85,8 +138,8 @@ impl Workspace {
                 u8s: Vec::new(),
                 bytes: 0,
             }),
-            takes: AtomicUsize::new(0),
-            allocs: AtomicUsize::new(0),
+            takes: std::array::from_fn(|_| AtomicUsize::new(0)),
+            allocs: std::array::from_fn(|_| AtomicUsize::new(0)),
             byte_cap: MAX_POOLED_BYTES,
         }
     }
@@ -102,15 +155,20 @@ impl Workspace {
 
     /// Width-generic take: pop the smallest sufficient buffer from the
     /// projected free list (debiting the shared byte count at this width's
-    /// element size), else allocate. All widths share the take/alloc
-    /// counters, so the steady-state "allocations stay flat" assertions
-    /// cover mixed-width cycles too.
+    /// element size), else allocate. Each width keeps its own take/alloc
+    /// counters — a `give_u16` followed by a same-byte-size `take_u8`
+    /// cannot reuse the buffer (the lists are typed), and the hit-rate
+    /// accounting now says so instead of conflating every width into one
+    /// pair; the aggregate [`Workspace::takes`]/[`Workspace::allocations`]
+    /// sums keep the steady-state "allocations stay flat" assertions
+    /// covering mixed-width cycles too.
     fn take_in<T: Copy + Default>(
         &self,
         len: usize,
+        width: usize,
         proj: fn(&mut FreeList) -> (&mut Vec<Vec<T>>, &mut usize),
     ) -> Vec<T> {
-        self.takes.fetch_add(1, Ordering::Relaxed);
+        self.takes[width].fetch_add(1, Ordering::Relaxed);
         let esz = std::mem::size_of::<T>();
         let mut buf = {
             let mut pool = self.pool.lock().unwrap();
@@ -125,7 +183,7 @@ impl Workspace {
             }
         };
         if buf.capacity() < len {
-            self.allocs.fetch_add(1, Ordering::Relaxed);
+            self.allocs[width].fetch_add(1, Ordering::Relaxed);
         }
         // shrink is O(1), grow writes only the new tail — contents are
         // unspecified either way, so no full memset is ever paid
@@ -159,7 +217,7 @@ impl Workspace {
     /// the lock, same selection the old full linear scan made); only when
     /// none fits does the take count as a heap allocation.
     pub fn take(&self, len: usize) -> Vec<f32> {
-        self.take_in(len, |p| (&mut p.bufs, &mut p.bytes))
+        self.take_in(len, WIDTH_F32, |p| (&mut p.bufs, &mut p.bytes))
     }
 
     /// Return a buffer to the pool (capacity is what gets reused; length
@@ -175,7 +233,7 @@ impl Workspace {
     /// [`Workspace::take`] for `u16` staging buffers (bf16-packed matmul
     /// operands). Same unspecified-contents / best-fit contract.
     pub fn take_u16(&self, len: usize) -> Vec<u16> {
-        self.take_in(len, |p| (&mut p.u16s, &mut p.bytes))
+        self.take_in(len, WIDTH_U16, |p| (&mut p.u16s, &mut p.bytes))
     }
 
     /// [`Workspace::give`] for `u16` staging buffers.
@@ -186,7 +244,7 @@ impl Workspace {
     /// [`Workspace::take`] for `u8` staging buffers (int8-quantized rows).
     /// Same unspecified-contents / best-fit contract.
     pub fn take_u8(&self, len: usize) -> Vec<u8> {
-        self.take_in(len, |p| (&mut p.u8s, &mut p.bytes))
+        self.take_in(len, WIDTH_U8, |p| (&mut p.u8s, &mut p.bytes))
     }
 
     /// [`Workspace::give`] for `u8` staging buffers.
@@ -194,15 +252,34 @@ impl Workspace {
         self.give_in(buf, |p| (&mut p.u8s, &mut p.bytes))
     }
 
-    /// Total `take` calls served (all element widths).
+    /// Total `take` calls served (sum over element widths).
     pub fn takes(&self) -> usize {
-        self.takes.load(Ordering::Relaxed)
+        self.takes.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
-    /// Takes that had to allocate (no pooled buffer fit). Flat across
-    /// steady-state steps == every hot-loop buffer is being reused.
+    /// Takes that had to allocate (no pooled buffer fit; sum over
+    /// element widths). Flat across steady-state steps == every
+    /// hot-loop buffer is being reused.
     pub fn allocations(&self) -> usize {
-        self.allocs.load(Ordering::Relaxed)
+        self.allocs.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Per-width pool statistics (takes/allocs by element width plus the
+    /// parked buffer/byte totals) — the registry-facing snapshot.
+    pub fn stats(&self) -> WorkspaceStats {
+        let pool = self.pool.lock().unwrap();
+        WorkspaceStats {
+            takes: std::array::from_fn(|w| self.takes[w].load(Ordering::Relaxed)),
+            allocs: std::array::from_fn(|w| self.allocs[w].load(Ordering::Relaxed)),
+            pooled: pool.total_bufs(),
+            pooled_bytes: pool.bytes,
+        }
+    }
+
+    /// Publish the current pool statistics into a metrics registry (see
+    /// [`WorkspaceStats::publish`]).
+    pub fn publish(&self, registry: &crate::telemetry::Registry) {
+        self.stats().publish(registry);
     }
 
     /// Buffers currently parked across all free lists.
@@ -393,6 +470,42 @@ mod tests {
         ws.give(Vec::with_capacity(1024)); // 4096 bytes > 4096 - 640 remaining
         assert_eq!(ws.pooled(), 2, "shared byte budget must gate every width");
         assert_eq!(ws.pooled_bytes(), 256 * 2 + 128);
+    }
+
+    /// Satellite fix: hit-rate accounting is per element width. A parked
+    /// `u16` buffer cannot serve a same-byte-size `u8` take (the lists
+    /// are typed), so that take's miss must charge the `u8` width — and
+    /// the later `u16` reuse must count as a `u16` hit — instead of both
+    /// widths blurring through one shared counter pair.
+    #[test]
+    fn hit_rate_accounting_is_per_width_not_conflated() {
+        let ws = Workspace::new();
+        let h = ws.take_u16(256); // 512 bytes
+        ws.give_u16(h);
+        // same byte size, different width: misses (typed lists) and the
+        // miss lands on the u8 counters only
+        let q = ws.take_u8(512); // 512 bytes
+        ws.give_u8(q);
+        // same width, same size: hit on the u16 counters only
+        let h = ws.take_u16(256);
+        ws.give_u16(h);
+        let s = ws.stats();
+        assert_eq!(s.takes, [0, 2, 1]);
+        assert_eq!(s.allocs, [0, 1, 1]);
+        assert_eq!(s.hit_rate(WIDTH_U16), 0.5, "u16: 1 warm-up miss, 1 reuse hit");
+        assert_eq!(s.hit_rate(WIDTH_U8), 0.0, "u8 cannot reuse the u16 buffer");
+        assert_eq!(s.hit_rate(WIDTH_F32), 1.0, "untouched width reports 1.0");
+        // aggregates still sum over widths (pre-existing tests rely on it)
+        assert_eq!(ws.takes(), 3);
+        assert_eq!(ws.allocations(), 2);
+        assert_eq!(s.pooled, 2);
+        assert_eq!(s.pooled_bytes, 512 + 512);
+        // registry publish exposes the same numbers
+        let reg = crate::telemetry::Registry::new();
+        ws.publish(&reg);
+        assert_eq!(reg.gauge("workspace_takes_u16").value(), 2.0);
+        assert_eq!(reg.gauge("workspace_hit_rate_u8").value(), 0.0);
+        assert_eq!(reg.gauge("workspace_pooled_bytes").value(), 1024.0);
     }
 
     /// Simultaneous forward passes from serving pool workers share one

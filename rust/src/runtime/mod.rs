@@ -71,7 +71,14 @@ pub fn default_backend_with(
             match XlaBackend::load(artifacts) {
                 Ok(b) => return Box::new(b),
                 Err(e) => {
-                    eprintln!("warning: artifacts unusable ({e}); falling back to native backend")
+                    // Startup warning on a degraded-but-working path; the
+                    // crate-wide print deny carves out this one escape.
+                    #[allow(clippy::print_stderr)]
+                    {
+                        eprintln!(
+                            "warning: artifacts unusable ({e}); falling back to native backend"
+                        )
+                    }
                 }
             }
         }

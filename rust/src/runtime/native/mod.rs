@@ -323,6 +323,10 @@ impl Backend for NativeBackend {
         self.precision
     }
 
+    fn workspace_stats(&self) -> Option<crate::runtime::kernels::WorkspaceStats> {
+        Some(self.workspace().stats())
+    }
+
     fn models(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }

@@ -111,6 +111,12 @@ pub trait SamplerStrategy {
     fn variance_trace(&self) -> &[(usize, f32)] {
         &[]
     }
+
+    /// Attach the run's shared telemetry handle. Strategies that publish
+    /// live metrics keep the clone; the default discards it, so existing
+    /// strategies need no change. Telemetry is observe-only — binding it
+    /// must never alter a strategy's rng draws or decisions.
+    fn bind_telemetry(&mut self, _telemetry: std::sync::Arc<crate::telemetry::Telemetry>) {}
 }
 
 // ---- exact ----------------------------------------------------------------
@@ -327,11 +333,12 @@ impl SamplerStrategy for SubsetStrategy {
 pub struct ApproxVjpStrategy {
     vjp_rho: f32,
     trace: Vec<(usize, f32)>,
+    telemetry: Option<std::sync::Arc<crate::telemetry::Telemetry>>,
 }
 
 impl ApproxVjpStrategy {
     pub fn new(vjp_rho: f32) -> ApproxVjpStrategy {
-        ApproxVjpStrategy { vjp_rho, trace: Vec::new() }
+        ApproxVjpStrategy { vjp_rho, trace: Vec::new(), telemetry: None }
     }
 }
 
@@ -345,11 +352,22 @@ impl SamplerStrategy for ApproxVjpStrategy {
     }
 
     fn record_step_variance(&mut self, step: usize, vw: &[f32]) {
-        self.trace.push((step, vw.iter().sum()));
+        let total: f32 = vw.iter().sum();
+        self.trace.push((step, total));
+        // live view of the same channel the trace accumulates
+        if let Some(tel) = &self.telemetry {
+            let reg = tel.registry();
+            reg.gauge("vjp_vw").set(f64::from(total));
+            reg.counter("vjp_steps").inc();
+        }
     }
 
     fn variance_trace(&self) -> &[(usize, f32)] {
         &self.trace
+    }
+
+    fn bind_telemetry(&mut self, telemetry: std::sync::Arc<crate::telemetry::Telemetry>) {
+        self.telemetry = Some(telemetry);
     }
 }
 

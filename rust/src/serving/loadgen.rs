@@ -10,6 +10,7 @@
 
 use std::time::{Duration, Instant};
 
+use crate::telemetry::HistogramSnapshot;
 use crate::util::rng::Pcg32;
 use crate::util::stats::percentile;
 
@@ -44,8 +45,14 @@ pub struct LoadReport {
     pub rejected: usize,
     /// Admitted requests that failed (backend error or shutdown).
     pub errors: usize,
-    /// Per-completed-request submit-to-reply latency, µs.
+    /// Per-completed-request submit-to-reply latency, µs (kept for exact
+    /// cross-checks; the reported quantiles come from `hist`).
     pub latencies_us: Vec<f32>,
+    /// This run's window of the pool's shared per-tenant latency
+    /// histogram: the delta between the snapshots taken before firing and
+    /// after the last reply (scoped correctly even against a pool that
+    /// served earlier runs, assuming no concurrent traffic on the tenant).
+    pub hist: HistogramSnapshot,
     /// Largest batch any completed request shared a forward with.
     pub max_batched: usize,
     /// Wall-clock of the whole run (fire + await).
@@ -53,12 +60,21 @@ pub struct LoadReport {
 }
 
 impl LoadReport {
+    /// Median latency from the shared histogram registry (µs; bucket
+    /// resolution ≈ 15.5% relative).
     pub fn p50_us(&self) -> f64 {
-        if self.latencies_us.is_empty() { 0.0 } else { percentile(&self.latencies_us, 0.5) }
+        self.hist.quantile(0.5)
     }
 
+    /// p99 latency from the shared histogram registry (µs).
     pub fn p99_us(&self) -> f64 {
-        if self.latencies_us.is_empty() { 0.0 } else { percentile(&self.latencies_us, 0.99) }
+        self.hist.quantile(0.99)
+    }
+
+    /// Exact sorted-vector percentile over the recorded latencies — the
+    /// cross-check the telemetry tests hold the histogram quantiles to.
+    pub fn exact_percentile_us(&self, q: f64) -> f64 {
+        if self.latencies_us.is_empty() { 0.0 } else { percentile(&self.latencies_us, q) }
     }
 
     /// Completed requests per second over the whole run.
@@ -87,6 +103,9 @@ pub fn run_open_loop(
         .info(model)
         .ok_or_else(|| ServingError::UnknownModel(model.to_string()))?;
     let (seq_len, vocab) = (info.seq_len, info.vocab);
+    let base = pool
+        .latency_snapshot(model)
+        .ok_or_else(|| ServingError::UnknownModel(model.to_string()))?;
     let mut rng = Pcg32::new(spec.seed, 0x5E4E);
     let period = if spec.rate_hz > 0.0 {
         Duration::from_secs_f64(1.0 / spec.rate_hz)
@@ -121,12 +140,20 @@ pub fn run_open_loop(
             Err(_) => errors += 1,
         }
     }
+    // every completed reply was observed into the tenant histogram before
+    // it was sent (worker program order + channel synchronization), so
+    // this delta covers exactly this run's completed requests
+    let hist = pool
+        .latency_snapshot(model)
+        .ok_or_else(|| ServingError::UnknownModel(model.to_string()))?
+        .sub(&base);
     Ok(LoadReport {
         offered: spec.requests,
         completed: latencies.len(),
         rejected,
         errors,
         latencies_us: latencies,
+        hist,
         max_batched,
         elapsed: start.elapsed(),
     })
@@ -156,6 +183,33 @@ mod tests {
         assert_eq!(report.latencies_us.len(), report.completed);
         assert!(report.p99_us() >= report.p50_us());
         assert!(report.throughput_rps() > 0.0);
+        // the histogram window covers exactly this run's replies
+        assert_eq!(report.hist.count as usize, report.completed);
+    }
+
+    /// Satellite: the registry-histogram quantiles and the exact
+    /// sorted-vector percentiles must agree on the same fixed trace to
+    /// within the histogram's bucket resolution.
+    #[test]
+    fn histogram_quantiles_agree_with_exact_percentiles() {
+        let backend = Arc::new(NativeBackend::with_default_models().with_threads(1));
+        let pool = SessionPool::builder(backend)
+            .model("tiny")
+            .build(ServeConfig::default())
+            .unwrap();
+        let spec = LoadSpec { requests: 32, rate_hz: 0.0, seed: 7 };
+        let report = run_open_loop(&pool, "tiny", &spec).unwrap();
+        assert_eq!(report.completed, 32, "rejected: {}", report.rejected);
+        for (q, hist) in [(0.5, report.p50_us()), (0.99, report.p99_us())] {
+            let exact = report.exact_percentile_us(q);
+            // one bucket of slack (≈15.5% relative) plus an absolute floor
+            // for microsecond-scale latencies near a bucket edge
+            let tol = (0.2 * exact).max(2.0);
+            assert!(
+                (hist - exact).abs() <= tol,
+                "q={q}: histogram {hist} vs exact {exact} (tol {tol})"
+            );
+        }
     }
 
     #[test]

@@ -77,6 +77,7 @@ use crate::data::batch::ClsBatch;
 use crate::error::{bail, ensure, Result};
 use crate::formats::params::ParamSet;
 use crate::runtime::{Backend, ModelInfo, ModelKind, ModelSession, Precision, QuantParamSet};
+use crate::telemetry::{Counter, Histogram, HistogramSnapshot, Registry, Telemetry};
 
 /// The backend handle serving shares across pool workers.
 pub type SharedBackend = Arc<dyn Backend + Send + Sync>;
@@ -190,6 +191,28 @@ struct Pending {
     t_submit: Instant,
 }
 
+/// Per-tenant metric handles, resolved once at build so the request hot
+/// path never takes the registry's name lock — a submit or reply costs
+/// one relaxed atomic per metric. Names carry the `model` label; the
+/// Prometheus renderer splices `le` into it for histogram buckets.
+struct TenantMetrics {
+    admitted: Counter,
+    rejected: Counter,
+    batch_size: Histogram,
+    latency_us: Histogram,
+}
+
+impl TenantMetrics {
+    fn new(registry: &Registry, model: &str) -> TenantMetrics {
+        TenantMetrics {
+            admitted: registry.counter(&format!("serve_admitted{{model=\"{model}\"}}")),
+            rejected: registry.counter(&format!("serve_rejected{{model=\"{model}\"}}")),
+            batch_size: registry.histogram(&format!("serve_batch_size{{model=\"{model}\"}}")),
+            latency_us: registry.histogram(&format!("serve_latency_us{{model=\"{model}\"}}")),
+        }
+    }
+}
+
 /// One served model: cached structural info (fetched exactly once at
 /// build — the request hot path does no name-keyed backend lookups),
 /// resident parameters, and the bounded request queue.
@@ -203,6 +226,7 @@ struct Tenant {
     quant: Option<Arc<QuantParamSet>>,
     queue: BoundedQueue<Pending>,
     completed: AtomicU64,
+    metrics: TenantMetrics,
 }
 
 /// Declarative pool construction: registered models + where their
@@ -210,12 +234,20 @@ struct Tenant {
 pub struct PoolBuilder {
     backend: SharedBackend,
     models: Vec<(String, Option<PathBuf>)>,
+    telemetry: Option<Arc<Telemetry>>,
 }
 
 impl PoolBuilder {
     /// Serve `name` with the backend's deterministic init parameters.
     pub fn model(mut self, name: &str) -> PoolBuilder {
         self.models.push((name.to_string(), None));
+        self
+    }
+
+    /// Share an existing telemetry handle (registry + optional tracing)
+    /// instead of the pool's default private, tracing-off one.
+    pub fn with_telemetry(mut self, telemetry: Arc<Telemetry>) -> PoolBuilder {
+        self.telemetry = Some(telemetry);
         self
     }
 
@@ -229,6 +261,7 @@ impl PoolBuilder {
     /// Load every tenant's info + parameters and spawn the worker teams.
     pub fn build(self, cfg: ServeConfig) -> Result<SessionPool> {
         ensure!(!self.models.is_empty(), "session pool needs at least one model");
+        let telemetry = self.telemetry.unwrap_or_else(Telemetry::disabled);
         let mut tenants: BTreeMap<String, Arc<Tenant>> = BTreeMap::new();
         for (name, ckpt) in &self.models {
             let info = self.backend.info(name)?;
@@ -255,6 +288,7 @@ impl PoolBuilder {
                     quant,
                     queue: BoundedQueue::new(cfg.queue_capacity),
                     completed: AtomicU64::new(0),
+                    metrics: TenantMetrics::new(telemetry.registry(), name),
                 }),
             );
         }
@@ -263,15 +297,16 @@ impl PoolBuilder {
             for w in 0..cfg.workers {
                 let tenant = tenant.clone();
                 let backend = self.backend.clone();
+                let tel = telemetry.clone();
                 let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
                 workers.push(
                     std::thread::Builder::new()
                         .name(format!("vcas-serve-{name}-{w}"))
-                        .spawn(move || worker_loop(backend, tenant, max_batch, max_wait))?,
+                        .spawn(move || worker_loop(backend, tenant, tel, max_batch, max_wait))?,
                 );
             }
         }
-        Ok(SessionPool { tenants, workers, cfg })
+        Ok(SessionPool { tenants, workers, cfg, telemetry })
     }
 }
 
@@ -279,7 +314,13 @@ impl PoolBuilder {
 /// through a cached-info [`ModelSession`], split the logits back into
 /// per-request replies. Exits when the queue is closed and drained, so
 /// every admitted request is answered even during shutdown.
-fn worker_loop(backend: SharedBackend, tenant: Arc<Tenant>, max_batch: usize, max_wait: Duration) {
+fn worker_loop(
+    backend: SharedBackend,
+    tenant: Arc<Tenant>,
+    tel: Arc<Telemetry>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
     let b: &dyn Backend = backend.as_ref();
     let session = ModelSession::with_info(b, tenant.info.clone());
     let (seq_len, n_classes) = (tenant.info.seq_len, tenant.info.n_classes);
@@ -290,9 +331,17 @@ fn worker_loop(backend: SharedBackend, tenant: Arc<Tenant>, max_batch: usize, ma
             x.extend_from_slice(&p.tokens);
         }
         let cls = ClsBatch { n, seq_len, x, y: vec![0; n], idx: (0..n).collect() };
-        let res = match &tenant.quant {
-            Some(q) => session.infer_cls_q(&tenant.params, q, &cls),
-            None => session.infer_cls(&tenant.params, &cls),
+        tenant.metrics.batch_size.observe(n as f64);
+        let res = {
+            let mut sp = tel.span("serve/batch");
+            sp.field("n", n);
+            if tel.tracing() {
+                sp.field("model", tenant.info.name.clone());
+            }
+            match &tenant.quant {
+                Some(q) => session.infer_cls_q(&tenant.params, q, &cls),
+                None => session.infer_cls(&tenant.params, &cls),
+            }
         };
         match res {
             Ok(logits) => {
@@ -304,6 +353,7 @@ fn worker_loop(backend: SharedBackend, tenant: Arc<Tenant>, max_batch: usize, ma
                         done_seq,
                         service_us: p.t_submit.elapsed().as_micros() as u64,
                     };
+                    tenant.metrics.latency_us.observe(reply.service_us as f64);
                     // a caller that dropped its ticket just declines the
                     // answer; that is not a worker error
                     let _ = p.tx.send(Ok(reply));
@@ -327,11 +377,12 @@ pub struct SessionPool {
     tenants: BTreeMap<String, Arc<Tenant>>,
     workers: Vec<JoinHandle<()>>,
     cfg: ServeConfig,
+    telemetry: Arc<Telemetry>,
 }
 
 impl SessionPool {
     pub fn builder(backend: SharedBackend) -> PoolBuilder {
-        PoolBuilder { backend, models: Vec::new() }
+        PoolBuilder { backend, models: Vec::new(), telemetry: None }
     }
 
     /// Served model names.
@@ -394,13 +445,46 @@ impl SessionPool {
         let (tx, rx) = mpsc::channel();
         let pending = Pending { tokens, tx, t_submit: Instant::now() };
         match tenant.queue.try_push(pending) {
-            Ok(ticket) => Ok(Ticket { ticket, rx }),
-            Err(e) if e.is_full() => Err(ServingError::Overloaded {
-                model: model.to_string(),
-                capacity: tenant.queue.capacity(),
-            }),
+            Ok(ticket) => {
+                tenant.metrics.admitted.inc();
+                Ok(Ticket { ticket, rx })
+            }
+            Err(e) if e.is_full() => {
+                tenant.metrics.rejected.inc();
+                Err(ServingError::Overloaded {
+                    model: model.to_string(),
+                    capacity: tenant.queue.capacity(),
+                })
+            }
             Err(_) => Err(ServingError::Shutdown),
         }
+    }
+
+    /// The pool's telemetry handle (shared with the trainer's when built
+    /// via [`PoolBuilder::with_telemetry`]).
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// Point-in-time snapshot of a tenant's service-latency histogram.
+    /// The load generator computes its p50/p99 from deltas of these.
+    pub fn latency_snapshot(&self, model: &str) -> Option<HistogramSnapshot> {
+        self.tenants.get(model).map(|t| t.metrics.latency_us.snapshot())
+    }
+
+    /// Render the registry as a Prometheus text snapshot (`serve
+    /// --metrics`), refreshing the live per-tenant queue-depth and
+    /// completed-count gauges first. Admission/reject counters and the
+    /// batch-size / latency histograms accumulate on the hot path.
+    pub fn metrics_text(&self) -> String {
+        let reg = self.telemetry.registry();
+        for (name, t) in &self.tenants {
+            reg.gauge(&format!("serve_queue_depth{{model=\"{name}\"}}"))
+                .set(t.queue.len() as f64);
+            reg.gauge(&format!("serve_completed{{model=\"{name}\"}}"))
+                .set(t.completed.load(Ordering::SeqCst) as f64);
+        }
+        reg.prometheus_text()
     }
 }
 
@@ -505,6 +589,42 @@ mod tests {
         assert_eq!(reply.logits.len(), info.n_classes);
         drop(p);
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn metrics_snapshot_reflects_served_traffic() {
+        let p = pool(ServeConfig::default());
+        let seq_len = p.info("tiny").unwrap().seq_len;
+        for _ in 0..3 {
+            p.submit("tiny", vec![1; seq_len]).unwrap().wait().unwrap();
+        }
+        let text = p.metrics_text();
+        assert!(text.contains("serve_admitted{model=\"tiny\"} 3"), "{text}");
+        assert!(text.contains("serve_latency_us_count{model=\"tiny\"} 3"), "{text}");
+        assert!(text.contains("serve_queue_depth{model=\"tiny\"}"), "{text}");
+        assert!(text.contains("serve_completed{model=\"tiny\"} 3"), "{text}");
+        assert!(text.contains("serve_batch_size_bucket{model=\"tiny\",le=\"+Inf\"}"), "{text}");
+        let snap = p.latency_snapshot("tiny").unwrap();
+        assert_eq!(snap.count, 3);
+        assert!(p.latency_snapshot("nope").is_none());
+    }
+
+    #[test]
+    fn rejected_submissions_count_per_tenant() {
+        // workers = 0: nothing drains, so capacity + 1 submits must
+        // produce exactly one typed rejection and one rejected count
+        let p = pool(ServeConfig { workers: 0, queue_capacity: 2, ..ServeConfig::default() });
+        let seq_len = p.info("tiny").unwrap().seq_len;
+        let _t1 = p.submit("tiny", vec![1; seq_len]).unwrap();
+        let _t2 = p.submit("tiny", vec![1; seq_len]).unwrap();
+        assert!(matches!(
+            p.submit("tiny", vec![1; seq_len]),
+            Err(ServingError::Overloaded { .. })
+        ));
+        let text = p.metrics_text();
+        assert!(text.contains("serve_admitted{model=\"tiny\"} 2"), "{text}");
+        assert!(text.contains("serve_rejected{model=\"tiny\"} 1"), "{text}");
+        assert!(text.contains("serve_queue_depth{model=\"tiny\"} 2"), "{text}");
     }
 
     #[test]

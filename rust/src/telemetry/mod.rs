@@ -1,0 +1,249 @@
+//! Unified telemetry: one instrumentation spine for trainer, samplers,
+//! kernels, DDP comm, and serving.
+//!
+//! Two layers share a thread → shard mapping:
+//!
+//! * **Metrics** ([`metrics`]) — counters, gauges, and log-bucketed
+//!   histograms in a name-keyed [`Registry`]. Writes are one relaxed
+//!   atomic on a padded shard; reads merge shards. Serving renders its
+//!   registry as Prometheus text (`serve --metrics`).
+//! * **Tracing** ([`trace`]) — span/point events (`step`, `probe`,
+//!   `fwd`, `bwd`, `allreduce/bucket`, `prefetch_wait`, `serve/batch`,
+//!   `run_config`) pushed into per-thread rings and drained to JSONL
+//!   (`--trace-out` / `[telemetry]` config / `VCAS_TRACE`).
+//!
+//! **Determinism contract.** Telemetry never draws RNG, never reorders
+//! reductions, and never branches training math on its own state: with
+//! tracing on or off, every loss/parameter trajectory is bitwise
+//! identical (pinned by `tests/telemetry.rs`). Spans cost two
+//! `Instant::now` calls when tracing is on and nothing else; when off,
+//! [`Telemetry::span`] returns an inert guard.
+
+pub mod metrics;
+pub mod trace;
+
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::error::Result;
+
+pub use metrics::{Counter, Gauge, Histogram, HistogramSnapshot, Registry};
+pub use trace::{to_jsonl, TraceEvent, Value};
+
+/// Shared telemetry handle: a metrics [`Registry`] plus an optional
+/// tracing sink. Cheap to clone behind an [`Arc`]; subsystems receive
+/// `Arc<Telemetry>` (or a borrow) and no-op gracefully when tracing is
+/// disabled.
+pub struct Telemetry {
+    tracing: bool,
+    registry: Registry,
+    tracer: trace::Tracer,
+    trace_out: String,
+    truncated: AtomicBool,
+}
+
+impl Telemetry {
+    /// Telemetry with tracing off. The registry is still live — metric
+    /// handles work (one relaxed atomic per write) — but spans and
+    /// events are inert and `flush` writes nothing.
+    pub fn disabled() -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            tracing: false,
+            registry: Registry::new(),
+            tracer: trace::Tracer::new(),
+            trace_out: String::new(),
+            truncated: AtomicBool::new(false),
+        })
+    }
+
+    /// Telemetry with tracing on; events drain to `trace_out` on
+    /// [`Telemetry::flush`] (kept in memory when the path is empty).
+    pub fn enabled(trace_out: &str) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            tracing: true,
+            registry: Registry::new(),
+            tracer: trace::Tracer::new(),
+            trace_out: trace_out.to_string(),
+            truncated: AtomicBool::new(false),
+        })
+    }
+
+    /// Resolve from config (which itself resolves `VCAS_TRACE`).
+    pub fn from_config(cfg: &crate::config::TelemetryConfig) -> Arc<Telemetry> {
+        let (trace, out) = cfg.resolve();
+        if trace {
+            Telemetry::enabled(&out)
+        } else {
+            Telemetry::disabled()
+        }
+    }
+
+    /// Whether span/event tracing is live.
+    pub fn tracing(&self) -> bool {
+        self.tracing
+    }
+
+    /// The metrics registry (always live).
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    /// Where [`Telemetry::flush`] writes JSONL ("" = in-memory only).
+    pub fn trace_out(&self) -> &str {
+        &self.trace_out
+    }
+
+    /// Record a point event (no duration). No-op when tracing is off.
+    pub fn event(&self, scope: &'static str, fields: Vec<(&'static str, Value)>) {
+        if self.tracing {
+            self.tracer.record(scope, self.tracer.now_us(), None, fields);
+        }
+    }
+
+    /// Open a span guard for `scope`; the event (with `dur_us`) is
+    /// recorded when the guard drops. Inert when tracing is off.
+    pub fn span(&self, scope: &'static str) -> Span<'_> {
+        if self.tracing {
+            Span {
+                tel: Some(self),
+                scope,
+                started: Instant::now(),
+                t_us: self.tracer.now_us(),
+                fields: Vec::new(),
+            }
+        } else {
+            Span { tel: None, scope, started: Instant::now(), t_us: 0, fields: Vec::new() }
+        }
+    }
+
+    /// Drain buffered events (global order restored). Tests and the
+    /// flush path share this; a second drain returns nothing.
+    pub fn drain_events(&self) -> Vec<TraceEvent> {
+        self.tracer.drain()
+    }
+
+    /// Events dropped to ring overflow.
+    pub fn dropped_events(&self) -> u64 {
+        self.tracer.dropped()
+    }
+
+    /// Drain and append buffered events to `trace_out` as JSONL. The
+    /// first flush truncates the file so a fresh run never appends to a
+    /// stale trace; later flushes append. No file is touched when
+    /// tracing is off or the path is empty (drained events are simply
+    /// returned to the caller via [`Telemetry::drain_events`] instead).
+    pub fn flush(&self) -> Result<()> {
+        if !self.tracing || self.trace_out.is_empty() {
+            return Ok(());
+        }
+        let events = self.tracer.drain();
+        if events.is_empty() && self.truncated.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let text = to_jsonl(&events);
+        if let Some(dir) = Path::new(&self.trace_out).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        use std::io::Write;
+        let first = !self.truncated.swap(true, Ordering::Relaxed);
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .write(true)
+            .append(!first)
+            .truncate(first)
+            .open(&self.trace_out)?;
+        f.write_all(text.as_bytes())?;
+        Ok(())
+    }
+}
+
+/// RAII span guard from [`Telemetry::span`]. Attach payload fields with
+/// [`Span::field`]; the event records on drop with the measured
+/// duration.
+pub struct Span<'a> {
+    tel: Option<&'a Telemetry>,
+    scope: &'static str,
+    started: Instant,
+    t_us: u64,
+    fields: Vec<(&'static str, Value)>,
+}
+
+impl Span<'_> {
+    /// Attach a payload field (no-op on an inert span).
+    pub fn field(&mut self, key: &'static str, value: impl Into<Value>) {
+        if self.tel.is_some() {
+            self.fields.push((key, value.into()));
+        }
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(tel) = self.tel {
+            let dur = self.started.elapsed().as_micros() as u64;
+            tel.tracer.record(
+                self.scope,
+                self.t_us,
+                Some(dur),
+                std::mem::take(&mut self.fields),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_telemetry_records_nothing_but_metrics_work() {
+        let t = Telemetry::disabled();
+        t.event("step", vec![("loss", Value::from(1.0f32))]);
+        {
+            let mut sp = t.span("fwd");
+            sp.field("n", 3usize);
+        }
+        assert!(t.drain_events().is_empty());
+        t.registry().counter("k").inc();
+        assert_eq!(t.registry().counter("k").value(), 1);
+    }
+
+    #[test]
+    fn span_records_duration_and_fields() {
+        let t = Telemetry::enabled("");
+        {
+            let mut sp = t.span("bwd");
+            sp.field("layer", 2usize);
+        }
+        let events = t.drain_events();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].scope, "bwd");
+        assert!(events[0].dur_us.is_some());
+        assert_eq!(events[0].fields.len(), 1);
+    }
+
+    #[test]
+    fn flush_truncates_then_appends() {
+        let dir = std::env::temp_dir().join(format!("vcas-tel-{}", std::process::id()));
+        let path = dir.join("trace.jsonl");
+        let out = path.to_string_lossy().to_string();
+        let t = Telemetry::enabled(&out);
+        t.event("a", vec![]);
+        t.flush().unwrap();
+        t.event("b", vec![]);
+        t.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        // a fresh telemetry handle truncates the stale file
+        let t2 = Telemetry::enabled(&out);
+        t2.event("c", vec![]);
+        t2.flush().unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 1);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

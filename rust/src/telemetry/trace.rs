@@ -1,0 +1,249 @@
+//! Span/event tracing: per-thread ring buffers drained into a JSONL
+//! event stream.
+//!
+//! Recording is sharded the same way as the metrics layer: each thread
+//! pushes into its own small `Mutex<VecDeque>` ring (uncontended in the
+//! common case), stamped with a global sequence number so the drain can
+//! restore a total order. Rings are bounded — when a shard overflows,
+//! the oldest event is dropped and counted, never blocking the hot
+//! path.
+//!
+//! Events serialize through the repo's own [`crate::formats::json`]
+//! value type; `f64` `Display` is shortest-roundtrip in Rust, so an
+//! `f32` loss widened to `f64` survives the JSONL round trip bitwise.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::formats::json::Json;
+
+use super::metrics::SHARDS;
+
+/// Per-shard ring capacity. At ~8 events per training step this holds
+/// thousands of steps between flushes.
+const RING_CAP: usize = 65_536;
+
+/// A field value attached to a trace event.
+#[derive(Clone, Debug)]
+pub enum Value {
+    F(f64),
+    I(i64),
+    B(bool),
+    S(String),
+    /// Small numeric vectors (per-layer keep ratios etc.).
+    FArr(Vec<f32>),
+}
+
+impl From<f64> for Value {
+    fn from(v: f64) -> Value {
+        Value::F(v)
+    }
+}
+impl From<f32> for Value {
+    fn from(v: f32) -> Value {
+        Value::F(v as f64)
+    }
+}
+impl From<i64> for Value {
+    fn from(v: i64) -> Value {
+        Value::I(v)
+    }
+}
+impl From<usize> for Value {
+    fn from(v: usize) -> Value {
+        Value::I(v as i64)
+    }
+}
+impl From<u64> for Value {
+    fn from(v: u64) -> Value {
+        Value::I(v as i64)
+    }
+}
+impl From<bool> for Value {
+    fn from(v: bool) -> Value {
+        Value::B(v)
+    }
+}
+impl From<&str> for Value {
+    fn from(v: &str) -> Value {
+        Value::S(v.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(v: String) -> Value {
+        Value::S(v)
+    }
+}
+impl From<Vec<f32>> for Value {
+    fn from(v: Vec<f32>) -> Value {
+        Value::FArr(v)
+    }
+}
+
+impl Value {
+    fn to_json(&self) -> Json {
+        match self {
+            Value::F(x) => Json::Num(*x),
+            Value::I(x) => Json::Num(*x as f64),
+            Value::B(x) => Json::Bool(*x),
+            Value::S(x) => Json::Str(x.clone()),
+            Value::FArr(xs) => Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect()),
+        }
+    }
+}
+
+/// One recorded span or point event.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Global record order (monotone across threads).
+    pub seq: u64,
+    /// Microseconds since the tracer was created.
+    pub t_us: u64,
+    /// Scope name (`step`, `probe`, `allreduce/bucket`, ...).
+    pub scope: &'static str,
+    /// Span duration; `None` for point events.
+    pub dur_us: Option<u64>,
+    /// Scope-specific payload, in insertion order.
+    pub fields: Vec<(&'static str, Value)>,
+}
+
+impl TraceEvent {
+    /// Render as one JSON object: `seq`/`t_us`/`scope` (+ `dur_us` for
+    /// spans) followed by the payload fields, flattened.
+    pub fn to_json(&self) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("seq".to_string(), Json::Num(self.seq as f64));
+        obj.insert("t_us".to_string(), Json::Num(self.t_us as f64));
+        obj.insert("scope".to_string(), Json::Str(self.scope.to_string()));
+        if let Some(d) = self.dur_us {
+            obj.insert("dur_us".to_string(), Json::Num(d as f64));
+        }
+        for (k, v) in &self.fields {
+            obj.insert((*k).to_string(), v.to_json());
+        }
+        Json::Obj(obj)
+    }
+}
+
+/// The ring-buffer store behind [`super::Telemetry`]'s tracing side.
+pub struct Tracer {
+    start: Instant,
+    seq: AtomicU64,
+    rings: Vec<Mutex<VecDeque<TraceEvent>>>,
+    dropped: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            start: Instant::now(),
+            seq: AtomicU64::new(0),
+            rings: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Microseconds since tracer creation (the event timestamp base).
+    pub fn now_us(&self) -> u64 {
+        self.start.elapsed().as_micros() as u64
+    }
+
+    /// Record one event into the calling thread's ring.
+    pub fn record(
+        &self,
+        scope: &'static str,
+        t_us: u64,
+        dur_us: Option<u64>,
+        fields: Vec<(&'static str, Value)>,
+    ) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let ev = TraceEvent { seq, t_us, scope, dur_us, fields };
+        let shard = super::metrics::thread_shard();
+        let mut ring = self.rings[shard].lock().unwrap();
+        if ring.len() >= RING_CAP {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(ev);
+    }
+
+    /// Events dropped to ring overflow since creation.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Drain every shard and restore the global record order.
+    pub fn drain(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::new();
+        for ring in &self.rings {
+            out.extend(ring.lock().unwrap().drain(..));
+        }
+        out.sort_by_key(|e| e.seq);
+        out
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Tracer::new()
+    }
+}
+
+/// Render events as JSONL (one JSON object per line).
+pub fn to_jsonl(events: &[TraceEvent]) -> String {
+    let mut out = String::new();
+    for e in events {
+        out.push_str(&e.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drain_restores_global_order_across_threads() {
+        let t = Tracer::new();
+        std::thread::scope(|s| {
+            for i in 0..4usize {
+                let t = &t;
+                s.spawn(move || {
+                    for j in 0..100usize {
+                        t.record("x", 0, None, vec![("tag", Value::from(i * 1000 + j))]);
+                    }
+                });
+            }
+        });
+        let events = t.drain();
+        assert_eq!(events.len(), 400);
+        for w in events.windows(2) {
+            assert!(w[0].seq < w[1].seq);
+        }
+        // second drain is empty
+        assert!(t.drain().is_empty());
+    }
+
+    #[test]
+    fn event_json_roundtrips_f32_loss_bitwise() {
+        let t = Tracer::new();
+        let loss: f32 = 0.693_147_2;
+        t.record("step", 5, Some(12), vec![("loss", Value::from(loss))]);
+        let line = to_jsonl(&t.drain());
+        let parsed = Json::parse(line.trim()).unwrap();
+        let obj = match parsed {
+            Json::Obj(o) => o,
+            other => panic!("expected object, got {other:?}"),
+        };
+        let back = match obj.get("loss") {
+            Some(Json::Num(x)) => *x as f32,
+            other => panic!("expected number, got {other:?}"),
+        };
+        assert_eq!(back.to_bits(), loss.to_bits());
+        assert_eq!(obj.get("scope"), Some(&Json::Str("step".to_string())));
+        assert_eq!(obj.get("dur_us"), Some(&Json::Num(12.0)));
+    }
+}

@@ -1,0 +1,179 @@
+//! The telemetry determinism + introspection contract (PR 10).
+//!
+//! 1. **Determinism**: telemetry is a pure observer. With tracing on or
+//!    off, every loss and parameter trajectory is bitwise identical —
+//!    pinned across task kinds (cls / mlm / cnn) and both adaptive
+//!    sampler families (vcas, approx_vjp).
+//! 2. **Fidelity**: the trace stream opens with one `run_config` event,
+//!    records one `step` event per training step, and the step losses
+//!    survive the JSONL round trip bitwise (f32 → f64 → shortest
+//!    round-trip Display).
+//! 3. **Introspection**: the metrics registry counts steps, carries the
+//!    vcas variance channels and the workspace-pool accounting, and
+//!    renders as Prometheus text.
+
+use std::sync::OnceLock;
+
+use vcas::config::{Method, TrainConfig, VcasConfig};
+use vcas::coordinator::Trainer;
+use vcas::formats::json::Json;
+use vcas::runtime::NativeBackend;
+
+fn backend() -> &'static NativeBackend {
+    static BACKEND: OnceLock<NativeBackend> = OnceLock::new();
+    BACKEND.get_or_init(NativeBackend::with_default_models)
+}
+
+/// A small run config with telemetry explicitly pinned on or off (so the
+/// ambient `VCAS_TRACE` of the test environment cannot skew the A/B).
+fn cfg_for(model: &str, task: &str, method: Method, trace: bool) -> TrainConfig {
+    let mut cfg = TrainConfig {
+        model: model.into(),
+        task: task.into(),
+        method,
+        steps: 4,
+        seed: 31,
+        eval_batches: 2,
+        prefetch: Some(0),
+        vcas: VcasConfig { freq: 2, ..Default::default() },
+        ..Default::default()
+    };
+    cfg.strategy.vjp_rho = 0.5;
+    cfg.telemetry.trace = Some(trace);
+    // keep the A/B in memory: no trace file, no filesystem side channel
+    cfg.telemetry.trace_out = String::new();
+    cfg
+}
+
+// ---------------------------------------------------------------------------
+// The determinism contract.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tracing_on_or_off_trajectories_are_bitwise_identical() {
+    for (model, task) in [("tiny", "sst2-sim"), ("tiny", "mlm"), ("cnn", "images")] {
+        for method in [Method::Vcas, Method::ApproxVjp] {
+            let what = format!("{model}/{task}/{}", method.name());
+            let mut off =
+                Trainer::new(backend(), &cfg_for(model, task, method.clone(), false)).unwrap();
+            let r_off = off.run().unwrap();
+            assert!(!off.telemetry().tracing(), "{what}: tracing should be off");
+            let mut on =
+                Trainer::new(backend(), &cfg_for(model, task, method.clone(), true)).unwrap();
+            let r_on = on.run().unwrap();
+            assert!(on.telemetry().tracing(), "{what}: tracing should be on");
+            assert_eq!(r_off.losses.len(), r_on.losses.len(), "{what}: step counts");
+            for (&(i, a), &(j, b)) in r_off.losses.iter().zip(&r_on.losses) {
+                assert_eq!(i, j, "{what}: step index");
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{what}: loss diverged at step {i} (off {a} vs on {b})"
+                );
+            }
+            assert_eq!(
+                r_off.final_eval_acc, r_on.final_eval_acc,
+                "{what}: eval accuracy diverged"
+            );
+            for (a, b) in off.params.tensors.iter().zip(&on.params.tensors) {
+                assert_eq!(a.data, b.data, "{what}: final params differ in {}", a.name);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-stream fidelity.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn trace_opens_with_run_config_and_step_losses_roundtrip_bitwise() {
+    let cfg = cfg_for("tiny", "sst2-sim", Method::Vcas, true);
+    let mut t = Trainer::new(backend(), &cfg).unwrap();
+    let r = t.run().unwrap();
+    // trace_out is empty, so the events are still buffered in memory
+    let events = t.telemetry().drain_events();
+    assert!(!events.is_empty());
+    assert_eq!(t.telemetry().dropped_events(), 0);
+    assert_eq!(events[0].scope, "run_config", "first event must be run_config");
+    // the probe and backward spans are present, spans carry durations
+    assert!(events.iter().any(|e| e.scope == "probe" && e.dur_us.is_some()));
+    assert!(events.iter().any(|e| e.scope == "bwd" && e.dur_us.is_some()));
+    assert!(events.iter().any(|e| e.scope == "fwd"), "eval forwards should be traced");
+
+    // step losses through the actual JSONL serialization, bitwise
+    let text = vcas::telemetry::to_jsonl(&events);
+    let mut step_losses: Vec<f32> = Vec::new();
+    for line in text.lines() {
+        let obj = match Json::parse(line).unwrap() {
+            Json::Obj(o) => o,
+            other => panic!("trace line is not an object: {other:?}"),
+        };
+        if obj.get("scope") == Some(&Json::Str("step".to_string())) {
+            match obj.get("loss") {
+                Some(Json::Num(x)) => step_losses.push(*x as f32),
+                other => panic!("step event without a numeric loss: {other:?}"),
+            }
+            assert!(
+                matches!(obj.get("plan"), Some(Json::Str(_))),
+                "step event must carry the executed plan"
+            );
+        }
+    }
+    assert_eq!(step_losses.len(), r.losses.len(), "one step event per training step");
+    for (got, &(step, want)) in step_losses.iter().zip(&r.losses) {
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "loss at step {step} mangled by the JSONL round trip ({got} vs {want})"
+        );
+    }
+}
+
+#[test]
+fn trace_out_writes_parseable_jsonl() {
+    let dir = std::env::temp_dir().join(format!("vcas-tel-test-{}", std::process::id()));
+    let path = dir.join("trace.jsonl");
+    let mut cfg = cfg_for("tiny", "sst2-sim", Method::ApproxVjp, true);
+    cfg.telemetry.trace_out = path.to_string_lossy().to_string();
+    Trainer::new(backend(), &cfg).unwrap().run().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut scopes = Vec::new();
+    for line in text.lines() {
+        match Json::parse(line).unwrap() {
+            Json::Obj(o) => match o.get("scope") {
+                Some(Json::Str(s)) => scopes.push(s.clone()),
+                other => panic!("trace line without scope: {other:?}"),
+            },
+            other => panic!("trace line is not an object: {other:?}"),
+        }
+    }
+    assert_eq!(scopes.first().map(String::as_str), Some("run_config"));
+    assert_eq!(scopes.iter().filter(|s| *s == "step").count(), cfg.steps);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Registry introspection.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn registry_counts_steps_and_renders_prometheus_text() {
+    // tracing off on purpose: the metrics side must be live regardless
+    let cfg = cfg_for("tiny", "sst2-sim", Method::Vcas, false);
+    let mut t = Trainer::new(backend(), &cfg).unwrap();
+    let r = t.run().unwrap();
+    let reg = t.telemetry().registry();
+    assert_eq!(reg.counter("train_steps").value(), cfg.steps as u64);
+    let last = r.losses.last().unwrap().1;
+    assert_eq!(reg.gauge("train_loss").value(), f64::from(last));
+    // the probe published the vcas variance channels (freq=2, steps=4)
+    assert!(reg.gauge("vcas_v_sgd").value().is_finite());
+    let text = reg.prometheus_text();
+    assert!(text.contains("train_steps 4"), "{text}");
+    assert!(text.contains("train_loss"), "{text}");
+    assert!(text.contains("vcas_v_sgd"), "{text}");
+    // the workspace accounting satellite publishes pool gauges at run end
+    assert!(text.contains("workspace_pooled_bufs"), "{text}");
+    assert!(text.contains("matmul_calls_f32"), "{text}");
+}
